@@ -1,0 +1,92 @@
+//! Needle-retrieval eviction study (Table 8's workload, expanded):
+//! SnapKV prompt compression on top of the PolarQuant cache, sweeping the
+//! budget and reporting generation agreement vs the full cache — plus the
+//! memory saved.
+//!
+//! ```bash
+//! cargo run --release --example needle_eval
+//! ```
+
+use polarquant::coordinator::engine::SnapKvOpts;
+use polarquant::coordinator::{Engine, EngineOpts};
+use polarquant::eval::Table;
+use polarquant::model::ModelConfig;
+use polarquant::workload::{PromptKind, RequestGen};
+
+fn cfg() -> ModelConfig {
+    let mut c = ModelConfig::tiny();
+    c.n_layers = 2;
+    c.vocab = 128;
+    c.d_model = 64;
+    c.n_heads = 4;
+    c.n_kv_heads = 2;
+    c.head_dim = 32;
+    c.ffn = 96;
+    c.group = 8;
+    c.resid = 16;
+    c
+}
+
+fn run(snapkv: Option<SnapKvOpts>, n_req: usize, prompt_len: usize, gen_len: usize)
+    -> (Vec<Vec<u32>>, usize)
+{
+    let mut opts = EngineOpts::default();
+    opts.snapkv = snapkv;
+    let mut eng = Engine::native_synthetic(cfg(), 80, 6.0, opts);
+    let mut gen = RequestGen::new(128, 81);
+    for _ in 0..n_req {
+        let req = gen.request(PromptKind::Needle { len: prompt_len, needle: 111 }, gen_len);
+        eng.submit(req).unwrap();
+    }
+    let mut peak = 0usize;
+    let mut done = Vec::new();
+    while !eng.idle() {
+        done.extend(eng.step().unwrap());
+        peak = peak.max(eng.cache_report().bytes);
+    }
+    done.sort_by_key(|c| c.id);
+    (done.into_iter().map(|c| c.tokens).collect(), peak)
+}
+
+fn main() {
+    let prompt_len = 96;
+    let gen_len = 16;
+    let n_req = 8;
+    println!(
+        "needle retrieval: {n_req} prompts of {prompt_len} tokens (one needle each), \
+         {gen_len}-token greedy generations\n"
+    );
+    let (full, full_mem) = run(None, n_req, prompt_len, gen_len);
+    let mut t = Table::new(
+        "SnapKV x PolarQuant sweep (agreement with full-cache generation)",
+        &["budget", "window", "agreement %", "peak cache KB", "memory vs full"],
+    );
+    t.row(vec![
+        "full".into(),
+        "-".into(),
+        "100.0".into(),
+        format!("{:.1}", full_mem as f64 / 1024.0),
+        "1.00x".into(),
+    ]);
+    for (budget, window) in [(64usize, 16usize), (48, 16), (32, 8), (16, 8)] {
+        let (snap, mem) = run(Some(SnapKvOpts { budget, window }), n_req, prompt_len, gen_len);
+        let mut agree = 0;
+        let mut total = 0;
+        for (a, b) in full.iter().zip(&snap) {
+            for (x, y) in a.iter().zip(b) {
+                agree += (x == y) as usize;
+                total += 1;
+            }
+        }
+        t.row(vec![
+            budget.to_string(),
+            window.to_string(),
+            format!("{:.1}", 100.0 * agree as f64 / total as f64),
+            format!("{:.1}", mem as f64 / 1024.0),
+            format!("{:.2}x", mem as f64 / full_mem as f64),
+        ]);
+    }
+    t.print();
+    println!("\nshape (paper Table 8): agreement decays gracefully with budget while");
+    println!("memory shrinks — SnapKV composes with PolarQuant without collapse.");
+}

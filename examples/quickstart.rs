@@ -1,0 +1,46 @@
+//! Quickstart: build an engine, submit requests, read completions.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the PJRT backend (AOT HLO graphs on the CPU PJRT client) when
+//! `artifacts/` exists, else falls back to a synthetic native model so the
+//! example always runs.
+
+use std::path::PathBuf;
+
+use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    let mut engine = if dir.join("manifest.json").exists() {
+        println!("backend: PJRT (AOT artifacts from {dir:?})");
+        Engine::pjrt_from_artifacts(&dir, EngineOpts::default())?
+    } else {
+        println!("backend: native synthetic (run `make artifacts` for the PJRT path)");
+        Engine::native_synthetic(ModelConfig::tiny(), 0, 6.0, EngineOpts::default())
+    };
+
+    // a few greedy generation requests with mixed prompt lengths
+    for (i, plen) in [12usize, 40, 80].iter().enumerate() {
+        let prompt: Vec<u32> = (0..*plen as u32).map(|t| (t * 17 + 3) % 512).collect();
+        engine.submit(Request::greedy(i as u64 + 1, prompt, 16)).unwrap();
+    }
+
+    let completions = engine.run_to_completion()?;
+    for c in &completions {
+        println!(
+            "request {}: prompt {:>3} tokens -> {:?}... (ttft {:.1}ms, total {:.1}ms)",
+            c.id,
+            c.prompt_len,
+            &c.tokens[..c.tokens.len().min(8)],
+            c.ttft_s.unwrap_or(0.0) * 1e3,
+            c.total_s.unwrap_or(0.0) * 1e3,
+        );
+    }
+    println!("\nengine metrics: {}", engine.metrics.summary());
+    println!("cache at exit : {:?}", engine.cache_report());
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real serving workload:
+//!   L1 Pallas kernels -> L2 JAX decode/prefill graphs -> HLO text ->
+//!   PJRT CPU client -> L3 Rust engine (router, dynamic batcher,
+//!   quantized paged cache) -> TCP server -> load-generating clients.
+//!
+//! Fires a Poisson arrival trace of mixed-length prompts at a 2-worker
+//! server and reports throughput, latency percentiles, and cache memory.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_longcontext
+//! # flags: --requests N --rps R --gen-len G --workers W --backend native|pjrt
+//! ```
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use polarquant::coordinator::{Engine, EngineOpts};
+use polarquant::server::{serve, Client};
+use polarquant::util::rng::Rng;
+use polarquant::util::stats::percentile;
+use polarquant::workload::ArrivalTrace;
+
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn flag_s(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = flag("--requests", 24);
+    let rps = flag("--rps", 8) as f64;
+    let gen_len = flag("--gen-len", 24);
+    let workers = flag("--workers", 2);
+    let backend = flag_s("--backend", "pjrt");
+
+    let dir = PathBuf::from("artifacts");
+    let have_artifacts = dir.join("manifest.json").exists();
+    let use_pjrt = backend == "pjrt" && have_artifacts;
+    if backend == "pjrt" && !have_artifacts {
+        eprintln!("no artifacts/ — falling back to native backend (run `make artifacts`)");
+    }
+    println!(
+        "== serve_longcontext: {} requests @ {:.1} rps, gen {}, {} workers, backend {} ==",
+        n_requests,
+        rps,
+        gen_len,
+        workers,
+        if use_pjrt { "pjrt" } else { "native" }
+    );
+
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let dir = PathBuf::from("artifacts");
+        if use_pjrt {
+            Engine::pjrt_from_artifacts(&dir, EngineOpts::default()).expect("pjrt engine")
+        } else if dir.join("manifest.json").exists() {
+            Engine::native_from_artifacts(&dir, EngineOpts::default()).expect("native engine")
+        } else {
+            Engine::native_synthetic(
+                polarquant::model::ModelConfig::tiny(),
+                w as u64,
+                6.0,
+                EngineOpts::default(),
+            )
+        }
+    });
+    let handle = serve(factory, "127.0.0.1:0", workers)?;
+    println!("server on {}", handle.addr);
+
+    // Poisson arrivals, mixed prompt lengths (longest must fit the largest
+    // prefill bucket: 256 for the tiny artifact set)
+    let mut rng = Rng::new(12345);
+    let trace = ArrivalTrace::poisson(&mut rng, n_requests, rps);
+    let t0 = Instant::now();
+    let results: Arc<Mutex<Vec<(f64, f64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut threads = Vec::new();
+    for (i, &offset) in trace.offsets.iter().enumerate() {
+        let addr = handle.addr.clone();
+        let results = results.clone();
+        let plen = 16 + (i * 37) % 180; // 16..196 tokens
+        let session = (i % 6) as u64;
+        threads.push(std::thread::spawn(move || {
+            let now = t0.elapsed().as_secs_f64();
+            if offset > now {
+                std::thread::sleep(Duration::from_secs_f64(offset - now));
+            }
+            let mut client = Client::connect(&addr).expect("connect");
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| (t * 13 + i as u32) % 512).collect();
+            let sent = Instant::now();
+            let reply = client.generate(&prompt, gen_len, Some(session)).expect("generate");
+            let wall = sent.elapsed().as_secs_f64();
+            assert_eq!(reply.tokens.len(), gen_len, "request {i} truncated");
+            results.lock().unwrap().push((reply.ttft_ms, wall * 1e3, reply.tokens.len()));
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let results = results.lock().unwrap();
+
+    let ttfts: Vec<f64> = results.iter().map(|r| r.0).collect();
+    let walls: Vec<f64> = results.iter().map(|r| r.1).collect();
+    let tokens: usize = results.iter().map(|r| r.2).sum();
+    println!("\n== results ==");
+    println!("completed        : {}/{} requests in {:.2}s", results.len(), n_requests, total_s);
+    println!("decode throughput: {:.1} tok/s (aggregate)", tokens as f64 / total_s);
+    println!(
+        "ttft             : p50 {:.1}ms  p95 {:.1}ms  max {:.1}ms",
+        percentile(&ttfts, 50.0),
+        percentile(&ttfts, 95.0),
+        percentile(&ttfts, 100.0)
+    );
+    println!(
+        "request latency  : p50 {:.1}ms  p95 {:.1}ms",
+        percentile(&walls, 50.0),
+        percentile(&walls, 95.0)
+    );
+    handle.stop();
+    println!("\nall layers composed: Pallas kernels -> JAX graphs -> HLO text -> PJRT -> engine -> server OK");
+    Ok(())
+}

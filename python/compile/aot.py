@@ -1,0 +1,222 @@
+# AOT pipeline: lower the L2 graphs to HLO **text** + emit weights and the
+# artifact manifest the Rust runtime consumes.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") / .serialize()): jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+# rejects (`proto.id() <= INT_MAX`).  Going through
+# mlir_module_to_xla_computation + as_hlo_text reassigns ids and round-trips
+# cleanly (see /opt/xla-example/README.md).
+#
+# Outputs under --out (default ../artifacts):
+#   manifest.json                 — config, weight table, graph table
+#   weights_<cfg>.bin             — raw little-endian f32, manifest order
+#   <graph>.hlo.txt               — one per (kind, shape bucket)
+#
+# Every graph input is recorded in the manifest with name/shape/dtype in
+# exact positional order — the Rust side marshals literals from that table,
+# never from guesswork.
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def weight_input_specs(cfg):
+    return [(name, spec(shape)) for name, shape in M.weight_specs(cfg)]
+
+
+def decode_input_specs(cfg, B, S):
+    """Positional (name, ShapeDtypeStruct) list for a decode-step graph."""
+    L, Kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    dh2 = dh // 2
+    G = S // cfg.group
+    R = cfg.resid
+    i32 = jnp.int32
+    base = [
+        ("tokens", spec((B,), i32)),
+        ("positions", spec((B,), i32)),
+        ("cache_len", spec((B,), i32)),
+        ("resid_len", spec((B,), i32)),
+        ("theta_code", spec((L, B, Kv, S, dh2), i32)),
+        ("rho_code", spec((L, B, Kv, S, dh2), i32)),
+        ("rho_z", spec((L, B, Kv, G, dh2))),
+        ("rho_s", spec((L, B, Kv, G, dh2))),
+        ("theta_z", spec((L, B, Kv, G, dh2))),
+        ("theta_s", spec((L, B, Kv, G, dh2))),
+        ("v_cache", spec((L, B, Kv, S, dh))),
+        ("resid_k", spec((L, B, Kv, R, dh))),
+        ("resid_v", spec((L, B, Kv, R, dh))),
+    ]
+    return base + weight_input_specs(cfg)
+
+
+def prefill_input_specs(cfg, B, T):
+    return [
+        ("tokens", spec((B, T), jnp.int32)),
+        ("prompt_len", spec((B,), jnp.int32)),
+    ] + weight_input_specs(cfg)
+
+
+def encode_input_specs(cfg, N, T):
+    return [("k", spec((N, T, cfg.head_dim)))]
+
+
+def lower_graph(fn, input_specs):
+    return jax.jit(fn).lower(*[s for _, s in input_specs])
+
+
+def graph_entry(name, kind, bucket, input_specs, outputs, fname):
+    return {
+        "name": name,
+        "file": fname,
+        "kind": kind,
+        "bucket": bucket,
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+            for n, s in input_specs
+        ],
+        "outputs": outputs,
+    }
+
+
+def parse_buckets(text):
+    """'1x256,4x256' -> [(1, 256), (4, 256)]"""
+    out = []
+    for part in text.split(","):
+        if not part:
+            continue
+        b, s = part.lower().split("x")
+        out.append((int(b), int(s)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=sorted(M.CONFIGS))
+    ap.add_argument("--buckets", default="1x256,4x256,1x1024",
+                    help="decode buckets BxS (S = quantized cache capacity)")
+    ap.add_argument("--prefill-buckets", default="1x64,4x64,1x256",
+                    help="prefill buckets BxT")
+    ap.add_argument("--encode-buckets", default="2x64",
+                    help="bulk-encode buckets NxT")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--outlier-severity", type=float, default=6.0)
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.config]
+    cfg.validate()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    # ---- weights ----------------------------------------------------------
+    w = M.init_weights(cfg, seed=args.seed, outlier_severity=args.outlier_severity)
+    tensors, offset = [], 0
+    wfile = out / f"weights_{cfg.name}.bin"
+    with open(wfile, "wb") as f:
+        for name, shape in M.weight_specs(cfg):
+            arr = np.ascontiguousarray(w[name], dtype=np.float32)
+            assert tuple(arr.shape) == tuple(shape)
+            f.write(arr.tobytes())
+            nbytes = arr.nbytes
+            tensors.append(
+                {"name": name, "shape": list(shape), "offset_bytes": offset,
+                 "size_bytes": nbytes}
+            )
+            offset += nbytes
+
+    graphs = []
+
+    def emit(name, fn, input_specs, kind, bucket, outputs):
+        lowered = lower_graph(fn, input_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out / fname).write_text(text)
+        graphs.append(graph_entry(name, kind, bucket, input_specs, outputs, fname))
+        print(f"  {fname}: {len(text)} chars")
+
+    # ---- decode graphs ----------------------------------------------------
+    for B, S in parse_buckets(args.buckets):
+        assert S % cfg.group == 0, "cache capacity must be whole groups"
+        name = f"decode_{cfg.name}_b{B}_s{S}"
+        specs_ = decode_input_specs(cfg, B, S)
+        fn = functools.partial(M.decode_step, cfg)
+        outs = [
+            {"name": "logits", "shape": [B, cfg.vocab], "dtype": "float32"},
+            {"name": "new_k",
+             "shape": [cfg.n_layers, B, cfg.n_kv_heads, cfg.head_dim],
+             "dtype": "float32"},
+            {"name": "new_v",
+             "shape": [cfg.n_layers, B, cfg.n_kv_heads, cfg.head_dim],
+             "dtype": "float32"},
+        ]
+        emit(name, fn, specs_, "decode", {"batch": B, "seq": S}, outs)
+
+    # ---- prefill graphs ---------------------------------------------------
+    for B, T in parse_buckets(args.prefill_buckets):
+        name = f"prefill_{cfg.name}_b{B}_t{T}"
+        specs_ = prefill_input_specs(cfg, B, T)
+        fn = functools.partial(M.prefill, cfg)
+        outs = [
+            {"name": "logits", "shape": [B, cfg.vocab], "dtype": "float32"},
+            {"name": "k_cache",
+             "shape": [cfg.n_layers, B, cfg.n_kv_heads, T, cfg.head_dim],
+             "dtype": "float32"},
+            {"name": "v_cache",
+             "shape": [cfg.n_layers, B, cfg.n_kv_heads, T, cfg.head_dim],
+             "dtype": "float32"},
+        ]
+        emit(name, fn, specs_, "prefill", {"batch": B, "seq": T}, outs)
+
+    # ---- bulk polar encoder ----------------------------------------------
+    for N, T in parse_buckets(args.encode_buckets):
+        assert T % cfg.group == 0
+        name = f"encode_{cfg.name}_n{N}_t{T}"
+        specs_ = encode_input_specs(cfg, N, T)
+        fn = functools.partial(M.polar_encode_graph, cfg)
+        dh2 = cfg.head_dim // 2
+        G = T // cfg.group
+        outs = [
+            {"name": "rho_code", "shape": [N, T, dh2], "dtype": "int32"},
+            {"name": "theta_code", "shape": [N, T, dh2], "dtype": "int32"},
+            {"name": "rho_z", "shape": [N, G, dh2], "dtype": "float32"},
+            {"name": "rho_s", "shape": [N, G, dh2], "dtype": "float32"},
+            {"name": "theta_z", "shape": [N, G, dh2], "dtype": "float32"},
+            {"name": "theta_s", "shape": [N, G, dh2], "dtype": "float32"},
+        ]
+        emit(name, fn, specs_, "encode", {"batch": N, "seq": T}, outs)
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "weights": {"file": wfile.name, "tensors": tensors,
+                    "total_bytes": offset, "seed": args.seed},
+        "graphs": graphs,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'} ({len(graphs)} graphs, "
+          f"{offset / 1e6:.1f} MB weights)")
+
+
+if __name__ == "__main__":
+    main()

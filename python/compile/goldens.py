@@ -1,0 +1,151 @@
+# Golden-file generator: canonical inputs/outputs of every ref.py quantizer
+# serialized as raw little-endian tensors + a JSON index.  The Rust quant
+# library (rust/src/quant/) re-implements the same numerics and its unit
+# tests replay these files bit-for-bit (f32 tolerance) — the cross-language
+# contract that keeps L1/L2/L3 in agreement.
+#
+# Usage: python -m compile.goldens --out ../artifacts/goldens
+
+import argparse
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def outlier_keys(rng, t, d, severity=8.0):
+    k = rng.standard_normal((t, d)).astype(np.float32)
+    for j in rng.choice(d // 2, size=max(1, d // 16), replace=False):
+        k[:, 2 * j] += severity
+    pos = np.arange(t, dtype=np.int32)
+    return np.asarray(ref.apply_rope(jnp.asarray(k), jnp.asarray(pos)))
+
+
+class Writer:
+    def __init__(self, out: pathlib.Path):
+        self.out = out
+        self.out.mkdir(parents=True, exist_ok=True)
+        self.cases = []
+
+    def add(self, case: str, params: dict, tensors: dict):
+        entry = {"name": case, "params": params, "tensors": []}
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype in (np.int64, np.int32):
+                arr = arr.astype(np.int32)
+                dtype = "i32"
+            else:
+                arr = arr.astype(np.float32)
+                dtype = "f32"
+            fname = f"{case}__{name}.bin"
+            (self.out / fname).write_bytes(np.ascontiguousarray(arr).tobytes())
+            entry["tensors"].append(
+                {"name": name, "file": fname, "shape": list(arr.shape), "dtype": dtype}
+            )
+        self.cases.append(entry)
+
+    def finish(self):
+        (self.out / "index.json").write_text(json.dumps({"cases": self.cases}, indent=1))
+        print(f"wrote {len(self.cases)} golden cases to {self.out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/goldens")
+    args = ap.parse_args()
+    w = Writer(pathlib.Path(args.out))
+    rng = np.random.default_rng(1234)
+
+    # ---- rope -------------------------------------------------------------
+    x = rng.standard_normal((12, 16)).astype(np.float32)
+    pos = np.arange(5, 17, dtype=np.int32)
+    got = ref.apply_rope(jnp.asarray(x), jnp.asarray(pos), base=10000.0)
+    w.add("rope", {"base": 10000.0}, {"x": x, "positions": pos, "out": got})
+
+    # ---- polar encode/decode/qk across bit mixes ---------------------------
+    for r_bits, t_bits, group in [(4, 4, 16), (3, 3, 16), (5, 3, 8), (2, 4, 32)]:
+        t, d = 2 * group, 32
+        k = outlier_keys(rng, t, d)
+        enc = ref.polar_encode(jnp.asarray(k), r_bits, t_bits, group)
+        k_hat = ref.polar_decode(enc, group)
+        q = rng.standard_normal(d).astype(np.float32)
+        scores = ref.polar_qk_scores(jnp.asarray(q), enc, group)
+        lut_scores = ref.polar_qk_scores_lut(jnp.asarray(q), enc, group, t_bits)
+        w.add(
+            f"polar_r{r_bits}t{t_bits}g{group}",
+            {"r_bits": r_bits, "t_bits": t_bits, "group": group},
+            {
+                "k": k, "q": q,
+                "rho_code": enc["rho_code"], "theta_code": enc["theta_code"],
+                "rho_z": enc["rho_z"], "rho_s": enc["rho_s"],
+                "theta_z": enc["theta_z"], "theta_s": enc["theta_s"],
+                "k_hat": k_hat, "scores": scores, "lut_scores": lut_scores,
+            },
+        )
+
+    # ---- kivi ---------------------------------------------------------------
+    for bits, group in [(4, 16), (2, 16)]:
+        t, d = 3 * group, 32
+        k = outlier_keys(rng, t, d)
+        enc = ref.kivi_encode(jnp.asarray(k), bits, group)
+        q = rng.standard_normal(d).astype(np.float32)
+        w.add(
+            f"kivi_b{bits}g{group}",
+            {"bits": bits, "group": group},
+            {
+                "k": k, "q": q, "code": enc["code"], "z": enc["z"], "s": enc["s"],
+                "k_hat": ref.kivi_decode(enc, group),
+                "scores": ref.kivi_qk_scores(jnp.asarray(q), enc, group),
+            },
+        )
+
+    # ---- token-wise int / zipcache / value ---------------------------------
+    t, d = 24, 32
+    k = outlier_keys(rng, t, d)
+    for bits in (3, 4):
+        enc = ref.int_encode(jnp.asarray(k), bits)
+        w.add(
+            f"int_b{bits}", {"bits": bits},
+            {"k": k, "code": enc["code"], "z": enc["z"], "s": enc["s"],
+             "k_hat": ref.int_decode(enc)},
+        )
+    enc = ref.zipcache_encode(jnp.asarray(k), 4)
+    w.add(
+        "zipcache_b4", {"bits": 4},
+        {"k": k, "code": enc["code"], "z": enc["z"], "s": enc["s"],
+         "channel_norm": enc["channel_norm"], "k_hat": ref.zipcache_decode(enc)},
+    )
+    v = rng.standard_normal((t, d)).astype(np.float32)
+    enc = ref.value_encode(jnp.asarray(v), 2)
+    w.add(
+        "value_b2", {"bits": 2},
+        {"v": v, "code": enc["code"], "z": enc["z"], "s": enc["s"],
+         "v_hat": ref.value_decode(enc)},
+    )
+
+    # ---- full decode-attention head (quantized + residual + self) ----------
+    group, r_bits, t_bits = 16, 4, 4
+    t, d = 2 * group, 32
+    k = outlier_keys(rng, t, d)
+    vv = rng.standard_normal((t, d)).astype(np.float32)
+    q = rng.standard_normal(d).astype(np.float32)
+    rk = rng.standard_normal((5, d)).astype(np.float32)
+    rv = rng.standard_normal((5, d)).astype(np.float32)
+    enc = ref.polar_encode(jnp.asarray(k), r_bits, t_bits, group)
+    out = ref.attn_decode_ref(
+        jnp.asarray(q), enc, jnp.asarray(vv), group,
+        residual_k=jnp.asarray(rk), residual_v=jnp.asarray(rv),
+    )
+    w.add(
+        "attn_decode", {"r_bits": r_bits, "t_bits": t_bits, "group": group},
+        {"q": q, "k": k, "v": vv, "resid_k": rk, "resid_v": rv, "out": out},
+    )
+
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+# L1 Pallas baseline: KIVI-style channel-wise dequantize-then-multiply QK.
+#
+# This is the comparator the paper beats (Fig. 3 / Table 4).  Same grid as
+# polar_qk.py — (batch*kv-head, seq-group) — but the inner loop must fully
+# dequantize the (group, d) key tile (one mul + one add per element) before
+# a dense (group, d) x (d, Hq) matmul.  On real TPU the dequant runs on the
+# VPU and the matmul on the MXU; the dequant traffic is the cost PolarQuant
+# removes.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kivi_encode_kernel(k_ref, code_ref, z_ref, s_ref, *, bits):
+    k = k_ref[...]  # (1, group, d)
+    z = jnp.min(k, axis=1, keepdims=True)
+    s = (jnp.max(k, axis=1, keepdims=True) - z) / float(2**bits)
+    s = jnp.maximum(s, 1e-8)
+    code_ref[...] = jnp.clip(jnp.floor((k - z) / s), 0, 2**bits - 1).astype(jnp.int32)
+    z_ref[...] = z
+    s_ref[...] = s
+
+
+def kivi_encode_pallas(k: jnp.ndarray, bits: int, group: int):
+    """Channel-wise group quantization of keys. k: (N, T, d)."""
+    N, T, d = k.shape
+    assert T % group == 0
+    G = T // group
+    import functools
+
+    kernel = functools.partial(_kivi_encode_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, G),
+        in_specs=[pl.BlockSpec((1, group, d), lambda n, g: (n, g, 0))],
+        out_specs=(
+            pl.BlockSpec((1, group, d), lambda n, g: (n, g, 0)),
+            pl.BlockSpec((1, 1, d), lambda n, g: (n, g, 0)),
+            pl.BlockSpec((1, 1, d), lambda n, g: (n, g, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((N, T, d), jnp.int32),
+            jax.ShapeDtypeStruct((N, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((N, G, d), jnp.float32),
+        ),
+        interpret=True,
+    )(k)
+
+
+def _kivi_qk_kernel(q_ref, code_ref, z_ref, s_ref, out_ref):
+    q = q_ref[...][0]  # (Hq, d)
+    code = code_ref[...][0].astype(jnp.float32)  # (group, d)
+    k_hat = (code + 0.5) * s_ref[...][0] + z_ref[...][0]  # dequant EVERY element
+    out_ref[...] = (k_hat @ q.T).T[None]  # (1, Hq, group)
+
+
+def kivi_qk_pallas(q, code, z, s, group: int):
+    """Dequantize-then-multiply QK scores (the baseline PolarQuant beats).
+
+    q: (N, Hq, d); code: (N, T, d) int32; z, s: (N, T/group, d).
+    Returns (N, Hq, T) f32.
+    """
+    N, Hq, d = q.shape
+    T = code.shape[1]
+    G = T // group
+    return pl.pallas_call(
+        _kivi_qk_kernel,
+        grid=(N, G),
+        in_specs=[
+            pl.BlockSpec((1, Hq, d), lambda n, g: (n, 0, 0)),
+            pl.BlockSpec((1, group, d), lambda n, g: (n, g, 0)),
+            pl.BlockSpec((1, 1, d), lambda n, g: (n, g, 0)),
+            pl.BlockSpec((1, 1, d), lambda n, g: (n, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, group), lambda n, g: (n, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((N, Hq, T), jnp.float32),
+        interpret=True,
+    )(q, code, z, s)

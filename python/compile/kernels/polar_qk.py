@@ -1,0 +1,95 @@
+# L1 Pallas kernel: PolarQuant accelerated query-key inner product
+# (Appendix A of the paper) — fused LUT build + gather + scale + reduce.
+#
+# The paper's Triton kernel tiles the sequence with threadblocks and keeps
+# a per-channel LUT in shared memory.  TPU re-think (DESIGN.md §2):
+#
+#   grid = (N, G)  with N = batch*kv-heads, G = seq/group token groups.
+#   Each grid step:
+#     1. stages the group's theta/rho quant params (4 x d/2 f32) and the
+#        query block (Hq x d, all query heads sharing this kv head) into
+#        VMEM,
+#     2. builds the LUT on the fly:
+#          LUT[h, j, c] = qx[h,j]*cos(th~(c;j)) + qy[h,j]*sin(th~(c;j))
+#        shape (Hq, d/2, 2^t) — for Hq=4, d=128, t=4 that is 16 KiB, i.e.
+#        register/VMEM-resident.  The build is a (Hq*d/2, 2) x (2, 2^t)
+#        contraction -> MXU-eligible on real hardware,
+#     3. gathers LUT entries by the group's theta codes (VPU gather),
+#        dequantizes rho inline, multiplies and reduces over channel
+#        pairs -> a (Hq, group) tile of attention scores.
+#
+#   Per-step VMEM: codes 2*group*d/2 i32 + V-of-next-stage none here +
+#   LUT + params ~= 80 KiB at group=128, d=128, Hq=4 — double-bufferable.
+#
+# The matmul the paper replaces would be (group x d) @ (d x Hq) per step;
+# the LUT path does (d/2 x 2 x 2^t) mults once + group*d/2 gathers+mults,
+# cutting multiply count roughly in half and removing the dequant
+# (cos/sin/mul) entirely from the inner loop — the same arithmetic-
+# intensity argument as the Triton kernel.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qk_kernel(q_ref, tc_ref, rc_ref, rz_ref, rs_ref, tz_ref, ts_ref, out_ref, *, t_bits):
+    q = q_ref[...]  # (1, Hq, d)
+    hq, d = q.shape[1], q.shape[2]
+    qx = q[0, :, 0::2]  # (Hq, d/2)
+    qy = q[0, :, 1::2]
+    ts = ts_ref[...][0, 0]  # (d/2,)
+    tz = tz_ref[...][0, 0]
+    # LUT build: th~(j, c) = (c + 1/2) * ts[j] + tz[j]
+    c = jnp.arange(2**t_bits, dtype=jnp.float32) + 0.5  # (C,)
+    # -pi undoes the atan2(+pi) storage shift (see ref.polar_decode)
+    th = c[None, :] * ts[:, None] + tz[:, None] - jnp.pi  # (d/2, C)
+    cos_t, sin_t = jnp.cos(th), jnp.sin(th)
+    lut = qx[:, :, None] * cos_t[None] + qy[:, :, None] * sin_t[None]  # (Hq, d/2, C)
+
+    tc = tc_ref[...][0]  # (group, d/2) int32
+    rc = rc_ref[...][0]
+    rho = (rc.astype(jnp.float32) + 0.5) * rs_ref[...][0, 0][None, :] + rz_ref[...][0, 0][None, :]
+
+    # gather: part[h, n, j] = lut[h, j, tc[n, j]]
+    part = jnp.take_along_axis(
+        jnp.broadcast_to(lut[:, None], (hq, tc.shape[0], lut.shape[1], lut.shape[2])),
+        tc[None, :, :, None],
+        axis=-1,
+    )[..., 0]  # (Hq, group, d/2)
+    out_ref[...] = (part * rho[None]).sum(-1)[None]  # (1, Hq, group)
+
+
+def polar_qk_pallas(q, theta_code, rho_code, rho_z, rho_s, theta_z, theta_s, group: int, t_bits: int):
+    """Fused dequant + QK scores against a polar-encoded key cache.
+
+    q:          (N, Hq, d)    — decode-step queries, Hq = q-heads per kv-head
+    theta_code: (N, T, d/2)   int32
+    rho_code:   (N, T, d/2)   int32
+    *_z, *_s:   (N, T/group, d/2) f32
+    Returns scores (N, Hq, T) f32 (unscaled; caller applies 1/sqrt(d)).
+    """
+    N, Hq, d = q.shape
+    T = theta_code.shape[1]
+    dh = d // 2
+    G = T // group
+    kernel = functools.partial(_qk_kernel, t_bits=t_bits)
+    code_spec = pl.BlockSpec((1, group, dh), lambda n, g: (n, g, 0))
+    param_spec = pl.BlockSpec((1, 1, dh), lambda n, g: (n, g, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(N, G),
+        in_specs=[
+            pl.BlockSpec((1, Hq, d), lambda n, g: (n, 0, 0)),
+            code_spec,
+            code_spec,
+            param_spec,
+            param_spec,
+            param_spec,
+            param_spec,
+        ],
+        out_specs=pl.BlockSpec((1, Hq, group), lambda n, g: (n, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((N, Hq, T), jnp.float32),
+        interpret=True,
+    )(q, theta_code, rho_code, rho_z, rho_s, theta_z, theta_s)

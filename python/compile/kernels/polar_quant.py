@@ -1,0 +1,104 @@
+# L1 Pallas kernel: PolarQuant encoder (post-RoPE keys -> polar codes).
+#
+# Grid layout (TPU adaptation, DESIGN.md §2): one grid step per
+# (sequence-group, flattened batch*kv-head).  Each step stages one
+# (group, d) tile of keys HBM->VMEM, computes the polar transform on the
+# VPU, reduces min/max over the token axis of the tile (a VMEM-local
+# reduction — the group IS the tile, so quantization params never leave
+# VMEM), quantizes, and writes codes + params back.
+#
+# VMEM budget per step (f32): group*d (keys) + 3*group*d/2 (rho/theta/
+# scratch) + 4*d/2 (params) ~= 2.5*group*d*4 bytes; for group=128, d=128
+# that is ~160 KiB — far under the ~16 MiB VMEM ceiling, leaving room for
+# double buffering.
+#
+# interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+# custom-calls; the BlockSpec structure is still the real-TPU schedule.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(k_ref, rc_ref, tc_ref, rz_ref, rs_ref, tz_ref, ts_ref, *, r_bits, t_bits):
+    k = k_ref[...]  # (1, group, d)
+    x = k[..., 0::2]
+    y = k[..., 1::2]
+    rho = jnp.sqrt(x * x + y * y)  # (1, group, d/2)
+    theta = jnp.arctan2(y, x) + jnp.pi
+
+    def qparams(v, bits):
+        z = jnp.min(v, axis=1, keepdims=True)  # (1, 1, d/2)
+        s = (jnp.max(v, axis=1, keepdims=True) - z) / float(2**bits)
+        s = jnp.maximum(s, 1e-8)
+        return z, s
+
+    rz, rs = qparams(rho, r_bits)
+    tz, ts = qparams(theta, t_bits)
+    rc = jnp.clip(jnp.floor((rho - rz) / rs), 0, 2**r_bits - 1).astype(jnp.int32)
+    tc = jnp.clip(jnp.floor((theta - tz) / ts), 0, 2**t_bits - 1).astype(jnp.int32)
+    rc_ref[...] = rc
+    tc_ref[...] = tc
+    rz_ref[...] = rz
+    rs_ref[...] = rs
+    tz_ref[...] = tz
+    ts_ref[...] = ts
+
+
+def polar_encode_pallas(k: jnp.ndarray, r_bits: int, t_bits: int, group: int):
+    """Encode post-RoPE keys into polar codes, group-wise over tokens.
+
+    k: (N, T, d) with T % group == 0 (N = flattened batch * kv-heads).
+    Returns (rho_code, theta_code) int32 (N, T, d/2) and four f32 param
+    arrays (N, T/group, d/2): rho_z, rho_s, theta_z, theta_s.
+    """
+    N, T, d = k.shape
+    assert T % group == 0 and d % 2 == 0
+    G = T // group
+    dh = d // 2
+    kernel = functools.partial(_encode_kernel, r_bits=r_bits, t_bits=t_bits)
+    out_shapes = (
+        jax.ShapeDtypeStruct((N, T, dh), jnp.int32),
+        jax.ShapeDtypeStruct((N, T, dh), jnp.int32),
+        jax.ShapeDtypeStruct((N, G, dh), jnp.float32),
+        jax.ShapeDtypeStruct((N, G, dh), jnp.float32),
+        jax.ShapeDtypeStruct((N, G, dh), jnp.float32),
+        jax.ShapeDtypeStruct((N, G, dh), jnp.float32),
+    )
+    code_spec = pl.BlockSpec((1, group, dh), lambda n, g: (n, g, 0))
+    param_spec = pl.BlockSpec((1, 1, dh), lambda n, g: (n, g, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(N, G),
+        in_specs=[pl.BlockSpec((1, group, d), lambda n, g: (n, g, 0))],
+        out_specs=(code_spec, code_spec, param_spec, param_spec, param_spec, param_spec),
+        out_shape=out_shapes,
+        interpret=True,
+    )(k)
+
+
+def _decode_kernel(rc_ref, tc_ref, rz_ref, rs_ref, tz_ref, ts_ref, k_ref):
+    rho = (rc_ref[...].astype(jnp.float32) + 0.5) * rs_ref[...] + rz_ref[...]
+    # -pi undoes the atan2(+pi) storage shift (see ref.polar_decode)
+    theta = (tc_ref[...].astype(jnp.float32) + 0.5) * ts_ref[...] + tz_ref[...] - jnp.pi
+    x = rho * jnp.cos(theta)  # (1, group, d/2)
+    y = rho * jnp.sin(theta)
+    k_ref[...] = jnp.stack([x, y], axis=-1).reshape(k_ref.shape)
+
+
+def polar_decode_pallas(rho_code, theta_code, rho_z, rho_s, theta_z, theta_s, group: int):
+    """Inverse of polar_encode_pallas: codes -> Cartesian keys (N, T, d)."""
+    N, T, dh = rho_code.shape
+    G = T // group
+    code_spec = pl.BlockSpec((1, group, dh), lambda n, g: (n, g, 0))
+    param_spec = pl.BlockSpec((1, 1, dh), lambda n, g: (n, g, 0))
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(N, G),
+        in_specs=[code_spec, code_spec, param_spec, param_spec, param_spec, param_spec],
+        out_specs=pl.BlockSpec((1, group, 2 * dh), lambda n, g: (n, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, T, 2 * dh), jnp.float32),
+        interpret=True,
+    )(rho_code, theta_code, rho_z, rho_s, theta_z, theta_s)

@@ -1,0 +1,261 @@
+# Pure-jnp correctness oracles for every kernel in this package.
+#
+# These functions define the *numerics contract* of the whole repo:
+#   * the Pallas kernels (polar_quant.py, polar_qk.py, kivi_qk.py,
+#     value_quant.py) must match them exactly (same op order, fp32),
+#   * the Rust quantization library (rust/src/quant/) re-implements the
+#     same formulas and is cross-checked against goldens generated from
+#     here (python/tests/test_goldens.py writes them, rust tests read).
+#
+# Conventions (see DESIGN.md §5):
+#   * keys are post-RoPE; a "pair" j couples dims (2j, 2j+1),
+#   * group-wise quantization groups **tokens** (size g) per channel(-pair),
+#   * asymmetric quant: code = clamp(floor((x - z)/s), 0, 2^b - 1),
+#     dequant x~ = (code + 1/2) * s + z, with z = min, s = (max-min)/2^b.
+#     (The paper's printed zero-point formula is a typo — its Figure-4
+#     reference code uses the minimum, which is what we implement.)
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jnp.ndarray:
+    """Per-pair angular frequencies phi_i = base^(-2i/d), i < d/2."""
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    return base ** (-2.0 * i / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0):
+    """Rotate pairs (2j, 2j+1) of the trailing dim by pos * phi_j.
+
+    x: (..., T, d), positions: (T,) int32.  Uses the *adjacent-pair*
+    (matrix-multiplication) formulation of Eq. 1, which is the one the
+    polar transformation is defined over.
+    """
+    d = x.shape[-1]
+    phi = rope_freqs(d, base)  # (d/2,)
+    ang = positions.astype(jnp.float32)[:, None] * phi[None, :]  # (T, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xe = x[..., 0::2]
+    xo = x[..., 1::2]
+    ye = xe * cos - xo * sin
+    yo = xe * sin + xo * cos
+    return jnp.stack([ye, yo], axis=-1).reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# Asymmetric min/max quantization helpers
+# --------------------------------------------------------------------------
+
+
+def _qparams(x: jnp.ndarray, bits: int, axis):
+    """Zero-point (min) and scale over `axis`; s floored to avoid div-by-0."""
+    z = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    s = (mx - z) / float(2**bits)
+    s = jnp.maximum(s, 1e-8)
+    return z, s
+
+
+def _quantize(x, z, s, bits: int):
+    code = jnp.floor((x - z) / s)
+    return jnp.clip(code, 0, 2**bits - 1).astype(jnp.int32)
+
+
+def _dequantize(code, z, s):
+    return (code.astype(jnp.float32) + 0.5) * s + z
+
+
+# --------------------------------------------------------------------------
+# PolarQuant (the paper's contribution)
+# --------------------------------------------------------------------------
+
+
+def polar_transform(k: jnp.ndarray):
+    """(..., T, d) -> rho, theta with shapes (..., T, d/2).
+
+    theta = atan2(y, x) + pi in (0, 2*pi).
+    """
+    x = k[..., 0::2]
+    y = k[..., 1::2]
+    rho = jnp.sqrt(x * x + y * y)
+    theta = jnp.arctan2(y, x) + jnp.pi
+    return rho, theta
+
+
+def polar_encode(k: jnp.ndarray, r_bits: int, t_bits: int, group: int):
+    """Quantize post-RoPE keys in polar coordinates, group-wise over tokens.
+
+    k: (T, d) with T % group == 0 (the serving engine keeps a residual fp
+    buffer for the tail; only full groups are ever encoded).
+
+    Returns dict of:
+      rho_code, theta_code: (T, d/2) int32
+      rho_z, rho_s, theta_z, theta_s: (T/group, d/2) f32
+    """
+    T, d = k.shape
+    assert T % group == 0, "only full groups are encoded"
+    rho, theta = polar_transform(k)  # (T, d/2)
+    G = T // group
+    rho_g = rho.reshape(G, group, d // 2)
+    th_g = theta.reshape(G, group, d // 2)
+    rz, rs = _qparams(rho_g, r_bits, axis=1)  # (G, 1, d/2)
+    tz, ts = _qparams(th_g, t_bits, axis=1)
+    rc = _quantize(rho_g, rz, rs, r_bits).reshape(T, d // 2)
+    tc = _quantize(th_g, tz, ts, t_bits).reshape(T, d // 2)
+    return {
+        "rho_code": rc,
+        "theta_code": tc,
+        "rho_z": rz[:, 0, :],
+        "rho_s": rs[:, 0, :],
+        "theta_z": tz[:, 0, :],
+        "theta_s": ts[:, 0, :],
+    }
+
+
+def polar_decode(enc: dict, group: int):
+    """Dequantize back to Cartesian keys (T, d)."""
+    rc, tc = enc["rho_code"], enc["theta_code"]
+    T, dh = rc.shape
+    rz = jnp.repeat(enc["rho_z"], group, axis=0)  # (T, d/2)
+    rs = jnp.repeat(enc["rho_s"], group, axis=0)
+    tz = jnp.repeat(enc["theta_z"], group, axis=0)
+    ts = jnp.repeat(enc["theta_s"], group, axis=0)
+    rho = _dequantize(rc, rz, rs)
+    # theta was stored shifted by +pi (range (0, 2pi)); undo the shift when
+    # mapping back to Cartesian.  (The paper's decode formula omits the -pi,
+    # which would negate every reconstructed key — an inconsistency in the
+    # text; its Figure-4 reference code bakes the shift into `tmn`.)
+    theta = _dequantize(tc, tz, ts) - jnp.pi
+    x = rho * jnp.cos(theta)
+    y = rho * jnp.sin(theta)
+    return jnp.stack([x, y], axis=-1).reshape(T, 2 * dh)
+
+
+def polar_qk_scores(q: jnp.ndarray, enc: dict, group: int):
+    """Reference fused dequant+QK: q (d,) x encoded keys -> scores (T,).
+
+    Mathematically identical to q @ polar_decode(enc).T; written via
+    dequantization so the LUT kernel can be compared against it.
+    """
+    k_hat = polar_decode(enc, group)  # (T, d)
+    return k_hat @ q
+
+
+def polar_qk_scores_lut(q: jnp.ndarray, enc: dict, group: int, t_bits: int):
+    """Explicit-LUT evaluation (what the accelerated kernel computes).
+
+    Builds, per token-group and channel-pair, the 2^t-entry table
+    LUT[g, j, c] = q[2j] cos(th~(c)) + q[2j+1] sin(th~(c)) and gathers.
+    """
+    rc, tc = enc["rho_code"], enc["theta_code"]
+    T, dh = rc.shape
+    G = T // group
+    qx, qy = q[0::2], q[1::2]  # (d/2,)
+    c = jnp.arange(2**t_bits, dtype=jnp.float32) + 0.5  # (C,)
+    # th~(g, j, c) = c * ts[g, j] + tz[g, j] - pi (undo the storage shift)
+    th = (
+        c[None, None, :] * enc["theta_s"][:, :, None]
+        + enc["theta_z"][:, :, None]
+        - jnp.pi
+    )
+    lut = qx[None, :, None] * jnp.cos(th) + qy[None, :, None] * jnp.sin(th)  # (G, d/2, C)
+    tcg = tc.reshape(G, group, dh)
+    part = jnp.take_along_axis(
+        jnp.broadcast_to(lut[:, None, :, :], (G, group, dh, lut.shape[-1])),
+        tcg[..., None],
+        axis=-1,
+    )[..., 0]  # (G, group, d/2)
+    rho = _dequantize(
+        rc.reshape(G, group, dh),
+        enc["rho_z"][:, None, :],
+        enc["rho_s"][:, None, :],
+    )
+    return (part * rho).sum(-1).reshape(T)
+
+
+# --------------------------------------------------------------------------
+# KIVI baseline: channel-wise (per-channel over token groups) key quant
+# --------------------------------------------------------------------------
+
+
+def kivi_encode(k: jnp.ndarray, bits: int, group: int):
+    """Channel-wise asymmetric quant: params per (token-group, channel)."""
+    T, d = k.shape
+    assert T % group == 0
+    G = T // group
+    kg = k.reshape(G, group, d)
+    z, s = _qparams(kg, bits, axis=1)
+    code = _quantize(kg, z, s, bits).reshape(T, d)
+    return {"code": code, "z": z[:, 0, :], "s": s[:, 0, :]}
+
+
+def kivi_decode(enc: dict, group: int):
+    z = jnp.repeat(enc["z"], group, axis=0)
+    s = jnp.repeat(enc["s"], group, axis=0)
+    return _dequantize(enc["code"], z, s)
+
+
+def kivi_qk_scores(q: jnp.ndarray, enc: dict, group: int):
+    return kivi_decode(enc, group) @ q
+
+
+# --------------------------------------------------------------------------
+# Token-wise baselines (Int-N, ZipCache) and value quantization
+# --------------------------------------------------------------------------
+
+
+def int_encode(x: jnp.ndarray, bits: int):
+    """Token-wise quant: params per token over channels. x: (T, d)."""
+    z, s = _qparams(x, bits, axis=-1)
+    code = _quantize(x, z, s, bits)
+    return {"code": code, "z": z[..., 0], "s": s[..., 0]}
+
+
+def int_decode(enc: dict):
+    return _dequantize(enc["code"], enc["z"][..., None], enc["s"][..., None])
+
+
+def zipcache_encode(k: jnp.ndarray, bits: int):
+    """Channel-separable token-wise: normalize channels by sqrt(max |.|)."""
+    norm = jnp.sqrt(jnp.maximum(jnp.max(jnp.abs(k), axis=0), 1e-8))  # (d,)
+    kn = k / norm[None, :]
+    enc = int_encode(kn, bits)
+    enc["channel_norm"] = norm
+    return enc
+
+
+def zipcache_decode(enc: dict):
+    return int_decode(enc) * enc["channel_norm"][None, :]
+
+
+def value_encode(v: jnp.ndarray, bits: int):
+    """Token-wise value quant (KIVI's value path)."""
+    return int_encode(v, bits)
+
+
+value_decode = int_decode
+
+
+# --------------------------------------------------------------------------
+# Attention (decode step) over a quantized key cache — the L2 contract
+# --------------------------------------------------------------------------
+
+
+def attn_decode_ref(q, enc, v, group, *, residual_k=None, residual_v=None, scale=None):
+    """Single-head decode attention: q (d,), quantized keys (T tokens),
+    fp values v (T, d), optional fp residual tail. Returns (d,) output."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = polar_qk_scores(q, enc, group) * scale  # (T,)
+    if residual_k is not None:
+        scores_r = (residual_k @ q) * scale
+        scores = jnp.concatenate([scores, scores_r])
+        v = jnp.concatenate([v, residual_v], axis=0)
+    w = jax.nn.softmax(scores)
+    return w @ v

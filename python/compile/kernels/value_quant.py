@@ -1,0 +1,67 @@
+# L1 Pallas kernel: token-wise value-cache quantization (KIVI's value
+# path, used by PolarQuant for the Table 7 "+ value quant" configuration).
+#
+# Values have no channel outliers, so per-token min/max quantization is
+# sufficient (paper §5.2 / Appendix D).  Grid tiles the token axis; the
+# reduction is over the channel axis of each VMEM tile.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _v_encode_kernel(v_ref, code_ref, z_ref, s_ref, *, bits):
+    v = v_ref[...]  # (1, tile, d)
+    z = jnp.min(v, axis=-1, keepdims=True)  # (1, tile, 1)
+    s = (jnp.max(v, axis=-1, keepdims=True) - z) / float(2**bits)
+    s = jnp.maximum(s, 1e-8)
+    code_ref[...] = jnp.clip(jnp.floor((v - z) / s), 0, 2**bits - 1).astype(jnp.int32)
+    z_ref[...] = z[..., 0]
+    s_ref[...] = s[..., 0]
+
+
+def value_encode_pallas(v: jnp.ndarray, bits: int, tile: int = 64):
+    """Token-wise quantization. v: (N, T, d), T % tile == 0."""
+    N, T, d = v.shape
+    assert T % tile == 0
+    kernel = functools.partial(_v_encode_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, T // tile),
+        in_specs=[pl.BlockSpec((1, tile, d), lambda n, t: (n, t, 0))],
+        out_specs=(
+            pl.BlockSpec((1, tile, d), lambda n, t: (n, t, 0)),
+            pl.BlockSpec((1, tile), lambda n, t: (n, t)),
+            pl.BlockSpec((1, tile), lambda n, t: (n, t)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((N, T, d), jnp.int32),
+            jax.ShapeDtypeStruct((N, T), jnp.float32),
+            jax.ShapeDtypeStruct((N, T), jnp.float32),
+        ),
+        interpret=True,
+    )(v)
+
+
+def _v_decode_kernel(code_ref, z_ref, s_ref, v_ref):
+    code = code_ref[...].astype(jnp.float32)
+    v_ref[...] = (code + 0.5) * s_ref[...][..., None] + z_ref[...][..., None]
+
+
+def value_decode_pallas(code, z, s, tile: int = 64):
+    """Inverse of value_encode_pallas."""
+    N, T, d = code.shape
+    return pl.pallas_call(
+        _v_decode_kernel,
+        grid=(N, T // tile),
+        in_specs=[
+            pl.BlockSpec((1, tile, d), lambda n, t: (n, t, 0)),
+            pl.BlockSpec((1, tile), lambda n, t: (n, t)),
+            pl.BlockSpec((1, tile), lambda n, t: (n, t)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, d), lambda n, t: (n, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, T, d), jnp.float32),
+        interpret=True,
+    )(code, z, s)

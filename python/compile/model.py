@@ -1,0 +1,348 @@
+# L2: the JAX model — a RoPE decoder-only transformer (GQA, SwiGLU, RMSNorm)
+# whose decode step attends over a *PolarQuant-encoded* key cache via the L1
+# Pallas kernels.  Lowered once by aot.py to HLO text; never imported at
+# runtime.
+#
+# Graph contracts (shapes fixed per AOT bucket; see aot.py manifest):
+#
+#   prefill(tokens (B,T) i32, prompt_len (B,) i32, *weights)
+#       -> logits_last (B,V), k_cache (L,B,Kv,T,dh) post-RoPE, v_cache (same)
+#     Full-precision causal attention; key quantization of the prompt is the
+#     coordinator's job (Rust encodes full groups, keeps the tail residual).
+#
+#   decode_step(tokens (B,), positions (B,), cache_len (B,), resid_len (B,),
+#               theta_code, rho_code (L,B,Kv,S,dh/2) i32,
+#               rho_z, rho_s, theta_z, theta_s (L,B,Kv,S/g,dh/2) f32,
+#               v_cache (L,B,Kv,S,dh) f32,
+#               resid_k, resid_v (L,B,Kv,R,dh) f32, *weights)
+#       -> logits (B,V), new_k (L,B,Kv,dh) post-RoPE, new_v (L,B,Kv,dh)
+#     Attention scores over the quantized region come from the PolarQuant
+#     LUT kernel (polar_qk_pallas); the fp residual tail and the current
+#     token are scored densely.  Softmax runs over the concatenation with
+#     per-sequence length masks (cache_len is always a multiple of g).
+#
+# Weights are graph *inputs* (never constants): the Rust runtime keeps them
+# resident as PjRtBuffers, so HLO text stays small and one artifact serves
+# any checkpoint of the same config.
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.polar_qk import polar_qk_pallas
+from compile.kernels.polar_quant import polar_encode_pallas
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + quantization hyper-parameters (DESIGN.md §7)."""
+
+    name: str = "tiny"
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    ffn: int = 256
+    rope_base: float = 10000.0
+    # quantization
+    group: int = 64        # tokens per quant group (g)
+    r_bits: int = 4
+    t_bits: int = 4
+    resid: int = 64        # fp residual capacity (R) — one group
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def validate(self):
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.head_dim % 2 == 0
+        assert self.resid >= self.group
+
+
+CONFIGS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        name="small", vocab=2048, d_model=256, n_layers=8, n_heads=8,
+        n_kv_heads=2, head_dim=32, ffn=704, group=64, resid=64,
+    ),
+    # Llama-3.1-8B head geometry at reduced depth/width — used for the
+    # kernel-latency experiments (Fig 3 / Table 4) where only the attention
+    # geometry matters.
+    "llama31-head": ModelConfig(
+        name="llama31-head", vocab=1024, d_model=512, n_layers=2, n_heads=32,
+        n_kv_heads=8, head_dim=128, ffn=1024, rope_base=500000.0,
+        group=128, resid=128,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Weights
+# --------------------------------------------------------------------------
+
+
+def weight_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical flattening order used by
+    the .bin file, the manifest, and every graph's trailing inputs."""
+    L, D, H, Kv, dh, F, V = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        cfg.head_dim, cfg.ffn, cfg.vocab,
+    )
+    return [
+        ("embed", (V, D)),
+        ("wq", (L, D, H * dh)),
+        ("wk", (L, D, Kv * dh)),
+        ("bk", (L, Kv * dh)),
+        ("wv", (L, D, Kv * dh)),
+        ("wo", (L, H * dh, D)),
+        ("w_gate", (L, D, F)),
+        ("w_up", (L, D, F)),
+        ("w_down", (L, F, D)),
+        ("norm_attn", (L, D)),
+        ("norm_mlp", (L, D)),
+        ("norm_final", (D,)),
+        ("lm_head", (D, V)),
+    ]
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0, outlier_severity: float = 6.0,
+                 outlier_frac: float = 0.0625) -> Dict[str, np.ndarray]:
+    """Synthetic weights with the paper's key-cache outlier structure.
+
+    A fraction of key channels get a large constant BIAS on ONE dim of
+    their RoPE pair (Qwen2.5's attention-bias mechanism, which the paper
+    singles out as the hardest case): post-RoPE those pairs trace the
+    Figure-1(b) ring — consistent radius, smooth angle — while
+    Cartesian-wise the channel magnitudes dwarf their peers across every
+    token (Figure 1a), which is what breaks token-wise quantization.
+    Mirrors `rust/src/model/weights.rs::synthetic`.
+    """
+    rng = np.random.default_rng(seed)
+    w: Dict[str, np.ndarray] = {}
+    for name, shape in weight_specs(cfg):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / math.sqrt(fan_in)
+        if name.startswith("norm"):
+            w[name] = np.ones(shape, dtype=np.float32)
+        elif name == "bk":
+            w[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            w[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+    # channel outliers in the key projection (pre-RoPE, per kv-head)
+    dh = cfg.head_dim
+    n_pairs = dh // 2
+    n_out = max(1, int(n_pairs * outlier_frac))
+    bk = w["bk"].reshape(cfg.n_layers, cfg.n_kv_heads, dh)
+    if outlier_severity > 0.0:
+        for l in range(cfg.n_layers):
+            for h in range(cfg.n_kv_heads):
+                pairs = rng.choice(n_pairs, size=n_out, replace=False)
+                for j in pairs:
+                    sign = 1.0 if rng.random() < 0.5 else -1.0
+                    bk[l, h, 2 * j] = sign * outlier_severity
+    w["bk"] = bk.reshape(cfg.n_layers, cfg.n_kv_heads * dh)
+    return w
+
+
+def flatten_weights(cfg: ModelConfig, w: Dict[str, np.ndarray]):
+    return [w[name] for name, _ in weight_specs(cfg)]
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """cos/sin (..., dh/2) for the given positions (adjacent-pair form)."""
+    i = jnp.arange(cfg.head_dim // 2, dtype=jnp.float32)
+    phi = cfg.rope_base ** (-2.0 * i / cfg.head_dim)
+    ang = positions.astype(jnp.float32)[..., None] * phi
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_rotate(x, cos, sin):
+    """x (..., dh); cos/sin broadcastable to (..., dh/2)."""
+    xe = x[..., 0::2]
+    xo = x[..., 1::2]
+    ye = xe * cos - xo * sin
+    yo = xe * sin + xo * cos
+    return jnp.stack([ye, yo], axis=-1).reshape(x.shape)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# --------------------------------------------------------------------------
+# Decode step (the serving hot path)
+# --------------------------------------------------------------------------
+
+
+def _decode_attn_layer(cfg: ModelConfig, x, lw, cache, positions, cache_len, resid_len):
+    """One layer's attention over quantized cache + fp residual + self.
+
+    x: (B, D); lw: dict of this layer's weights; cache: dict of this
+    layer's cache slices.  Returns (out (B, D), k_cur, v_cur (B,Kv,dh)).
+    """
+    B = x.shape[0]
+    H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Hq = cfg.q_per_kv
+    S = cache["v"].shape[2]
+    R = cache["resid_k"].shape[2]
+    G = S // cfg.group
+
+    q = (x @ lw["wq"]).reshape(B, H, dh)
+    k = (x @ lw["wk"] + lw["bk"]).reshape(B, Kv, dh)
+    v = (x @ lw["wv"]).reshape(B, Kv, dh)
+    cos, sin = rope_tables(cfg, positions)  # (B, dh/2)
+    q = rope_rotate(q, cos[:, None, :], sin[:, None, :])
+    k = rope_rotate(k, cos[:, None, :], sin[:, None, :])
+
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Kv, Hq, dh).reshape(B * Kv, Hq, dh)
+
+    # --- quantized region: PolarQuant LUT kernel (L1) ---
+    sc_q = polar_qk_pallas(
+        qg,
+        cache["theta_code"].reshape(B * Kv, S, dh // 2),
+        cache["rho_code"].reshape(B * Kv, S, dh // 2),
+        cache["rho_z"].reshape(B * Kv, G, dh // 2),
+        cache["rho_s"].reshape(B * Kv, G, dh // 2),
+        cache["theta_z"].reshape(B * Kv, G, dh // 2),
+        cache["theta_s"].reshape(B * Kv, G, dh // 2),
+        cfg.group,
+        cfg.t_bits,
+    ).reshape(B, Kv, Hq, S) * scale
+    pos_s = jnp.arange(S, dtype=jnp.int32)
+    mask_q = pos_s[None, :] < cache_len[:, None]  # (B, S)
+    sc_q = jnp.where(mask_q[:, None, None, :], sc_q, NEG_INF)
+
+    # --- fp residual tail ---
+    sc_r = jnp.einsum("bkhd,bkrd->bkhr", qg.reshape(B, Kv, Hq, dh), cache["resid_k"]) * scale
+    pos_r = jnp.arange(R, dtype=jnp.int32)
+    mask_r = pos_r[None, :] < resid_len[:, None]
+    sc_r = jnp.where(mask_r[:, None, None, :], sc_r, NEG_INF)
+
+    # --- current token (always attends to itself) ---
+    sc_c = jnp.einsum("bkhd,bkd->bkh", qg.reshape(B, Kv, Hq, dh), k)[..., None] * scale
+
+    scores = jnp.concatenate([sc_q, sc_r, sc_c], axis=-1)  # (B,Kv,Hq,S+R+1)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = (
+        jnp.einsum("bkhs,bksd->bkhd", w[..., :S], cache["v"])
+        + jnp.einsum("bkhr,bkrd->bkhd", w[..., S : S + R], cache["resid_v"])
+        + w[..., -1:] * v[:, :, None, :]
+    )  # (B,Kv,Hq,dh)
+    out = out.reshape(B, H * dh) @ lw["wo"]
+    return out, k, v
+
+
+def decode_step(cfg: ModelConfig, tokens, positions, cache_len, resid_len,
+                theta_code, rho_code, rho_z, rho_s, theta_z, theta_s,
+                v_cache, resid_k, resid_v, *weights):
+    """Full-model decode step. See module docstring for the contract."""
+    w = {name: arr for (name, _), arr in zip(weight_specs(cfg), weights)}
+    x = w["embed"][tokens]  # (B, D)
+
+    layer_w = {
+        k: w[k]
+        for k in ("wq", "wk", "bk", "wv", "wo", "w_gate", "w_up", "w_down", "norm_attn", "norm_mlp")
+    }
+    caches = {
+        "theta_code": theta_code, "rho_code": rho_code,
+        "rho_z": rho_z, "rho_s": rho_s, "theta_z": theta_z, "theta_s": theta_s,
+        "v": v_cache, "resid_k": resid_k, "resid_v": resid_v,
+    }
+
+    def body(x, per_layer):
+        lw, lc = per_layer
+        h, k_cur, v_cur = _decode_attn_layer(
+            cfg, rms_norm(x, lw["norm_attn"]), lw, lc, positions, cache_len, resid_len
+        )
+        x = x + h
+        x = x + swiglu(rms_norm(x, lw["norm_mlp"]), lw["w_gate"], lw["w_up"], lw["w_down"])
+        return x, (k_cur, v_cur)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (layer_w, caches))
+    logits = rms_norm(x, w["norm_final"]) @ w["lm_head"]
+    return logits, new_k, new_v
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, tokens, prompt_len, *weights):
+    """Full-precision causal prefill over right-padded prompts.
+
+    Returns (logits at the last valid position (B,V),
+             k_cache (L,B,Kv,T,dh) post-RoPE, v_cache (L,B,Kv,T,dh)).
+    """
+    w = {name: arr for (name, _), arr in zip(weight_specs(cfg), weights)}
+    B, T = tokens.shape
+    H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Hq = cfg.q_per_kv
+    x = w["embed"][tokens]  # (B, T, D)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_tables(cfg, positions)  # (T, dh/2)
+
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    valid = positions[None, :] < prompt_len[:, None]  # (B, T)
+    mask = causal[None, :, :] & valid[:, None, :]  # (B, Tq, Tk)
+    scale = 1.0 / math.sqrt(dh)
+
+    layer_w = {
+        k: w[k]
+        for k in ("wq", "wk", "bk", "wv", "wo", "w_gate", "w_up", "w_down", "norm_attn", "norm_mlp")
+    }
+
+    def body(x, lw):
+        xn = rms_norm(x, lw["norm_attn"])
+        q = (xn @ lw["wq"]).reshape(B, T, H, dh)
+        k = (xn @ lw["wk"] + lw["bk"]).reshape(B, T, Kv, dh)
+        v = (xn @ lw["wv"]).reshape(B, T, Kv, dh)
+        q = rope_rotate(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = rope_rotate(k, cos[None, :, None, :], sin[None, :, None, :])
+        qh = q.reshape(B, T, Kv, Hq, dh)
+        sc = jnp.einsum("bikhd,bjkd->bkhij", qh, k) * scale  # (B,Kv,Hq,T,T)
+        sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+        a = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkhij,bjkd->bikhd", a, v).reshape(B, T, H * dh)
+        x = x + o @ lw["wo"]
+        x = x + swiglu(rms_norm(x, lw["norm_mlp"]), lw["w_gate"], lw["w_up"], lw["w_down"])
+        # cache layout (B,Kv,T,dh)
+        return x, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    x, (k_cache, v_cache) = jax.lax.scan(body, x, layer_w)
+    x = rms_norm(x, w["norm_final"])
+    last = jnp.clip(prompt_len - 1, 0, T - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]  # (B, D)
+    logits = x_last @ w["lm_head"]
+    return logits, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Standalone graphs (bulk encoder; used by the coordinator for prompts and
+# by integration tests as the XLA-side twin of the Rust encoder)
+# --------------------------------------------------------------------------
+
+
+def polar_encode_graph(cfg: ModelConfig, k):
+    """k: (N, T, dh) post-RoPE -> polar codes + params via the L1 kernel."""
+    return polar_encode_pallas(k, cfg.r_bits, cfg.t_bits, cfg.group)

@@ -1,0 +1,211 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+#
+# hypothesis sweeps shapes / bit-widths / group sizes; every kernel must
+# match ref.py to fp32 tolerance (identical op ordering -> tight atol).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.polar_quant import polar_decode_pallas, polar_encode_pallas
+from compile.kernels.polar_qk import polar_qk_pallas
+from compile.kernels.kivi_qk import kivi_encode_pallas, kivi_qk_pallas
+from compile.kernels.value_quant import value_decode_pallas, value_encode_pallas
+
+jax.config.update("jax_enable_x64", False)
+
+
+def outlier_keys(rng, n, t, d, severity=8.0):
+    """Keys with channel-wise outliers on ONE dim of some RoPE pairs —
+    the Figure-1(a) structure that motivates the paper."""
+    k = rng.standard_normal((n, t, d)).astype(np.float32)
+    n_out = max(1, d // 16)
+    chans = rng.choice(d // 2, size=n_out, replace=False)
+    for j in chans:
+        k[:, :, 2 * j] += severity * np.sign(rng.standard_normal())
+    # rotate pairs (post-RoPE): magnitudes preserved, outlier smeared
+    pos = np.arange(t, dtype=np.int32)
+    return np.asarray(ref.apply_rope(jnp.asarray(k), jnp.asarray(pos)))
+
+
+# ---------------------------------------------------------------- polar
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    groups=st.integers(1, 3),
+    group=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    r_bits=st.sampled_from([2, 3, 4, 5]),
+    t_bits=st.sampled_from([2, 3, 4, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_polar_encode_matches_ref(n, groups, group, dh, r_bits, t_bits, seed):
+    rng = np.random.default_rng(seed)
+    t, d = groups * group, 2 * dh
+    k = outlier_keys(rng, n, t, d)
+    got = polar_encode_pallas(jnp.asarray(k), r_bits, t_bits, group)
+    names = ["rho_code", "theta_code", "rho_z", "rho_s", "theta_z", "theta_s"]
+    for i in range(n):
+        want = ref.polar_encode(jnp.asarray(k[i]), r_bits, t_bits, group)
+        for name, g in zip(names, got):
+            np.testing.assert_allclose(
+                np.asarray(g[i]), np.asarray(want[name]), atol=1e-5, rtol=1e-5,
+                err_msg=f"{name} mismatch (slice {i})",
+            )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    group=st.sampled_from([16, 32]),
+    r_bits=st.sampled_from([3, 4]),
+    t_bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_polar_roundtrip_error_bounded(group, r_bits, t_bits, seed):
+    """Dequantized keys land inside their quantization cell."""
+    rng = np.random.default_rng(seed)
+    k = outlier_keys(rng, 1, 2 * group, 32)[0]
+    enc = ref.polar_encode(jnp.asarray(k), r_bits, t_bits, group)
+    k_hat = np.asarray(ref.polar_decode(enc, group))
+    rho, _ = ref.polar_transform(jnp.asarray(k))
+    rho = np.asarray(rho)
+    # error per pair bounded by half a rho cell plus the arc swept by half
+    # a theta cell at the (dequantized) radius
+    rs = np.repeat(np.asarray(enc["rho_s"]), group, axis=0)
+    ts = np.repeat(np.asarray(enc["theta_s"]), group, axis=0)
+    err = np.hypot(
+        k[:, 0::2] - k_hat[:, 0::2], k[:, 1::2] - k_hat[:, 1::2]
+    )
+    bound = rs / 2 + (rho + rs / 2) * ts / 2 + 1e-4
+    assert (err <= bound).all(), f"max excess {(err - bound).max()}"
+
+
+def test_polar_decode_pallas_matches_ref():
+    rng = np.random.default_rng(0)
+    group, n, t, d = 32, 2, 64, 64
+    k = outlier_keys(rng, n, t, d)
+    rc, tc, rz, rs, tz, ts = polar_encode_pallas(jnp.asarray(k), 4, 4, group)
+    got = polar_decode_pallas(rc, tc, rz, rs, tz, ts, group)
+    for i in range(n):
+        enc = ref.polar_encode(jnp.asarray(k[i]), 4, 4, group)
+        want = ref.polar_decode(enc, group)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hq=st.sampled_from([1, 2, 4]),
+    groups=st.integers(1, 4),
+    group=st.sampled_from([16, 32]),
+    dh=st.sampled_from([16, 32]),
+    r_bits=st.sampled_from([3, 4]),
+    t_bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_polar_qk_lut_matches_dequant_matmul(n, hq, groups, group, dh, r_bits, t_bits, seed):
+    """The LUT kernel must equal dequantize-then-matmul exactly (fp32)."""
+    rng = np.random.default_rng(seed)
+    t, d = groups * group, 2 * dh
+    k = outlier_keys(rng, n, t, d)
+    q = rng.standard_normal((n, hq, d)).astype(np.float32)
+    rc, tc, rz, rs, tz, ts = polar_encode_pallas(jnp.asarray(k), r_bits, t_bits, group)
+    got = polar_qk_pallas(jnp.asarray(q), tc, rc, rz, rs, tz, ts, group, t_bits)
+    assert got.shape == (n, hq, t)
+    for i in range(n):
+        enc = ref.polar_encode(jnp.asarray(k[i]), r_bits, t_bits, group)
+        for h in range(hq):
+            want = ref.polar_qk_scores(jnp.asarray(q[i, h]), enc, group)
+            np.testing.assert_allclose(
+                np.asarray(got[i, h]), np.asarray(want), atol=2e-4, rtol=1e-4
+            )
+
+
+def test_polar_qk_ref_lut_equals_ref_dequant():
+    """Sanity: the two reference formulations agree."""
+    rng = np.random.default_rng(7)
+    group, t_bits = 32, 4
+    k = outlier_keys(rng, 1, 96, 64)[0]
+    q = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    enc = ref.polar_encode(jnp.asarray(k), 4, t_bits, group)
+    a = ref.polar_qk_scores(q, enc, group)
+    b = ref.polar_qk_scores_lut(q, enc, group, t_bits)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- kivi
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hq=st.sampled_from([1, 4]),
+    groups=st.integers(1, 3),
+    group=st.sampled_from([16, 32]),
+    d=st.sampled_from([32, 64]),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kivi_kernels_match_ref(n, hq, groups, group, d, bits, seed):
+    rng = np.random.default_rng(seed)
+    t = groups * group
+    k = outlier_keys(rng, n, t, d)
+    q = rng.standard_normal((n, hq, d)).astype(np.float32)
+    code, z, s = kivi_encode_pallas(jnp.asarray(k), bits, group)
+    got = kivi_qk_pallas(jnp.asarray(q), code, z, s, group)
+    for i in range(n):
+        enc = ref.kivi_encode(jnp.asarray(k[i]), bits, group)
+        np.testing.assert_allclose(np.asarray(code[i]), np.asarray(enc["code"]), atol=0)
+        for h in range(hq):
+            want = ref.kivi_qk_scores(jnp.asarray(q[i, h]), enc, group)
+            np.testing.assert_allclose(
+                np.asarray(got[i, h]), np.asarray(want), atol=2e-4, rtol=1e-4
+            )
+
+
+# ---------------------------------------------------------------- values
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    tiles=st.integers(1, 3),
+    d=st.sampled_from([32, 64]),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_value_quant_matches_ref(n, tiles, d, bits, seed):
+    rng = np.random.default_rng(seed)
+    tile = 64
+    t = tiles * tile
+    v = rng.standard_normal((n, t, d)).astype(np.float32)
+    code, z, s = value_encode_pallas(jnp.asarray(v), bits, tile)
+    dec = value_decode_pallas(code, z, s, tile)
+    for i in range(n):
+        enc = ref.value_encode(jnp.asarray(v[i]), bits)
+        np.testing.assert_allclose(np.asarray(code[i]), np.asarray(enc["code"]), atol=0)
+        want = ref.value_decode(enc)
+        np.testing.assert_allclose(np.asarray(dec[i]), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------- claims
+
+
+def test_polar_beats_tokenwise_under_outliers():
+    """The paper's Figure 2 claim: under channel outliers, PolarQuant's
+    key reconstruction error is far below token-wise Int quantization at
+    equal bit budget."""
+    rng = np.random.default_rng(42)
+    group = 32
+    k = outlier_keys(rng, 1, 256, 64, severity=20.0)[0]
+    kj = jnp.asarray(k)
+    polar = np.asarray(ref.polar_decode(ref.polar_encode(kj, 4, 4, group), group))
+    tok = np.asarray(ref.int_decode(ref.int_encode(kj, 4)))
+    err_polar = float(np.mean((polar - k) ** 2))
+    err_tok = float(np.mean((tok - k) ** 2))
+    assert err_polar < 0.5 * err_tok, (err_polar, err_tok)

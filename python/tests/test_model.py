@@ -1,0 +1,183 @@
+# L2 model tests: the decode-step graph is validated against prefill
+# (exact fp consistency through the residual path) and against a hand-built
+# jnp reference for the quantized path.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(
+    name="test", vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+    head_dim=16, ffn=48, group=8, r_bits=4, t_bits=4, resid=16,
+)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    w = M.init_weights(CFG, seed=3)
+    return M.flatten_weights(CFG, w)
+
+
+def empty_cache(B, S):
+    L, Kv, dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    dh2, G, R = dh // 2, S // CFG.group, CFG.resid
+    z = jnp.zeros
+    return {
+        "theta_code": z((L, B, Kv, S, dh2), jnp.int32),
+        "rho_code": z((L, B, Kv, S, dh2), jnp.int32),
+        "rho_z": z((L, B, Kv, G, dh2)), "rho_s": jnp.full((L, B, Kv, G, dh2), 1e-8),
+        "theta_z": z((L, B, Kv, G, dh2)), "theta_s": jnp.full((L, B, Kv, G, dh2), 1e-8),
+        "v_cache": z((L, B, Kv, S, dh)),
+        "resid_k": z((L, B, Kv, R, dh)), "resid_v": z((L, B, Kv, R, dh)),
+    }
+
+
+def run_decode(weights, tokens, positions, cache_len, resid_len, cache):
+    return M.decode_step(
+        CFG, tokens, positions, cache_len, resid_len,
+        cache["theta_code"], cache["rho_code"],
+        cache["rho_z"], cache["rho_s"], cache["theta_z"], cache["theta_s"],
+        cache["v_cache"], cache["resid_k"], cache["resid_v"], *weights,
+    )
+
+
+def test_decode_matches_prefill_via_residual(weights):
+    """Feed prefill's fp K/V through the decode residual path: decoding
+    token T must equal prefill's logits over T+1 tokens (both exact fp)."""
+    B, T = 2, 7
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, CFG.vocab, size=(B, T + 1)).astype(np.int32)
+    plen_full = jnp.full((B,), T + 1, jnp.int32)
+    logits_want, _, _ = M.prefill(CFG, jnp.asarray(toks), plen_full, *weights)
+
+    plen = jnp.full((B,), T, jnp.int32)
+    _, k_cache, v_cache = M.prefill(CFG, jnp.asarray(toks[:, :T]), plen, *weights)
+
+    S = 2 * CFG.group
+    cache = empty_cache(B, S)
+    # all T tokens go to the residual buffer (fp) — nothing quantized
+    cache["resid_k"] = cache["resid_k"].at[:, :, :, :T].set(k_cache)
+    cache["resid_v"] = cache["resid_v"].at[:, :, :, :T].set(v_cache)
+    logits_got, new_k, new_v = run_decode(
+        weights,
+        jnp.asarray(toks[:, T]),
+        jnp.full((B,), T, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), T, jnp.int32),
+        cache,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_got), np.asarray(logits_want), atol=2e-4, rtol=1e-4
+    )
+    assert new_k.shape == (CFG.n_layers, B, CFG.n_kv_heads, CFG.head_dim)
+    assert new_v.shape == new_k.shape
+
+
+def test_decode_quantized_region_matches_jnp_reference(weights):
+    """Quantize the first 2 groups of prefill keys with ref.polar_encode and
+    check decode_step equals a jnp attention over the dequantized keys."""
+    B = 1
+    g = CFG.group
+    T = 2 * g + 3  # two full groups + residual tail of 3
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, CFG.vocab, size=(B, T + 1)).astype(np.int32)
+    plen = jnp.full((B,), T, jnp.int32)
+    _, k_cache, v_cache = M.prefill(CFG, jnp.asarray(toks[:, :T]), plen, *weights)
+
+    S = 2 * g
+    L, Kv, dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    cache = empty_cache(B, S)
+    k_hat = np.zeros((L, B, Kv, S, dh), np.float32)
+    for l in range(L):
+        for b in range(B):
+            for h in range(Kv):
+                enc = ref.polar_encode(k_cache[l, b, h, :S], CFG.r_bits, CFG.t_bits, g)
+                cache["theta_code"] = cache["theta_code"].at[l, b, h].set(enc["theta_code"])
+                cache["rho_code"] = cache["rho_code"].at[l, b, h].set(enc["rho_code"])
+                cache["rho_z"] = cache["rho_z"].at[l, b, h].set(enc["rho_z"])
+                cache["rho_s"] = cache["rho_s"].at[l, b, h].set(enc["rho_s"])
+                cache["theta_z"] = cache["theta_z"].at[l, b, h].set(enc["theta_z"])
+                cache["theta_s"] = cache["theta_s"].at[l, b, h].set(enc["theta_s"])
+                k_hat[l, b, h] = np.asarray(ref.polar_decode(enc, g))
+    cache["v_cache"] = v_cache[:, :, :, :S]
+    cache["resid_k"] = cache["resid_k"].at[:, :, :, : T - S].set(k_cache[:, :, :, S:])
+    cache["resid_v"] = cache["resid_v"].at[:, :, :, : T - S].set(v_cache[:, :, :, S:])
+
+    logits_got, _, _ = run_decode(
+        weights,
+        jnp.asarray(toks[:, T]),
+        jnp.full((B,), T, jnp.int32),
+        jnp.full((B,), S, jnp.int32),
+        jnp.full((B,), T - S, jnp.int32),
+        cache,
+    )
+
+    # reference: identical decode but with dequantized keys as fp residuals
+    cache_fp = empty_cache(B, 2 * g + CFG.resid - (T - S) + g)  # unused quant region
+    # Instead reconstruct attention directly: concatenate k_hat + resid as a
+    # fully-fp prefill-style pass is not possible (k_hat != true k), so
+    # verify at the logits level against a dequantized-key decode built from
+    # the residual path of a *wider* cache.
+    S2 = 0  # all fp
+    R2 = T
+    cfg2 = CFG
+    wide = {
+        "theta_code": jnp.zeros((L, B, Kv, g, dh // 2), jnp.int32),
+        "rho_code": jnp.zeros((L, B, Kv, g, dh // 2), jnp.int32),
+        "rho_z": jnp.zeros((L, B, Kv, 1, dh // 2)),
+        "rho_s": jnp.full((L, B, Kv, 1, dh // 2), 1e-8),
+        "theta_z": jnp.zeros((L, B, Kv, 1, dh // 2)),
+        "theta_s": jnp.full((L, B, Kv, 1, dh // 2), 1e-8),
+        "v_cache": jnp.zeros((L, B, Kv, g, dh)),
+        "resid_k": jnp.concatenate(
+            [jnp.asarray(k_hat), k_cache[:, :, :, S:],
+             jnp.zeros((L, B, Kv, CFG.resid, dh))], axis=3
+        )[:, :, :, : max(R2, CFG.resid)],
+        "resid_v": jnp.concatenate(
+            [v_cache, jnp.zeros((L, B, Kv, CFG.resid, dh))], axis=3
+        )[:, :, :, : max(R2, CFG.resid)],
+    }
+    logits_want, _, _ = run_decode(
+        weights,
+        jnp.asarray(toks[:, T]),
+        jnp.full((B,), T, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), T, jnp.int32),
+        wide,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_got), np.asarray(logits_want), atol=3e-4, rtol=1e-3
+    )
+
+
+def test_prefill_padding_invariance(weights):
+    """Right-padding must not change the last-valid-position logits."""
+    B, T = 1, 6
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, CFG.vocab, size=(B, T)).astype(np.int32)
+    plen = jnp.full((B,), T, jnp.int32)
+    logits_a, _, _ = M.prefill(CFG, jnp.asarray(toks), plen, *weights)
+    padded = np.concatenate([toks, np.zeros((B, 4), np.int32)], axis=1)
+    logits_b, _, _ = M.prefill(CFG, jnp.asarray(padded), plen, *weights)
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_prefill_batch_consistency(weights):
+    """Each batch lane is independent."""
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, CFG.vocab, size=(2, 5)).astype(np.int32)
+    plen = jnp.full((2,), 5, jnp.int32)
+    lg, _, _ = M.prefill(CFG, jnp.asarray(toks), plen, *weights)
+    for b in range(2):
+        lg1, _, _ = M.prefill(
+            CFG, jnp.asarray(toks[b : b + 1]), jnp.full((1,), 5, jnp.int32), *weights
+        )
+        np.testing.assert_allclose(np.asarray(lg[b]), np.asarray(lg1[0]), atol=2e-4, rtol=1e-3)

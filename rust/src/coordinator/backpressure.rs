@@ -1,0 +1,79 @@
+//! Admission control: bound the waiting queue and respect the cache
+//! manager's memory budget so the engine degrades by *rejecting* rather
+//! than thrashing.
+
+use crate::kvcache::CacheManager;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// max requests waiting for prefill
+    pub max_queue: usize,
+    /// max concurrently decoding sequences
+    pub max_running: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { max_queue: 256, max_running: 64 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Admit,
+    QueueFull,
+    MemoryPressure,
+}
+
+impl AdmissionPolicy {
+    /// Decide whether a new request (prompt + expected generation) fits.
+    pub fn admit(
+        &self,
+        queued: usize,
+        cache: &CacheManager,
+        expected_tokens: usize,
+    ) -> AdmitDecision {
+        if queued >= self.max_queue {
+            return AdmitDecision::QueueFull;
+        }
+        if !cache.admits(expected_tokens) {
+            return AdmitDecision::MemoryPressure;
+        }
+        AdmitDecision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheConfig;
+    use crate::quant::polar::PolarSpec;
+
+    fn cache(budget: usize) -> CacheManager {
+        CacheManager::new(
+            CacheConfig {
+                n_layers: 2,
+                n_kv_heads: 2,
+                head_dim: 16,
+                spec: PolarSpec::new(4, 4, 8),
+                value_bits: None,
+            },
+            budget,
+        )
+    }
+
+    #[test]
+    fn queue_limit() {
+        let p = AdmissionPolicy { max_queue: 2, max_running: 8 };
+        let c = cache(usize::MAX);
+        assert_eq!(p.admit(1, &c, 10), AdmitDecision::Admit);
+        assert_eq!(p.admit(2, &c, 10), AdmitDecision::QueueFull);
+    }
+
+    #[test]
+    fn memory_limit() {
+        let p = AdmissionPolicy::default();
+        let c = cache(16); // tiny budget
+        assert_eq!(p.admit(0, &c, 4096), AdmitDecision::MemoryPressure);
+    }
+}

@@ -1,0 +1,119 @@
+//! Dynamic batching into the AOT shape buckets.
+//!
+//! AOT graphs have static shapes, so the batcher's job is the classic
+//! TPU-serving one: group running sequences so that (batch, max cache len)
+//! fits the smallest compiled bucket, padding the rest.  Sequences that
+//! outgrow every bucket are surfaced so the scheduler can finish them on
+//! the native backend (shape-unconstrained) instead of crashing.
+
+use crate::runtime::Manifest;
+
+/// One decode batch: request ids + the graph bucket that will run them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeBatch {
+    pub graph: String,
+    pub batch_cap: usize,
+    pub seq_cap: usize,
+    pub ids: Vec<u64>,
+}
+
+/// Greedy bucket packing: sort by cache length descending, then fill the
+/// smallest bucket that fits each prefix.
+pub fn plan_decode_batches(
+    manifest: &Manifest,
+    mut seqs: Vec<(u64, usize)>, // (request id, quantized cache len)
+    max_batches: usize,
+) -> (Vec<DecodeBatch>, Vec<u64>) {
+    let mut batches = Vec::new();
+    let mut overflow = Vec::new();
+    seqs.sort_by(|a, b| b.1.cmp(&a.1));
+
+    let buckets = manifest.graphs_of_kind("decode");
+    if buckets.is_empty() {
+        return (batches, seqs.into_iter().map(|(id, _)| id).collect());
+    }
+    let max_seq_cap = buckets.iter().map(|g| g.seq).max().unwrap();
+
+    let mut i = 0;
+    while i < seqs.len() && batches.len() < max_batches {
+        let (_, len) = seqs[i];
+        if len > max_seq_cap {
+            overflow.push(seqs[i].0);
+            i += 1;
+            continue;
+        }
+        // choose the bucket for this (longest-remaining) sequence
+        let bucket = buckets
+            .iter()
+            .filter(|g| g.seq >= len)
+            .min_by_key(|g| (g.seq, std::cmp::Reverse(g.batch)))
+            .unwrap();
+        // fill it with as many following sequences as fit
+        let take = (seqs.len() - i).min(bucket.batch);
+        let ids: Vec<u64> = seqs[i..i + take].iter().map(|&(id, _)| id).collect();
+        batches.push(DecodeBatch {
+            graph: bucket.name.clone(),
+            batch_cap: bucket.batch,
+            seq_cap: bucket.seq,
+            ids,
+        });
+        i += take;
+    }
+    // anything left when max_batches hit also overflows to the caller
+    overflow.extend(seqs[i..].iter().map(|&(id, _)| id));
+    (batches, overflow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn packs_into_buckets() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        // tiny manifest has b1_s256, b4_s256, b1_s1024
+        let seqs = vec![(1, 100), (2, 64), (3, 10), (4, 192), (5, 0)];
+        let (batches, overflow) = plan_decode_batches(&m, seqs, 16);
+        assert!(overflow.is_empty());
+        let total: usize = batches.iter().map(|b| b.ids.len()).sum();
+        assert_eq!(total, 5);
+        for b in &batches {
+            assert!(b.ids.len() <= b.batch_cap);
+        }
+        // the longest sequence must be in a bucket that fits it
+        let first = &batches[0];
+        assert!(first.seq_cap >= 192);
+    }
+
+    #[test]
+    fn oversized_sequences_overflow() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let (batches, overflow) = plan_decode_batches(&m, vec![(9, 99_999)], 16);
+        assert!(batches.is_empty());
+        assert_eq!(overflow, vec![9]);
+    }
+
+    #[test]
+    fn respects_max_batches() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let seqs: Vec<(u64, usize)> = (0..20).map(|i| (i, 10)).collect();
+        let (batches, overflow) = plan_decode_batches(&m, seqs, 1);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].ids.len() + overflow.len(), 20);
+    }
+}

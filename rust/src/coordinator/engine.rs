@@ -1,0 +1,481 @@
+//! The serving engine: scheduler + cache + backend in one decode loop.
+//!
+//! `step()` is one scheduler iteration: admit up to `prefill_per_step`
+//! queued requests (prefill + cache fill + first token), then run one
+//! decode iteration across every running sequence — natively one-by-one,
+//! or batched into AOT shape buckets on the PJRT backend.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::backpressure::{AdmissionPolicy, AdmitDecision};
+use super::batcher::plan_decode_batches;
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, RequestState, Tracked};
+use super::scheduler::SchedulerPolicy;
+use crate::kvcache::eviction::{gather_rows, snapkv_select};
+use crate::kvcache::CacheManager;
+use crate::model::{Model, ModelConfig, Weights};
+use crate::runtime::executor::{batch_dense, split_prefill_kv};
+use crate::runtime::PjrtRuntime;
+use crate::util::rng::Rng;
+
+/// Compute backend: Rust-native model or PJRT-executed AOT graphs.
+pub enum Backend {
+    Native(Box<Model>),
+    Pjrt(Box<PjrtRuntime>),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SnapKvOpts {
+    pub budget: usize,
+    pub window: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    pub policy: SchedulerPolicy,
+    pub admission: AdmissionPolicy,
+    /// quantize values token-wise at this width (None = fp values)
+    pub value_bits: Option<u32>,
+    /// SnapKV prompt compression (native backend only)
+    pub snapkv: Option<SnapKvOpts>,
+    pub cache_budget_bytes: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            policy: SchedulerPolicy::default(),
+            admission: AdmissionPolicy::default(),
+            value_bits: None,
+            snapkv: None,
+            cache_budget_bytes: usize::MAX,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub ttft_s: Option<f64>,
+    pub total_s: Option<f64>,
+    /// true if the sequence outgrew every AOT bucket and was truncated
+    pub truncated: bool,
+}
+
+pub struct Engine {
+    backend: Backend,
+    pub cfg: ModelConfig,
+    cache: CacheManager,
+    queue: VecDeque<Tracked>,
+    running: HashMap<RequestId, Tracked>,
+    /// id -> cache id (same value; kept for clarity)
+    pub metrics: Metrics,
+    opts: EngineOpts,
+    rng: Rng,
+}
+
+impl Engine {
+    pub fn new(backend: Backend, cfg: ModelConfig, opts: EngineOpts) -> Self {
+        let cache = CacheManager::new(cfg.cache_config(opts.value_bits), opts.cache_budget_bytes);
+        Engine {
+            backend,
+            cfg,
+            cache,
+            queue: VecDeque::new(),
+            running: HashMap::new(),
+            metrics: Metrics::new(),
+            opts,
+            rng: Rng::new(opts.seed),
+        }
+    }
+
+    /// Native engine from synthetic weights (tests/benches).
+    pub fn native_synthetic(cfg: ModelConfig, seed: u64, severity: f32, opts: EngineOpts) -> Self {
+        let w = Weights::synthetic(&cfg, seed, severity);
+        let model = Model::new(cfg.clone(), w);
+        Engine::new(Backend::Native(Box::new(model)), cfg, opts)
+    }
+
+    /// PJRT engine from the artifact directory.
+    pub fn pjrt_from_artifacts(dir: &Path, opts: EngineOpts) -> Result<Self> {
+        let rt = PjrtRuntime::load(dir)?;
+        let cfg = rt.manifest.config.clone();
+        if opts.snapkv.is_some() {
+            bail!("SnapKV prompt compression requires the native backend");
+        }
+        Ok(Engine::new(Backend::Pjrt(Box::new(rt)), cfg, opts))
+    }
+
+    /// Native engine using the artifact weights (bit-identical to PJRT).
+    pub fn native_from_artifacts(dir: &Path, opts: EngineOpts) -> Result<Self> {
+        let m = crate::runtime::Manifest::load(dir)?;
+        let cfg = m.config.clone();
+        let w = Weights::load(&dir.join(&m.weights.file), &m.weights.tensors, &cfg)?;
+        let model = Model::new(cfg.clone(), w);
+        Ok(Engine::new(Backend::Native(Box::new(model)), cfg, opts))
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    pub fn cache_report(&self) -> crate::kvcache::MemoryReport {
+        self.cache.report()
+    }
+
+    /// Submit a request; rejects under backpressure.
+    pub fn submit(&mut self, req: Request) -> std::result::Result<(), AdmitDecision> {
+        let expected = req.prompt.len() + req.max_new_tokens;
+        match self.opts.admission.admit(self.queue.len(), &self.cache, expected) {
+            AdmitDecision::Admit => {
+                self.metrics.requests_submitted += 1;
+                self.queue.push_back(Tracked::new(req));
+                Ok(())
+            }
+            other => {
+                self.metrics.requests_rejected += 1;
+                Err(other)
+            }
+        }
+    }
+
+    /// One scheduler iteration; returns completions.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let plan = self.opts.policy.plan(self.queue.len(), self.running.len());
+        for _ in 0..plan.admit {
+            let Some(mut tr) = self.queue.pop_front() else { break };
+            self.metrics
+                .queue_delay
+                .record_secs(tr.arrived.elapsed().as_secs_f64());
+            self.prefill_one(&mut tr)?;
+            self.running.insert(tr.req.id, tr);
+        }
+        let mut done = Vec::new();
+        if plan.decode && !self.running.is_empty() {
+            self.decode_iteration(&mut done)?;
+        }
+        Ok(done)
+    }
+
+    /// Run until every queued/running request finishes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------- prefill
+
+    fn prefill_one(&mut self, tr: &mut Tracked) -> Result<()> {
+        tr.state = RequestState::Prefilling;
+        let id = tr.req.id;
+        let prompt = tr.req.prompt.clone();
+        self.metrics.prefill_tokens += prompt.len() as u64;
+
+        let logits = match &mut self.backend {
+            Backend::Native(model) => {
+                if let Some(sk) = self.opts.snapkv {
+                    let (logits, k, v, imp) =
+                        model.prefill_kv_importance(&prompt, sk.window);
+                    let keep = snapkv_select(&imp, sk.budget, sk.window);
+                    let cache = self.cache.create(id);
+                    let (l, kv, dh, t) =
+                        (cache.cfg.n_layers, cache.cfg.n_kv_heads, cache.cfg.head_dim, prompt.len());
+                    // gather kept rows per (layer, head) stream
+                    let mut k_kept = Vec::with_capacity(l * kv * keep.len() * dh);
+                    let mut v_kept = Vec::with_capacity(l * kv * keep.len() * dh);
+                    for li in 0..l {
+                        for h in 0..kv {
+                            let off = (li * kv + h) * t * dh;
+                            k_kept.extend(gather_rows(&k[off..off + t * dh], dh, &keep));
+                            v_kept.extend(gather_rows(&v[off..off + t * dh], dh, &keep));
+                        }
+                    }
+                    cache.append_prefill(&k_kept, &v_kept, keep.len());
+                    // positions continue from the ORIGINAL prompt length
+                    cache.next_pos = t;
+                    logits
+                } else {
+                    let cache = self.cache.create(id);
+                    model.prefill(&prompt, cache)
+                }
+            }
+            Backend::Pjrt(rt) => {
+                let g = rt
+                    .manifest
+                    .pick_bucket("prefill", 1, prompt.len())
+                    .with_context(|| {
+                        format!("no prefill bucket fits prompt of {}", prompt.len())
+                    })?
+                    .clone();
+                let mut tokens = vec![0i32; g.batch * g.seq];
+                for (i, &t) in prompt.iter().enumerate() {
+                    tokens[i] = t as i32;
+                }
+                let mut plen = vec![1i32; g.batch];
+                plen[0] = prompt.len() as i32;
+                let out = rt.prefill(&g.name, &tokens, &plen)?;
+                let cfg = &self.cfg;
+                let k = split_prefill_kv(
+                    &out.k, cfg.n_layers, g.batch, cfg.n_kv_heads, g.seq, cfg.head_dim, 0,
+                );
+                let v = split_prefill_kv(
+                    &out.v, cfg.n_layers, g.batch, cfg.n_kv_heads, g.seq, cfg.head_dim, 0,
+                );
+                // keep only the valid region of the padded bucket
+                let t = prompt.len();
+                let (l, kv, dh) = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim);
+                let mut k_valid = Vec::with_capacity(l * kv * t * dh);
+                let mut v_valid = Vec::with_capacity(l * kv * t * dh);
+                for li in 0..l {
+                    for h in 0..kv {
+                        let off = (li * kv + h) * g.seq * dh;
+                        k_valid.extend_from_slice(&k[off..off + t * dh]);
+                        v_valid.extend_from_slice(&v[off..off + t * dh]);
+                    }
+                }
+                let cache = self.cache.create(id);
+                cache.append_prefill(&k_valid, &v_valid, t);
+                out.logits[..self.cfg.vocab].to_vec()
+            }
+        };
+
+        // first generated token comes from the prefill logits
+        let tok = tr.req.sampler.sample(&logits, &mut self.rng);
+        tr.generated.push(tok);
+        tr.first_token_at = Some(Instant::now());
+        self.metrics.decode_tokens += 1;
+        self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
+        tr.state = RequestState::Decoding;
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- decode
+
+    fn decode_iteration(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        let step_t = Instant::now();
+        let ids: Vec<RequestId> = self.running.keys().cloned().collect();
+        // collect (id, quantized cache len) for batching
+        let mut seqs: Vec<(u64, usize)> = Vec::new();
+        for &id in &ids {
+            let tr = &self.running[&id];
+            if tr.done() {
+                continue;
+            }
+            let qlen = self.cache.get(id).map(|c| c.quantized_len()).unwrap_or(0);
+            seqs.push((id, qlen));
+        }
+
+        let mut truncated: Vec<RequestId> = Vec::new();
+        match &mut self.backend {
+            Backend::Native(model) => {
+                for &(id, _) in &seqs {
+                    let tr = self.running.get_mut(&id).unwrap();
+                    let last = *tr.generated.last().unwrap();
+                    let cache = self.cache.get_mut(id).context("cache missing")?;
+                    let logits = model.decode_step(last, cache).to_vec();
+                    let tok = tr.req.sampler.sample(&logits, &mut self.rng);
+                    tr.generated.push(tok);
+                    self.metrics.decode_tokens += 1;
+                }
+                self.metrics.decode_steps += 1;
+                self.metrics.decode_batch_sum += seqs.len() as u64;
+            }
+            Backend::Pjrt(rt) => {
+                let (batches, overflow) =
+                    plan_decode_batches(&rt.manifest, seqs.clone(), usize::MAX);
+                truncated.extend(overflow);
+                for b in &batches {
+                    let cfg = &self.cfg;
+                    let r_cap = cfg.resid;
+                    let denses: Vec<_> = b
+                        .ids
+                        .iter()
+                        .map(|&id| {
+                            self.cache
+                                .get(id)
+                                .unwrap()
+                                .export_dense(b.seq_cap, r_cap)
+                        })
+                        .collect();
+                    let dense_refs: Vec<&_> = denses.iter().collect();
+                    let mut ins = batch_dense(
+                        &dense_refs,
+                        cfg.n_layers,
+                        cfg.n_kv_heads,
+                        b.seq_cap,
+                        r_cap,
+                        cfg.head_dim,
+                        cfg.group,
+                        b.batch_cap,
+                    );
+                    for (lane, &id) in b.ids.iter().enumerate() {
+                        let tr = &self.running[&id];
+                        ins.tokens[lane] = *tr.generated.last().unwrap() as i32;
+                        ins.positions[lane] = self.cache.get(id).unwrap().next_pos as i32;
+                    }
+                    let out = rt.decode(&b.graph, &ins)?;
+                    let (l, kv, dh, v) =
+                        (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.vocab);
+                    for (lane, &id) in b.ids.iter().enumerate() {
+                        // de-batch new_k/new_v (L, B, Kv, dh) -> (L, Kv, dh)
+                        let mut new_k = vec![0.0f32; l * kv * dh];
+                        let mut new_v = vec![0.0f32; l * kv * dh];
+                        for li in 0..l {
+                            for h in 0..kv {
+                                let src = ((li * b.batch_cap + lane) * kv + h) * dh;
+                                let dst = (li * kv + h) * dh;
+                                new_k[dst..dst + dh]
+                                    .copy_from_slice(&out.new_k[src..src + dh]);
+                                new_v[dst..dst + dh]
+                                    .copy_from_slice(&out.new_v[src..src + dh]);
+                            }
+                        }
+                        self.cache.get_mut(id).unwrap().append_step(&new_k, &new_v);
+                        let logits = &out.logits[lane * v..(lane + 1) * v];
+                        let tr = self.running.get_mut(&id).unwrap();
+                        let tok = tr.req.sampler.sample(logits, &mut self.rng);
+                        tr.generated.push(tok);
+                        self.metrics.decode_tokens += 1;
+                    }
+                    self.metrics.decode_steps += 1;
+                    self.metrics.decode_batch_sum += b.ids.len() as u64;
+                }
+            }
+        }
+        self.metrics
+            .per_token
+            .record_secs(step_t.elapsed().as_secs_f64());
+
+        // retire finished / truncated sequences
+        let now_ids: Vec<RequestId> = self.running.keys().cloned().collect();
+        for id in now_ids {
+            let is_trunc = truncated.contains(&id);
+            let finished = self.running[&id].done() || is_trunc;
+            if finished {
+                let mut tr = self.running.remove(&id).unwrap();
+                tr.state = RequestState::Finished;
+                tr.finished_at = Some(Instant::now());
+                self.metrics.requests_finished += 1;
+                self.metrics
+                    .e2e
+                    .record_secs(tr.arrived.elapsed().as_secs_f64());
+                self.cache.release(id);
+                done.push(Completion {
+                    id,
+                    prompt_len: tr.req.prompt.len(),
+                    tokens: tr.generated.clone(),
+                    ttft_s: tr.ttft(),
+                    total_s: tr.total_latency(),
+                    truncated: is_trunc,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::tiny();
+        cfg.n_layers = 2;
+        cfg.vocab = 64;
+        cfg.d_model = 32;
+        cfg.n_heads = 4;
+        cfg.n_kv_heads = 2;
+        cfg.head_dim = 16;
+        cfg.ffn = 48;
+        cfg.group = 8;
+        cfg.resid = 16;
+        cfg
+    }
+
+    #[test]
+    fn native_engine_completes_requests() {
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 1, 4.0, EngineOpts::default());
+        for i in 0..3 {
+            eng.submit(Request::greedy(i, vec![1, 2, 3, (i % 8) as u32 + 4], 6))
+                .unwrap();
+        }
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 6);
+            assert!(c.ttft_s.is_some());
+            assert!(!c.truncated);
+        }
+        assert!(eng.idle());
+        assert_eq!(eng.cache_report().sequences, 0, "caches released");
+        assert_eq!(eng.metrics.requests_finished, 3);
+        assert_eq!(eng.metrics.decode_tokens, 18);
+    }
+
+    #[test]
+    fn greedy_decode_is_deterministic() {
+        let run = || {
+            let mut eng =
+                Engine::native_synthetic(tiny_cfg(), 2, 4.0, EngineOpts::default());
+            eng.submit(Request::greedy(1, vec![5, 6, 7], 12)).unwrap();
+            eng.run_to_completion().unwrap()[0].tokens.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut opts = EngineOpts::default();
+        opts.admission.max_queue = 1;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 3, 4.0, opts);
+        eng.submit(Request::greedy(1, vec![1], 4)).unwrap();
+        let r = eng.submit(Request::greedy(2, vec![1], 4));
+        assert_eq!(r, Err(AdmitDecision::QueueFull));
+        assert_eq!(eng.metrics.requests_rejected, 1);
+    }
+
+    #[test]
+    fn snapkv_engine_compresses_long_prompts() {
+        let mut opts = EngineOpts::default();
+        opts.snapkv = Some(SnapKvOpts { budget: 16, window: 4 });
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 4, 4.0, opts);
+        let prompt: Vec<u32> = (0..40).map(|i| (i % 60) as u32).collect();
+        eng.submit(Request::greedy(1, prompt, 4)).unwrap();
+        // after prefill, the cache holds only `budget` tokens
+        eng.step().unwrap();
+        let report = eng.cache_report();
+        assert_eq!(report.tokens, 16 + 1, "budget + first decode step");
+        eng.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn value_quantized_engine_runs() {
+        let mut opts = EngineOpts::default();
+        opts.value_bits = Some(2);
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 5, 4.0, opts);
+        eng.submit(Request::greedy(1, (0..20).map(|i| i as u32).collect(), 8))
+            .unwrap();
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 8);
+    }
+}

@@ -1,0 +1,102 @@
+//! Serving metrics: the numbers behind Table 4 (throughput, latency,
+//! memory) and the engine's own health counters.
+
+use std::time::Instant;
+
+use crate::util::stats::LatencyHist;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub requests_submitted: u64,
+    pub requests_finished: u64,
+    pub requests_rejected: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub decode_steps: u64,
+    pub decode_batch_sum: u64,
+    pub ttft: LatencyHist,
+    pub per_token: LatencyHist,
+    pub e2e: LatencyHist,
+    pub queue_delay: LatencyHist,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            started: Instant::now(),
+            requests_submitted: 0,
+            requests_finished: 0,
+            requests_rejected: 0,
+            prefill_tokens: 0,
+            decode_tokens: 0,
+            decode_steps: 0,
+            decode_batch_sum: 0,
+            ttft: LatencyHist::new(),
+            per_token: LatencyHist::new(),
+            e2e: LatencyHist::new(),
+            queue_delay: LatencyHist::new(),
+        }
+    }
+
+    /// Generated tokens per second since start.
+    pub fn decode_throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / secs
+        }
+    }
+
+    /// Mean decode batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_batch_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "reqs {}/{} (rej {}), prefill {} tok, decode {} tok @ {:.1} tok/s, \
+             mean batch {:.2}, ttft p50 {:.1}ms p95 {:.1}ms, tok p50 {:.2}ms",
+            self.requests_finished,
+            self.requests_submitted,
+            self.requests_rejected,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.decode_throughput(),
+            self.mean_batch(),
+            self.ttft.p(50.0) * 1e3,
+            self.ttft.p(95.0) * 1e3,
+            self.per_token.p(50.0) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_mean() {
+        let mut m = Metrics::new();
+        m.decode_steps = 4;
+        m.decode_batch_sum = 10;
+        assert!((m.mean_batch() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_is_printable() {
+        let m = Metrics::new();
+        assert!(m.summary().contains("reqs"));
+    }
+}

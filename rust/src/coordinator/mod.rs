@@ -1,0 +1,22 @@
+//! L3 coordinator: the serving system around the quantized cache.
+//!
+//! * [`request`] — request/response types + lifecycle state machine
+//! * [`backpressure`] — admission control against queue depth and the
+//!   cache manager's memory budget
+//! * [`batcher`] — dynamic batching into the AOT shape buckets
+//! * [`scheduler`] — prefill/decode interleaving policy
+//! * [`engine`] — ties backend (native or PJRT) + cache + scheduler into
+//!   the decode loop
+//! * [`router`] — session-affinity routing across engine workers
+//! * [`metrics`] — counters + latency histograms behind every table-4 row
+
+pub mod backpressure;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{Backend, Completion, Engine, EngineOpts};
+pub use request::{Request, RequestId, RequestState};

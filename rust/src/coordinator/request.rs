@@ -1,0 +1,107 @@
+//! Request lifecycle: Queued -> Prefilling -> Decoding -> Finished.
+
+use std::time::Instant;
+
+use crate::model::sampling::Sampler;
+
+pub type RequestId = u64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+    Rejected,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// optional session key for router affinity
+    pub session: Option<u64>,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+    /// stop generation at this token id (e.g. an EOS id), if any
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn greedy(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            session: None,
+            prompt,
+            max_new_tokens,
+            sampler: Sampler::Greedy,
+            stop_token: None,
+        }
+    }
+}
+
+/// Book-keeping for a request inside the engine.
+#[derive(Debug)]
+pub struct Tracked {
+    pub req: Request,
+    pub state: RequestState,
+    pub generated: Vec<u32>,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl Tracked {
+    pub fn new(req: Request) -> Self {
+        Tracked {
+            req,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        if self.generated.len() >= self.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(stop), Some(&last)) = (self.req.stop_token, self.generated.last()) {
+            return last == stop;
+        }
+        false
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at
+            .map(|t| t.duration_since(self.arrived).as_secs_f64())
+    }
+
+    pub fn total_latency(&self) -> Option<f64> {
+        self.finished_at
+            .map(|t| t.duration_since(self.arrived).as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn done_on_budget() {
+        let mut t = Tracked::new(Request::greedy(1, vec![1, 2], 3));
+        assert!(!t.done());
+        t.generated = vec![5, 6, 7];
+        assert!(t.done());
+    }
+
+    #[test]
+    fn done_on_stop_token() {
+        let mut req = Request::greedy(1, vec![1], 100);
+        req.stop_token = Some(0);
+        let mut t = Tracked::new(req);
+        t.generated = vec![4, 0];
+        assert!(t.done());
+    }
+}

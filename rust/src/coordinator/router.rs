@@ -1,0 +1,103 @@
+//! Request router: session-affinity + least-loaded assignment across
+//! engine workers (the vllm-router pattern at miniature scale).
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct Router {
+    workers: usize,
+    /// session -> worker (sticky so a conversation reuses its KV cache)
+    sessions: HashMap<u64, usize>,
+    /// outstanding requests per worker
+    loads: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Router { workers, sessions: HashMap::new(), loads: vec![0; workers] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Pick a worker: sticky per session, least-loaded otherwise.
+    pub fn route(&mut self, session: Option<u64>) -> usize {
+        let w = match session.and_then(|s| self.sessions.get(&s).copied()) {
+            Some(w) => w,
+            None => {
+                let w = self
+                    .loads
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &l)| l)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if let Some(s) = session {
+                    self.sessions.insert(s, w);
+                }
+                w
+            }
+        };
+        self.loads[w] += 1;
+        w
+    }
+
+    /// Mark a request finished on `worker`.
+    pub fn complete(&mut self, worker: usize) {
+        self.loads[worker] = self.loads[worker].saturating_sub(1);
+    }
+
+    /// Drop a session's affinity (conversation ended).
+    pub fn end_session(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+
+    pub fn load(&self, worker: usize) -> usize {
+        self.loads[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_stick() {
+        let mut r = Router::new(3);
+        let w = r.route(Some(42));
+        for _ in 0..5 {
+            assert_eq!(r.route(Some(42)), w);
+        }
+    }
+
+    #[test]
+    fn anonymous_requests_balance() {
+        let mut r = Router::new(2);
+        let a = r.route(None);
+        let b = r.route(None);
+        assert_ne!(a, b, "second request must go to the idle worker");
+    }
+
+    #[test]
+    fn completion_frees_load() {
+        let mut r = Router::new(2);
+        let a = r.route(None);
+        let _b = r.route(None);
+        r.complete(a);
+        // worker a is now least-loaded again
+        assert_eq!(r.route(None), a);
+    }
+
+    #[test]
+    fn ended_session_can_move() {
+        let mut r = Router::new(2);
+        let w = r.route(Some(7));
+        r.complete(w);
+        r.end_session(7);
+        // load the old worker so the session lands elsewhere
+        r.loads[w] = 10;
+        assert_ne!(r.route(Some(7)), w);
+    }
+}

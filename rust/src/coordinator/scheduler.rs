@@ -1,0 +1,62 @@
+//! Prefill/decode interleaving policy.
+//!
+//! vLLM-style "decode-priority with prefill admission": each engine step
+//! first admits up to `prefill_per_step` queued requests (prefill is the
+//! long pole; bounding it caps decode stall), then runs one decode
+//! iteration over every running sequence.  The policy is a pure function
+//! of queue state so it is unit-testable without an engine.
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerPolicy {
+    /// max prefills admitted per engine step
+    pub prefill_per_step: usize,
+    /// max sequences decoding concurrently
+    pub max_running: usize,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy { prefill_per_step: 2, max_running: 32 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    /// how many queued requests to prefill this step
+    pub admit: usize,
+    /// whether to run a decode iteration
+    pub decode: bool,
+}
+
+impl SchedulerPolicy {
+    pub fn plan(&self, queued: usize, running: usize) -> StepPlan {
+        let slots = self.max_running.saturating_sub(running);
+        let admit = queued.min(self.prefill_per_step).min(slots);
+        StepPlan { admit, decode: running > 0 || admit > 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_limit() {
+        let p = SchedulerPolicy { prefill_per_step: 2, max_running: 4 };
+        assert_eq!(p.plan(5, 0), StepPlan { admit: 2, decode: true });
+        assert_eq!(p.plan(1, 0), StepPlan { admit: 1, decode: true });
+    }
+
+    #[test]
+    fn respects_running_cap() {
+        let p = SchedulerPolicy { prefill_per_step: 4, max_running: 4 };
+        assert_eq!(p.plan(5, 3).admit, 1);
+        assert_eq!(p.plan(5, 4).admit, 0);
+    }
+
+    #[test]
+    fn idle_engine_does_nothing() {
+        let p = SchedulerPolicy::default();
+        assert_eq!(p.plan(0, 0), StepPlan { admit: 0, decode: false });
+    }
+}

@@ -1,0 +1,136 @@
+//! Codec-level fidelity on profile-structured key activations.
+//!
+//! For each codec: encode keys, then measure
+//!   * key reconstruction MSE / cosine (except QJL, which is score-only),
+//!   * attention-weight KL(fp || quantized) and top-8 overlap over random
+//!     queries — the quantity that actually drives downstream quality.
+
+use crate::quant::QuantSpec;
+use crate::tensor::ops::{cosine, dot, mse, softmax_inplace};
+use crate::util::rng::Rng;
+use crate::workload::ActivationProfile;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fidelity {
+    pub key_mse: f64,
+    pub key_cos: f64,
+    pub attn_kl: f64,
+    pub top8_overlap: f64,
+    pub score_mse: f64,
+    pub bits: f64,
+}
+
+pub fn eval_codec(
+    spec: &QuantSpec,
+    profile: &ActivationProfile,
+    d: usize,
+    tokens: usize,
+    n_queries: usize,
+    seed: u64,
+) -> Fidelity {
+    let mut rng = Rng::new(seed);
+    let k = profile.keys(&mut rng, tokens, d, 10000.0);
+    let enc = spec.encode(&k, d);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let (key_mse_v, key_cos_v) = if matches!(spec, QuantSpec::Qjl { .. }) {
+        (f64::NAN, f64::NAN)
+    } else {
+        let k_hat = enc.decode();
+        (mse(&k, &k_hat), cosine(&k, &k_hat))
+    };
+
+    let mut kl_sum = 0.0;
+    let mut overlap_sum = 0.0;
+    let mut score_mse_sum = 0.0;
+    let mut scores_q = Vec::new();
+    for _ in 0..n_queries {
+        let q = rng.normal_vec(d);
+        // fp scores
+        let mut scores_fp: Vec<f32> = (0..tokens)
+            .map(|n| dot(&q, &k[n * d..(n + 1) * d]) * scale)
+            .collect();
+        enc.scores(&q, &mut scores_q);
+        for s in scores_q.iter_mut() {
+            *s *= scale;
+        }
+        score_mse_sum += mse(&scores_fp, &scores_q);
+        let mut w_q = scores_q.clone();
+        softmax_inplace(&mut scores_fp);
+        softmax_inplace(&mut w_q);
+        // KL(fp || q)
+        let mut kl = 0.0f64;
+        for i in 0..tokens {
+            let p = scores_fp[i].max(1e-12) as f64;
+            let qq = w_q[i].max(1e-12) as f64;
+            kl += p * (p / qq).ln();
+        }
+        kl_sum += kl;
+        // top-8 overlap
+        overlap_sum += topk_overlap(&scores_fp, &w_q, 8);
+    }
+    Fidelity {
+        key_mse: key_mse_v,
+        key_cos: key_cos_v,
+        attn_kl: kl_sum / n_queries as f64,
+        top8_overlap: overlap_sum / n_queries as f64,
+        score_mse: score_mse_sum / n_queries as f64,
+        bits: spec.bits_per_element(d),
+    }
+}
+
+fn topk_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
+    let top = |x: &[f32]| {
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        idx.sort_by(|&i, &j| x[j].partial_cmp(&x[i]).unwrap());
+        idx.truncate(k);
+        idx
+    };
+    let ta = top(a);
+    let tb = top(b);
+    let inter = ta.iter().filter(|i| tb.contains(i)).count();
+    inter as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::PROFILES;
+
+    #[test]
+    fn polar_beats_tokenwise_on_every_profile() {
+        // Table 1's core ordering, at the fidelity level.
+        for p in &PROFILES {
+            let polar = eval_codec(
+                &QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 32 },
+                p, 64, 128, 8, 42,
+            );
+            let int4 = eval_codec(&QuantSpec::Int { bits: 4 }, p, 64, 128, 8, 42);
+            assert!(
+                polar.attn_kl < int4.attn_kl,
+                "{}: polar {} vs int {}",
+                p.name,
+                polar.attn_kl,
+                int4.attn_kl
+            );
+        }
+    }
+
+    #[test]
+    fn tokenwise_collapses_hardest_on_qwen_profile() {
+        let easy = ActivationProfile::by_name("llama2-like").unwrap();
+        let hard = ActivationProfile::by_name("qwen-like").unwrap();
+        let e = eval_codec(&QuantSpec::Int { bits: 4 }, easy, 64, 128, 8, 7);
+        let h = eval_codec(&QuantSpec::Int { bits: 4 }, hard, 64, 128, 8, 7);
+        assert!(h.attn_kl > 2.0 * e.attn_kl, "{} vs {}", h.attn_kl, e.attn_kl);
+    }
+
+    #[test]
+    fn fp_is_perfect() {
+        let p = &PROFILES[0];
+        let f = eval_codec(&QuantSpec::Fp16, p, 32, 64, 4, 1);
+        assert!(f.key_mse < 1e-12);
+        assert!(f.attn_kl < 1e-9);
+        assert!((f.top8_overlap - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Evaluation harness: the metrics + proxies behind every reproduced
+//! table (DESIGN.md §3 documents why these stand in for LongBench/GSM8K/
+//! AIME — no datasets or checkpoints exist offline; the proxies measure
+//! the same axis the paper varies: quantization fidelity under key-cache
+//! channel outliers).
+//!
+//! * [`fidelity`] — codec-level: key reconstruction error + attention-
+//!   distribution fidelity on profile-structured activations
+//! * [`proxy`] — model-level: greedy-decode agreement + logit cosine of a
+//!   codec-quantized model against its own fp twin (teacher-forced)
+//! * [`tables`] — fixed-width printers that render rows in the paper's
+//!   table formats
+
+pub mod fidelity;
+pub mod proxy;
+pub mod tables;
+
+pub use fidelity::{eval_codec, Fidelity};
+pub use proxy::{decode_agreement, ProxyScore};
+pub use tables::Table;

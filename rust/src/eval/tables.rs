@@ -1,0 +1,122 @@
+//! Fixed-width table printer — renders bench output in the paper's row
+//! formats (EXPERIMENTS.md records these verbatim).
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], w: &[usize]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &w));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{}|", "-".repeat(width + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a score with its delta vs a baseline, paper-style:
+/// `36.41 (-2.47)`.
+pub fn score_with_delta(score: f64, baseline: f64) -> String {
+    let d = score - baseline;
+    let sign = if d >= 0.0 { "+" } else { "" };
+    format!("{score:.2} ({sign}{d:.2})")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Scientific-ish compact float for error metrics.
+pub fn sci(x: f64) -> String {
+    if x.is_nan() {
+        "N.A".into()
+    } else if x == 0.0 {
+        "0".into()
+    } else if x.abs() < 1e-3 || x.abs() >= 1e4 {
+        format!("{x:.2e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["method", "score"]);
+        t.row(vec!["PolarQuant44".into(), "49.39".into()]);
+        t.row(vec!["KIVI-4".into(), "49.36".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| PolarQuant44 |"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len(), "alignment");
+    }
+
+    #[test]
+    fn delta_formatting() {
+        assert_eq!(score_with_delta(36.41, 38.88), "36.41 (-2.47)");
+        assert_eq!(score_with_delta(49.53, 49.26), "49.53 (+0.27)");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+}

@@ -1,0 +1,116 @@
+//! SnapKV-style prompt compression (paper §5.2, Table 8).
+//!
+//! SnapKV selects, *before* the prompt's keys enter the cache, the tokens
+//! that the last `window` prompt positions attend to most, keeps the
+//! top-(budget − window) of them plus the window itself, and drops the
+//! rest.  PolarQuant then quantizes only the survivors — the combination
+//! the paper's Table 8 evaluates.
+
+/// Importance = column-sum of attention weights from the observation
+/// window (post-softmax), optionally max-pooled over a small neighborhood
+/// (SnapKV's pooling trick to keep local context).
+pub fn importance_from_attention(
+    attn: &[f32],
+    t: usize,
+    window: usize,
+    pool: usize,
+) -> Vec<f32> {
+    // attn: (window, t) rows = last `window` query positions
+    assert_eq!(attn.len(), window * t);
+    let mut score = vec![0.0f32; t];
+    for w in 0..window {
+        for j in 0..t {
+            score[j] += attn[w * t + j];
+        }
+    }
+    if pool > 1 {
+        let mut pooled = vec![0.0f32; t];
+        let half = pool / 2;
+        for j in 0..t {
+            let lo = j.saturating_sub(half);
+            let hi = (j + half + 1).min(t);
+            pooled[j] = score[lo..hi].iter().cloned().fold(0.0, f32::max);
+        }
+        score = pooled;
+    }
+    score
+}
+
+/// Select which prompt token indices to keep: the observation window
+/// (last `window` tokens) plus the top-scoring earlier tokens up to
+/// `budget` total.  Returns sorted indices.
+pub fn snapkv_select(scores: &[f32], budget: usize, window: usize) -> Vec<usize> {
+    let t = scores.len();
+    if t <= budget {
+        return (0..t).collect();
+    }
+    let window = window.min(budget).min(t);
+    let keep_from_past = budget - window;
+    let past = t - window;
+    let mut idx: Vec<usize> = (0..past).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut keep: Vec<usize> = idx.into_iter().take(keep_from_past).collect();
+    keep.extend(t - window..t);
+    keep.sort_unstable();
+    keep
+}
+
+/// Gather kept rows of a (t x d) buffer into a new contiguous buffer.
+pub fn gather_rows(x: &[f32], d: usize, keep: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(keep.len() * d);
+    for &i in keep {
+        out.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_window_and_heavy_hitters() {
+        let t = 10;
+        let mut scores = vec![0.0f32; t];
+        scores[2] = 5.0; // heavy hitter
+        scores[4] = 3.0;
+        let keep = snapkv_select(&scores, 4, 2);
+        assert_eq!(keep, vec![2, 4, 8, 9]);
+    }
+
+    #[test]
+    fn small_prompts_untouched() {
+        let scores = vec![1.0; 5];
+        assert_eq!(snapkv_select(&scores, 8, 4), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        let scores: Vec<f32> = (0..100).map(|i| (i % 7) as f32).collect();
+        let keep = snapkv_select(&scores, 32, 16);
+        assert_eq!(keep.len(), 32);
+        // window present
+        for i in 84..100 {
+            assert!(keep.contains(&i));
+        }
+    }
+
+    #[test]
+    fn importance_pools_neighbors() {
+        let t = 6;
+        let window = 1;
+        let attn = vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let s = importance_from_attention(&attn, t, window, 3);
+        assert_eq!(s[1], 1.0); // neighbor of the peak
+        assert_eq!(s[2], 1.0);
+        assert_eq!(s[3], 1.0);
+        assert_eq!(s[5], 0.0);
+    }
+
+    #[test]
+    fn gather_rows_layout() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 4 x 3
+        let g = gather_rows(&x, 3, &[0, 2]);
+        assert_eq!(g, vec![0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Quantized paged KV-cache: the object the paper studies, as a serving
+//! substrate.
+//!
+//! * [`stream`] — one (layer, kv-head) stream: PolarQuant-encoded key
+//!   groups, (optionally quantized) values, and the fp residual tail that
+//!   buffers tokens until a full group can be finalized.
+//! * [`seq`] — a sequence's cache across all layers/heads, with the
+//!   append/finalize state machine and dense export for the PJRT graphs.
+//! * [`eviction`] — SnapKV-style prompt compression (Table 8).
+//! * [`manager`] — multi-sequence allocation, global memory budget,
+//!   accounting that backs the Table 4 memory column.
+
+pub mod eviction;
+pub mod manager;
+pub mod seq;
+pub mod stream;
+
+pub use manager::{CacheManager, MemoryReport};
+pub use seq::{CacheConfig, SequenceCache};
+pub use stream::StreamCache;

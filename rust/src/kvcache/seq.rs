@@ -1,0 +1,295 @@
+//! Per-sequence cache across all (layer, kv-head) streams, plus the dense
+//! export that marshals it into the fixed-shape decode graphs.
+
+use super::stream::StreamCache;
+use crate::quant::polar::PolarSpec;
+
+/// Cache geometry + codec config (derived from the artifact manifest).
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub spec: PolarSpec,
+    /// None = fp values (the paper's default eval setting)
+    pub value_bits: Option<u32>,
+}
+
+impl CacheConfig {
+    pub fn streams(&self) -> usize {
+        self.n_layers * self.n_kv_heads
+    }
+}
+
+/// All streams of one sequence.  Every stream holds the same token count —
+/// the state machine appends to all of them per decode step.
+#[derive(Clone, Debug)]
+pub struct SequenceCache {
+    pub cfg: CacheConfig,
+    pub streams: Vec<StreamCache>,
+    /// absolute position of the next token (== tokens appended so far)
+    pub next_pos: usize,
+}
+
+impl SequenceCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let streams = (0..cfg.streams())
+            .map(|_| StreamCache::new(cfg.head_dim, cfg.spec, cfg.value_bits))
+            .collect();
+        SequenceCache { cfg, streams, next_pos: 0 }
+    }
+
+    #[inline]
+    pub fn stream(&self, layer: usize, head: usize) -> &StreamCache {
+        &self.streams[layer * self.cfg.n_kv_heads + head]
+    }
+
+    #[inline]
+    pub fn stream_mut(&mut self, layer: usize, head: usize) -> &mut StreamCache {
+        &mut self.streams[layer * self.cfg.n_kv_heads + head]
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn quantized_len(&self) -> usize {
+        self.streams[0].quantized_len()
+    }
+
+    pub fn resid_len(&self) -> usize {
+        self.streams[0].resid_len()
+    }
+
+    /// Append one decode step's K/V: `k`/`v` are (L, Kv, d) row-major —
+    /// exactly the `new_k`/`new_v` output layout of the decode graph.
+    pub fn append_step(&mut self, k: &[f32], v: &[f32]) {
+        let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        assert_eq!(k.len(), l * h * d);
+        assert_eq!(v.len(), k.len());
+        for layer in 0..l {
+            for head in 0..h {
+                let off = (layer * h + head) * d;
+                self.stream_mut(layer, head)
+                    .append(&k[off..off + d], &v[off..off + d]);
+            }
+        }
+        self.next_pos += 1;
+    }
+
+    /// Append a prefill block: `k`/`v` are (L, Kv, T, d) row-major —
+    /// the prefill graph's cache output layout.
+    pub fn append_prefill(&mut self, k: &[f32], v: &[f32], tokens: usize) {
+        let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        assert_eq!(k.len(), l * h * tokens * d);
+        for layer in 0..l {
+            for head in 0..h {
+                let off = (layer * h + head) * tokens * d;
+                self.stream_mut(layer, head)
+                    .append_block(&k[off..off + tokens * d], &v[off..off + tokens * d]);
+            }
+        }
+        self.next_pos += tokens;
+    }
+
+    /// Physical bytes at rest across streams.
+    pub fn nbytes(&self) -> usize {
+        self.streams.iter().map(|s| s.nbytes()).sum()
+    }
+}
+
+/// Dense, padded export of a sequence cache for the fixed-shape decode
+/// graph: codes unpacked to i32, params broadcast to the (G, d/2) grid,
+/// values dequantized — the marshalling boundary between the coordinator
+/// and the PJRT runtime.
+#[derive(Clone, Debug, Default)]
+pub struct DenseCache {
+    /// (L, Kv, S, d/2) i32 each
+    pub theta_code: Vec<i32>,
+    pub rho_code: Vec<i32>,
+    /// (L, Kv, S/g, d/2) f32 each
+    pub rho_z: Vec<f32>,
+    pub rho_s: Vec<f32>,
+    pub theta_z: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    /// (L, Kv, S, d)
+    pub v: Vec<f32>,
+    /// (L, Kv, R, d)
+    pub resid_k: Vec<f32>,
+    pub resid_v: Vec<f32>,
+    pub cache_len: usize,
+    pub resid_len: usize,
+}
+
+impl SequenceCache {
+    /// Export into the decode bucket (capacity S quantized tokens,
+    /// residual capacity R).  Panics if the sequence exceeds the bucket —
+    /// bucket selection is the batcher's job.
+    pub fn export_dense(&self, s_cap: usize, r_cap: usize) -> DenseCache {
+        let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        let d2 = d / 2;
+        let g = self.cfg.spec.group;
+        assert_eq!(s_cap % g, 0);
+        let gcap = s_cap / g;
+        let qlen = self.quantized_len();
+        let rlen = self.resid_len();
+        assert!(qlen <= s_cap, "sequence ({qlen}) exceeds bucket ({s_cap})");
+        assert!(rlen <= r_cap);
+
+        let mut out = DenseCache {
+            theta_code: vec![0; l * h * s_cap * d2],
+            rho_code: vec![0; l * h * s_cap * d2],
+            rho_z: vec![0.0; l * h * gcap * d2],
+            rho_s: vec![1e-8; l * h * gcap * d2],
+            theta_z: vec![0.0; l * h * gcap * d2],
+            theta_s: vec![1e-8; l * h * gcap * d2],
+            v: vec![0.0; l * h * s_cap * d],
+            resid_k: vec![0.0; l * h * r_cap * d],
+            resid_v: vec![0.0; l * h * r_cap * d],
+            cache_len: qlen,
+            resid_len: rlen,
+        };
+
+        let mut vals_scratch = Vec::new();
+        let mut codes_scratch = vec![0u8; g * d2];
+        for layer in 0..l {
+            for head in 0..h {
+                let st = self.stream(layer, head);
+                let base = layer * h + head;
+                for (gi, grp) in st.key_groups.iter().enumerate() {
+                    // codes
+                    grp.theta_codes.unpack_into(&mut codes_scratch);
+                    for n in 0..grp.tokens {
+                        for j in 0..d2 {
+                            out.theta_code[((base * s_cap) + gi * g + n) * d2 + j] =
+                                codes_scratch[n * d2 + j] as i32;
+                        }
+                    }
+                    grp.rho_codes.unpack_into(&mut codes_scratch);
+                    for n in 0..grp.tokens {
+                        for j in 0..d2 {
+                            out.rho_code[((base * s_cap) + gi * g + n) * d2 + j] =
+                                codes_scratch[n * d2 + j] as i32;
+                        }
+                    }
+                    // params
+                    let poff = (base * gcap + gi) * d2;
+                    out.rho_z[poff..poff + d2].copy_from_slice(&grp.rho_z);
+                    out.rho_s[poff..poff + d2].copy_from_slice(&grp.rho_s);
+                    out.theta_z[poff..poff + d2].copy_from_slice(&grp.theta_z);
+                    out.theta_s[poff..poff + d2].copy_from_slice(&grp.theta_s);
+                    // values
+                    vals_scratch.clear();
+                    st.decode_values_into(gi, &mut vals_scratch);
+                    let voff = (base * s_cap + gi * g) * d;
+                    out.v[voff..voff + g * d].copy_from_slice(&vals_scratch);
+                }
+                // residual
+                let roff = base * r_cap * d;
+                out.resid_k[roff..roff + st.resid_k.len()].copy_from_slice(&st.resid_k);
+                out.resid_v[roff..roff + st.resid_v.len()].copy_from_slice(&st.resid_v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> CacheConfig {
+        CacheConfig {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 8,
+            spec: PolarSpec::new(4, 4, 4),
+            value_bits: None,
+        }
+    }
+
+    #[test]
+    fn append_step_keeps_streams_aligned() {
+        let mut rng = Rng::new(7);
+        let c = cfg();
+        let mut seq = SequenceCache::new(c.clone());
+        let step = c.n_layers * c.n_kv_heads * c.head_dim;
+        for _ in 0..10 {
+            let k = rng.normal_vec(step);
+            let v = rng.normal_vec(step);
+            seq.append_step(&k, &v);
+        }
+        assert_eq!(seq.len(), 10);
+        assert_eq!(seq.next_pos, 10);
+        assert_eq!(seq.quantized_len(), 8);
+        assert_eq!(seq.resid_len(), 2);
+        for st in &seq.streams {
+            assert_eq!(st.len(), 10);
+        }
+    }
+
+    #[test]
+    fn prefill_then_steps() {
+        let mut rng = Rng::new(8);
+        let c = cfg();
+        let mut seq = SequenceCache::new(c.clone());
+        let t = 6;
+        let block = c.n_layers * c.n_kv_heads * t * c.head_dim;
+        seq.append_prefill(&rng.normal_vec(block), &rng.normal_vec(block), t);
+        assert_eq!(seq.len(), 6);
+        assert_eq!(seq.quantized_len(), 4);
+        let step = c.n_layers * c.n_kv_heads * c.head_dim;
+        seq.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        seq.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        assert_eq!(seq.quantized_len(), 8);
+        assert_eq!(seq.resid_len(), 0);
+    }
+
+    #[test]
+    fn export_dense_layout() {
+        let mut rng = Rng::new(9);
+        let c = cfg();
+        let mut seq = SequenceCache::new(c.clone());
+        let t = 9; // 2 groups + 1 residual
+        let block = c.n_layers * c.n_kv_heads * t * c.head_dim;
+        let k = rng.normal_vec(block);
+        let v = rng.normal_vec(block);
+        seq.append_prefill(&k, &v, t);
+        let s_cap = 12;
+        let dense = seq.export_dense(s_cap, 4);
+        assert_eq!(dense.cache_len, 8);
+        assert_eq!(dense.resid_len, 1);
+        let d = c.head_dim;
+        // stream (0,0): values of first group must match the input block
+        // (fp values path), i.e. v[0][0][0..4]
+        for n in 0..4 {
+            for j in 0..d {
+                assert_eq!(dense.v[(0 * s_cap + n) * d + j], v[n * d + j]);
+            }
+        }
+        // padding region is zero
+        assert_eq!(dense.v[(0 * s_cap + 11) * d], 0.0);
+        // residual k of stream (1,1) matches last token
+        let base = (1 * c.n_kv_heads + 1) * 4 * d; // r_cap=4
+        let koff = ((1 * c.n_kv_heads + 1) * t + 8) * d;
+        for j in 0..d {
+            assert_eq!(dense.resid_k[base + j], k[koff + j]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn export_overflow_panics() {
+        let c = cfg();
+        let mut seq = SequenceCache::new(c.clone());
+        let mut rng = Rng::new(10);
+        let block = c.n_layers * c.n_kv_heads * 16 * c.head_dim;
+        seq.append_prefill(&rng.normal_vec(block), &rng.normal_vec(block), 16);
+        seq.export_dense(8, 4); // 16 quantized > 8 cap
+    }
+}

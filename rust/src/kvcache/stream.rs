@@ -1,0 +1,210 @@
+//! One KV stream: the cache of a single (layer, kv-head) pair.
+//!
+//! Keys: PolarQuant groups (bit-packed) + an fp residual ring that holds
+//! the most recent `< group` tokens (the "residual length" every
+//! quantization serving system keeps — paper §B notes all baselines need
+//! one).  Values: fp32 rows aligned with the quantized keys, or token-wise
+//! quantized per finalized group when `value_bits` is set (Table 7).
+
+use crate::quant::polar::{self, PolarGroup, PolarSpec};
+use crate::quant::value;
+
+/// Value storage for finalized groups.
+#[derive(Clone, Debug)]
+pub enum GroupValues {
+    Fp(Vec<f32>),
+    Quant(value::ValueEncoded),
+}
+
+impl GroupValues {
+    pub fn nbytes(&self, charge_fp16: bool) -> usize {
+        match self {
+            GroupValues::Fp(v) => v.len() * if charge_fp16 { 2 } else { 4 },
+            GroupValues::Quant(e) => e.nbytes(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StreamCache {
+    pub d: usize,
+    pub spec: PolarSpec,
+    pub value_bits: Option<u32>,
+    /// finalized (quantized) key groups
+    pub key_groups: Vec<PolarGroup>,
+    /// values per finalized group, aligned with `key_groups`
+    pub value_groups: Vec<GroupValues>,
+    /// fp tail: tokens not yet forming a full group (row-major tokens x d)
+    pub resid_k: Vec<f32>,
+    pub resid_v: Vec<f32>,
+}
+
+impl StreamCache {
+    pub fn new(d: usize, spec: PolarSpec, value_bits: Option<u32>) -> Self {
+        StreamCache {
+            d,
+            spec,
+            value_bits,
+            key_groups: Vec::new(),
+            value_groups: Vec::new(),
+            resid_k: Vec::with_capacity(spec.group * d),
+            resid_v: Vec::with_capacity(spec.group * d),
+        }
+    }
+
+    /// Tokens in finalized (quantized) groups.
+    pub fn quantized_len(&self) -> usize {
+        self.key_groups.iter().map(|g| g.tokens).sum()
+    }
+
+    /// Tokens in the fp residual tail.
+    pub fn resid_len(&self) -> usize {
+        self.resid_k.len() / self.d
+    }
+
+    pub fn len(&self) -> usize {
+        self.quantized_len() + self.resid_len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one post-RoPE (k, v) token; finalize a group when the
+    /// residual fills.  Returns true if a group was finalized.
+    pub fn append(&mut self, k: &[f32], v: &[f32]) -> bool {
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        self.resid_k.extend_from_slice(k);
+        self.resid_v.extend_from_slice(v);
+        if self.resid_len() == self.spec.group {
+            self.finalize_group();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bulk append (e.g. prompt prefill).  Finalizes as many full groups
+    /// as possible.
+    pub fn append_block(&mut self, k: &[f32], v: &[f32]) {
+        let tokens = k.len() / self.d;
+        debug_assert_eq!(k.len(), tokens * self.d);
+        debug_assert_eq!(v.len(), k.len());
+        for n in 0..tokens {
+            self.append(&k[n * self.d..(n + 1) * self.d], &v[n * self.d..(n + 1) * self.d]);
+        }
+    }
+
+    fn finalize_group(&mut self) {
+        debug_assert_eq!(self.resid_len(), self.spec.group);
+        let g = polar::encode_group(&self.resid_k, self.d, &self.spec);
+        self.key_groups.push(g);
+        let vals = std::mem::take(&mut self.resid_v);
+        self.value_groups.push(match self.value_bits {
+            None => GroupValues::Fp(vals),
+            Some(bits) => GroupValues::Quant(value::encode(&vals, self.d, bits)),
+        });
+        self.resid_k.clear();
+    }
+
+    /// Physical bytes at rest (codes packed; fp tensors charged as fp16 to
+    /// match the paper's accounting).
+    pub fn nbytes(&self) -> usize {
+        let keys: usize = self.key_groups.iter().map(|g| g.nbytes()).sum();
+        let vals: usize = self.value_groups.iter().map(|v| v.nbytes(true)).sum();
+        let resid = (self.resid_k.len() + self.resid_v.len()) * 2;
+        keys + vals + resid
+    }
+
+    /// Dequantize all finalized keys (test/eval path).
+    pub fn decode_keys(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.quantized_len() * self.d);
+        for g in &self.key_groups {
+            polar::decode_group_into(g, self.d, &mut out);
+        }
+        out
+    }
+
+    /// Dequantized values of group `gi` appended into `out`.
+    pub fn decode_values_into(&self, gi: usize, out: &mut Vec<f32>) {
+        match &self.value_groups[gi] {
+            GroupValues::Fp(v) => out.extend_from_slice(v),
+            GroupValues::Quant(e) => out.extend_from_slice(&value::decode(e, self.d)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spec() -> PolarSpec {
+        PolarSpec::new(4, 4, 8)
+    }
+
+    #[test]
+    fn append_finalizes_full_groups() {
+        let mut rng = Rng::new(1);
+        let d = 16;
+        let mut sc = StreamCache::new(d, spec(), None);
+        for i in 0..19 {
+            let k = rng.normal_vec(d);
+            let v = rng.normal_vec(d);
+            let finalized = sc.append(&k, &v);
+            assert_eq!(finalized, (i + 1) % 8 == 0);
+        }
+        assert_eq!(sc.quantized_len(), 16);
+        assert_eq!(sc.resid_len(), 3);
+        assert_eq!(sc.len(), 19);
+        assert_eq!(sc.key_groups.len(), 2);
+        assert_eq!(sc.value_groups.len(), 2);
+    }
+
+    #[test]
+    fn block_append_equals_token_append() {
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let tokens = 21;
+        let k = rng.normal_vec(tokens * d);
+        let v = rng.normal_vec(tokens * d);
+        let mut a = StreamCache::new(d, spec(), None);
+        a.append_block(&k, &v);
+        let mut b = StreamCache::new(d, spec(), None);
+        for n in 0..tokens {
+            b.append(&k[n * d..(n + 1) * d], &v[n * d..(n + 1) * d]);
+        }
+        assert_eq!(a.quantized_len(), b.quantized_len());
+        assert_eq!(a.decode_keys(), b.decode_keys());
+        assert_eq!(a.resid_k, b.resid_k);
+    }
+
+    #[test]
+    fn quantized_values_roundtrip() {
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let mut sc = StreamCache::new(d, spec(), Some(4));
+        let k = rng.normal_vec(8 * d);
+        let v = rng.normal_vec(8 * d);
+        sc.append_block(&k, &v);
+        let mut dec = Vec::new();
+        sc.decode_values_into(0, &mut dec);
+        assert_eq!(dec.len(), 8 * d);
+        let err = crate::tensor::ops::mse(&v, &dec);
+        assert!(err < 0.01, "4-bit value err {err}");
+    }
+
+    #[test]
+    fn memory_shrinks_with_fewer_bits() {
+        let mut rng = Rng::new(4);
+        let d = 32;
+        let k = rng.normal_vec(64 * d);
+        let v = rng.normal_vec(64 * d);
+        let mut big = StreamCache::new(d, PolarSpec::new(5, 5, 8), None);
+        big.append_block(&k, &v);
+        let mut small = StreamCache::new(d, PolarSpec::new(2, 2, 8), None);
+        small.append_block(&k, &v);
+        assert!(small.nbytes() < big.nbytes());
+    }
+}

@@ -1,0 +1,45 @@
+//! # PolarQuant — polar-transformation key-cache quantization + LUT decoding
+//!
+//! Reproduction of *"PolarQuant: Leveraging Polar Transformation for
+//! Efficient Key Cache Quantization and Decoding Acceleration"* (Wu, Lv,
+//! et al., 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): polar encoder and
+//!   the fused LUT dequant+QK kernel, AOT-lowered to HLO text.
+//! * **L2** — JAX transformer (`python/compile/model.py`): prefill and
+//!   decode-step graphs over a PolarQuant-encoded key cache.
+//! * **L3** — this crate: the serving coordinator (router, dynamic batcher,
+//!   prefill/decode scheduler), the quantized paged KV-cache manager, the
+//!   PJRT runtime that executes the AOT artifacts, a Rust-native reference
+//!   model, every quantization baseline from the paper's evaluation
+//!   (KIVI, Int-N, ZipCache, QJL), and the benchmark harnesses that
+//!   regenerate each table/figure (see `DESIGN.md` §6).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! graphs once; the `polarquant` binary is self-contained afterwards.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`tensor`] | minimal f32 tensor substrate (matmul, softmax, RoPE, norms) |
+//! | [`quant`] | PolarQuant + every baseline codec, bit-packing, decode LUT |
+//! | [`kvcache`] | paged quantized cache: groups, residual buffer, eviction, memory accounting |
+//! | [`model`] | Rust-native twin of the L2 JAX model (config, weights, forward) |
+//! | [`runtime`] | PJRT client, artifact manifest, shape-bucket executors |
+//! | [`coordinator`] | request router, dynamic batcher, scheduler, engine, metrics |
+//! | [`server`] | JSON-lines TCP front-end + client |
+//! | [`workload`] | synthetic activation / request generators (outlier profiles) |
+//! | [`eval`] | fidelity metrics, task proxies, paper-table printers |
+//! | [`util`] | no-deps substrates: RNG, JSON codec, stats, bench harness |
+
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,189 @@
+//! `polarquant` — leader entrypoint + CLI.
+//!
+//! ```text
+//! polarquant info      --artifacts artifacts/
+//! polarquant serve     --artifacts artifacts/ --addr 127.0.0.1:7733 --workers 2 --backend pjrt
+//! polarquant generate  --artifacts artifacts/ --prompt 1,2,3 --max-tokens 16 --backend native
+//! polarquant fidelity  --profile qwen-like --d 128 --tokens 512
+//! ```
+//!
+//! Table/figure regeneration lives in the `bench_tables` binary and
+//! `cargo bench` targets (see DESIGN.md §6).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::eval::{eval_codec, Table};
+use polarquant::quant::QuantSpec;
+use polarquant::runtime::Manifest;
+use polarquant::server::serve;
+use polarquant::workload::ActivationProfile;
+
+/// Tiny hand-rolled flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "fidelity" => cmd_fidelity(&args),
+        _ => {
+            eprintln!(
+                "usage: polarquant <info|serve|generate|fidelity> [--flags]\n\
+                 see crate docs / README for details"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifacts(args))?;
+    println!("model config : {:?}", m.config);
+    println!("weights      : {} ({} bytes)", m.weights.file, m.weights.total_bytes);
+    println!("graphs       :");
+    for g in &m.graphs {
+        println!(
+            "  {:<28} kind={:<8} bucket=({}, {}) inputs={} outputs={}",
+            g.name,
+            g.kind,
+            g.batch,
+            g.seq,
+            g.inputs.len(),
+            g.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
+    let dir = artifacts(args);
+    let opts = EngineOpts::default();
+    match args.get("backend", "pjrt").as_str() {
+        "pjrt" => Engine::pjrt_from_artifacts(&dir, opts),
+        "native" => Engine::native_from_artifacts(&dir, opts),
+        "synthetic" => Ok(Engine::native_synthetic(
+            polarquant::model::ModelConfig::tiny(),
+            worker as u64,
+            6.0,
+            opts,
+        )),
+        other => bail!("unknown backend '{other}' (pjrt|native|synthetic)"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7733");
+    let workers = args.usize("workers", 1);
+    let flags: HashMap<String, String> = args.flags.clone();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let args = Args { flags: flags.clone() };
+        build_engine(&args, w).expect("engine construction failed")
+    });
+    let handle = serve(factory, &addr, workers)?;
+    println!("serving on {} with {} workers (ctrl-c to stop)", handle.addr, workers);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt: Vec<u32> = args
+        .get("prompt", "1,2,3")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse().context("bad token id"))
+        .collect::<Result<_>>()?;
+    let max_tokens = args.usize("max-tokens", 16);
+    let mut engine = build_engine(args, 0)?;
+    engine.submit(Request::greedy(1, prompt, max_tokens)).ok();
+    let done = engine.run_to_completion()?;
+    let c = &done[0];
+    println!("tokens: {:?}", c.tokens);
+    println!(
+        "ttft {:.2}ms total {:.2}ms ({} tokens)",
+        c.ttft_s.unwrap_or(0.0) * 1e3,
+        c.total_s.unwrap_or(0.0) * 1e3,
+        c.tokens.len()
+    );
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_fidelity(args: &Args) -> Result<()> {
+    let profile_name = args.get("profile", "llama31-like");
+    let profile = ActivationProfile::by_name(&profile_name)
+        .with_context(|| format!("unknown profile '{profile_name}'"))?;
+    let d = args.usize("d", 128);
+    let tokens = args.usize("tokens", 512);
+    let group = args.usize("group", 128);
+    let mut t = Table::new(
+        &format!("Key-cache fidelity — {profile_name} (d={d}, T={tokens})"),
+        &["method", "bits", "key MSE", "attn KL", "top8"],
+    );
+    let specs = [
+        QuantSpec::Fp16,
+        QuantSpec::Polar { r_bits: 4, t_bits: 4, group },
+        QuantSpec::Polar { r_bits: 3, t_bits: 3, group },
+        QuantSpec::Kivi { bits: 4, group },
+        QuantSpec::Kivi { bits: 2, group: 32 },
+        QuantSpec::Int { bits: 4 },
+        QuantSpec::Zip { bits: 4 },
+        QuantSpec::Qjl { bits_per_channel: 3 },
+    ];
+    for spec in specs {
+        let f = eval_codec(&spec, profile, d, tokens, 16, 42);
+        t.row(vec![
+            spec.label(),
+            format!("{:.2}", f.bits),
+            polarquant::eval::tables::sci(f.key_mse),
+            polarquant::eval::tables::sci(f.attn_kl),
+            format!("{:.3}", f.top8_overlap),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

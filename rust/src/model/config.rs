@@ -1,0 +1,130 @@
+//! Model configuration — parsed from `artifacts/manifest.json` (the single
+//! source of truth emitted by `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+
+use crate::quant::polar::PolarSpec;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub rope_base: f32,
+    pub group: usize,
+    pub r_bits: u32,
+    pub t_bits: u32,
+    pub resid: usize,
+}
+
+impl ModelConfig {
+    pub fn q_per_kv(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn polar_spec(&self) -> PolarSpec {
+        PolarSpec::new(self.r_bits, self.t_bits, self.group)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let req_usize = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("manifest config missing '{k}'"))
+        };
+        Ok(ModelConfig {
+            name: v.str_or("name", "unknown"),
+            vocab: req_usize("vocab")?,
+            d_model: req_usize("d_model")?,
+            n_layers: req_usize("n_layers")?,
+            n_heads: req_usize("n_heads")?,
+            n_kv_heads: req_usize("n_kv_heads")?,
+            head_dim: req_usize("head_dim")?,
+            ffn: req_usize("ffn")?,
+            rope_base: v.f64_or("rope_base", 10000.0) as f32,
+            group: req_usize("group")?,
+            r_bits: req_usize("r_bits")? as u32,
+            t_bits: req_usize("t_bits")? as u32,
+            resid: req_usize("resid")?,
+        })
+    }
+
+    /// The canonical test config (mirrors `CONFIGS["tiny"]` in model.py).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            ffn: 256,
+            rope_base: 10000.0,
+            group: 64,
+            r_bits: 4,
+            t_bits: 4,
+            resid: 64,
+        }
+    }
+
+    /// Llama-3.1-8B attention geometry (32 q-heads / 8 kv-heads, d=128) at
+    /// reduced depth — what the paper's kernel benches (Fig 3) run on.
+    pub fn llama31_head() -> Self {
+        ModelConfig {
+            name: "llama31-head".into(),
+            vocab: 1024,
+            d_model: 512,
+            n_layers: 2,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn: 1024,
+            rope_base: 500000.0,
+            group: 128,
+            r_bits: 4,
+            t_bits: 4,
+            resid: 128,
+        }
+    }
+
+    pub fn cache_config(&self, value_bits: Option<u32>) -> crate::kvcache::CacheConfig {
+        crate::kvcache::CacheConfig {
+            n_layers: self.n_layers,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+            spec: self.polar_spec(),
+            value_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parses_manifest_config() {
+        let text = r#"{"name": "tiny", "vocab": 512, "d_model": 128,
+            "n_layers": 4, "n_heads": 4, "n_kv_heads": 2, "head_dim": 32,
+            "ffn": 256, "rope_base": 10000.0, "group": 64, "r_bits": 4,
+            "t_bits": 4, "resid": 64}"#;
+        let v = json::parse(text).unwrap();
+        let cfg = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, ModelConfig::tiny());
+        assert_eq!(cfg.q_per_kv(), 2);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        let v = json::parse(r#"{"vocab": 10}"#).unwrap();
+        assert!(ModelConfig::from_json(&v).is_err());
+    }
+}

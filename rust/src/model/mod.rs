@@ -1,0 +1,18 @@
+//! Rust-native twin of the L2 JAX model (`python/compile/model.py`).
+//!
+//! Same architecture, same numerics (f32, RMS-norm eps 1e-5, adjacent-pair
+//! RoPE, SwiGLU), consuming the same `weights_<cfg>.bin` artifact — so the
+//! native backend and the PJRT backend are interchangeable inside the
+//! engine and cross-checkable in integration tests.  Decode attention runs
+//! over the quantized [`crate::kvcache::SequenceCache`] through the
+//! PolarQuant LUT path — the Rust-level realization of the paper's
+//! accelerated kernel.
+
+pub mod config;
+pub mod forward;
+pub mod sampling;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use forward::Model;
+pub use weights::Weights;

@@ -1,0 +1,78 @@
+//! Token sampling: greedy, temperature, top-k.
+
+use crate::tensor::ops::argmax;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    Greedy,
+    /// softmax(logits / temperature) restricted to the top-k entries
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::TopK { k, temperature } => {
+                let k = k.max(1).min(logits.len());
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k);
+                let t = temperature.max(1e-4);
+                let mx = logits[idx[0]];
+                let mut probs: Vec<f32> =
+                    idx.iter().map(|&i| ((logits[i] - mx) / t).exp()).collect();
+                let sum: f32 = probs.iter().sum();
+                for p in probs.iter_mut() {
+                    *p /= sum;
+                }
+                let mut u = rng.uniform() as f32;
+                for (j, &p) in probs.iter().enumerate() {
+                    if u < p {
+                        return idx[j] as u32;
+                    }
+                    u -= p;
+                }
+                idx[k - 1] as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let s = Sampler::Greedy;
+        assert_eq!(s.sample(&[0.1, 3.0, 1.0], &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_topk() {
+        let mut rng = Rng::new(2);
+        let s = Sampler::TopK { k: 2, temperature: 1.0 };
+        let logits = [0.0, 5.0, 4.0, -10.0];
+        for _ in 0..100 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 1 || t == 2, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(3);
+        let s = Sampler::TopK { k: 4, temperature: 1e-3 };
+        let logits = [0.0, 5.0, 4.9, -1.0];
+        let mut ones = 0;
+        for _ in 0..200 {
+            if s.sample(&logits, &mut rng) == 1 {
+                ones += 1;
+            }
+        }
+        assert!(ones > 190, "{ones}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Weight loading: `weights_<cfg>.bin` (raw little-endian f32, manifest
+//! tensor table) and synthetic in-memory initialization for tests/benches
+//! that must not depend on artifacts.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+/// Canonical tensor order/shapes (mirrors `model.weight_specs`).
+pub fn weight_specs(cfg: &ModelConfig) -> Vec<(&'static str, Vec<usize>)> {
+    let (l, d, h, kv, dh, f, v) = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.ffn, cfg.vocab,
+    );
+    vec![
+        ("embed", vec![v, d]),
+        ("wq", vec![l, d, h * dh]),
+        ("wk", vec![l, d, kv * dh]),
+        ("bk", vec![l, kv * dh]),
+        ("wv", vec![l, d, kv * dh]),
+        ("wo", vec![l, h * dh, d]),
+        ("w_gate", vec![l, d, f]),
+        ("w_up", vec![l, d, f]),
+        ("w_down", vec![l, f, d]),
+        ("norm_attn", vec![l, d]),
+        ("norm_mlp", vec![l, d]),
+        ("norm_final", vec![d]),
+        ("lm_head", vec![d, v]),
+    ]
+}
+
+impl Weights {
+    /// Load from the artifact .bin using the manifest's tensor table.
+    pub fn load(path: &Path, manifest_weights: &Value, cfg: &ModelConfig) -> Result<Self> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening weights file {path:?}"))?;
+        let mut raw = Vec::new();
+        file.read_to_end(&mut raw)?;
+        let table = manifest_weights
+            .req("tensors")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("weights.tensors not an array")?;
+        let mut tensors = HashMap::new();
+        for entry in table {
+            let name = entry.str_or("name", "");
+            let shape = entry
+                .req("shape")
+                .map_err(anyhow::Error::msg)?
+                .usize_vec()
+                .context("bad shape")?;
+            let offset = entry.usize_or("offset_bytes", usize::MAX);
+            let size = entry.usize_or("size_bytes", 0);
+            if offset == usize::MAX || offset + size > raw.len() {
+                bail!("tensor {name}: bad offset/size");
+            }
+            let n = size / 4;
+            let mut data = vec![0.0f32; n];
+            for i in 0..n {
+                let b = &raw[offset + 4 * i..offset + 4 * i + 4];
+                data[i] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            tensors.insert(name, Tensor::new(data, &shape));
+        }
+        // sanity: every expected tensor present with the expected shape
+        for (name, shape) in weight_specs(cfg) {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("weights missing tensor '{name}'"))?;
+            if t.shape != shape {
+                bail!("tensor {name}: shape {:?} != expected {:?}", t.shape, shape);
+            }
+        }
+        Ok(Weights { tensors })
+    }
+
+    /// Synthetic weights with the paper's key-channel outlier structure
+    /// (mirrors `model.init_weights`; NOT bit-identical to numpy — use the
+    /// artifact .bin when cross-checking against the PJRT graphs).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64, outlier_severity: f32) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tensors = HashMap::new();
+        for (name, shape) in weight_specs(cfg) {
+            let n: usize = shape.iter().product();
+            let data = if name.starts_with("norm") {
+                vec![1.0f32; n]
+            } else if name == "bk" {
+                vec![0.0f32; n]
+            } else {
+                let fan_in = if shape.len() >= 2 { shape[shape.len() - 2] } else { shape[0] };
+                let std = 1.0 / (fan_in as f32).sqrt();
+                let mut v = rng.normal_vec(n);
+                for x in v.iter_mut() {
+                    *x *= std;
+                }
+                v
+            };
+            tensors.insert(name.to_string(), Tensor::new(data, &shape));
+        }
+        // Channel outliers via a constant key BIAS on one dim of some
+        // RoPE pairs (Qwen-style attention bias — the paper's hardest
+        // case): post-RoPE those pairs trace the Figure-1(b) ring
+        // (consistent radius, smooth angle) while their Cartesian
+        // magnitudes dwarf other channels on every token (Figure 1a).
+        // Mirrors python/compile/model.py::init_weights.
+        let dh = cfg.head_dim;
+        let n_pairs = dh / 2;
+        let n_out = (n_pairs / 16).max(1);
+        let bk = tensors.get_mut("bk").unwrap();
+        let kv = cfg.n_kv_heads;
+        if outlier_severity > 0.0 {
+            for l in 0..cfg.n_layers {
+                for h in 0..kv {
+                    let pairs = rng.choose_distinct(n_pairs, n_out);
+                    for j in pairs {
+                        let sign = rng.sign();
+                        bk.data[(l * kv + h) * dh + 2 * j] = sign * outlier_severity;
+                    }
+                }
+            }
+        }
+        Weights { tensors }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight tensor '{name}'"))
+    }
+
+    /// Layer slice of a stacked (L, a, b) tensor as a flat &[f32] (a*b).
+    pub fn layer<'a>(&'a self, name: &str, layer: usize) -> &'a [f32] {
+        let t = self.get(name);
+        assert!(t.rank() >= 2);
+        let per = t.numel() / t.shape[0];
+        &t.data[layer * per..(layer + 1) * per]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_has_all_tensors() {
+        let cfg = ModelConfig::tiny();
+        let w = Weights::synthetic(&cfg, 0, 6.0);
+        for (name, shape) in weight_specs(&cfg) {
+            assert_eq!(w.get(name).shape, shape, "{name}");
+        }
+    }
+
+    #[test]
+    fn outliers_present_in_wk() {
+        let cfg = ModelConfig::tiny();
+        let plain = Weights::synthetic(&cfg, 0, 0.0);
+        let spiky = Weights::synthetic(&cfg, 0, 20.0);
+        let max_plain = plain.get("bk").data.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let max_spiky = spiky.get("bk").data.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert_eq!(max_plain, 0.0);
+        assert_eq!(max_spiky, 20.0);
+    }
+
+    #[test]
+    fn layer_slicing() {
+        let cfg = ModelConfig::tiny();
+        let w = Weights::synthetic(&cfg, 1, 6.0);
+        let wq = w.get("wq");
+        let per = wq.numel() / cfg.n_layers;
+        assert_eq!(w.layer("wq", 2), &wq.data[2 * per..3 * per]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Int-N baseline: plain token-wise asymmetric quantization (params per
+//! token over channels).  Collapses under channel-wise outliers — the
+//! failure mode PolarQuant is built to avoid (paper Table 1).
+
+use super::pack::PackedCodes;
+use super::{dequantize, qparams, quantize};
+
+#[derive(Clone, Debug)]
+pub struct IntEncoded {
+    pub codes: PackedCodes,
+    /// per-token zero point / scale
+    pub z: Vec<f32>,
+    pub s: Vec<f32>,
+    pub bits: u32,
+}
+
+impl IntEncoded {
+    pub fn tokens(&self) -> usize {
+        self.z.len()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.codes.nbytes() + 2 * self.z.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// bits/element incl. per-token fp16 zero+scale (32/d, paper §B).
+pub fn bits_per_element(bits: u32, d: usize) -> f64 {
+    bits as f64 + 32.0 / d as f64
+}
+
+pub fn encode(x: &[f32], d: usize, bits: u32) -> IntEncoded {
+    let tokens = x.len() / d;
+    assert_eq!(x.len(), tokens * d);
+    let mut z = vec![0.0f32; tokens];
+    let mut s = vec![0.0f32; tokens];
+    let mut codes = vec![0u8; tokens * d];
+    for n in 0..tokens {
+        let row = &x[n * d..(n + 1) * d];
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (zz, ss) = qparams(lo, hi, bits);
+        z[n] = zz;
+        s[n] = ss;
+        for j in 0..d {
+            codes[n * d + j] = quantize(row[j], zz, ss, bits);
+        }
+    }
+    IntEncoded { codes: PackedCodes::from_codes(&codes, bits), z, s, bits }
+}
+
+pub fn decode(enc: &IntEncoded, d: usize) -> Vec<f32> {
+    let codes = enc.codes.unpack();
+    let mut out = Vec::with_capacity(codes.len());
+    for n in 0..enc.tokens() {
+        for j in 0..d {
+            out.push(dequantize(codes[n * d + j], enc.z[n], enc.s[n]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_within_half_cell() {
+        let mut rng = Rng::new(41);
+        let d = 24;
+        let x = rng.normal_vec(10 * d);
+        let enc = encode(&x, d, 4);
+        let x_hat = decode(&enc, d);
+        for n in 0..10 {
+            for j in 0..d {
+                assert!((x[n * d + j] - x_hat[n * d + j]).abs() <= enc.s[n] / 2.0 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn outliers_blow_up_the_scale() {
+        // one huge channel makes the per-token scale coarse for everyone
+        let mut rng = Rng::new(42);
+        let d = 32;
+        let mut x = rng.normal_vec(4 * d);
+        for n in 0..4 {
+            x[n * d] = 100.0;
+        }
+        let enc = encode(&x, d, 4);
+        for n in 0..4 {
+            assert!(enc.s[n] > 5.0, "scale should be dominated by the outlier");
+        }
+    }
+}

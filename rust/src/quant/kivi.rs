@@ -1,0 +1,209 @@
+//! KIVI baseline [Liu et al., ICML'24]: channel-wise asymmetric key
+//! quantization — params per (token-group, channel) — and the
+//! dequantize-then-multiply QK path the paper's Fig. 3 compares against.
+
+use super::pack::PackedCodes;
+use super::{dequantize, qparams, quantize};
+
+#[derive(Clone, Copy, Debug)]
+pub struct KiviSpec {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl KiviSpec {
+    pub fn new(bits: u32, group: usize) -> Self {
+        KiviSpec { bits, group }
+    }
+
+    /// bits/element incl. fp16 zero+scale per channel per group (paper §B).
+    pub fn bits_per_element(&self) -> f64 {
+        self.bits as f64 + 32.0 / self.group as f64
+    }
+}
+
+/// One encoded token group: codes token-major (tokens x d), params per
+/// channel.
+#[derive(Clone, Debug)]
+pub struct KiviGroup {
+    pub codes: PackedCodes,
+    pub z: Vec<f32>,
+    pub s: Vec<f32>,
+    pub tokens: usize,
+}
+
+impl KiviGroup {
+    pub fn nbytes(&self) -> usize {
+        self.codes.nbytes() + 2 * self.z.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct KiviEncoded {
+    pub groups: Vec<KiviGroup>,
+}
+
+impl KiviEncoded {
+    pub fn tokens(&self) -> usize {
+        self.groups.iter().map(|g| g.tokens).sum()
+    }
+}
+
+pub fn encode_group(k: &[f32], d: usize, spec: &KiviSpec) -> KiviGroup {
+    let tokens = k.len() / d;
+    assert_eq!(k.len(), tokens * d);
+    let mut z = vec![0.0f32; d];
+    let mut s = vec![0.0f32; d];
+    for j in 0..d {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for n in 0..tokens {
+            let v = k[n * d + j];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let (zz, ss) = qparams(lo, hi, spec.bits);
+        z[j] = zz;
+        s[j] = ss;
+    }
+    let mut codes = vec![0u8; tokens * d];
+    for n in 0..tokens {
+        for j in 0..d {
+            codes[n * d + j] = quantize(k[n * d + j], z[j], s[j], spec.bits);
+        }
+    }
+    KiviGroup { codes: PackedCodes::from_codes(&codes, spec.bits), z, s, tokens }
+}
+
+pub fn encode(k: &[f32], d: usize, spec: &KiviSpec) -> KiviEncoded {
+    let tokens = k.len() / d;
+    assert_eq!(tokens % spec.group, 0);
+    KiviEncoded {
+        groups: (0..tokens / spec.group)
+            .map(|g| encode_group(&k[g * spec.group * d..(g + 1) * spec.group * d], d, spec))
+            .collect(),
+    }
+}
+
+pub fn decode_group_into(g: &KiviGroup, d: usize, out: &mut Vec<f32>) {
+    let codes = g.codes.unpack();
+    for n in 0..g.tokens {
+        for j in 0..d {
+            out.push(dequantize(codes[n * d + j], g.z[j], g.s[j]));
+        }
+    }
+}
+
+pub fn decode(enc: &KiviEncoded, d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(enc.tokens() * d);
+    for g in &enc.groups {
+        decode_group_into(g, d, out.as_mut());
+    }
+    out
+}
+
+/// Dequantize-then-dot QK: the faithful reproduction of KIVI's decode
+/// kernel (materializes each dequantized key row, then dots).  Scratch
+/// buffers live in the struct so the hot loop is allocation-free.
+pub struct KiviQk {
+    #[allow(dead_code)]
+    spec: KiviSpec,
+    d: usize,
+    code_scratch: Vec<u8>,
+    row: Vec<f32>,
+}
+
+impl KiviQk {
+    pub fn new(spec: KiviSpec, d: usize) -> Self {
+        KiviQk { spec, d, code_scratch: vec![0; spec.group * d], row: vec![0.0; d] }
+    }
+
+    pub fn scores(&mut self, q: &[f32], enc: &KiviEncoded, out: &mut Vec<f32>) {
+        out.clear();
+        for g in &enc.groups {
+            g.codes.unpack_into(&mut self.code_scratch);
+            for n in 0..g.tokens {
+                let codes = &self.code_scratch[n * self.d..(n + 1) * self.d];
+                for j in 0..self.d {
+                    self.row[j] = (codes[j] as f32 + 0.5) * g.s[j] + g.z[j];
+                }
+                out.push(crate::tensor::ops::dot(q, &self.row));
+            }
+        }
+    }
+
+    /// Algebraic shortcut (ablation, not the paper's baseline): fold q into
+    /// the scales once per group — score(n) = Σ_j code·(s_j·q_j) + const.
+    /// This shows how much of KIVI's gap is implementation, not method.
+    pub fn scores_folded(&mut self, q: &[f32], enc: &KiviEncoded, out: &mut Vec<f32>) {
+        out.clear();
+        for g in &enc.groups {
+            g.codes.unpack_into(&mut self.code_scratch);
+            let mut c0 = 0.0f32;
+            for j in 0..self.d {
+                self.row[j] = g.s[j] * q[j];
+                c0 += (g.z[j] + 0.5 * g.s[j]) * q[j];
+            }
+            for n in 0..g.tokens {
+                let codes = &self.code_scratch[n * self.d..(n + 1) * self.d];
+                let mut acc = c0;
+                for j in 0..self.d {
+                    acc += codes[j] as f32 * self.row[j];
+                }
+                out.push(acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::dot;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qk_matches_decode_then_dot() {
+        let mut rng = Rng::new(31);
+        let d = 32;
+        let spec = KiviSpec::new(4, 16);
+        let k = rng.normal_vec(48 * d);
+        let enc = encode(&k, d, &spec);
+        let k_hat = decode(&enc, d);
+        let q = rng.normal_vec(d);
+        let mut qk = KiviQk::new(spec, d);
+        let mut scores = Vec::new();
+        qk.scores(&q, &enc, &mut scores);
+        let mut folded = Vec::new();
+        qk.scores_folded(&q, &enc, &mut folded);
+        for n in 0..48 {
+            let want = dot(&q, &k_hat[n * d..(n + 1) * d]);
+            assert!((scores[n] - want).abs() < 2e-4 * (1.0 + want.abs()));
+            assert!((folded[n] - want).abs() < 5e-4 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn roundtrip_within_half_cell() {
+        let mut rng = Rng::new(32);
+        let d = 16;
+        let spec = KiviSpec::new(3, 8);
+        let k = rng.normal_vec(16 * d);
+        let enc = encode(&k, d, &spec);
+        let k_hat = decode(&enc, d);
+        for (gi, g) in enc.groups.iter().enumerate() {
+            for n in 0..g.tokens {
+                let t = gi * spec.group + n;
+                for j in 0..d {
+                    let err = (k[t * d + j] - k_hat[t * d + j]).abs();
+                    assert!(err <= g.s[j] / 2.0 + 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((KiviSpec::new(4, 128).bits_per_element() - 4.25).abs() < 1e-9);
+        assert!((KiviSpec::new(2, 32).bits_per_element() - 3.0).abs() < 1e-9);
+    }
+}

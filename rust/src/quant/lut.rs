@@ -1,0 +1,234 @@
+//! The paper's decoding acceleration (§3.3 / Appendix A): query–key inner
+//! products against a PolarQuant cache via a per-channel lookup table.
+//!
+//! For a decode-step query `q` and one token group with theta params
+//! `(tz, ts)`, the dequantized partial product at channel pair `j` takes
+//! one of `2^t` values:
+//!
+//! ```text
+//! LUT[j][c] = q[2j]·cos(th(c;j)) + q[2j+1]·sin(th(c;j)),
+//! th(c;j)   = (c + 1/2)·ts[j] + tz[j] − π
+//! score(n)  = Σ_j rho~(n,j) · LUT[j][theta_code(n,j)]
+//! ```
+//!
+//! The trig to build the table is O(d/2 · 2^t) per group — *independent of
+//! group size* — after which each cached token costs one gather + two
+//! mul-adds per pair, versus KIVI's dequant-then-dot at two mul-adds per
+//! *element* plus the dequant.  GQA amplifies the win: the `cos/sin` basis
+//! is shared across all query heads attached to a kv head
+//! ([`QkLut::scores_multi`]), which is how the paper's Triton kernel
+//! amortizes LUT construction across the head group.
+
+use super::polar::{PolarEncoded, PolarGroup, PolarSpec};
+
+/// Scratch + result buffers for repeated LUT QK calls (allocation-free at
+/// steady state — see EXPERIMENTS.md §Perf).
+pub struct QkLut {
+    spec: PolarSpec,
+    d2: usize,
+    /// cos/sin basis for the current group: [2 * d2 * levels]
+    basis: Vec<f32>,
+    /// per-head tables: [heads * d2 * levels]
+    lut: Vec<f32>,
+    /// unpacked codes for the current group
+    rho_scratch: Vec<u8>,
+    theta_scratch: Vec<u8>,
+    /// dequantized rho values
+    rho_deq: Vec<f32>,
+}
+
+impl QkLut {
+    pub fn new(spec: PolarSpec, d: usize, max_heads: usize) -> Self {
+        let d2 = d / 2;
+        let levels = 1usize << spec.t_bits;
+        QkLut {
+            spec,
+            d2,
+            basis: vec![0.0; 2 * d2 * levels],
+            lut: vec![0.0; max_heads * d2 * levels],
+            rho_scratch: vec![0; spec.group * d2],
+            theta_scratch: vec![0; spec.group * d2],
+            rho_deq: vec![0.0; spec.group * d2],
+        }
+    }
+
+    pub fn spec(&self) -> &PolarSpec {
+        &self.spec
+    }
+
+    /// Build the shared cos/sin basis for one group (trig happens ONCE per
+    /// group regardless of how many query heads score against it).
+    fn build_basis(&mut self, g: &PolarGroup) {
+        let levels = 1usize << self.spec.t_bits;
+        for j in 0..self.d2 {
+            let (tz, ts) = (g.theta_z[j], g.theta_s[j]);
+            for c in 0..levels {
+                let th = (c as f32 + 0.5) * ts + tz - std::f32::consts::PI;
+                let (sin, cos) = th.sin_cos();
+                self.basis[(j * levels + c) * 2] = cos;
+                self.basis[(j * levels + c) * 2 + 1] = sin;
+            }
+        }
+    }
+
+    /// Combine the basis with `heads` queries into per-head LUTs.
+    fn build_luts(&mut self, qs: &[&[f32]]) {
+        let levels = 1usize << self.spec.t_bits;
+        for (h, q) in qs.iter().enumerate() {
+            debug_assert_eq!(q.len(), self.d2 * 2);
+            let lut = &mut self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
+            for j in 0..self.d2 {
+                let qx = q[2 * j];
+                let qy = q[2 * j + 1];
+                for c in 0..levels {
+                    let cos = self.basis[(j * levels + c) * 2];
+                    let sin = self.basis[(j * levels + c) * 2 + 1];
+                    lut[j * levels + c] = qx * cos + qy * sin;
+                }
+            }
+        }
+    }
+
+    /// Unpack codes + dequantize rho for one group.
+    fn stage_group(&mut self, g: &PolarGroup) {
+        g.rho_codes.unpack_into(&mut self.rho_scratch);
+        g.theta_codes.unpack_into(&mut self.theta_scratch);
+        for n in 0..g.tokens {
+            for j in 0..self.d2 {
+                let idx = n * self.d2 + j;
+                self.rho_deq[idx] =
+                    (self.rho_scratch[idx] as f32 + 0.5) * g.rho_s[j] + g.rho_z[j];
+            }
+        }
+    }
+
+    /// Scores for MULTIPLE query heads sharing one kv stream (GQA).
+    ///
+    /// `out[h]` receives `enc.tokens()` scores for query `qs[h]`.
+    ///
+    /// Fast path (r+t <= 8): the group's combined (rho<<t | theta) codes
+    /// are unpacked ONCE into a byte scratch; rho is dequantized into a
+    /// staging row shared by all heads; the per-head loop is a pure
+    /// gather+fma over that row.  See EXPERIMENTS.md §Perf for the
+    /// before/after.
+    pub fn scores_multi(&mut self, qs: &[&[f32]], enc: &PolarEncoded, out: &mut [Vec<f32>]) {
+        assert_eq!(qs.len(), out.len());
+        assert!(qs.len() * self.d2 * (1 << self.spec.t_bits) <= self.lut.len());
+        for o in out.iter_mut() {
+            o.clear();
+        }
+        let levels = 1usize << self.spec.t_bits;
+        let t_mask = (levels - 1) as u8;
+        let t_bits = self.spec.t_bits;
+        for g in &enc.groups {
+            self.build_basis(g);
+            self.build_luts(qs);
+            if let Some(combined) = &g.combined {
+                // fused path: one unpack, split codes inline, stage rho
+                combined.unpack_into(&mut self.theta_scratch);
+                for n in 0..g.tokens {
+                    let row = n * self.d2;
+                    for j in 0..self.d2 {
+                        let b = self.theta_scratch[row + j];
+                        let rc = (b >> t_bits) as f32;
+                        self.rho_deq[row + j] = (rc + 0.5) * g.rho_s[j] + g.rho_z[j];
+                    }
+                }
+                for (h, o) in out.iter_mut().enumerate() {
+                    let lut = &self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
+                    for n in 0..g.tokens {
+                        let row = n * self.d2;
+                        let codes = &self.theta_scratch[row..row + self.d2];
+                        let rho = &self.rho_deq[row..row + self.d2];
+                        // iterator-fused gather+fma: chunks_exact lets the
+                        // compiler hoist bounds checks out of the loop
+                        let mut acc = 0.0f32;
+                        for ((lut_j, &code), &rho_j) in
+                            lut.chunks_exact(levels).zip(codes).zip(rho)
+                        {
+                            acc += rho_j * lut_j[(code & t_mask) as usize];
+                        }
+                        o.push(acc);
+                    }
+                }
+            } else {
+                // general path (r+t > 8): separate unpacks
+                self.stage_group(g);
+                for (h, o) in out.iter_mut().enumerate() {
+                    let lut = &self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
+                    for n in 0..g.tokens {
+                        let row = n * self.d2;
+                        let mut acc = 0.0f32;
+                        for j in 0..self.d2 {
+                            let code = self.theta_scratch[row + j] as usize;
+                            acc += self.rho_deq[row + j] * lut[j * levels + code];
+                        }
+                        o.push(acc);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-head convenience wrapper.
+    pub fn scores(&mut self, q: &[f32], enc: &PolarEncoded, out: &mut Vec<f32>) {
+        let mut tmp = [std::mem::take(out)];
+        self.scores_multi(&[q], enc, &mut tmp);
+        *out = std::mem::take(&mut tmp[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::polar;
+    use crate::tensor::ops::dot;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lut_matches_dequant_matmul() {
+        let mut rng = Rng::new(21);
+        let d = 32;
+        for (r, t, g) in [(4, 4, 16), (3, 3, 8), (5, 2, 16), (2, 5, 8)] {
+            let spec = PolarSpec::new(r, t, g);
+            let k = rng.normal_vec(4 * g * d);
+            let enc = polar::encode(&k, d, &spec);
+            let k_hat = polar::decode(&enc, d);
+            let q = rng.normal_vec(d);
+            let mut lut = QkLut::new(spec, d, 1);
+            let mut scores = Vec::new();
+            lut.scores(&q, &enc, &mut scores);
+            assert_eq!(scores.len(), 4 * g);
+            for n in 0..scores.len() {
+                let want = dot(&q, &k_hat[n * d..(n + 1) * d]);
+                assert!(
+                    (scores[n] - want).abs() < 2e-4 * (1.0 + want.abs()),
+                    "n={n}: {} vs {}",
+                    scores[n],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_head_matches_single() {
+        let mut rng = Rng::new(22);
+        let d = 64;
+        let spec = PolarSpec::new(4, 4, 32);
+        let k = rng.normal_vec(2 * 32 * d);
+        let enc = polar::encode(&k, d, &spec);
+        let q0 = rng.normal_vec(d);
+        let q1 = rng.normal_vec(d);
+        let q2 = rng.normal_vec(d);
+
+        let mut lut = QkLut::new(spec, d, 4);
+        let mut multi = vec![Vec::new(), Vec::new(), Vec::new()];
+        lut.scores_multi(&[&q0, &q1, &q2], &enc, &mut multi);
+        for (h, q) in [&q0, &q1, &q2].iter().enumerate() {
+            let mut single = Vec::new();
+            lut.scores(q, &enc, &mut single);
+            assert_eq!(multi[h], single, "head {h}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Quantization library: PolarQuant plus every baseline the paper
+//! evaluates against (KIVI, Int-N, ZipCache, QJL) and the value-cache
+//! codec, with real bit-packed storage and the LUT-accelerated QK path.
+//!
+//! Numerics contract (shared with `python/compile/kernels/ref.py` and
+//! checked bit-for-bit by `rust/tests/goldens.rs`):
+//!
+//! * asymmetric min/max quantization:
+//!     `z = min(x)`, `s = max((max-min)/2^bits, 1e-8)`,
+//!     `code = clamp(floor((x-z)/s), 0, 2^bits-1)`,
+//!     `deq  = (code + 1/2) * s + z`
+//! * polar transform on post-RoPE keys, pairs `(2j, 2j+1)`:
+//!     `rho = hypot(x, y)`, `theta = atan2(y, x) + pi` (stored in (0,2pi),
+//!     shifted back by `-pi` at decode)
+//! * group-wise over **tokens** (size g), params per (group, channel).
+
+pub mod int_n;
+pub mod kivi;
+pub mod lut;
+pub mod pack;
+pub mod polar;
+pub mod qjl;
+pub mod spec;
+pub mod value;
+pub mod zipcache;
+
+pub use lut::QkLut;
+pub use polar::{PolarEncoded, PolarGroup, PolarSpec};
+pub use spec::{KeyCodec, QuantSpec};
+
+/// Asymmetric quantization params for one channel over one token group.
+#[inline]
+pub fn qparams(min: f32, max: f32, bits: u32) -> (f32, f32) {
+    let z = min;
+    let s = ((max - min) / (1u32 << bits) as f32).max(1e-8);
+    (z, s)
+}
+
+/// Quantize one value.
+#[inline]
+pub fn quantize(x: f32, z: f32, s: f32, bits: u32) -> u8 {
+    let code = ((x - z) / s).floor();
+    let hi = ((1u32 << bits) - 1) as f32;
+    code.clamp(0.0, hi) as u8
+}
+
+/// Dequantize one code.
+#[inline]
+pub fn dequantize(code: u8, z: f32, s: f32) -> f32 {
+    (code as f32 + 0.5) * s + z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_roundtrip_within_half_cell() {
+        let (z, s) = qparams(-2.0, 3.0, 4);
+        for i in 0..=50 {
+            let x = -2.0 + 5.0 * i as f32 / 50.0;
+            let c = quantize(x, z, s, 4);
+            let d = dequantize(c, z, s);
+            assert!((x - d).abs() <= s / 2.0 + 1e-6, "x={x} d={d} s={s}");
+        }
+    }
+
+    #[test]
+    fn quant_clamps() {
+        let (z, s) = qparams(0.0, 1.0, 2);
+        assert_eq!(quantize(-5.0, z, s, 2), 0);
+        assert_eq!(quantize(5.0, z, s, 2), 3);
+    }
+
+    #[test]
+    fn degenerate_range_is_safe() {
+        let (z, s) = qparams(1.5, 1.5, 4);
+        assert_eq!(s, 1e-8);
+        let c = quantize(1.5, z, s, 4);
+        let d = dequantize(c, z, s);
+        assert!((d - 1.5).abs() < 1e-6);
+    }
+}

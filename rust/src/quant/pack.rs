@@ -1,0 +1,111 @@
+//! Bit-packing for 1..=8-bit codes.
+//!
+//! Codes are stored little-endian within a contiguous bitstream; this is
+//! the at-rest representation in the KV-cache pages (the memory-accounting
+//! numbers in Table 4 are physical, not analytic).  The hot QK path
+//! unpacks one token-group at a time into a scratch `u8` buffer — the
+//! unpack cost is part of what the Fig-3 benches measure.
+
+/// Packed code buffer: `n` codes of `bits` bits each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    pub bits: u32,
+    pub n: usize,
+    data: Vec<u8>,
+}
+
+impl PackedCodes {
+    pub fn from_codes(codes: &[u8], bits: u32) -> Self {
+        assert!((1..=8).contains(&bits));
+        let total_bits = codes.len() * bits as usize;
+        let mut data = vec![0u8; total_bits.div_ceil(8)];
+        let mask = ((1u16 << bits) - 1) as u8;
+        for (i, &c) in codes.iter().enumerate() {
+            debug_assert_eq!(c & !mask, 0, "code {c} exceeds {bits} bits");
+            let bit = i * bits as usize;
+            let byte = bit / 8;
+            let off = bit % 8;
+            let v = (c & mask) as u16;
+            data[byte] |= (v << off) as u8;
+            if off + bits as usize > 8 {
+                data[byte + 1] |= (v >> (8 - off)) as u8;
+            }
+        }
+        PackedCodes { bits, n: codes.len(), data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.n);
+        let bits = self.bits as usize;
+        let bit = i * bits;
+        let byte = bit / 8;
+        let off = bit % 8;
+        let lo = self.data[byte] as u16;
+        let hi = if byte + 1 < self.data.len() {
+            self.data[byte + 1] as u16
+        } else {
+            0
+        };
+        let v = (lo | (hi << 8)) >> off;
+        (v as u8) & (((1u16 << bits) - 1) as u8)
+    }
+
+    /// Unpack all codes into `out` (len >= n).
+    pub fn unpack_into(&self, out: &mut [u8]) {
+        assert!(out.len() >= self.n);
+        for i in 0..self.n {
+            out[i] = self.get(i);
+        }
+    }
+
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut v = vec![0u8; self.n];
+        self.unpack_into(&mut v);
+        v
+    }
+
+    /// Physical storage in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Rng::new(9);
+        for bits in 1..=8u32 {
+            let n = 257; // deliberately not byte-aligned
+            let codes: Vec<u8> = (0..n)
+                .map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8)
+                .collect();
+            let p = PackedCodes::from_codes(&codes, bits);
+            assert_eq!(p.unpack(), codes, "bits={bits}");
+            // random access agrees
+            for _ in 0..50 {
+                let i = rng.below(n);
+                assert_eq!(p.get(i), codes[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_tight() {
+        let codes = vec![7u8; 100];
+        let p = PackedCodes::from_codes(&codes, 3);
+        assert_eq!(p.nbytes(), (100 * 3 + 7) / 8);
+    }
+
+    #[test]
+    fn cross_byte_boundary() {
+        // 5-bit codes straddle byte boundaries constantly
+        let codes: Vec<u8> = (0..64).map(|i| (i % 32) as u8).collect();
+        let p = PackedCodes::from_codes(&codes, 5);
+        assert_eq!(p.unpack(), codes);
+    }
+}

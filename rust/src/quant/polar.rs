@@ -1,0 +1,284 @@
+//! PolarQuant codec — the paper's contribution (§3.2).
+//!
+//! Post-RoPE key sub-vectors `(K[2j], K[2j+1])` are mapped to polar
+//! coordinates; radius and angle are quantized asymmetrically (r / t bits)
+//! group-wise over tokens with per-channel-pair params.  Storage is
+//! bit-packed; the accelerated QK path lives in [`crate::quant::lut`].
+
+use super::pack::PackedCodes;
+use super::{qparams, quantize};
+
+/// PolarQuant hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PolarSpec {
+    pub r_bits: u32,
+    pub t_bits: u32,
+    pub group: usize,
+}
+
+impl PolarSpec {
+    pub fn new(r_bits: u32, t_bits: u32, group: usize) -> Self {
+        assert!((1..=8).contains(&r_bits) && (1..=8).contains(&t_bits));
+        assert!(group > 0);
+        PolarSpec { r_bits, t_bits, group }
+    }
+
+    /// Key-cache bits per *original element* (two elements per sub-vector)
+    /// including fp16 zero/scale pairs for rho and theta per group per
+    /// channel-pair: 4 * 16 bits over (group * 2) elements.
+    pub fn bits_per_element(&self) -> f64 {
+        (self.r_bits + self.t_bits) as f64 / 2.0 + 32.0 / self.group as f64
+    }
+}
+
+/// One encoded token-group of one key stream (d/2 channel pairs).
+///
+/// Layout: codes are token-major (`token * d2 + j`) to match the access
+/// pattern of the QK loop; params are per channel pair.
+#[derive(Clone, Debug)]
+pub struct PolarGroup {
+    pub rho_codes: PackedCodes,
+    pub theta_codes: PackedCodes,
+    /// Combined (rho << t_bits | theta) codes, present when r+t <= 8.
+    /// Same total bit count as the two separate streams, but the decode
+    /// hot loop pays ONE unpack per sub-vector instead of two — the
+    /// "byte-plane fusion" optimization recorded in EXPERIMENTS.md §Perf.
+    pub combined: Option<PackedCodes>,
+    pub rho_z: Vec<f32>,
+    pub rho_s: Vec<f32>,
+    pub theta_z: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    /// tokens in this group (== spec.group for full groups)
+    pub tokens: usize,
+}
+
+impl PolarGroup {
+    /// Physical bytes (codes packed + params as fp32 here; the bit
+    /// accounting in `spec.rs` charges fp16 as the paper does).
+    ///
+    /// Codes are counted ONCE: `combined` carries exactly the same r+t
+    /// bits per sub-vector as the split rho/theta planes (it exists only
+    /// so the decode hot loop pays one unpack instead of two); a
+    /// production build would store just one of the two forms.
+    pub fn nbytes(&self) -> usize {
+        self.rho_codes.nbytes()
+            + self.theta_codes.nbytes()
+            + 4 * self.rho_z.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A whole encoded key stream: consecutive full groups.
+#[derive(Clone, Debug, Default)]
+pub struct PolarEncoded {
+    pub groups: Vec<PolarGroup>,
+}
+
+impl PolarEncoded {
+    pub fn tokens(&self) -> usize {
+        self.groups.iter().map(|g| g.tokens).sum()
+    }
+}
+
+/// Encode one full token group. `k` is row-major (tokens x d), post-RoPE.
+pub fn encode_group(k: &[f32], d: usize, spec: &PolarSpec) -> PolarGroup {
+    let tokens = k.len() / d;
+    assert_eq!(k.len(), tokens * d);
+    assert!(d % 2 == 0);
+    let d2 = d / 2;
+
+    // polar transform, token-major scratch
+    let mut rho = vec![0.0f32; tokens * d2];
+    let mut theta = vec![0.0f32; tokens * d2];
+    for n in 0..tokens {
+        let row = &k[n * d..(n + 1) * d];
+        for j in 0..d2 {
+            let x = row[2 * j];
+            let y = row[2 * j + 1];
+            rho[n * d2 + j] = (x * x + y * y).sqrt();
+            theta[n * d2 + j] = y.atan2(x) + std::f32::consts::PI;
+        }
+    }
+
+    let mut rho_z = vec![0.0f32; d2];
+    let mut rho_s = vec![0.0f32; d2];
+    let mut theta_z = vec![0.0f32; d2];
+    let mut theta_s = vec![0.0f32; d2];
+    for j in 0..d2 {
+        let (mut rmin, mut rmax) = (f32::INFINITY, f32::NEG_INFINITY);
+        let (mut tmin, mut tmax) = (f32::INFINITY, f32::NEG_INFINITY);
+        for n in 0..tokens {
+            let r = rho[n * d2 + j];
+            let t = theta[n * d2 + j];
+            rmin = rmin.min(r);
+            rmax = rmax.max(r);
+            tmin = tmin.min(t);
+            tmax = tmax.max(t);
+        }
+        let (z, s) = qparams(rmin, rmax, spec.r_bits);
+        rho_z[j] = z;
+        rho_s[j] = s;
+        let (z, s) = qparams(tmin, tmax, spec.t_bits);
+        theta_z[j] = z;
+        theta_s[j] = s;
+    }
+
+    let mut rc = vec![0u8; tokens * d2];
+    let mut tc = vec![0u8; tokens * d2];
+    for n in 0..tokens {
+        for j in 0..d2 {
+            rc[n * d2 + j] = quantize(rho[n * d2 + j], rho_z[j], rho_s[j], spec.r_bits);
+            tc[n * d2 + j] = quantize(theta[n * d2 + j], theta_z[j], theta_s[j], spec.t_bits);
+        }
+    }
+
+    let combined = if spec.r_bits + spec.t_bits <= 8 {
+        let mixed: Vec<u8> = rc
+            .iter()
+            .zip(&tc)
+            .map(|(&r, &t)| (r << spec.t_bits) | t)
+            .collect();
+        Some(PackedCodes::from_codes(&mixed, spec.r_bits + spec.t_bits))
+    } else {
+        None
+    };
+    PolarGroup {
+        rho_codes: PackedCodes::from_codes(&rc, spec.r_bits),
+        theta_codes: PackedCodes::from_codes(&tc, spec.t_bits),
+        combined,
+        rho_z,
+        rho_s,
+        theta_z,
+        theta_s,
+        tokens,
+    }
+}
+
+/// Encode a multi-group stream (len must be a whole number of groups).
+pub fn encode(k: &[f32], d: usize, spec: &PolarSpec) -> PolarEncoded {
+    let tokens = k.len() / d;
+    assert_eq!(tokens % spec.group, 0, "only full groups are encoded");
+    let groups = (0..tokens / spec.group)
+        .map(|g| {
+            let start = g * spec.group * d;
+            encode_group(&k[start..start + spec.group * d], d, spec)
+        })
+        .collect();
+    PolarEncoded { groups }
+}
+
+/// Dequantize a group back to Cartesian keys (tokens x d), appending to `out`.
+pub fn decode_group_into(g: &PolarGroup, d: usize, out: &mut Vec<f32>) {
+    let d2 = d / 2;
+    let rc = g.rho_codes.unpack();
+    let tc = g.theta_codes.unpack();
+    for n in 0..g.tokens {
+        for j in 0..d2 {
+            let rho = (rc[n * d2 + j] as f32 + 0.5) * g.rho_s[j] + g.rho_z[j];
+            // -pi undoes the atan2(+pi) storage shift
+            let th = (tc[n * d2 + j] as f32 + 0.5) * g.theta_s[j] + g.theta_z[j]
+                - std::f32::consts::PI;
+            out.push(rho * th.cos());
+            out.push(rho * th.sin());
+        }
+    }
+}
+
+/// Dequantize a whole stream.
+pub fn decode(enc: &PolarEncoded, d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(enc.tokens() * d);
+    for g in &enc.groups {
+        decode_group_into(g, d, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{mse, rope_freqs, rope_rotate_inplace};
+    use crate::util::rng::Rng;
+
+    fn outlier_keys(rng: &mut Rng, tokens: usize, d: usize, severity: f32) -> Vec<f32> {
+        let mut k = rng.normal_vec(tokens * d);
+        let out_ch = rng.choose_distinct(d / 2, (d / 16).max(1));
+        for n in 0..tokens {
+            for &j in &out_ch {
+                k[n * d + 2 * j] += severity;
+            }
+        }
+        let freqs = rope_freqs(d, 10000.0);
+        for n in 0..tokens {
+            rope_rotate_inplace(&mut k[n * d..(n + 1) * d], n as u32, &freqs);
+        }
+        k
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_cells() {
+        let mut rng = Rng::new(11);
+        let spec = PolarSpec::new(4, 4, 16);
+        let d = 32;
+        let k = outlier_keys(&mut rng, 32, d, 8.0);
+        let enc = encode(&k, d, &spec);
+        let k_hat = decode(&enc, d);
+        assert_eq!(k_hat.len(), k.len());
+        for (gi, g) in enc.groups.iter().enumerate() {
+            for n in 0..g.tokens {
+                let t = gi * spec.group + n;
+                for j in 0..d / 2 {
+                    let dx = k[t * d + 2 * j] - k_hat[t * d + 2 * j];
+                    let dy = k[t * d + 2 * j + 1] - k_hat[t * d + 2 * j + 1];
+                    let err = (dx * dx + dy * dy).sqrt();
+                    let x = k[t * d + 2 * j];
+                    let y = k[t * d + 2 * j + 1];
+                    let rho = (x * x + y * y).sqrt();
+                    let bound = g.rho_s[j] / 2.0 + (rho + g.rho_s[j] / 2.0) * g.theta_s[j] / 2.0;
+                    assert!(err <= bound + 1e-4, "err {err} bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn polar_beats_tokenwise_under_outliers() {
+        // Figure-2 claim at the Rust layer.
+        let mut rng = Rng::new(5);
+        let d = 64;
+        let spec = PolarSpec::new(4, 4, 32);
+        let k = outlier_keys(&mut rng, 128, d, 20.0);
+        let enc = encode(&k, d, &spec);
+        let k_hat = decode(&enc, d);
+        let err_polar = mse(&k, &k_hat);
+
+        let tok = super::super::int_n::encode(&k, d, 4);
+        let k_tok = super::super::int_n::decode(&tok, d);
+        let err_tok = mse(&k, &k_tok);
+        assert!(
+            err_polar < 0.5 * err_tok,
+            "polar {err_polar} vs tokenwise {err_tok}"
+        );
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let spec = PolarSpec::new(4, 4, 128);
+        assert!((spec.bits_per_element() - 4.25).abs() < 1e-9);
+        let spec = PolarSpec::new(3, 3, 128);
+        assert!((spec.bits_per_element() - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_group_layout() {
+        let mut rng = Rng::new(3);
+        let spec = PolarSpec::new(3, 5, 8);
+        let d = 16;
+        let k = rng.normal_vec(24 * d);
+        let enc = encode(&k, d, &spec);
+        assert_eq!(enc.groups.len(), 3);
+        assert_eq!(enc.tokens(), 24);
+        // group 1 encoded independently == slicing input
+        let g1 = encode_group(&k[8 * d..16 * d], d, &spec);
+        assert_eq!(enc.groups[1].rho_codes, g1.rho_codes);
+        assert_eq!(enc.groups[1].theta_codes, g1.theta_codes);
+    }
+}

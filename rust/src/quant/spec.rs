@@ -1,0 +1,253 @@
+//! Unified codec façade: every key-cache quantizer from the paper's
+//! evaluation behind one enum, with the paper's bit accounting (§B).
+//! The eval harness and the table benches sweep over [`QuantSpec`]s.
+
+use super::{int_n, kivi, lut::QkLut, polar, qjl, zipcache};
+
+/// A key-cache quantization method + hyper-parameters.
+#[derive(Clone, Debug)]
+pub enum QuantSpec {
+    /// full precision (fp16-equivalent baseline; we compute in f32)
+    Fp16,
+    /// PolarQuant_rt with group size g
+    Polar { r_bits: u32, t_bits: u32, group: usize },
+    /// KIVI-N channel-wise with group size g
+    Kivi { bits: u32, group: usize },
+    /// token-wise Int-N
+    Int { bits: u32 },
+    /// ZipCache-N channel-separable token-wise
+    Zip { bits: u32 },
+    /// QJL sign sketch with m = bpc * d projections
+    Qjl { bits_per_channel: usize },
+}
+
+impl QuantSpec {
+    /// Paper-style label, e.g. "PolarQuant44".
+    pub fn label(&self) -> String {
+        match self {
+            QuantSpec::Fp16 => "Bf16".into(),
+            QuantSpec::Polar { r_bits, t_bits, .. } => {
+                format!("PolarQuant{r_bits}{t_bits}")
+            }
+            QuantSpec::Kivi { bits, .. } => format!("KIVI-{bits}"),
+            QuantSpec::Int { bits } => format!("Int-{bits}"),
+            QuantSpec::Zip { bits } => format!("ZipCache-{bits}"),
+            QuantSpec::Qjl { .. } => "QJL".into(),
+        }
+    }
+
+    /// Token-group granularity this codec encodes at, if group-wise.
+    pub fn group_size(&self) -> Option<usize> {
+        match self {
+            QuantSpec::Polar { group, .. } | QuantSpec::Kivi { group, .. } => Some(*group),
+            _ => None,
+        }
+    }
+
+    /// Average bits per key element including quantization constants
+    /// (paper §B; d = head dim).
+    pub fn bits_per_element(&self, d: usize) -> f64 {
+        match self {
+            QuantSpec::Fp16 => 16.0,
+            QuantSpec::Polar { r_bits, t_bits, group } => {
+                (r_bits + t_bits) as f64 / 2.0 + 32.0 / *group as f64
+            }
+            QuantSpec::Kivi { bits, group } => *bits as f64 + 32.0 / *group as f64,
+            QuantSpec::Int { bits } | QuantSpec::Zip { bits } => {
+                *bits as f64 + 32.0 / d as f64
+            }
+            QuantSpec::Qjl { bits_per_channel } => {
+                *bits_per_channel as f64 + 16.0 / d as f64
+            }
+        }
+    }
+
+    /// Encode a (tokens x d) post-RoPE key block.  For group-wise codecs,
+    /// `tokens` must be a whole number of groups (the cache manager
+    /// guarantees this; eval workloads are sized accordingly).
+    pub fn encode(&self, k: &[f32], d: usize) -> EncodedKeys {
+        match self {
+            QuantSpec::Fp16 => EncodedKeys::Fp(k.to_vec(), d),
+            QuantSpec::Polar { r_bits, t_bits, group } => {
+                let spec = polar::PolarSpec::new(*r_bits, *t_bits, *group);
+                EncodedKeys::Polar(polar::encode(k, d, &spec), spec, d)
+            }
+            QuantSpec::Kivi { bits, group } => {
+                let spec = kivi::KiviSpec::new(*bits, *group);
+                EncodedKeys::Kivi(kivi::encode(k, d, &spec), spec, d)
+            }
+            QuantSpec::Int { bits } => EncodedKeys::Int(int_n::encode(k, d, *bits), d),
+            QuantSpec::Zip { bits } => EncodedKeys::Zip(zipcache::encode(k, d, *bits), d),
+            QuantSpec::Qjl { bits_per_channel } => {
+                let sk = qjl::QjlSketcher::new(d, *bits_per_channel, QJL_SEED);
+                let enc = sk.encode(k);
+                EncodedKeys::Qjl(Box::new(sk), enc)
+            }
+        }
+    }
+}
+
+const QJL_SEED: u64 = 0x514a_4c5f_5345_4544; // "QJL_SEED"
+
+/// An encoded key block, decodable / scorable uniformly.
+pub enum EncodedKeys {
+    Fp(Vec<f32>, usize),
+    Polar(polar::PolarEncoded, polar::PolarSpec, usize),
+    Kivi(kivi::KiviEncoded, kivi::KiviSpec, usize),
+    Int(int_n::IntEncoded, usize),
+    Zip(zipcache::ZipEncoded, usize),
+    Qjl(Box<qjl::QjlSketcher>, qjl::QjlEncoded),
+}
+
+impl EncodedKeys {
+    pub fn tokens(&self) -> usize {
+        match self {
+            EncodedKeys::Fp(k, d) => k.len() / d,
+            EncodedKeys::Polar(e, _, _) => e.tokens(),
+            EncodedKeys::Kivi(e, _, _) => e.tokens(),
+            EncodedKeys::Int(e, _) => e.tokens(),
+            EncodedKeys::Zip(e, _) => e.inner.tokens(),
+            EncodedKeys::Qjl(_, e) => e.tokens(),
+        }
+    }
+
+    /// Dequantized (approximate) keys, (tokens x d) row-major.
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            EncodedKeys::Fp(k, _) => k.clone(),
+            EncodedKeys::Polar(e, _, d) => polar::decode(e, *d),
+            EncodedKeys::Kivi(e, _, d) => kivi::decode(e, *d),
+            EncodedKeys::Int(e, d) => int_n::decode(e, *d),
+            EncodedKeys::Zip(e, d) => zipcache::decode(e, *d),
+            EncodedKeys::Qjl(_, _) => {
+                panic!("QJL is score-only: it stores a sketch, not keys")
+            }
+        }
+    }
+
+    /// QK scores of `q` against every cached token, via each method's own
+    /// decode path (LUT for Polar, dequant-then-dot for KIVI, ...).
+    pub fn scores(&self, q: &[f32], out: &mut Vec<f32>) {
+        match self {
+            EncodedKeys::Fp(k, d) => {
+                out.clear();
+                for n in 0..k.len() / d {
+                    out.push(crate::tensor::ops::dot(q, &k[n * d..(n + 1) * d]));
+                }
+            }
+            EncodedKeys::Polar(e, spec, d) => {
+                let mut lut = QkLut::new(*spec, *d, 1);
+                lut.scores(q, e, out);
+            }
+            EncodedKeys::Kivi(e, spec, d) => {
+                let mut qk = kivi::KiviQk::new(*spec, *d);
+                qk.scores(q, e, out);
+            }
+            EncodedKeys::Int(e, d) => {
+                let k_hat = int_n::decode(e, *d);
+                out.clear();
+                for n in 0..e.tokens() {
+                    out.push(crate::tensor::ops::dot(q, &k_hat[n * d..(n + 1) * d]));
+                }
+            }
+            EncodedKeys::Zip(e, d) => {
+                let k_hat = zipcache::decode(e, *d);
+                out.clear();
+                for n in 0..e.inner.tokens() {
+                    out.push(crate::tensor::ops::dot(q, &k_hat[n * d..(n + 1) * d]));
+                }
+            }
+            EncodedKeys::Qjl(sk, e) => sk.scores(q, e, out),
+        }
+    }
+
+    /// Physical bytes at rest.
+    pub fn nbytes(&self) -> usize {
+        match self {
+            EncodedKeys::Fp(k, _) => k.len() * 2, // charged as fp16
+            EncodedKeys::Polar(e, _, _) => e.groups.iter().map(|g| g.nbytes()).sum(),
+            EncodedKeys::Kivi(e, _, _) => e.groups.iter().map(|g| g.nbytes()).sum(),
+            EncodedKeys::Int(e, _) => e.nbytes(),
+            EncodedKeys::Zip(e, _) => e.nbytes(),
+            EncodedKeys::Qjl(_, e) => e.nbytes(),
+        }
+    }
+}
+
+/// Legacy alias used around the eval harness.
+pub type KeyCodec = QuantSpec;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(
+            QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 128 }.label(),
+            "PolarQuant44"
+        );
+        assert_eq!(QuantSpec::Kivi { bits: 2, group: 32 }.label(), "KIVI-2");
+    }
+
+    #[test]
+    fn bit_budgets_match_table1() {
+        let d = 128;
+        // Table 1 "Bits" column
+        assert!((QuantSpec::Int { bits: 4 }.bits_per_element(d) - 4.25).abs() < 1e-9);
+        assert!(
+            (QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 128 }.bits_per_element(d)
+                - 4.25)
+                .abs()
+                < 1e-9
+        );
+        assert!((QuantSpec::Kivi { bits: 4, group: 128 }.bits_per_element(d) - 4.25).abs() < 1e-9);
+        assert!((QuantSpec::Kivi { bits: 2, group: 32 }.bits_per_element(d) - 3.0).abs() < 1e-9);
+        assert!(
+            (QuantSpec::Qjl { bits_per_channel: 3 }.bits_per_element(d) - 3.125).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn all_codecs_score_consistently_with_decode() {
+        let mut rng = Rng::new(99);
+        let d = 32;
+        let k = rng.normal_vec(64 * d);
+        let q = rng.normal_vec(d);
+        for spec in [
+            QuantSpec::Fp16,
+            QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 16 },
+            QuantSpec::Kivi { bits: 4, group: 16 },
+            QuantSpec::Int { bits: 4 },
+            QuantSpec::Zip { bits: 4 },
+        ] {
+            let enc = spec.encode(&k, d);
+            let mut scores = Vec::new();
+            enc.scores(&q, &mut scores);
+            let k_hat = enc.decode();
+            for n in 0..enc.tokens() {
+                let want = crate::tensor::ops::dot(&q, &k_hat[n * d..(n + 1) * d]);
+                assert!(
+                    (scores[n] - want).abs() < 5e-4 * (1.0 + want.abs()),
+                    "{}: {} vs {}",
+                    spec.label(),
+                    scores[n],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_ordering_matches_bit_budget() {
+        let mut rng = Rng::new(100);
+        let d = 128;
+        let k = rng.normal_vec(256 * d);
+        let fp = QuantSpec::Fp16.encode(&k, d).nbytes();
+        let p44 = QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 128 }.encode(&k, d).nbytes();
+        let p33 = QuantSpec::Polar { r_bits: 3, t_bits: 3, group: 128 }.encode(&k, d).nbytes();
+        assert!(p44 < fp / 3, "p44 {p44} fp {fp}");
+        assert!(p33 < p44);
+    }
+}

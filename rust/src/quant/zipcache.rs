@@ -1,0 +1,80 @@
+//! ZipCache baseline [He et al., 2024]: channel-separable token-wise key
+//! quantization — each channel is normalized by sqrt(max |.|) over the
+//! window before per-token quantization.  Softens (but does not solve) the
+//! outlier problem; the paper's Table 1 shows it collapsing on
+//! outlier-heavy ("qwen-like") key distributions.
+
+use super::int_n::{self, IntEncoded};
+
+#[derive(Clone, Debug)]
+pub struct ZipEncoded {
+    pub inner: IntEncoded,
+    /// per-channel normalizer sqrt(max |k[:, j]|)
+    pub channel_norm: Vec<f32>,
+}
+
+impl ZipEncoded {
+    pub fn nbytes(&self) -> usize {
+        self.inner.nbytes() + self.channel_norm.len() * std::mem::size_of::<f32>()
+    }
+}
+
+pub fn encode(k: &[f32], d: usize, bits: u32) -> ZipEncoded {
+    let tokens = k.len() / d;
+    assert_eq!(k.len(), tokens * d);
+    let mut norm = vec![0.0f32; d];
+    for j in 0..d {
+        let mut mx = 0.0f32;
+        for n in 0..tokens {
+            mx = mx.max(k[n * d + j].abs());
+        }
+        norm[j] = mx.max(1e-8).sqrt();
+    }
+    let mut kn = vec![0.0f32; k.len()];
+    for n in 0..tokens {
+        for j in 0..d {
+            kn[n * d + j] = k[n * d + j] / norm[j];
+        }
+    }
+    ZipEncoded { inner: int_n::encode(&kn, d, bits), channel_norm: norm }
+}
+
+pub fn decode(enc: &ZipEncoded, d: usize) -> Vec<f32> {
+    let mut out = int_n::decode(&enc.inner, d);
+    let tokens = out.len() / d;
+    for n in 0..tokens {
+        for j in 0..d {
+            out[n * d + j] *= enc.channel_norm[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::mse;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zip_beats_plain_int_under_outliers() {
+        let mut rng = Rng::new(51);
+        let d = 32;
+        let mut k = rng.normal_vec(64 * d);
+        for n in 0..64 {
+            k[n * d + 4] += 30.0; // channel outlier
+        }
+        let zip = decode(&encode(&k, d, 4), d);
+        let int = int_n::decode(&int_n::encode(&k, d, 4), d);
+        assert!(mse(&k, &zip) < mse(&k, &int));
+    }
+
+    #[test]
+    fn roundtrip_reasonable_without_outliers() {
+        let mut rng = Rng::new(52);
+        let d = 16;
+        let k = rng.normal_vec(32 * d);
+        let k_hat = decode(&encode(&k, d, 6), d);
+        assert!(mse(&k, &k_hat) < 1e-2);
+    }
+}

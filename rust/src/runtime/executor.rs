@@ -1,0 +1,378 @@
+//! PJRT executor: compile HLO-text artifacts, marshal literals, execute.
+//!
+//! v1 marshals host arrays as `xla::Literal`s per call (weights included);
+//! the §Perf pass keeps weights resident as device buffers.  Executables
+//! are compiled lazily on first use and cached.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, GraphInfo, Manifest};
+use crate::kvcache::seq::DenseCache;
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// weight literals in manifest (= graph input) order
+    weights: Vec<xla::Literal>,
+    weight_names: Vec<String>,
+}
+
+/// Batched decode-step inputs, already in graph layout.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeInputs {
+    pub tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub cache_len: Vec<i32>,
+    pub resid_len: Vec<i32>,
+    pub theta_code: Vec<i32>,
+    pub rho_code: Vec<i32>,
+    pub rho_z: Vec<f32>,
+    pub rho_s: Vec<f32>,
+    pub theta_z: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    pub resid_k: Vec<f32>,
+    pub resid_v: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DecodeOutputs {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (L, B, Kv, dh)
+    pub new_k: Vec<f32>,
+    pub new_v: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PrefillOutputs {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (L, B, Kv, T, dh)
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl PjrtRuntime {
+    /// Load manifest + weights and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        // weight literals from the .bin, in tensor-table order
+        let raw = std::fs::read(artifacts_dir.join(&manifest.weights.file))
+            .with_context(|| format!("reading {}", manifest.weights.file))?;
+        let table = manifest
+            .weights
+            .tensors
+            .req("tensors")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("weights.tensors")?
+            .to_vec();
+        let mut weights = Vec::new();
+        let mut weight_names = Vec::new();
+        for entry in &table {
+            let name = entry.str_or("name", "");
+            let shape = entry
+                .req("shape")
+                .map_err(anyhow::Error::msg)?
+                .usize_vec()
+                .context("shape")?;
+            let offset = entry.usize_or("offset_bytes", 0);
+            let size = entry.usize_or("size_bytes", 0);
+            let n = size / 4;
+            let mut data = vec![0.0f32; n];
+            for i in 0..n {
+                let b = &raw[offset + 4 * i..offset + 4 * i + 4];
+                data[i] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            weights.push(literal_f32(&data, &shape)?);
+            weight_names.push(name);
+        }
+        Ok(PjrtRuntime { client, manifest, execs: HashMap::new(), weights, weight_names })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the named graph.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(name) {
+            let info = self
+                .manifest
+                .graph(name)
+                .with_context(|| format!("unknown graph '{name}'"))?
+                .clone();
+            let path = self.manifest.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.execs.insert(name.to_string(), exe);
+        }
+        Ok(&self.execs[name])
+    }
+
+    /// Pre-compile every graph (used by the engine at startup so the first
+    /// request doesn't pay compile latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.graphs.iter().map(|g| g.name.clone()).collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    fn check_lens(info: &GraphInfo, lens: &[(usize, usize)]) -> Result<()> {
+        // lens: (spec index, actual len) for the non-weight inputs
+        for &(i, len) in lens {
+            let spec = &info.inputs[i];
+            if spec.numel() != len {
+                bail!(
+                    "graph {}: input '{}' expects {} elems ({:?}), got {len}",
+                    info.name,
+                    spec.name,
+                    spec.numel(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a decode-step graph.
+    pub fn decode(&mut self, graph: &str, ins: &DecodeInputs) -> Result<DecodeOutputs> {
+        let info = self
+            .manifest
+            .graph(graph)
+            .with_context(|| format!("unknown graph '{graph}'"))?
+            .clone();
+        if info.kind != "decode" {
+            bail!("graph '{graph}' is not a decode graph");
+        }
+        Self::check_lens(
+            &info,
+            &[
+                (0, ins.tokens.len()),
+                (1, ins.positions.len()),
+                (2, ins.cache_len.len()),
+                (3, ins.resid_len.len()),
+                (4, ins.theta_code.len()),
+                (5, ins.rho_code.len()),
+                (6, ins.rho_z.len()),
+                (7, ins.rho_s.len()),
+                (8, ins.theta_z.len()),
+                (9, ins.theta_s.len()),
+                (10, ins.v_cache.len()),
+                (11, ins.resid_k.len()),
+                (12, ins.resid_v.len()),
+            ],
+        )?;
+        let lits: Vec<xla::Literal> = vec![
+            literal_i32(&ins.tokens, &info.inputs[0].shape)?,
+            literal_i32(&ins.positions, &info.inputs[1].shape)?,
+            literal_i32(&ins.cache_len, &info.inputs[2].shape)?,
+            literal_i32(&ins.resid_len, &info.inputs[3].shape)?,
+            literal_i32(&ins.theta_code, &info.inputs[4].shape)?,
+            literal_i32(&ins.rho_code, &info.inputs[5].shape)?,
+            literal_f32(&ins.rho_z, &info.inputs[6].shape)?,
+            literal_f32(&ins.rho_s, &info.inputs[7].shape)?,
+            literal_f32(&ins.theta_z, &info.inputs[8].shape)?,
+            literal_f32(&ins.theta_s, &info.inputs[9].shape)?,
+            literal_f32(&ins.v_cache, &info.inputs[10].shape)?,
+            literal_f32(&ins.resid_k, &info.inputs[11].shape)?,
+            literal_f32(&ins.resid_v, &info.inputs[12].shape)?,
+        ];
+        self.executable(graph)?; // ensure compiled (needs &mut self)
+        let exe = &self.execs[graph];
+        let mut refs: Vec<&xla::Literal> = lits.iter().collect();
+        refs.extend(self.weights.iter());
+        let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        Ok(DecodeOutputs {
+            logits: logits.to_vec::<f32>()?,
+            new_k: new_k.to_vec::<f32>()?,
+            new_v: new_v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute a prefill graph. `tokens` is (B, T) right-padded.
+    pub fn prefill(
+        &mut self,
+        graph: &str,
+        tokens: &[i32],
+        prompt_len: &[i32],
+    ) -> Result<PrefillOutputs> {
+        let info = self
+            .manifest
+            .graph(graph)
+            .with_context(|| format!("unknown graph '{graph}'"))?
+            .clone();
+        if info.kind != "prefill" {
+            bail!("graph '{graph}' is not a prefill graph");
+        }
+        Self::check_lens(&info, &[(0, tokens.len()), (1, prompt_len.len())])?;
+        let lits = vec![
+            literal_i32(tokens, &info.inputs[0].shape)?,
+            literal_i32(prompt_len, &info.inputs[1].shape)?,
+        ];
+        self.executable(graph)?; // ensure compiled (needs &mut self)
+        let exe = &self.execs[graph];
+        let mut refs: Vec<&xla::Literal> = lits.iter().collect();
+        refs.extend(self.weights.iter());
+        let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        Ok(PrefillOutputs {
+            logits: logits.to_vec::<f32>()?,
+            k: k.to_vec::<f32>()?,
+            v: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute the bulk polar-encode graph: k is (N, T, dh).
+    pub fn encode(&mut self, graph: &str, k: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let info = self
+            .manifest
+            .graph(graph)
+            .with_context(|| format!("unknown graph '{graph}'"))?
+            .clone();
+        if info.kind != "encode" {
+            bail!("graph '{graph}' is not an encode graph");
+        }
+        Self::check_lens(&info, &[(0, k.len())])?;
+        let lits = vec![literal_f32(k, &info.inputs[0].shape)?];
+        let exe = self.executable(graph)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        // rho_code/theta_code come back as i32; convert uniformly to f32
+        // vectors for comparison convenience
+        parts
+            .into_iter()
+            .zip(&info.outputs)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype {
+                    Dtype::I32 => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+                    Dtype::F32 => lit.to_vec::<f32>()?,
+                })
+            })
+            .collect()
+    }
+
+    /// Names of the weight tensors, manifest order.
+    pub fn weight_names(&self) -> &[String] {
+        &self.weight_names
+    }
+}
+
+/// Batch per-sequence dense caches into graph layout (L, B, Kv, ...).
+pub fn batch_dense(
+    caches: &[&DenseCache],
+    n_layers: usize,
+    n_kv: usize,
+    s_cap: usize,
+    r_cap: usize,
+    d: usize,
+    group: usize,
+    pad_to_batch: usize,
+) -> DecodeInputs {
+    let b_real = caches.len();
+    let b = pad_to_batch.max(b_real);
+    let d2 = d / 2;
+    let gcap = s_cap / group;
+    let mut ins = DecodeInputs {
+        tokens: vec![0; b],
+        positions: vec![0; b],
+        cache_len: vec![0; b],
+        resid_len: vec![0; b],
+        theta_code: vec![0; n_layers * b * n_kv * s_cap * d2],
+        rho_code: vec![0; n_layers * b * n_kv * s_cap * d2],
+        rho_z: vec![0.0; n_layers * b * n_kv * gcap * d2],
+        rho_s: vec![1e-8; n_layers * b * n_kv * gcap * d2],
+        theta_z: vec![0.0; n_layers * b * n_kv * gcap * d2],
+        theta_s: vec![1e-8; n_layers * b * n_kv * gcap * d2],
+        v_cache: vec![0.0; n_layers * b * n_kv * s_cap * d],
+        resid_k: vec![0.0; n_layers * b * n_kv * r_cap * d],
+        resid_v: vec![0.0; n_layers * b * n_kv * r_cap * d],
+    };
+    for (bi, dc) in caches.iter().enumerate() {
+        ins.cache_len[bi] = dc.cache_len as i32;
+        ins.resid_len[bi] = dc.resid_len as i32;
+        for l in 0..n_layers {
+            for h in 0..n_kv {
+                let src = l * n_kv + h; // per-seq (L, Kv, ...) index base
+                let dst = (l * b + bi) * n_kv + h; // batched (L, B, Kv, ...)
+                let (cs, cd) = (src * s_cap * d2, dst * s_cap * d2);
+                ins.theta_code[cd..cd + s_cap * d2]
+                    .copy_from_slice(&dc.theta_code[cs..cs + s_cap * d2]);
+                ins.rho_code[cd..cd + s_cap * d2]
+                    .copy_from_slice(&dc.rho_code[cs..cs + s_cap * d2]);
+                let (ps, pd) = (src * gcap * d2, dst * gcap * d2);
+                ins.rho_z[pd..pd + gcap * d2].copy_from_slice(&dc.rho_z[ps..ps + gcap * d2]);
+                ins.rho_s[pd..pd + gcap * d2].copy_from_slice(&dc.rho_s[ps..ps + gcap * d2]);
+                ins.theta_z[pd..pd + gcap * d2]
+                    .copy_from_slice(&dc.theta_z[ps..ps + gcap * d2]);
+                ins.theta_s[pd..pd + gcap * d2]
+                    .copy_from_slice(&dc.theta_s[ps..ps + gcap * d2]);
+                let (vs, vd) = (src * s_cap * d, dst * s_cap * d);
+                ins.v_cache[vd..vd + s_cap * d].copy_from_slice(&dc.v[vs..vs + s_cap * d]);
+                let (rs, rd) = (src * r_cap * d, dst * r_cap * d);
+                ins.resid_k[rd..rd + r_cap * d].copy_from_slice(&dc.resid_k[rs..rs + r_cap * d]);
+                ins.resid_v[rd..rd + r_cap * d].copy_from_slice(&dc.resid_v[rs..rs + r_cap * d]);
+            }
+        }
+    }
+    ins
+}
+
+/// Slice one sequence's (L, Kv, T, d) K or V block out of a batched
+/// prefill output (L, B, Kv, T, d).
+pub fn split_prefill_kv(
+    batched: &[f32],
+    n_layers: usize,
+    batch: usize,
+    n_kv: usize,
+    t: usize,
+    d: usize,
+    b: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_layers * n_kv * t * d];
+    for l in 0..n_layers {
+        for h in 0..n_kv {
+            let src = (((l * batch + b) * n_kv) + h) * t * d;
+            let dst = (l * n_kv + h) * t * d;
+            out[dst..dst + t * d].copy_from_slice(&batched[src..src + t * d]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_prefill_layout() {
+        // L=1, B=2, Kv=1, T=2, d=2 -> batched len 8
+        let batched: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let b0 = split_prefill_kv(&batched, 1, 2, 1, 2, 2, 0);
+        let b1 = split_prefill_kv(&batched, 1, 2, 1, 2, 2, 1);
+        assert_eq!(b0, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(b1, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Every graph input is listed positionally with
+//! name/shape/dtype — marshalling is table-driven, never guessed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// (batch, seq) bucket
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightsInfo {
+    pub file: String,
+    pub tensors: Value,
+    pub total_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub weights: WeightsInfo,
+    pub graphs: Vec<GraphInfo>,
+}
+
+fn parse_specs(v: &Value) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().context("expected array of tensor specs")?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.str_or("name", ""),
+                shape: e
+                    .req("shape")
+                    .map_err(anyhow::Error::msg)?
+                    .usize_vec()
+                    .context("bad shape")?,
+                dtype: Dtype::parse(&e.str_or("dtype", "float32"))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text).map_err(anyhow::Error::msg)?;
+        let config = ModelConfig::from_json(v.req("config").map_err(anyhow::Error::msg)?)?;
+        let w = v.req("weights").map_err(anyhow::Error::msg)?;
+        let weights = WeightsInfo {
+            file: w.str_or("file", "weights.bin"),
+            tensors: w.clone(),
+            total_bytes: w.usize_or("total_bytes", 0),
+        };
+        let mut graphs = Vec::new();
+        for g in v
+            .req("graphs")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("graphs not an array")?
+        {
+            let bucket = g.req("bucket").map_err(anyhow::Error::msg)?;
+            graphs.push(GraphInfo {
+                name: g.str_or("name", ""),
+                file: g.str_or("file", ""),
+                kind: g.str_or("kind", ""),
+                batch: bucket.usize_or("batch", 1),
+                seq: bucket.usize_or("seq", 0),
+                inputs: parse_specs(g.req("inputs").map_err(anyhow::Error::msg)?)?,
+                outputs: parse_specs(g.req("outputs").map_err(anyhow::Error::msg)?)?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, weights, graphs })
+    }
+
+    pub fn graph(&self, name: &str) -> Option<&GraphInfo> {
+        self.graphs.iter().find(|g| g.name == name)
+    }
+
+    /// Graphs of a kind, sorted by (batch, seq).
+    pub fn graphs_of_kind(&self, kind: &str) -> Vec<&GraphInfo> {
+        let mut v: Vec<&GraphInfo> = self.graphs.iter().filter(|g| g.kind == kind).collect();
+        v.sort_by_key(|g| (g.batch, g.seq));
+        v
+    }
+
+    /// Smallest bucket of `kind` that fits (batch, seq).
+    pub fn pick_bucket(&self, kind: &str, batch: usize, seq: usize) -> Option<&GraphInfo> {
+        self.graphs_of_kind(kind)
+            .into_iter()
+            .filter(|g| g.batch >= batch && g.seq >= seq)
+            .min_by_key(|g| (g.batch, g.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert!(!m.graphs_of_kind("decode").is_empty());
+        assert!(!m.graphs_of_kind("prefill").is_empty());
+        let g = m.graphs_of_kind("decode")[0];
+        assert_eq!(g.inputs[0].name, "tokens");
+        assert_eq!(g.inputs[0].dtype, Dtype::I32);
+        // decode graph carries the weight inputs at the tail
+        assert_eq!(g.inputs.last().unwrap().name, "lm_head");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let g = m.pick_bucket("decode", 1, 100).unwrap();
+        assert!(g.batch >= 1 && g.seq >= 100);
+        // asking beyond every bucket yields None
+        assert!(m.pick_bucket("decode", 64, 1 << 20).is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/manifest.json` +
+//! `*.hlo.txt`) and executes the decode / prefill / encode graphs on the
+//! CPU PJRT client from the request path.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md §7).  Executables are compiled
+//! lazily per shape bucket and cached for the process lifetime.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{DecodeInputs, DecodeOutputs, PjrtRuntime, PrefillOutputs};
+pub use manifest::{GraphInfo, Manifest};

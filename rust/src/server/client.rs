@@ -1,0 +1,69 @@
+//! Minimal blocking client for the JSON-lines protocol (examples + tests
+//! + the throughput bench's load generator).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, num, obj, Value};
+
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateReply {
+    pub id: u64,
+    pub worker: usize,
+    pub tokens: Vec<u32>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub truncated: bool,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_tokens: usize,
+        session: Option<u64>,
+    ) -> Result<GenerateReply> {
+        let mut fields = vec![
+            (
+                "prompt",
+                Value::Arr(prompt.iter().map(|&t| num(t as f64)).collect()),
+            ),
+            ("max_tokens", num(max_tokens as f64)),
+        ];
+        if let Some(s) = session {
+            fields.push(("session", num(s as f64)));
+        }
+        writeln!(self.stream, "{}", json::write(&obj(fields)))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = json::parse(line.trim()).map_err(anyhow::Error::msg)?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {:?}", err.as_str());
+        }
+        Ok(GenerateReply {
+            id: v.usize_or("id", 0) as u64,
+            worker: v.usize_or("worker", 0),
+            tokens: v
+                .get("tokens")
+                .and_then(|t| t.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u32).collect())
+                .unwrap_or_default(),
+            ttft_ms: v.f64_or("ttft_ms", 0.0),
+            total_ms: v.f64_or("total_ms", 0.0),
+            truncated: v.get("truncated").and_then(|b| b.as_bool()).unwrap_or(false),
+        })
+    }
+}

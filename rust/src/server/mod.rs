@@ -1,0 +1,16 @@
+//! JSON-lines TCP serving front-end.
+//!
+//! The offline image carries no tokio, so the server is plain threads:
+//! one engine per worker thread (each owning its own model + cache), a
+//! session-affinity router, and one thread per connection.  Protocol:
+//!
+//! ```text
+//! -> {"prompt": [1,2,3], "max_tokens": 16, "session": 7}
+//! <- {"id": 0, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8}
+//! ```
+
+pub mod client;
+pub mod worker;
+
+pub use client::Client;
+pub use worker::{serve, EngineFactory, ServerHandle};

@@ -1,0 +1,223 @@
+//! Engine worker threads + the TCP accept loop.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::router::Router;
+use crate::coordinator::{Completion, Engine, Request};
+use crate::util::json::{self, num, obj, Value};
+
+/// Builds one engine per worker (engines are not Send-shareable across
+/// workers by design — each owns its model and cache).
+pub type EngineFactory = Arc<dyn Fn(usize) -> Engine + Send + Sync>;
+
+struct Job {
+    req: Request,
+    reply: Sender<Completion>,
+}
+
+fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
+    let mut replies: HashMap<u64, Sender<Completion>> = HashMap::new();
+    loop {
+        // drain new jobs; block briefly when idle
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    let id = job.req.id;
+                    match engine.submit(job.req) {
+                        Ok(()) => {
+                            replies.insert(id, job.reply);
+                        }
+                        Err(why) => {
+                            // rejected: synthesize an empty completion
+                            let _ = job.reply.send(Completion {
+                                id,
+                                prompt_len: 0,
+                                tokens: vec![],
+                                ttft_s: None,
+                                total_s: None,
+                                truncated: true,
+                            });
+                            let _ = why;
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if engine.idle() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        if engine.idle() {
+            if shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(job) => {
+                    let id = job.req.id;
+                    if engine.submit(job.req).is_ok() {
+                        replies.insert(id, job.reply);
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        match engine.step() {
+            Ok(completions) => {
+                for c in completions {
+                    if let Some(tx) = replies.remove(&c.id) {
+                        let _ = tx.send(c);
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("engine step error: {e:#}");
+                return;
+            }
+        }
+    }
+}
+
+/// A running server: listener thread + engine workers.
+pub struct ServerHandle {
+    pub addr: String,
+    workers: Vec<JoinHandle<()>>,
+    listener_thread: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join all threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Start a server on `addr` ("127.0.0.1:0" for an ephemeral port) with
+/// `n_workers` engines.  Returns once the listener is bound.
+pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?.to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    let mut senders = Vec::new();
+    let mut workers = Vec::new();
+    for w in 0..n_workers {
+        let (tx, rx) = channel::<Job>();
+        senders.push(tx);
+        let factory = factory.clone();
+        let sd = shutdown.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut engine = factory(w);
+            worker_loop(&mut engine, rx, &sd)
+        }));
+    }
+    let router = Arc::new(Mutex::new(Router::new(n_workers)));
+    let next_id = Arc::new(Mutex::new(0u64));
+
+    let sd = shutdown.clone();
+    let listener_thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if sd.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let senders = senders.clone();
+            let router = router.clone();
+            let next_id = next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &senders, &router, &next_id);
+            });
+        }
+    });
+
+    Ok(ServerHandle {
+        addr: local,
+        workers,
+        listener_thread: Some(listener_thread),
+        shutdown,
+    })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    senders: &[Sender<Job>],
+    router: &Arc<Mutex<Router>>,
+    next_id: &Arc<Mutex<u64>>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(stream, "{}", json::write(&obj(vec![("error", json::s(&e.0))])))?;
+                continue;
+            }
+        };
+        let prompt: Vec<u32> = v
+            .get("prompt")
+            .and_then(|p| p.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u32).collect())
+            .unwrap_or_default();
+        let max_tokens = v.usize_or("max_tokens", 16);
+        let session = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64);
+
+        let id = {
+            let mut n = next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        let worker = router.lock().unwrap().route(session);
+        let mut req = Request::greedy(id, prompt, max_tokens);
+        req.session = session;
+        let (tx, rx) = channel();
+        senders[worker]
+            .send(Job { req, reply: tx })
+            .map_err(|_| anyhow::anyhow!("worker {} gone", worker))?;
+        let completion = rx.recv().context("worker dropped reply")?;
+        router.lock().unwrap().complete(worker);
+
+        let tokens = Value::Arr(
+            completion.tokens.iter().map(|&t| num(t as f64)).collect(),
+        );
+        let reply = obj(vec![
+            ("id", num(id as f64)),
+            ("worker", num(worker as f64)),
+            ("tokens", tokens),
+            ("ttft_ms", num(completion.ttft_s.unwrap_or(0.0) * 1e3)),
+            ("total_ms", num(completion.total_s.unwrap_or(0.0) * 1e3)),
+            ("truncated", Value::Bool(completion.truncated)),
+        ]);
+        writeln!(stream, "{}", json::write(&reply))?;
+    }
+}

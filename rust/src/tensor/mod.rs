@@ -1,0 +1,107 @@
+//! Minimal f32 tensor substrate.
+//!
+//! The coordinator, the Rust-native model, and the eval harness need a
+//! small set of dense ops (matmul, softmax, norms, RoPE).  No ndarray
+//! offline — this module implements exactly what the repo uses, with
+//! row-major layout and explicit shapes, tuned enough (blocked matmul,
+//! fused softmax) that the native backend is a fair comparator in benches.
+
+pub mod ops;
+
+pub use ops::*;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data/shape mismatch: {} vs {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Reinterpret with a new shape (same numel).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.numel(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < s, "index {x} out of bound {s} at dim {i}");
+            off = off * s + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.offset(idx);
+        &mut self.data[o]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![1.0], &[2, 2]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Dense ops: matmul (blocked), vector math, softmax, RMS-norm, RoPE.
+//!
+//! RoPE here must match `ref.apply_rope` / `model.rope_rotate` exactly —
+//! adjacent-pair formulation, `phi_i = base^(-2i/d)` — because the Rust
+//! model's caches interoperate with the AOT graphs.
+
+use super::Tensor;
+
+/// out[m,n] = sum_k a[m,k] * b[k,n]  (row-major, blocked over k for cache
+/// friendliness; good enough for the native backend's small matrices).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(&a.data, &b.data, m, k, n, &mut out);
+    Tensor::new(out, &[m, n])
+}
+
+/// Core kernel: C += A(m,k) * B(k,n) with i-k-j loop order (B rows stream
+/// through cache, C row stays hot).
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unroll: the hot path of the fp QK baseline.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMS norm: x * rsqrt(mean(x^2) + eps) * gamma   (matches model.rms_norm).
+pub fn rms_norm(x: &[f32], gamma: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gamma.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * r * gamma[i];
+    }
+}
+
+/// SiLU (x * sigmoid(x)).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RoPE pair frequencies phi_i = base^(-2i/d).
+pub fn rope_freqs(head_dim: usize, base: f32) -> Vec<f32> {
+    (0..head_dim / 2)
+        .map(|i| base.powf(-2.0 * i as f32 / head_dim as f32))
+        .collect()
+}
+
+/// Rotate adjacent pairs of `x` (len d) in place by angle pos*phi_j.
+pub fn rope_rotate_inplace(x: &mut [f32], pos: u32, freqs: &[f32]) {
+    debug_assert_eq!(x.len(), freqs.len() * 2);
+    for (j, &phi) in freqs.iter().enumerate() {
+        let ang = pos as f32 * phi;
+        let (sin, cos) = ang.sin_cos();
+        let xe = x[2 * j];
+        let xo = x[2 * j + 1];
+        x[2 * j] = xe * cos - xo * sin;
+        x[2 * j + 1] = xe * sin + xo * cos;
+    }
+}
+
+/// argmax index.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..x.len() {
+        if x[i] > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean squared error between slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Cosine similarity.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = dot(a, a) as f64;
+    let nb = dot(b, b) as f64;
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot(a, b) as f64 / (na.sqrt() * nb.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::new(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        // (1x3) @ (3x2)
+        let a = Tensor::new(vec![1.0, 2.0, 3.0], &[1, 3]);
+        let b = Tensor::new(vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1e9];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[3] < 1e-12);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let freqs = rope_freqs(8, 10000.0);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let n0 = dot(&x, &x);
+        rope_rotate_inplace(&mut x, 17, &freqs);
+        let n1 = dot(&x, &x);
+        assert!((n0 - n1).abs() < 1e-3, "{n0} vs {n1}");
+    }
+
+    #[test]
+    fn rope_zero_pos_is_identity() {
+        let freqs = rope_freqs(4, 10000.0);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        rope_rotate_inplace(&mut x, 0, &freqs);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rms_norm_unit_gamma() {
+        let x = vec![3.0, 4.0];
+        let gamma = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rms_norm(&x, &gamma, 1e-5, &mut out);
+        let ms: f32 = (9.0 + 16.0) / 2.0;
+        assert!((out[0] - 3.0 / ms.sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (37 - i) as f32 * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+}

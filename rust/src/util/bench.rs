@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`bench_fn`]: warmup, then timed batches until a wall budget or a target
+//! iteration count is reached, reporting mean / p50 / p95 per iteration.
+//! Deterministic enough for the paper-shape comparisons in EXPERIMENTS.md
+//! (we compare ratios, not absolute numbers).
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(900),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Time `f` and report per-iteration stats. `f` should return a value that
+/// depends on its work so the optimizer cannot elide it; we black-box it.
+pub fn bench_fn<T, F: FnMut() -> T>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    // warmup
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        black_box(f());
+    }
+    // measure
+    let mut samples: Vec<f64> = Vec::new();
+    let run_start = Instant::now();
+    let mut iters = 0u64;
+    while (run_start.elapsed() < opts.budget && iters < opts.max_iters)
+        || iters < opts.min_iters
+    {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 10_000,
+        };
+        let r = bench_fn("spin", opts, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s * 0.5);
+    }
+}

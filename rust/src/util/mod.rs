@@ -1,0 +1,9 @@
+//! Zero-dependency substrates: deterministic RNG, a JSON codec (the image
+//! has no serde), streaming statistics, and a micro-benchmark harness
+//! (criterion is likewise unavailable offline — `rust/benches/` use
+//! [`bench`] instead).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,131 @@
+//! Streaming statistics + percentile helpers used by metrics and benches.
+
+/// Online mean/variance (Welford) with min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile over a sample (nearest-rank on a sorted copy).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Simple fixed-bucket latency histogram (microseconds, exponential edges).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    edges_us: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        // 1us .. ~100s, x2 per bucket
+        let edges_us: Vec<f64> = (0..28).map(|i| (1u64 << i) as f64).collect();
+        let counts = vec![0; edges_us.len() + 1];
+        LatencyHist { edges_us, counts, samples: Vec::new() }
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        let us = secs * 1e6;
+        let idx = self.edges_us.partition_point(|&e| e <= us);
+        self.counts[idx] += 1;
+        if self.samples.len() < 100_000 {
+            self.samples.push(secs);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        percentile(&self.samples, pct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.var() - var).abs() < 1e-9);
+        assert_eq!(w.min, 1.0);
+        assert_eq!(w.max, 10.0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn hist_counts() {
+        let mut h = LatencyHist::new();
+        for i in 0..100 {
+            h.record_secs(i as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.p(50.0) > 0.0);
+    }
+}

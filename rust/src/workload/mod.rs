@@ -1,0 +1,13 @@
+//! Synthetic workloads.
+//!
+//! The paper evaluates on real checkpoints and datasets we cannot load
+//! offline (DESIGN.md §3).  These generators reproduce the *structural*
+//! properties the experiments depend on: channel-wise key outliers per
+//! model profile, long-context prompts, needle-retrieval tasks, and
+//! Poisson request arrivals.
+
+pub mod activations;
+pub mod requests;
+
+pub use activations::{ActivationProfile, PROFILES};
+pub use requests::{ArrivalTrace, PromptKind, RequestGen};

@@ -1,0 +1,114 @@
+//! Request-level workloads: prompt generators (mixed lengths, needle
+//! retrieval) and Poisson arrival traces for the serving benches.
+
+use crate::coordinator::Request;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromptKind {
+    /// uniform random tokens of a given length
+    Random { len: usize },
+    /// a long haystack with one needle token; retrieval-style context
+    Needle { len: usize, needle: u32 },
+    /// mixed lengths drawn uniformly from [lo, hi)
+    Mixed { lo: usize, hi: usize },
+}
+
+pub struct RequestGen {
+    pub vocab: usize,
+    pub rng: Rng,
+    next_id: u64,
+}
+
+impl RequestGen {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        RequestGen { vocab, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    pub fn prompt(&mut self, kind: PromptKind) -> Vec<u32> {
+        match kind {
+            PromptKind::Random { len } => {
+                (0..len).map(|_| self.rng.below(self.vocab) as u32).collect()
+            }
+            PromptKind::Needle { len, needle } => {
+                let mut p: Vec<u32> =
+                    (0..len).map(|_| self.rng.below(self.vocab) as u32).collect();
+                let pos = self.rng.below(len.saturating_sub(2).max(1));
+                p[pos] = needle;
+                p
+            }
+            PromptKind::Mixed { lo, hi } => {
+                let len = self.rng.range(lo, hi);
+                self.prompt(PromptKind::Random { len })
+            }
+        }
+    }
+
+    pub fn request(&mut self, kind: PromptKind, max_new: usize) -> Request {
+        self.next_id += 1;
+        Request::greedy(self.next_id, self.prompt(kind), max_new)
+    }
+}
+
+/// Poisson arrivals: offsets (seconds from t0) for `n` requests at `rps`.
+#[derive(Clone, Debug)]
+pub struct ArrivalTrace {
+    pub offsets: Vec<f64>,
+}
+
+impl ArrivalTrace {
+    pub fn poisson(rng: &mut Rng, n: usize, rps: f64) -> Self {
+        let mut t = 0.0;
+        let mut offsets = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.exponential(rps);
+            offsets.push(t);
+        }
+        ArrivalTrace { offsets }
+    }
+
+    pub fn uniform(n: usize, rps: f64) -> Self {
+        ArrivalTrace {
+            offsets: (0..n).map(|i| i as f64 / rps).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needle_is_present() {
+        let mut g = RequestGen::new(100, 1);
+        let p = g.prompt(PromptKind::Needle { len: 50, needle: 99 });
+        assert_eq!(p.len(), 50);
+        assert!(p.contains(&99));
+    }
+
+    #[test]
+    fn mixed_lengths_in_range() {
+        let mut g = RequestGen::new(100, 2);
+        for _ in 0..50 {
+            let p = g.prompt(PromptKind::Mixed { lo: 5, hi: 20 });
+            assert!((5..20).contains(&p.len()));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_right() {
+        let mut rng = Rng::new(3);
+        let tr = ArrivalTrace::poisson(&mut rng, 2000, 10.0);
+        let total = tr.offsets.last().unwrap();
+        let rate = 2000.0 / total;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut g = RequestGen::new(100, 4);
+        let a = g.request(PromptKind::Random { len: 4 }, 2);
+        let b = g.request(PromptKind::Random { len: 4 }, 2);
+        assert_ne!(a.id, b.id);
+    }
+}

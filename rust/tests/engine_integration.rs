@@ -1,0 +1,158 @@
+//! Engine + server integration: requests flow through router -> engine ->
+//! cache -> backend and come back with sane metrics, on both backends.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use polarquant::coordinator::engine::{Backend, SnapKvOpts};
+use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::model::ModelConfig;
+use polarquant::server::{serve, Client};
+use polarquant::workload::{PromptKind, RequestGen};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn toy_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.vocab = 64;
+    cfg.d_model = 32;
+    cfg.n_heads = 4;
+    cfg.n_kv_heads = 2;
+    cfg.head_dim = 16;
+    cfg.ffn = 48;
+    cfg.group = 8;
+    cfg.resid = 16;
+    cfg
+}
+
+#[test]
+fn pjrt_engine_serves_batched_requests() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut eng = Engine::pjrt_from_artifacts(&dir, EngineOpts::default()).unwrap();
+    let vocab = eng.cfg.vocab;
+    let mut gen = RequestGen::new(vocab, 11);
+    for _ in 0..5 {
+        let req = gen.request(PromptKind::Mixed { lo: 4, hi: 40 }, 8);
+        eng.submit(req).unwrap();
+    }
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done.len(), 5);
+    for c in &done {
+        assert_eq!(c.tokens.len(), 8, "req {}", c.id);
+        assert!(!c.truncated);
+    }
+    // batching actually happened (mean decode batch > 1)
+    assert!(eng.metrics.mean_batch() > 1.0, "mean batch {}", eng.metrics.mean_batch());
+}
+
+#[test]
+fn pjrt_and_native_engines_agree_on_greedy_tokens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = Engine::pjrt_from_artifacts(&dir, EngineOpts::default()).unwrap();
+    let mut native = Engine::native_from_artifacts(&dir, EngineOpts::default()).unwrap();
+    let prompt: Vec<u32> = (0..90u32).map(|i| (i * 7 + 3) % 512).collect();
+    pjrt.submit(Request::greedy(1, prompt.clone(), 12)).unwrap();
+    native.submit(Request::greedy(1, prompt, 12)).unwrap();
+    let a = pjrt.run_to_completion().unwrap();
+    let b = native.run_to_completion().unwrap();
+    // same weights, same quantized cache semantics -> same greedy tokens
+    // (fp32 vs XLA op-order differences can flip a near-tie late in the
+    // rollout; demand agreement on a long prefix)
+    let n = a[0].tokens.len().min(b[0].tokens.len()).min(8);
+    assert_eq!(a[0].tokens[..n], b[0].tokens[..n]);
+}
+
+#[test]
+fn decode_crosses_group_boundaries_and_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    // long generation forces residual -> group finalization mid-flight
+    let mut eng = Engine::pjrt_from_artifacts(&dir, EngineOpts::default()).unwrap();
+    let prompt: Vec<u32> = (0..60u32).collect();
+    eng.submit(Request::greedy(1, prompt, 80)).unwrap();
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done[0].tokens.len(), 80);
+    assert!(!done[0].truncated);
+}
+
+#[test]
+fn server_end_to_end_native() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        Engine::native_synthetic(cfg.clone(), 100 + w as u64, 4.0, EngineOpts::default())
+    });
+    let handle = serve(factory, "127.0.0.1:0", 2).unwrap();
+    let addr = handle.addr.clone();
+
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let prompt: Vec<u32> = (0..10).map(|i| (i * 3 + t) % 64).collect();
+            let reply = client.generate(&prompt, 6, Some(t as u64)).unwrap();
+            assert_eq!(reply.tokens.len(), 6);
+            reply.worker
+        }));
+    }
+    let workers: Vec<usize> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    // both workers participated (4 sessions, least-loaded spread)
+    assert!(workers.iter().any(|&w| w == 0) && workers.iter().any(|&w| w == 1));
+    handle.stop();
+}
+
+#[test]
+fn server_session_affinity() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        Engine::native_synthetic(cfg.clone(), 200 + w as u64, 4.0, EngineOpts::default())
+    });
+    let handle = serve(factory, "127.0.0.1:0", 3).unwrap();
+    eprintln!("[affinity] server up at {}", handle.addr);
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let first = client.generate(&[1, 2, 3], 2, Some(99)).unwrap();
+    eprintln!("[affinity] first reply from worker {}", first.worker);
+    for i in 0..3 {
+        let r = client.generate(&[4, 5, 6], 2, Some(99)).unwrap();
+        eprintln!("[affinity] reply {i} from worker {}", r.worker);
+        assert_eq!(r.worker, first.worker, "session must stick to one worker");
+    }
+    eprintln!("[affinity] stopping");
+    handle.stop();
+}
+
+#[test]
+fn snapkv_native_engine_end_to_end() {
+    let cfg = toy_cfg();
+    let mut opts = EngineOpts::default();
+    opts.snapkv = Some(SnapKvOpts { budget: 12, window: 4 });
+    let mut eng = Engine::native_synthetic(cfg, 7, 6.0, opts);
+    let mut gen = RequestGen::new(64, 3);
+    let req = gen.request(PromptKind::Needle { len: 48, needle: 63 }, 6);
+    eng.submit(req).unwrap();
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done[0].tokens.len(), 6);
+}
+
+#[test]
+fn engine_rejects_snapkv_on_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut opts = EngineOpts::default();
+    opts.snapkv = Some(SnapKvOpts { budget: 8, window: 2 });
+    assert!(Engine::pjrt_from_artifacts(&dir, opts).is_err());
+}
+
+#[test]
+fn backend_enum_is_constructible() {
+    // docs claim both variants are public API
+    let cfg = toy_cfg();
+    let w = polarquant::model::Weights::synthetic(&cfg, 1, 2.0);
+    let model = polarquant::model::Model::new(cfg.clone(), w);
+    let _b = Backend::Native(Box::new(model));
+}

@@ -1,0 +1,180 @@
+//! End-to-end integration: the AOT HLO artifacts (L1 Pallas kernels inside
+//! the L2 JAX graphs) executed through the PJRT runtime, cross-checked
+//! against the Rust-native model on the SAME weights (`weights_tiny.bin`).
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use std::path::PathBuf;
+
+use polarquant::kvcache::SequenceCache;
+use polarquant::model::{Model, ModelConfig, Weights};
+use polarquant::runtime::executor::{batch_dense, split_prefill_kv};
+use polarquant::runtime::{DecodeInputs, PjrtRuntime};
+use polarquant::tensor::ops::{argmax, cosine};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn load_native(dir: &PathBuf) -> (ModelConfig, Model) {
+    let m = polarquant::runtime::Manifest::load(dir).unwrap();
+    let cfg = m.config.clone();
+    let w = Weights::load(&dir.join(&m.weights.file), &m.weights.tensors, &cfg).unwrap();
+    (cfg.clone(), Model::new(cfg, w))
+}
+
+#[test]
+fn prefill_graph_matches_native_model() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = PjrtRuntime::load(&dir).unwrap();
+    let (cfg, mut native) = load_native(&dir);
+
+    let prompt: Vec<u32> = (0..10u32).map(|i| (i * 37 + 5) % cfg.vocab as u32).collect();
+    let t_bucket = 64usize;
+    let mut tokens = vec![0i32; t_bucket];
+    for (i, &t) in prompt.iter().enumerate() {
+        tokens[i] = t as i32;
+    }
+    let out = rt
+        .prefill(&format!("prefill_{}_b1_t{}", cfg.name, t_bucket), &tokens, &[prompt.len() as i32])
+        .unwrap();
+
+    let (logits_native, k_native, v_native) = native.prefill_kv(&prompt);
+    let cos = cosine(&out.logits, &logits_native);
+    assert!(cos > 0.999, "prefill logits cosine {cos}");
+    assert_eq!(argmax(&out.logits), argmax(&logits_native));
+
+    // K/V match on the valid (non-padded) region
+    let t = prompt.len();
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            let pj = split_prefill_kv(&out.k, cfg.n_layers, 1, cfg.n_kv_heads, t_bucket, cfg.head_dim, 0);
+            for n in 0..t {
+                for j in 0..cfg.head_dim {
+                    let a = pj[((l * cfg.n_kv_heads + h) * t_bucket + n) * cfg.head_dim + j];
+                    let b = k_native[((l * cfg.n_kv_heads + h) * t + n) * cfg.head_dim + j];
+                    assert!(
+                        (a - b).abs() < 2e-3 * (1.0 + b.abs()),
+                        "k mismatch l{l} h{h} n{n} j{j}: {a} vs {b}"
+                    );
+                }
+            }
+            let _ = v_native.len();
+        }
+    }
+}
+
+#[test]
+fn decode_graph_matches_native_model_with_quantized_cache() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = PjrtRuntime::load(&dir).unwrap();
+    let (cfg, mut native) = load_native(&dir);
+
+    // prompt long enough to quantize one full group (group=64)
+    let prompt: Vec<u32> = (0..100u32).map(|i| (i * 13 + 1) % cfg.vocab as u32).collect();
+    let mut cache = SequenceCache::new(cfg.cache_config(None));
+    native.prefill(&prompt, &mut cache);
+    assert_eq!(cache.quantized_len(), 64);
+    assert_eq!(cache.resid_len(), 36);
+
+    // native decode (clone cache so both paths see identical state)
+    let mut cache_native = cache.clone();
+    let next_tok = 7u32;
+    let logits_native = native.decode_step(next_tok, &mut cache_native).to_vec();
+
+    // PJRT decode on the same cache state
+    let s_cap = 256;
+    let r_cap = cfg.resid;
+    let dense = cache.export_dense(s_cap, r_cap);
+    let mut ins: DecodeInputs = batch_dense(
+        &[&dense],
+        cfg.n_layers,
+        cfg.n_kv_heads,
+        s_cap,
+        r_cap,
+        cfg.head_dim,
+        cfg.group,
+        1,
+    );
+    ins.tokens[0] = next_tok as i32;
+    ins.positions[0] = cache.next_pos as i32;
+    let out = rt.decode(&format!("decode_{}_b1_s{}", cfg.name, s_cap), &ins).unwrap();
+
+    let cos = cosine(&out.logits, &logits_native);
+    assert!(cos > 0.999, "decode logits cosine {cos}");
+    assert_eq!(argmax(&out.logits), argmax(&logits_native));
+
+    // the new K/V returned by the graph must match the native appended step
+    let dh = cfg.head_dim;
+    let lkv = cfg.n_layers * cfg.n_kv_heads;
+    assert_eq!(out.new_k.len(), lkv * dh);
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            let st = cache_native.stream(l, h);
+            // the step token landed in the residual tail
+            let r = st.resid_len() - 1;
+            for j in 0..dh {
+                let a = out.new_k[(l * cfg.n_kv_heads + h) * dh + j];
+                let b = st.resid_k[r * dh + j];
+                assert!(
+                    (a - b).abs() < 2e-3 * (1.0 + b.abs()),
+                    "new_k mismatch l{l} h{h} j{j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_graph_matches_rust_encoder() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = PjrtRuntime::load(&dir).unwrap();
+    let cfg = rt.manifest.config.clone();
+    let spec = cfg.polar_spec();
+
+    // bulk-encode bucket: (N=2, T=64, dh)
+    let n = 2usize;
+    let t = 64usize;
+    let dh = cfg.head_dim;
+    let mut rng = polarquant::util::rng::Rng::new(77);
+    let k = rng.normal_vec(n * t * dh);
+    let outs = rt.encode(&format!("encode_{}_n{}_t{}", cfg.name, n, t), &k).unwrap();
+    // outputs: rho_code, theta_code, rho_z, rho_s, theta_z, theta_s
+    assert_eq!(outs.len(), 6);
+    for ni in 0..n {
+        let enc = polarquant::quant::polar::encode(&k[ni * t * dh..(ni + 1) * t * dh], dh, &spec);
+        assert_eq!(enc.groups.len(), t / spec.group);
+        for (gi, grp) in enc.groups.iter().enumerate() {
+            let rc = grp.rho_codes.unpack();
+            let tc = grp.theta_codes.unpack();
+            let d2 = dh / 2;
+            for tok in 0..spec.group {
+                for j in 0..d2 {
+                    let flat = (ni * t + gi * spec.group + tok) * d2 + j;
+                    assert_eq!(
+                        outs[0][flat] as u8, rc[tok * d2 + j],
+                        "rho code mismatch n{ni} g{gi} tok{tok} j{j}"
+                    );
+                    assert_eq!(outs[1][flat] as u8, tc[tok * d2 + j], "theta code mismatch");
+                }
+            }
+            for j in 0..d2 {
+                let flat = (ni * (t / spec.group) + gi) * d2 + j;
+                assert!((outs[2][flat] - grp.rho_z[j]).abs() < 1e-5);
+                assert!((outs[3][flat] - grp.rho_s[j]).abs() < 1e-5);
+                assert!((outs[4][flat] - grp.theta_z[j]).abs() < 1e-5);
+                assert!((outs[5][flat] - grp.theta_s[j]).abs() < 1e-5);
+            }
+        }
+    }
+}

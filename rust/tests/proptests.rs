@@ -1,0 +1,227 @@
+//! Property-based tests (hand-rolled generator loop — proptest is not in
+//! the offline crate set).  Each property runs over many seeded random
+//! cases; failures print the seed so they replay deterministically.
+
+use polarquant::coordinator::router::Router;
+use polarquant::kvcache::eviction::snapkv_select;
+use polarquant::kvcache::{CacheConfig, SequenceCache};
+use polarquant::quant::pack::PackedCodes;
+use polarquant::quant::polar::{self, PolarSpec};
+use polarquant::quant::{dequantize, qparams, quantize, QkLut};
+use polarquant::tensor::ops::dot;
+use polarquant::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+#[test]
+fn prop_pack_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let bits = rng.range(1, 9) as u32;
+        let n = rng.range(1, 700);
+        let codes: Vec<u8> = (0..n)
+            .map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8)
+            .collect();
+        let p = PackedCodes::from_codes(&codes, bits);
+        assert_eq!(p.unpack(), codes, "seed {seed} bits {bits}");
+        assert!(p.nbytes() <= n * bits as usize / 8 + 1);
+    }
+}
+
+#[test]
+fn prop_scalar_quant_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let bits = rng.range(1, 9) as u32;
+        let lo = rng.uniform_in(-100.0, 100.0);
+        let hi = lo + rng.uniform_in(0.0, 100.0);
+        let (z, s) = qparams(lo, hi, bits);
+        for _ in 0..20 {
+            let x = rng.uniform_in(lo, hi);
+            let c = quantize(x, z, s, bits);
+            assert!((c as u32) < (1 << bits));
+            let xd = dequantize(c, z, s);
+            // in-range values reconstruct within half a cell
+            assert!(
+                (x - xd).abs() <= s / 2.0 + 1e-5 * (1.0 + x.abs()),
+                "seed {seed}: x {x} xd {xd} s {s}"
+            );
+            // dequantized value stays within the original range (+half cell)
+            assert!(xd >= lo - s && xd <= hi + s, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_polar_lut_equals_dequant_dot() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(2000 + seed);
+        let d = 2 * rng.range(2, 33);
+        let group = [8, 16, 32][rng.below(3)];
+        let groups = rng.range(1, 4);
+        let r_bits = rng.range(2, 6) as u32;
+        let t_bits = rng.range(2, 6) as u32;
+        let spec = PolarSpec::new(r_bits, t_bits, group);
+        let k = rng.normal_vec(groups * group * d);
+        let enc = polar::encode(&k, d, &spec);
+        let k_hat = polar::decode(&enc, d);
+        let q = rng.normal_vec(d);
+        let mut lut = QkLut::new(spec, d, 1);
+        let mut scores = Vec::new();
+        lut.scores(&q, &enc, &mut scores);
+        for n in 0..scores.len() {
+            let want = dot(&q, &k_hat[n * d..(n + 1) * d]);
+            assert!(
+                (scores[n] - want).abs() < 5e-4 * (1.0 + want.abs()),
+                "seed {seed} n {n}: {} vs {want}",
+                scores[n]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_polar_error_shrinks_with_bits() {
+    // more bits => no worse reconstruction (monotone in expectation; we
+    // assert pairwise on the same data with a generous slack factor)
+    for seed in 0..40 {
+        let mut rng = Rng::new(3000 + seed);
+        let d = 32;
+        let group = 16;
+        let k = rng.normal_vec(2 * group * d);
+        let err = |r: u32, t: u32| {
+            let spec = PolarSpec::new(r, t, group);
+            let enc = polar::encode(&k, d, &spec);
+            polarquant::tensor::ops::mse(&k, &polar::decode(&enc, d))
+        };
+        let e33 = err(3, 3);
+        let e55 = err(5, 5);
+        assert!(e55 <= e33 * 1.05, "seed {seed}: e55 {e55} e33 {e33}");
+    }
+}
+
+#[test]
+fn prop_cache_append_invariants() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(4000 + seed);
+        let group = [4usize, 8][rng.below(2)];
+        let cfg = CacheConfig {
+            n_layers: rng.range(1, 3),
+            n_kv_heads: rng.range(1, 3),
+            head_dim: 8,
+            spec: PolarSpec::new(4, 4, group),
+            value_bits: if rng.chance(0.5) { Some(4) } else { None },
+        };
+        let mut seq = SequenceCache::new(cfg.clone());
+        let step = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+        let total = rng.range(1, 40);
+        for i in 0..total {
+            let k = rng.normal_vec(step);
+            let v = rng.normal_vec(step);
+            seq.append_step(&k, &v);
+            // invariants after every append
+            assert_eq!(seq.len(), i + 1);
+            assert_eq!(seq.quantized_len() + seq.resid_len(), seq.len());
+            assert_eq!(seq.quantized_len() % group, 0);
+            assert!(seq.resid_len() < group);
+            for st in &seq.streams {
+                assert_eq!(st.len(), seq.len());
+                assert_eq!(st.key_groups.len(), st.value_groups.len());
+            }
+        }
+        assert_eq!(seq.next_pos, total);
+    }
+}
+
+#[test]
+fn prop_snapkv_select_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let t = rng.range(1, 300);
+        let budget = rng.range(1, 200);
+        let window = rng.range(1, 64);
+        let scores: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
+        let keep = snapkv_select(&scores, budget, window);
+        // sorted, unique, bounded
+        assert!(keep.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+        assert!(keep.len() <= budget.max(t.min(budget)), "seed {seed}");
+        assert!(keep.iter().all(|&i| i < t));
+        if t <= budget {
+            assert_eq!(keep.len(), t);
+        } else {
+            assert_eq!(keep.len(), budget);
+            // the window tail is always kept
+            let w = window.min(budget);
+            for i in t - w..t {
+                assert!(keep.contains(&i), "seed {seed}: window idx {i} dropped");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_router_conservation() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(6000 + seed);
+        let n = rng.range(1, 6);
+        let mut r = Router::new(n);
+        let mut outstanding = vec![0usize; n];
+        for _ in 0..100 {
+            if rng.chance(0.6) {
+                let session = if rng.chance(0.5) { Some(rng.next_u64() % 10) } else { None };
+                let w = r.route(session);
+                assert!(w < n);
+                outstanding[w] += 1;
+            } else if let Some(w) = (0..n).find(|&w| outstanding[w] > 0) {
+                r.complete(w);
+                outstanding[w] -= 1;
+            }
+            for w in 0..n {
+                assert_eq!(r.load(w), outstanding[w], "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_export_dense_roundtrips_codes() {
+    // exporting and re-reading the dense layout preserves every code
+    for seed in 0..30 {
+        let mut rng = Rng::new(7000 + seed);
+        let group = 4;
+        let cfg = CacheConfig {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 8,
+            spec: PolarSpec::new(3, 5, group),
+            value_bits: None,
+        };
+        let mut seq = SequenceCache::new(cfg.clone());
+        let step = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+        let total = rng.range(group, 20);
+        for _ in 0..total {
+            seq.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        }
+        let s_cap = 24;
+        let dense = seq.export_dense(s_cap, group);
+        let d2 = cfg.head_dim / 2;
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                let st = seq.stream(l, h);
+                let base = (l * cfg.n_kv_heads + h) * s_cap * d2;
+                for (gi, g) in st.key_groups.iter().enumerate() {
+                    let tc = g.theta_codes.unpack();
+                    for n in 0..g.tokens {
+                        for j in 0..d2 {
+                            assert_eq!(
+                                dense.theta_code[base + (gi * group + n) * d2 + j],
+                                tc[n * d2 + j] as i32,
+                                "seed {seed}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
