@@ -64,6 +64,27 @@ pub fn plan_decode_batches(
     (batches, overflow)
 }
 
+/// Partition one decode step's sequences into `workers` shards balanced
+/// by cache length (LPT greedy: longest first onto the lightest shard).
+/// Per-token decode cost is dominated by walking the quantized pages, so
+/// balancing summed cache length keeps the pool's slowest worker within
+/// one sequence of the mean.  Returns `workers` id lists (some possibly
+/// empty when there are fewer sequences than workers).
+pub fn plan_decode_shards(seqs: &[(u64, usize)], workers: usize) -> Vec<Vec<u64>> {
+    assert!(workers > 0);
+    let mut order: Vec<usize> = (0..seqs.len()).collect();
+    order.sort_by(|&a, &b| seqs[b].1.cmp(&seqs[a].1));
+    let mut shards: Vec<Vec<u64>> = vec![Vec::new(); workers];
+    let mut loads = vec![0usize; workers];
+    for i in order {
+        let w = (0..workers).min_by_key(|&w| (loads[w], w)).unwrap();
+        // +1: even an empty cache costs a full model step (matmuls/FFN)
+        loads[w] += seqs[i].1 + 1;
+        shards[w].push(seqs[i].0);
+    }
+    shards
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +125,35 @@ mod tests {
         let (batches, overflow) = plan_decode_batches(&m, vec![(9, 99_999)], 16);
         assert!(batches.is_empty());
         assert_eq!(overflow, vec![9]);
+    }
+
+    #[test]
+    fn shards_cover_all_ids_and_balance() {
+        let seqs: Vec<(u64, usize)> = (0..13).map(|i| (i, (i as usize * 97) % 500)).collect();
+        let shards = plan_decode_shards(&seqs, 4);
+        assert_eq!(shards.len(), 4);
+        let mut ids: Vec<u64> = shards.iter().flatten().copied().collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..13).collect::<Vec<u64>>());
+        // LPT bound: max shard load <= mean + the largest single item
+        let load = |s: &Vec<u64>| -> usize {
+            s.iter().map(|id| seqs[*id as usize].1 + 1).sum()
+        };
+        let loads: Vec<usize> = shards.iter().map(load).collect();
+        let total: usize = loads.iter().sum();
+        let max_item = seqs.iter().map(|&(_, l)| l + 1).max().unwrap();
+        let max_load = *loads.iter().max().unwrap();
+        assert!(
+            max_load <= total / 4 + max_item,
+            "max {max_load} total {total} item {max_item}"
+        );
+    }
+
+    #[test]
+    fn shards_with_more_workers_than_seqs() {
+        let shards = plan_decode_shards(&[(7, 10), (8, 2)], 5);
+        assert_eq!(shards.iter().flatten().count(), 2);
+        assert!(shards.iter().filter(|s| s.is_empty()).count() == 3);
     }
 
     #[test]

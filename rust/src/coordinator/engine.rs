@@ -2,8 +2,10 @@
 //!
 //! `step()` is one scheduler iteration: admit up to `prefill_per_step`
 //! queued requests (prefill + cache fill + first token), then run one
-//! decode iteration across every running sequence — natively one-by-one,
-//! or batched into AOT shape buckets on the PJRT backend.
+//! decode iteration across every running sequence — natively through the
+//! fixed [`DecodePool`] (thread-parallel over balanced cache-length
+//! shards) or inline when `decode_workers <= 1`, or batched into AOT
+//! shape buckets on the PJRT backend.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::Path;
@@ -12,14 +14,15 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::backpressure::{AdmissionPolicy, AdmitDecision};
-use super::batcher::plan_decode_batches;
+use super::batcher::{plan_decode_batches, plan_decode_shards};
 use super::metrics::Metrics;
+use super::pool::{DecodePool, DecodeTask, StepResult};
 use super::request::{Request, RequestId, RequestState, Tracked};
 use super::scheduler::SchedulerPolicy;
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
 use crate::kvcache::CacheManager;
 use crate::model::{Model, ModelConfig, Weights};
-use crate::runtime::executor::{batch_dense, split_prefill_kv};
+use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Rng;
 
@@ -45,6 +48,9 @@ pub struct EngineOpts {
     pub snapkv: Option<SnapKvOpts>,
     pub cache_budget_bytes: usize,
     pub seed: u64,
+    /// Decode threads for the native backend: > 1 fans each decode
+    /// iteration over a fixed worker pool (0 and 1 both mean inline).
+    pub decode_workers: usize,
 }
 
 impl Default for EngineOpts {
@@ -56,6 +62,7 @@ impl Default for EngineOpts {
             snapkv: None,
             cache_budget_bytes: usize::MAX,
             seed: 0,
+            decode_workers: 0,
         }
     }
 }
@@ -81,11 +88,23 @@ pub struct Engine {
     pub metrics: Metrics,
     opts: EngineOpts,
     rng: Rng,
+    /// fixed thread pool for native decode (None = inline decode)
+    pool: Option<DecodePool>,
+    /// recycled gather buffer for pool results
+    step_results: Vec<StepResult>,
 }
 
 impl Engine {
     pub fn new(backend: Backend, cfg: ModelConfig, opts: EngineOpts) -> Self {
         let cache = CacheManager::new(cfg.cache_config(opts.value_bits), opts.cache_budget_bytes);
+        // the pool shares the native model's weights; PJRT decode batches
+        // inside the graph instead, so it never uses one
+        let pool = match &backend {
+            Backend::Native(model) if opts.decode_workers > 1 => {
+                Some(DecodePool::new(model, opts.decode_workers, opts.seed))
+            }
+            _ => None,
+        };
         Engine {
             backend,
             cfg,
@@ -95,7 +114,14 @@ impl Engine {
             metrics: Metrics::new(),
             opts,
             rng: Rng::new(opts.seed),
+            pool,
+            step_results: Vec::new(),
         }
+    }
+
+    /// Decode parallelism of the native backend (1 = inline).
+    pub fn decode_pool_width(&self) -> usize {
+        self.pool.as_ref().map(|p| p.width()).unwrap_or(1)
     }
 
     /// Native engine from synthetic weights (tests/benches).
@@ -197,7 +223,8 @@ impl Engine {
                     let (logits, k, v, imp) =
                         model.prefill_kv_importance(&prompt, sk.window);
                     let keep = snapkv_select(&imp, sk.budget, sk.window);
-                    let cache = self.cache.create(id);
+                    let shared = self.cache.create(id);
+                    let mut cache = shared.lock().unwrap();
                     let (l, kv, dh, t) =
                         (cache.cfg.n_layers, cache.cfg.n_kv_heads, cache.cfg.head_dim, prompt.len());
                     // gather kept rows per (layer, head) stream
@@ -215,8 +242,9 @@ impl Engine {
                     cache.next_pos = t;
                     logits
                 } else {
-                    let cache = self.cache.create(id);
-                    model.prefill(&prompt, cache)
+                    let shared = self.cache.create(id);
+                    let mut cache = shared.lock().unwrap();
+                    model.prefill(&prompt, &mut cache)
                 }
             }
             Backend::Pjrt(rt) => {
@@ -253,8 +281,8 @@ impl Engine {
                         v_valid.extend_from_slice(&v[off..off + t * dh]);
                     }
                 }
-                let cache = self.cache.create(id);
-                cache.append_prefill(&k_valid, &v_valid, t);
+                let shared = self.cache.create(id);
+                shared.lock().unwrap().append_prefill(&k_valid, &v_valid, t);
                 out.logits[..self.cfg.vocab].to_vec()
             }
         };
@@ -281,21 +309,56 @@ impl Engine {
             if tr.done() {
                 continue;
             }
-            let qlen = self.cache.get(id).map(|c| c.quantized_len()).unwrap_or(0);
+            let qlen = self.cache.get(id).map(|c| c.lock().unwrap().quantized_len()).unwrap_or(0);
             seqs.push((id, qlen));
         }
 
         let mut truncated: Vec<RequestId> = Vec::new();
         match &mut self.backend {
             Backend::Native(model) => {
-                for &(id, _) in &seqs {
-                    let tr = self.running.get_mut(&id).unwrap();
-                    let last = *tr.generated.last().unwrap();
-                    let cache = self.cache.get_mut(id).context("cache missing")?;
-                    let logits = model.decode_step(last, cache).to_vec();
-                    let tok = tr.req.sampler.sample(&logits, &mut self.rng);
-                    tr.generated.push(tok);
-                    self.metrics.decode_tokens += 1;
+                if let Some(pool) = self.pool.as_mut().filter(|_| seqs.len() > 1) {
+                    // Thread-parallel path: fan balanced cache-length
+                    // shards over the fixed pool.  Shards are disjoint, so
+                    // every per-sequence lock the workers take is
+                    // uncontended; the engine thread only rejoins at
+                    // flush().
+                    let shards = plan_decode_shards(&seqs, pool.width());
+                    for (w, shard) in shards.iter().enumerate() {
+                        for &id in shard {
+                            let tr = &self.running[&id];
+                            let cache = self.cache.get(id).context("cache missing")?;
+                            pool.submit(
+                                w,
+                                DecodeTask {
+                                    id,
+                                    cache,
+                                    last_token: *tr.generated.last().unwrap(),
+                                    sampler: tr.req.sampler,
+                                },
+                            );
+                        }
+                    }
+                    let mut results = std::mem::take(&mut self.step_results);
+                    results.clear();
+                    pool.flush(&mut results);
+                    for r in &results {
+                        let tr = self.running.get_mut(&r.id).unwrap();
+                        tr.generated.push(r.token);
+                        self.metrics.decode_tokens += 1;
+                    }
+                    self.step_results = results;
+                } else {
+                    for &(id, _) in &seqs {
+                        let tr = self.running.get_mut(&id).unwrap();
+                        let last = *tr.generated.last().unwrap();
+                        let shared = self.cache.get(id).context("cache missing")?;
+                        let mut cache = shared.lock().unwrap();
+                        let logits = model.decode_step(last, &mut cache).to_vec();
+                        drop(cache);
+                        let tok = tr.req.sampler.sample(&logits, &mut self.rng);
+                        tr.generated.push(tok);
+                        self.metrics.decode_tokens += 1;
+                    }
                 }
                 self.metrics.decode_steps += 1;
                 self.metrics.decode_batch_sum += seqs.len() as u64;
@@ -314,6 +377,8 @@ impl Engine {
                             self.cache
                                 .get(id)
                                 .unwrap()
+                                .lock()
+                                .unwrap()
                                 .export_dense(b.seq_cap, r_cap)
                         })
                         .collect();
@@ -331,7 +396,8 @@ impl Engine {
                     for (lane, &id) in b.ids.iter().enumerate() {
                         let tr = &self.running[&id];
                         ins.tokens[lane] = *tr.generated.last().unwrap() as i32;
-                        ins.positions[lane] = self.cache.get(id).unwrap().next_pos as i32;
+                        ins.positions[lane] =
+                            self.cache.get(id).unwrap().lock().unwrap().next_pos as i32;
                     }
                     let out = rt.decode(&b.graph, &ins)?;
                     let (l, kv, dh, v) =
@@ -350,7 +416,7 @@ impl Engine {
                                     .copy_from_slice(&out.new_v[src..src + dh]);
                             }
                         }
-                        self.cache.get_mut(id).unwrap().append_step(&new_k, &new_v);
+                        self.cache.get(id).unwrap().lock().unwrap().append_step(&new_k, &new_v);
                         let logits = &out.logits[lane * v..(lane + 1) * v];
                         let tr = self.running.get_mut(&id).unwrap();
                         let tok = tr.req.sampler.sample(logits, &mut self.rng);
@@ -466,6 +532,37 @@ mod tests {
         let report = eng.cache_report();
         assert_eq!(report.tokens, 16 + 1, "budget + first decode step");
         eng.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn parallel_decode_matches_inline_greedy() {
+        // greedy decode is deterministic, so the pool path must produce
+        // bit-identical rollouts to the inline path at any worker count
+        let run = |workers: usize| {
+            let mut opts = EngineOpts::default();
+            opts.decode_workers = workers;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 9, 4.0, opts);
+            for i in 0..5 {
+                eng.submit(Request::greedy(i, vec![1, 2, 3, (i % 8) as u32 + 4], 8))
+                    .unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        let inline = run(1);
+        assert_eq!(inline, run(3));
+        assert_eq!(inline, run(8), "more workers than sequences");
+    }
+
+    #[test]
+    fn pool_width_reflects_opts() {
+        let mut opts = EngineOpts::default();
+        opts.decode_workers = 4;
+        let eng = Engine::native_synthetic(tiny_cfg(), 10, 4.0, opts);
+        assert_eq!(eng.decode_pool_width(), 4);
+        let eng2 = Engine::native_synthetic(tiny_cfg(), 10, 4.0, EngineOpts::default());
+        assert_eq!(eng2.decode_pool_width(), 1);
     }
 
     #[test]

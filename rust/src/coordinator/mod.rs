@@ -7,6 +7,8 @@
 //! * [`scheduler`] — prefill/decode interleaving policy
 //! * [`engine`] — ties backend (native or PJRT) + cache + scheduler into
 //!   the decode loop
+//! * [`pool`] — fixed decode worker pool: thread-parallel native decode
+//!   over balanced cache-length shards, thread-local LUT scratch
 //! * [`router`] — session-affinity routing across engine workers
 //! * [`metrics`] — counters + latency histograms behind every table-4 row
 
@@ -14,9 +16,11 @@ pub mod backpressure;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
 pub use engine::{Backend, Completion, Engine, EngineOpts};
+pub use pool::{DecodePool, DecodeTask, StepResult};
 pub use request::{Request, RequestId, RequestState};

@@ -1,0 +1,244 @@
+//! Fixed decode worker pool: one engine step's running sequences fanned
+//! out over `n` long-lived threads.
+//!
+//! Design goals (ISSUE 1 tentpole):
+//!
+//! * **Fixed pool, no per-step allocation.**  Threads are spawned once at
+//!   engine construction.  The per-worker task and result `Vec`s round-trip
+//!   through the worker on every step, so their capacity is reused; the
+//!   only per-task cost is an `Arc` refcount bump on the cache handle.
+//! * **Thread-local scratch.**  Each worker owns a [`Model::fork`] — the
+//!   weights are shared behind one `Arc`, the `QkLut`, score and
+//!   activation buffers are private — so the LUT hot loop never shares a
+//!   cache line between workers.
+//! * **Shard-safe cache access.**  Tasks carry [`SharedSeq`] handles.  The
+//!   scheduler assigns disjoint shards ([`super::batcher::plan_decode_shards`]),
+//!   so each per-sequence mutex is uncontended in the steady state.
+//!
+//! Determinism: greedy sampling is bit-identical to the inline path
+//! regardless of worker count (argmax needs no RNG).  Stochastic samplers
+//! draw from a per-worker stream seeded from (engine seed, worker index),
+//! so results depend on the shard assignment — acceptable for serving,
+//! avoided in tests by using greedy requests.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::kvcache::SharedSeq;
+use crate::model::sampling::Sampler;
+use crate::model::Model;
+use crate::util::rng::Rng;
+
+/// One sequence's slice of a decode step.
+pub struct DecodeTask {
+    pub id: u64,
+    pub cache: SharedSeq,
+    pub last_token: u32,
+    pub sampler: Sampler,
+}
+
+/// One sampled token, keyed back to its request.
+#[derive(Clone, Copy, Debug)]
+pub struct StepResult {
+    pub id: u64,
+    pub token: u32,
+}
+
+enum Msg {
+    Step { tasks: Vec<DecodeTask>, results: Vec<StepResult> },
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<Msg>,
+    rx: Receiver<(Vec<StepResult>, Vec<DecodeTask>)>,
+    join: Option<JoinHandle<()>>,
+    /// tasks staged for the next step (recycled capacity)
+    pending: Vec<DecodeTask>,
+    /// empty result buffer awaiting the next step (recycled capacity)
+    spare_results: Vec<StepResult>,
+    inflight: bool,
+}
+
+pub struct DecodePool {
+    workers: Vec<Worker>,
+}
+
+impl DecodePool {
+    /// Spawn `n` workers, each owning a fork of `model` (shared weights,
+    /// private scratch).
+    pub fn new(model: &Model, n: usize, seed: u64) -> Self {
+        assert!(n > 0);
+        let workers = (0..n)
+            .map(|w| {
+                let (tx, job_rx) = channel::<Msg>();
+                let (result_tx, rx) = channel();
+                let mut m = model.fork();
+                let mut rng = Rng::new(seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let join = std::thread::spawn(move || loop {
+                    match job_rx.recv() {
+                        Ok(Msg::Step { mut tasks, mut results }) => {
+                            results.clear();
+                            for t in tasks.drain(..) {
+                                // uncontended: this worker is the only one
+                                // assigned this sequence for the step
+                                let mut cache = t.cache.lock().unwrap();
+                                let logits = m.decode_step(t.last_token, &mut cache);
+                                let token = t.sampler.sample(logits, &mut rng);
+                                results.push(StepResult { id: t.id, token });
+                            }
+                            if result_tx.send((results, tasks)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => return,
+                    }
+                });
+                Worker {
+                    tx,
+                    rx,
+                    join: Some(join),
+                    pending: Vec::new(),
+                    spare_results: Vec::new(),
+                    inflight: false,
+                }
+            })
+            .collect();
+        DecodePool { workers }
+    }
+
+    pub fn width(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stage a task on worker `shard` for the next [`DecodePool::flush`].
+    pub fn submit(&mut self, shard: usize, task: DecodeTask) {
+        self.workers[shard % self.workers.len()].pending.push(task);
+    }
+
+    /// Run one step: fan staged shards out, then gather every sampled
+    /// token into `out`.  Buffers are recycled; steady state allocates
+    /// nothing.
+    pub fn flush(&mut self, out: &mut Vec<StepResult>) {
+        for w in &mut self.workers {
+            if w.pending.is_empty() {
+                continue;
+            }
+            let tasks = std::mem::take(&mut w.pending);
+            let results = std::mem::take(&mut w.spare_results);
+            w.tx.send(Msg::Step { tasks, results }).expect("decode worker died");
+            w.inflight = true;
+        }
+        for w in &mut self.workers {
+            if !w.inflight {
+                continue;
+            }
+            let (mut results, tasks) = w.rx.recv().expect("decode worker died");
+            out.extend(results.iter().copied());
+            results.clear();
+            w.spare_results = results;
+            w.pending = tasks;
+            w.inflight = false;
+        }
+    }
+}
+
+impl Drop for DecodePool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SequenceCache;
+    use crate::model::{ModelConfig, Weights};
+    use std::sync::{Arc, Mutex};
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::tiny();
+        cfg.n_layers = 2;
+        cfg.vocab = 64;
+        cfg.d_model = 32;
+        cfg.n_heads = 4;
+        cfg.n_kv_heads = 2;
+        cfg.head_dim = 16;
+        cfg.ffn = 48;
+        cfg.group = 8;
+        cfg.resid = 16;
+        cfg
+    }
+
+    #[test]
+    fn pool_decodes_matching_inline_model() {
+        let cfg = tiny_cfg();
+        let w = Weights::synthetic(&cfg, 11, 4.0);
+        let mut model = Model::new(cfg.clone(), w);
+
+        // three prefilled sequences with different prompts
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9, 8, 7, 6, 5], vec![4; 10]];
+        let mut caches: Vec<SharedSeq> = Vec::new();
+        let mut inline_tokens = Vec::new();
+        for p in &prompts {
+            let mut c = SequenceCache::new(cfg.cache_config(None));
+            model.prefill(p, &mut c);
+            // inline reference: one greedy step on a cloned cache
+            let mut c_ref = c.clone();
+            let logits = model.decode_step(3, &mut c_ref).to_vec();
+            inline_tokens.push(crate::tensor::ops::argmax(&logits) as u32);
+            caches.push(Arc::new(Mutex::new(c)));
+        }
+
+        let mut pool = DecodePool::new(&model, 2, 0);
+        for (i, c) in caches.iter().enumerate() {
+            pool.submit(
+                i,
+                DecodeTask {
+                    id: i as u64,
+                    cache: c.clone(),
+                    last_token: 3,
+                    sampler: Sampler::Greedy,
+                },
+            );
+        }
+        let mut out = Vec::new();
+        pool.flush(&mut out);
+        assert_eq!(out.len(), 3);
+        out.sort_by_key(|r| r.id);
+        for (r, want) in out.iter().zip(&inline_tokens) {
+            assert_eq!(r.token, *want, "seq {}", r.id);
+        }
+        // the step advanced every cache
+        for (c, p) in caches.iter().zip(&prompts) {
+            assert_eq!(c.lock().unwrap().len(), p.len() + 1);
+        }
+    }
+
+    #[test]
+    fn flush_reuses_buffers_across_steps() {
+        let cfg = tiny_cfg();
+        let mut model = Model::new(cfg.clone(), Weights::synthetic(&cfg, 12, 4.0));
+        let cache: SharedSeq = Arc::new(Mutex::new(SequenceCache::new(cfg.cache_config(None))));
+        model.prefill(&[1, 2, 3], &mut cache.lock().unwrap());
+        let mut pool = DecodePool::new(&model, 1, 0);
+        let mut out = Vec::new();
+        for step in 0..4 {
+            pool.submit(
+                0,
+                DecodeTask { id: 1, cache: cache.clone(), last_token: 2, sampler: Sampler::Greedy },
+            );
+            out.clear();
+            pool.flush(&mut out);
+            assert_eq!(out.len(), 1, "step {step}");
+        }
+        assert_eq!(cache.lock().unwrap().len(), 3 + 4);
+    }
+}

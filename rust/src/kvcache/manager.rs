@@ -1,9 +1,21 @@
 //! Multi-sequence cache allocation + the global memory budget that drives
 //! admission control, plus the accounting behind Table 4's memory column.
+//!
+//! Sequences are held as [`SharedSeq`] handles (`Arc<Mutex<..>>`), so the
+//! decode pool's worker threads can each walk their assigned sequences'
+//! pages without going back through the manager.  The scheduler assigns
+//! disjoint shards per step, so every per-sequence lock is uncontended in
+//! the steady state — the mutex only arbitrates against management-plane
+//! reads like [`CacheManager::report`].
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use super::seq::{CacheConfig, SequenceCache};
+
+/// Shard-safe handle to one sequence's cache.  Clone is an `Arc` bump;
+/// workers lock only the sequences in their own shard.
+pub type SharedSeq = Arc<Mutex<SequenceCache>>;
 
 /// Breakdown of cache memory at rest.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -28,7 +40,7 @@ impl MemoryReport {
 pub struct CacheManager {
     cfg: CacheConfig,
     budget_bytes: usize,
-    seqs: HashMap<u64, SequenceCache>,
+    seqs: HashMap<u64, SharedSeq>,
 }
 
 impl CacheManager {
@@ -64,16 +76,17 @@ impl CacheManager {
         self.report().bytes + self.estimate_bytes(tokens) <= self.budget_bytes
     }
 
-    pub fn create(&mut self, id: u64) -> &mut SequenceCache {
-        self.seqs.entry(id).or_insert_with(|| SequenceCache::new(self.cfg.clone()))
+    /// Create (or fetch) the sequence and return a shard-safe handle.
+    pub fn create(&mut self, id: u64) -> SharedSeq {
+        self.seqs
+            .entry(id)
+            .or_insert_with(|| Arc::new(Mutex::new(SequenceCache::new(self.cfg.clone()))))
+            .clone()
     }
 
-    pub fn get(&self, id: u64) -> Option<&SequenceCache> {
-        self.seqs.get(&id)
-    }
-
-    pub fn get_mut(&mut self, id: u64) -> Option<&mut SequenceCache> {
-        self.seqs.get_mut(&id)
+    /// Shard-safe handle for an existing sequence.
+    pub fn get(&self, id: u64) -> Option<SharedSeq> {
+        self.seqs.get(&id).cloned()
     }
 
     pub fn release(&mut self, id: u64) -> bool {
@@ -89,8 +102,13 @@ impl CacheManager {
     }
 
     pub fn report(&self) -> MemoryReport {
-        let bytes = self.seqs.values().map(|s| s.nbytes()).sum();
-        let tokens = self.seqs.values().map(|s| s.len()).sum();
+        let mut bytes = 0;
+        let mut tokens = 0;
+        for s in self.seqs.values() {
+            let s = s.lock().unwrap();
+            bytes += s.nbytes();
+            tokens += s.len();
+        }
         MemoryReport {
             sequences: self.seqs.len(),
             tokens,
@@ -129,6 +147,18 @@ mod tests {
     }
 
     #[test]
+    fn handles_share_one_cache() {
+        let mut m = CacheManager::new(cfg(), usize::MAX);
+        let a = m.create(9);
+        let b = m.create(9);
+        let mut rng = Rng::new(23);
+        let step = 2 * 2 * 16;
+        a.lock().unwrap().append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        assert_eq!(b.lock().unwrap().len(), 1, "writes via one handle visible via the other");
+        assert_eq!(m.report().tokens, 1);
+    }
+
+    #[test]
     fn estimate_tracks_actual_within_slack() {
         let c = cfg();
         let mut m = CacheManager::new(c.clone(), usize::MAX);
@@ -136,7 +166,7 @@ mod tests {
         let tokens = 24;
         let block = c.n_layers * c.n_kv_heads * tokens * c.head_dim;
         let (k, v) = (rng.normal_vec(block), rng.normal_vec(block));
-        m.create(7).append_prefill(&k, &v, tokens);
+        m.create(7).lock().unwrap().append_prefill(&k, &v, tokens);
         let actual = m.report().bytes;
         let est = m.estimate_bytes(tokens);
         let ratio = est as f64 / actual as f64;
@@ -157,7 +187,7 @@ mod tests {
         for id in 0..2 {
             let block = c.n_layers * c.n_kv_heads * 64 * c.head_dim;
             let (k, v) = (rng.normal_vec(block), rng.normal_vec(block));
-            m.create(id).append_prefill(&k, &v, 64);
+            m.create(id).lock().unwrap().append_prefill(&k, &v, 64);
         }
         assert!(!m.admits(64), "third sequence must be rejected");
         assert!(m.report().utilization() > 0.4);
@@ -176,7 +206,7 @@ mod tests {
         let block = c.n_layers * c.n_kv_heads * tokens * c.head_dim;
         let (k, v) = (rng.normal_vec(block), rng.normal_vec(block));
         let mut m = CacheManager::new(c.clone(), usize::MAX);
-        m.create(1).append_prefill(&k, &v, tokens);
+        m.create(1).lock().unwrap().append_prefill(&k, &v, tokens);
         let quant_bytes = m.report().bytes;
         let fp_bytes = 2 * block * 2; // k+v in fp16
         // keys are ~3.8x smaller; values stay fp16 -> overall < 0.75x

@@ -15,6 +15,6 @@ pub mod manager;
 pub mod seq;
 pub mod stream;
 
-pub use manager::{CacheManager, MemoryReport};
+pub use manager::{CacheManager, MemoryReport, SharedSeq};
 pub use seq::{CacheConfig, SequenceCache};
 pub use stream::StreamCache;

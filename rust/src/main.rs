@@ -3,9 +3,13 @@
 //! ```text
 //! polarquant info      --artifacts artifacts/
 //! polarquant serve     --artifacts artifacts/ --addr 127.0.0.1:7733 --workers 2 --backend pjrt
+//! polarquant serve     --backend synthetic --workers 2 --decode-workers 4
 //! polarquant generate  --artifacts artifacts/ --prompt 1,2,3 --max-tokens 16 --backend native
 //! polarquant fidelity  --profile qwen-like --d 128 --tokens 512
 //! ```
+//!
+//! `--decode-workers N` (native/synthetic backends) fans each engine's
+//! decode iteration over a fixed N-thread pool (see `coordinator::pool`).
 //!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
@@ -101,7 +105,9 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
     let dir = artifacts(args);
-    let opts = EngineOpts::default();
+    let mut opts = EngineOpts::default();
+    // native decode threads per engine (--decode-workers N; 1 = inline)
+    opts.decode_workers = args.usize("decode-workers", 1);
     match args.get("backend", "pjrt").as_str() {
         "pjrt" => Engine::pjrt_from_artifacts(&dir, opts),
         "native" => Engine::native_from_artifacts(&dir, opts),

@@ -8,6 +8,8 @@
 //! token are scored densely, and the value product uses the fused
 //! weighted-sum kernel when values are quantized.
 
+use std::sync::Arc;
+
 use crate::kvcache::stream::GroupValues;
 use crate::kvcache::SequenceCache;
 use crate::quant::lut::QkLut;
@@ -19,7 +21,9 @@ use super::weights::Weights;
 
 pub struct Model {
     pub cfg: ModelConfig,
-    pub weights: Weights,
+    /// shared, read-only: [`Model::fork`] hands the same weights to every
+    /// decode-pool worker; only the scratch below is per-thread
+    pub weights: Arc<Weights>,
     freqs: Vec<f32>,
     // decode-step scratch (allocation-free steady state)
     lut: QkLut,
@@ -38,6 +42,11 @@ pub struct Model {
 
 impl Model {
     pub fn new(cfg: ModelConfig, weights: Weights) -> Self {
+        Model::from_shared(cfg, Arc::new(weights))
+    }
+
+    /// Build a model over already-shared weights (decode-pool workers).
+    pub fn from_shared(cfg: ModelConfig, weights: Arc<Weights>) -> Self {
         let dh = cfg.head_dim;
         let hq = cfg.q_per_kv();
         Model {
@@ -57,6 +66,13 @@ impl Model {
             cfg,
             weights,
         }
+    }
+
+    /// A new model sharing these weights with FRESH scratch (LUT, score
+    /// and activation buffers) — what each decode-pool worker thread owns.
+    /// Cost: a handful of small allocations; the weights are never copied.
+    pub fn fork(&self) -> Model {
+        Model::from_shared(self.cfg.clone(), self.weights.clone())
     }
 
     /// Full-precision causal prefill; appends post-RoPE K/V to `cache` and
@@ -253,18 +269,17 @@ impl Model {
                 let rlen = st.resid_len();
                 let total = qlen + rlen + 1;
 
-                // 1) quantized region via LUT (all hq query heads at once)
+                // 1) quantized region via LUT (all hq query heads at once),
+                //    scoring straight off the cache's group pages — no
+                //    PolarEncoded clone on the hot path
                 {
-                    let enc = crate::quant::polar::PolarEncoded {
-                        groups: st.key_groups.clone(),
-                    };
                     let qs: Vec<&[f32]> = (0..hq)
                         .map(|i| {
                             let head = khead * hq + i;
                             &self.q[head * dh..(head + 1) * dh]
                         })
                         .collect();
-                    self.lut.scores_multi(&qs, &enc, &mut self.scores);
+                    self.lut.scores_groups(&qs, &st.key_groups, &mut self.scores);
                 }
                 for (i, sc) in self.scores.iter_mut().enumerate() {
                     let head = khead * hq + i;

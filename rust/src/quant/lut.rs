@@ -105,13 +105,21 @@ impl QkLut {
     /// Scores for MULTIPLE query heads sharing one kv stream (GQA).
     ///
     /// `out[h]` receives `enc.tokens()` scores for query `qs[h]`.
+    pub fn scores_multi(&mut self, qs: &[&[f32]], enc: &PolarEncoded, out: &mut [Vec<f32>]) {
+        self.scores_groups(qs, &enc.groups, out);
+    }
+
+    /// Core kernel over a borrowed group slice — the paged kvcache stores
+    /// its groups inline ([`crate::kvcache::StreamCache::key_groups`]), so
+    /// the decode hot path scores straight off the cache pages without
+    /// materializing a `PolarEncoded` clone.
     ///
     /// Fast path (r+t <= 8): the group's combined (rho<<t | theta) codes
     /// are unpacked ONCE into a byte scratch; rho is dequantized into a
     /// staging row shared by all heads; the per-head loop is a pure
     /// gather+fma over that row.  See EXPERIMENTS.md §Perf for the
     /// before/after.
-    pub fn scores_multi(&mut self, qs: &[&[f32]], enc: &PolarEncoded, out: &mut [Vec<f32>]) {
+    pub fn scores_groups(&mut self, qs: &[&[f32]], groups: &[PolarGroup], out: &mut [Vec<f32>]) {
         assert_eq!(qs.len(), out.len());
         assert!(qs.len() * self.d2 * (1 << self.spec.t_bits) <= self.lut.len());
         for o in out.iter_mut() {
@@ -120,7 +128,7 @@ impl QkLut {
         let levels = 1usize << self.spec.t_bits;
         let t_mask = (levels - 1) as u8;
         let t_bits = self.spec.t_bits;
-        for g in &enc.groups {
+        for g in groups {
             self.build_basis(g);
             self.build_luts(qs);
             if let Some(combined) = &g.combined {
@@ -176,6 +184,32 @@ impl QkLut {
         self.scores_multi(&[q], enc, &mut tmp);
         *out = std::mem::take(&mut tmp[0]);
     }
+
+    /// Blocked MULTI-SEQUENCE entry point: one decode step's worth of QK
+    /// scoring for a whole batch of sequences sharing this scratch.
+    ///
+    /// `out[s][h]` receives the scores of sequence `s`, query head `h`.
+    /// Each sequence's cos/sin basis is built once per group and shared by
+    /// all of its GQA query heads; across sequences the LUT/basis/unpack
+    /// scratch is reused, so a worker thread scores its entire shard with
+    /// zero allocation at steady state.  This is the kernel the
+    /// [`crate::coordinator::pool::DecodePool`] workers and the
+    /// `decode_batch` bench drive.
+    pub fn scores_batch(&mut self, jobs: &[SeqScoreJob<'_>], out: &mut [Vec<Vec<f32>>]) {
+        assert_eq!(jobs.len(), out.len());
+        for (job, o) in jobs.iter().zip(out.iter_mut()) {
+            self.scores_groups(job.qs, job.groups, o);
+        }
+    }
+}
+
+/// One sequence's slice of a batched decode step: its GQA query heads and
+/// a borrowed view of its cached key groups.
+pub struct SeqScoreJob<'a> {
+    /// query rows, one per query head attached to this kv stream
+    pub qs: &'a [&'a [f32]],
+    /// the sequence's finalized (quantized) key groups
+    pub groups: &'a [PolarGroup],
 }
 
 #[cfg(test)]
@@ -208,6 +242,42 @@ mod tests {
                     want
                 );
             }
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_sequence() {
+        let mut rng = Rng::new(23);
+        let d = 32;
+        let spec = PolarSpec::new(4, 4, 16);
+        let hq = 2;
+        // three sequences of different lengths
+        let encs: Vec<_> = [2usize, 3, 1]
+            .iter()
+            .map(|&gs| polar::encode(&rng.normal_vec(gs * 16 * d), d, &spec))
+            .collect();
+        let qs: Vec<Vec<Vec<f32>>> = (0..encs.len())
+            .map(|_| (0..hq).map(|_| rng.normal_vec(d)).collect())
+            .collect();
+        let qrefs: Vec<Vec<&[f32]>> = qs
+            .iter()
+            .map(|sq| sq.iter().map(|q| q.as_slice()).collect())
+            .collect();
+        let jobs: Vec<SeqScoreJob> = encs
+            .iter()
+            .zip(&qrefs)
+            .map(|(e, q)| SeqScoreJob { qs: q, groups: &e.groups })
+            .collect();
+
+        let mut lut = QkLut::new(spec, d, hq);
+        let mut batched: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); hq]; encs.len()];
+        lut.scores_batch(&jobs, &mut batched);
+
+        for (s, enc) in encs.iter().enumerate() {
+            let mut single = vec![Vec::new(); hq];
+            lut.scores_multi(&qrefs[s], enc, &mut single);
+            assert_eq!(batched[s], single, "sequence {s}");
+            assert_eq!(batched[s][0].len(), enc.tokens());
         }
     }
 

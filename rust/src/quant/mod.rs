@@ -24,7 +24,7 @@ pub mod spec;
 pub mod value;
 pub mod zipcache;
 
-pub use lut::QkLut;
+pub use lut::{QkLut, SeqScoreJob};
 pub use polar::{PolarEncoded, PolarGroup, PolarSpec};
 pub use spec::{KeyCodec, QuantSpec};
 

@@ -1,0 +1,64 @@
+//! Offline stand-in for the PJRT executor (default build).
+//!
+//! The real executor needs the `xla` bindings crate, which the offline
+//! image does not carry.  This stub exposes the same public surface so the
+//! engine's PJRT arm type-checks; `load` always fails with a clear
+//! message, so no stub method past construction is ever reachable.  The
+//! engine integration tests gate on `artifacts/manifest.json` existing and
+//! skip cleanly where this stub is in play.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+use super::marshal::{DecodeInputs, DecodeOutputs, PrefillOutputs};
+pub use super::marshal::{batch_dense, split_prefill_kv};
+
+const NO_PJRT: &str =
+    "polarquant was built without the `pjrt` feature; the PJRT backend is \
+     unavailable — use the native backend, or rebuild with `--features pjrt` \
+     and a vendored `xla` crate";
+
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    weight_names: Vec<String>,
+}
+
+impl PjrtRuntime {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        // Parse the manifest first so a missing-artifacts error (the common
+        // case) is reported as such, not as a feature problem.
+        let _ = Manifest::load(artifacts_dir)?;
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn warmup(&mut self) -> Result<()> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn decode(&mut self, _graph: &str, _ins: &DecodeInputs) -> Result<DecodeOutputs> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn prefill(
+        &mut self,
+        _graph: &str,
+        _tokens: &[i32],
+        _prompt_len: &[i32],
+    ) -> Result<PrefillOutputs> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn encode(&mut self, _graph: &str, _k: &[f32]) -> Result<Vec<Vec<f32>>> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn weight_names(&self) -> &[String] {
+        &self.weight_names
+    }
+}

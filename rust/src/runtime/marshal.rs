@@ -1,0 +1,139 @@
+//! Host-side marshalling between the coordinator's per-sequence caches and
+//! the fixed-shape AOT graph layouts.  Pure Rust — shared by the real PJRT
+//! executor (`--features pjrt`) and the offline stub, and unit-testable
+//! without any XLA runtime.
+
+use crate::kvcache::seq::DenseCache;
+
+/// Batched decode-step inputs, already in graph layout.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeInputs {
+    pub tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub cache_len: Vec<i32>,
+    pub resid_len: Vec<i32>,
+    pub theta_code: Vec<i32>,
+    pub rho_code: Vec<i32>,
+    pub rho_z: Vec<f32>,
+    pub rho_s: Vec<f32>,
+    pub theta_z: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    pub resid_k: Vec<f32>,
+    pub resid_v: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DecodeOutputs {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (L, B, Kv, dh)
+    pub new_k: Vec<f32>,
+    pub new_v: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PrefillOutputs {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (L, B, Kv, T, dh)
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Batch per-sequence dense caches into graph layout (L, B, Kv, ...).
+pub fn batch_dense(
+    caches: &[&DenseCache],
+    n_layers: usize,
+    n_kv: usize,
+    s_cap: usize,
+    r_cap: usize,
+    d: usize,
+    group: usize,
+    pad_to_batch: usize,
+) -> DecodeInputs {
+    let b_real = caches.len();
+    let b = pad_to_batch.max(b_real);
+    let d2 = d / 2;
+    let gcap = s_cap / group;
+    let mut ins = DecodeInputs {
+        tokens: vec![0; b],
+        positions: vec![0; b],
+        cache_len: vec![0; b],
+        resid_len: vec![0; b],
+        theta_code: vec![0; n_layers * b * n_kv * s_cap * d2],
+        rho_code: vec![0; n_layers * b * n_kv * s_cap * d2],
+        rho_z: vec![0.0; n_layers * b * n_kv * gcap * d2],
+        rho_s: vec![1e-8; n_layers * b * n_kv * gcap * d2],
+        theta_z: vec![0.0; n_layers * b * n_kv * gcap * d2],
+        theta_s: vec![1e-8; n_layers * b * n_kv * gcap * d2],
+        v_cache: vec![0.0; n_layers * b * n_kv * s_cap * d],
+        resid_k: vec![0.0; n_layers * b * n_kv * r_cap * d],
+        resid_v: vec![0.0; n_layers * b * n_kv * r_cap * d],
+    };
+    for (bi, dc) in caches.iter().enumerate() {
+        ins.cache_len[bi] = dc.cache_len as i32;
+        ins.resid_len[bi] = dc.resid_len as i32;
+        for l in 0..n_layers {
+            for h in 0..n_kv {
+                let src = l * n_kv + h; // per-seq (L, Kv, ...) index base
+                let dst = (l * b + bi) * n_kv + h; // batched (L, B, Kv, ...)
+                let (cs, cd) = (src * s_cap * d2, dst * s_cap * d2);
+                ins.theta_code[cd..cd + s_cap * d2]
+                    .copy_from_slice(&dc.theta_code[cs..cs + s_cap * d2]);
+                ins.rho_code[cd..cd + s_cap * d2]
+                    .copy_from_slice(&dc.rho_code[cs..cs + s_cap * d2]);
+                let (ps, pd) = (src * gcap * d2, dst * gcap * d2);
+                ins.rho_z[pd..pd + gcap * d2].copy_from_slice(&dc.rho_z[ps..ps + gcap * d2]);
+                ins.rho_s[pd..pd + gcap * d2].copy_from_slice(&dc.rho_s[ps..ps + gcap * d2]);
+                ins.theta_z[pd..pd + gcap * d2]
+                    .copy_from_slice(&dc.theta_z[ps..ps + gcap * d2]);
+                ins.theta_s[pd..pd + gcap * d2]
+                    .copy_from_slice(&dc.theta_s[ps..ps + gcap * d2]);
+                let (vs, vd) = (src * s_cap * d, dst * s_cap * d);
+                ins.v_cache[vd..vd + s_cap * d].copy_from_slice(&dc.v[vs..vs + s_cap * d]);
+                let (rs, rd) = (src * r_cap * d, dst * r_cap * d);
+                ins.resid_k[rd..rd + r_cap * d].copy_from_slice(&dc.resid_k[rs..rs + r_cap * d]);
+                ins.resid_v[rd..rd + r_cap * d].copy_from_slice(&dc.resid_v[rs..rs + r_cap * d]);
+            }
+        }
+    }
+    ins
+}
+
+/// Slice one sequence's (L, Kv, T, d) K or V block out of a batched
+/// prefill output (L, B, Kv, T, d).
+pub fn split_prefill_kv(
+    batched: &[f32],
+    n_layers: usize,
+    batch: usize,
+    n_kv: usize,
+    t: usize,
+    d: usize,
+    b: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_layers * n_kv * t * d];
+    for l in 0..n_layers {
+        for h in 0..n_kv {
+            let src = (((l * batch + b) * n_kv) + h) * t * d;
+            let dst = (l * n_kv + h) * t * d;
+            out[dst..dst + t * d].copy_from_slice(&batched[src..src + t * d]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_prefill_layout() {
+        // L=1, B=2, Kv=1, T=2, d=2 -> batched len 8
+        let batched: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let b0 = split_prefill_kv(&batched, 1, 2, 1, 2, 2, 0);
+        let b1 = split_prefill_kv(&batched, 1, 2, 1, 2, 2, 1);
+        assert_eq!(b0, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(b1, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -6,9 +6,23 @@
 //! 64-bit-id serialized protos; the text parser reassigns ids — see
 //! /opt/xla-example/README.md and DESIGN.md §7).  Executables are compiled
 //! lazily per shape bucket and cached for the process lifetime.
+//!
+//! Host-side layout marshalling lives in [`marshal`] (pure Rust).  The
+//! executor itself is feature-gated: `--features pjrt` compiles the real
+//! XLA-backed [`executor`]; default (offline) builds compile the stub in
+//! `executor_stub.rs`, whose `PjrtRuntime::load` fails with a clear
+//! message — callers wanting to serve in an offline build must select the
+//! native backend explicitly (e.g. `--backend native|synthetic`).
 
-pub mod executor;
 pub mod manifest;
+pub mod marshal;
 
-pub use executor::{DecodeInputs, DecodeOutputs, PjrtRuntime, PrefillOutputs};
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
+pub mod executor;
+
+pub use executor::PjrtRuntime;
 pub use manifest::{GraphInfo, Manifest};
+pub use marshal::{batch_dense, split_prefill_kv, DecodeInputs, DecodeOutputs, PrefillOutputs};

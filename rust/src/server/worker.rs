@@ -1,4 +1,10 @@
 //! Engine worker threads + the TCP accept loop.
+//!
+//! Two layers of parallelism compose here: `n_workers` engines (each with
+//! its own model + cache, fed by the session-affinity router), and inside
+//! each native engine an optional decode pool (`EngineOpts::decode_workers`)
+//! that fans every decode iteration over balanced cache-length shards.
+//! The factory decides the per-engine pool width; `serve` just reports it.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -129,6 +135,12 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
         let sd = shutdown.clone();
         workers.push(std::thread::spawn(move || {
             let mut engine = factory(w);
+            if engine.decode_pool_width() > 1 {
+                eprintln!(
+                    "[server] engine {w}: decode pool width {}",
+                    engine.decode_pool_width()
+                );
+            }
             worker_loop(&mut engine, rx, &sd)
         }));
     }

@@ -7,7 +7,7 @@ use polarquant::kvcache::eviction::snapkv_select;
 use polarquant::kvcache::{CacheConfig, SequenceCache};
 use polarquant::quant::pack::PackedCodes;
 use polarquant::quant::polar::{self, PolarSpec};
-use polarquant::quant::{dequantize, qparams, quantize, QkLut};
+use polarquant::quant::{dequantize, qparams, quantize, QkLut, QuantSpec, SeqScoreJob};
 use polarquant::tensor::ops::dot;
 use polarquant::util::rng::Rng;
 
@@ -24,7 +24,96 @@ fn prop_pack_roundtrip() {
             .collect();
         let p = PackedCodes::from_codes(&codes, bits);
         assert_eq!(p.unpack(), codes, "seed {seed} bits {bits}");
-        assert!(p.nbytes() <= n * bits as usize / 8 + 1);
+        // packing is tight: exactly ceil(n*bits/8) bytes, no slack
+        assert_eq!(p.nbytes(), (n * bits as usize).div_ceil(8), "seed {seed}");
+        // random access agrees with the bulk unpack
+        for _ in 0..10 {
+            let i = rng.below(n);
+            assert_eq!(p.get(i), codes[i], "seed {seed} bits {bits} i {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_polar_bits_per_element_invariants() {
+    // The paper's §B bit accounting: (r+t)/2 bits per original element
+    // plus four fp16 params per (group, channel-pair) amortized over the
+    // group — checked across every (r_bits, t_bits, group) combination.
+    for r in 1..=8u32 {
+        for t in 1..=8u32 {
+            for group in [8usize, 16, 32, 64, 128, 256] {
+                let spec = PolarSpec::new(r, t, group);
+                let got = spec.bits_per_element();
+                let want = (r + t) as f64 / 2.0 + 32.0 / group as f64;
+                assert!((got - want).abs() < 1e-12, "r{r} t{t} g{group}: {got} vs {want}");
+                // one extra bit on either channel costs exactly 1/2
+                // bit/element (two elements share a sub-vector)
+                if r < 8 {
+                    let up = PolarSpec::new(r + 1, t, group).bits_per_element();
+                    assert!((up - got - 0.5).abs() < 1e-12, "r{r} t{t} g{group}");
+                }
+                if t < 8 {
+                    let up = PolarSpec::new(r, t + 1, group).bits_per_element();
+                    assert!((up - got - 0.5).abs() < 1e-12, "r{r} t{t} g{group}");
+                }
+                // doubling the group strictly shrinks the param overhead
+                let bigger = PolarSpec::new(r, t, group * 2).bits_per_element();
+                assert!(bigger < got, "r{r} t{t} g{group}");
+                // never worse than the fp16 baseline
+                assert!(got < 16.0, "r{r} t{t} g{group}");
+                // the QuantSpec facade agrees with the spec type
+                let facade = QuantSpec::Polar { r_bits: r, t_bits: t, group };
+                assert!(
+                    (facade.bits_per_element(128) - got).abs() < 1e-12,
+                    "facade disagrees at r{r} t{t} g{group}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scores_batch_matches_per_sequence() {
+    // The blocked multi-sequence entry point must be bit-identical to
+    // scoring each sequence alone, across both the fused (r+t <= 8) and
+    // general (r+t > 8) unpack paths, ragged lengths, and head counts.
+    for seed in 0..40 {
+        let mut rng = Rng::new(8000 + seed);
+        let d = 2 * rng.range(2, 17);
+        let group = [8usize, 16][rng.below(2)];
+        let r_bits = rng.range(2, 7) as u32;
+        let t_bits = rng.range(2, 7) as u32;
+        let spec = PolarSpec::new(r_bits, t_bits, group);
+        let hq = rng.range(1, 4);
+        let n_seqs = rng.range(1, 5);
+        let encs: Vec<polar::PolarEncoded> = (0..n_seqs)
+            .map(|_| {
+                let groups = rng.range(1, 4);
+                polar::encode(&rng.normal_vec(groups * group * d), d, &spec)
+            })
+            .collect();
+        let qs: Vec<Vec<Vec<f32>>> = (0..n_seqs)
+            .map(|_| (0..hq).map(|_| rng.normal_vec(d)).collect())
+            .collect();
+        let qrefs: Vec<Vec<&[f32]>> = qs
+            .iter()
+            .map(|sq| sq.iter().map(|q| q.as_slice()).collect())
+            .collect();
+        let jobs: Vec<SeqScoreJob> = encs
+            .iter()
+            .zip(&qrefs)
+            .map(|(e, q)| SeqScoreJob { qs: q, groups: &e.groups })
+            .collect();
+
+        let mut lut = QkLut::new(spec, d, hq);
+        let mut batched: Vec<Vec<Vec<f32>>> = (0..n_seqs).map(|_| vec![Vec::new(); hq]).collect();
+        lut.scores_batch(&jobs, &mut batched);
+        for s in 0..n_seqs {
+            let mut single = vec![Vec::new(); hq];
+            lut.scores_multi(&qrefs[s], &encs[s], &mut single);
+            assert_eq!(batched[s], single, "seed {seed} seq {s}");
+            assert_eq!(batched[s][0].len(), encs[s].tokens(), "seed {seed} seq {s}");
+        }
     }
 }
 
