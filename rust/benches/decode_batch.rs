@@ -12,6 +12,11 @@
 //!
 //! Engine section: end-to-end decode tokens/s of the native engine with
 //! the fixed decode pool on vs off, same request mix.
+//!
+//! Chunked-prefill section: worst-case decode stall (max engine-step
+//! wall time) while long prompts arrive mid-decode, chunking off vs on
+//! (`--prefill-chunk N`, default 16) — the head-of-line-blocking probe
+//! CI tracks per commit.
 
 use polarquant::coordinator::{Engine, EngineOpts, Request};
 use polarquant::model::ModelConfig;
@@ -162,6 +167,73 @@ fn engine_run(batch: usize, workers: usize, prompt_len: usize, gen_len: usize) -
     (eng.metrics.decode_tokens - tok0) as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Head-of-line blocking probe: a batch of sequences decodes while long
+/// prompts keep arriving.  Returns (decode tok/s, worst step wall ms,
+/// prefill chunks run) — with `chunk == 0` the worst step contains a
+/// whole-prompt inline prefill, the head-of-line blocking chunked
+/// prefill removes.
+fn chunked_run(chunk: usize, decoders: usize, prompt_len: usize) -> (f64, f64, u64) {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = chunk;
+    opts.policy.max_running = 64;
+    opts.admission.max_queue = 256;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 5, 6.0, opts);
+    let mut rng = Rng::new(13);
+    // warm pool of decoders with short prompts and long generations
+    for i in 0..decoders {
+        let prompt: Vec<u32> = (0..8).map(|_| rng.below(128) as u32).collect();
+        eng.submit(Request::greedy(i as u64, prompt, 64)).unwrap();
+    }
+    while eng.metrics.requests_finished == 0 && eng.running() < decoders {
+        eng.step().unwrap();
+    }
+    // long prompts arrive while the pool decodes; one engine step is the
+    // longest a decoding sequence waits for its next token, so step wall
+    // time IS the decode stall — directly comparable across modes (the
+    // chunked engine additionally records its own decode_stall hist)
+    let tok0 = eng.metrics.decode_tokens; // exclude warm-up tokens
+    let t0 = std::time::Instant::now();
+    for i in 0..4 {
+        let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(128) as u32).collect();
+        eng.submit(Request::greedy(1000 + i as u64, prompt, 8)).unwrap();
+    }
+    let mut step_ms: Vec<f64> = Vec::new();
+    while !eng.idle() {
+        let s = std::time::Instant::now();
+        eng.step().unwrap();
+        step_ms.push(s.elapsed().as_secs_f64() * 1e3);
+    }
+    let tok_s = (eng.metrics.decode_tokens - tok0) as f64 / t0.elapsed().as_secs_f64();
+    // WORST step is the signal: with chunk=0 only a couple of steps carry
+    // the inline prefills, so a p95 over all steps would never see them —
+    // max is the head-of-line blocking bound a decoder actually observes
+    let stall_max_ms = step_ms.iter().cloned().fold(0.0f64, f64::max);
+    (tok_s, stall_max_ms, eng.metrics.prefill_chunks)
+}
+
+fn chunked_section(quick: bool, chunk: usize) -> Vec<Value> {
+    let (prompt_len, decoders) = if quick { (128, 8) } else { (512, 16) };
+    let mut rows = Vec::new();
+    println!("# chunked prefill: decode stall while {decoders} sequences decode");
+    println!("# long prompts of {prompt_len} tokens arrive mid-decode\n");
+    for &c in &[0usize, chunk] {
+        let (tok_s, stall_max_ms, chunks) = chunked_run(c, decoders, prompt_len);
+        println!(
+            "prefill_chunk {c:>4}: {tok_s:>9.1} tok/s   worst stall {stall_max_ms:>8.3} ms   ({chunks} chunks)"
+        );
+        rows.push(obj(vec![
+            ("prefill_chunk", num(c as f64)),
+            ("prompt_len", num(prompt_len as f64)),
+            ("decoders", num(decoders as f64)),
+            ("decode_tok_s", num(tok_s)),
+            ("decode_stall_max_ms", num(stall_max_ms)),
+            ("prefill_chunks", num(chunks as f64)),
+        ]));
+    }
+    println!();
+    rows
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -191,7 +263,16 @@ fn engine_section(quick: bool) -> Vec<Value> {
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    // chunk size for the chunked-prefill section (CI passes this so the
+    // JSON artifact tracks decode-stall regressions per commit)
+    let chunk = args
+        .iter()
+        .position(|a| a == "--prefill-chunk")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
     let ctx = if quick { 512 } else { 2048 };
     let opts = BenchOpts {
         warmup: std::time::Duration::from_millis(if quick { 20 } else { 120 }),
@@ -202,6 +283,7 @@ fn main() {
 
     let kernel_rows = kernel_section(ctx, opts);
     let engine_rows = engine_section(quick);
+    let chunked_rows = chunked_section(quick, chunk);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -218,6 +300,7 @@ fn main() {
         ),
         ("kernel", Value::Arr(kernel_rows)),
         ("engine", Value::Arr(engine_rows)),
+        ("chunked_prefill", Value::Arr(chunked_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

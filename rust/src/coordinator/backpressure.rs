@@ -23,6 +23,21 @@ pub enum AdmitDecision {
     Admit,
     QueueFull,
     MemoryPressure,
+    /// a prompt with no tokens can never produce logits to sample from
+    EmptyPrompt,
+}
+
+impl AdmitDecision {
+    /// Stable wire-format label for the rejection protocol (the server's
+    /// `reason` field).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            AdmitDecision::Admit => "admit",
+            AdmitDecision::QueueFull => "queue_full",
+            AdmitDecision::MemoryPressure => "memory_pressure",
+            AdmitDecision::EmptyPrompt => "empty_prompt",
+        }
+    }
 }
 
 impl AdmissionPolicy {
@@ -31,8 +46,12 @@ impl AdmissionPolicy {
         &self,
         queued: usize,
         cache: &CacheManager,
+        prompt_tokens: usize,
         expected_tokens: usize,
     ) -> AdmitDecision {
+        if prompt_tokens == 0 {
+            return AdmitDecision::EmptyPrompt;
+        }
         if queued >= self.max_queue {
             return AdmitDecision::QueueFull;
         }
@@ -66,14 +85,24 @@ mod tests {
     fn queue_limit() {
         let p = AdmissionPolicy { max_queue: 2, max_running: 8 };
         let c = cache(usize::MAX);
-        assert_eq!(p.admit(1, &c, 10), AdmitDecision::Admit);
-        assert_eq!(p.admit(2, &c, 10), AdmitDecision::QueueFull);
+        assert_eq!(p.admit(1, &c, 4, 10), AdmitDecision::Admit);
+        assert_eq!(p.admit(2, &c, 4, 10), AdmitDecision::QueueFull);
     }
 
     #[test]
     fn memory_limit() {
         let p = AdmissionPolicy::default();
         let c = cache(16); // tiny budget
-        assert_eq!(p.admit(0, &c, 4096), AdmitDecision::MemoryPressure);
+        assert_eq!(p.admit(0, &c, 4, 4096), AdmitDecision::MemoryPressure);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_with_a_reason() {
+        let p = AdmissionPolicy::default();
+        let c = cache(usize::MAX);
+        assert_eq!(p.admit(0, &c, 0, 16), AdmitDecision::EmptyPrompt);
+        assert_eq!(AdmitDecision::EmptyPrompt.reason(), "empty_prompt");
+        assert_eq!(AdmitDecision::QueueFull.reason(), "queue_full");
+        assert_eq!(AdmitDecision::MemoryPressure.reason(), "memory_pressure");
     }
 }

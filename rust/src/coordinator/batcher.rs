@@ -64,6 +64,38 @@ pub fn plan_decode_batches(
     (batches, overflow)
 }
 
+/// One chunked-prefill grant: run `take` prompt tokens of request `id`
+/// this engine step.
+pub type PrefillGrant = (u64, usize);
+
+/// Allocate this step's prefill token quota across the prefilling
+/// sequences, FCFS in arrival order: each request gets at most one
+/// `chunk`-sized slice, and the grants together never exceed `budget`
+/// tokens — the engine's bound on how long a decode iteration can stall
+/// behind prefill work.  With `budget == chunk` (the engine default) at
+/// most one chunk's compute separates consecutive decode iterations.
+pub fn plan_prefill_chunks(
+    remaining: &[(u64, usize)], // (request id, prompt tokens left) in arrival order
+    chunk: usize,
+    budget: usize,
+) -> Vec<PrefillGrant> {
+    assert!(chunk > 0, "chunk size must be positive");
+    let mut grants = Vec::new();
+    let mut left = budget;
+    for &(id, rem) in remaining {
+        if left == 0 {
+            break;
+        }
+        if rem == 0 {
+            continue;
+        }
+        let take = rem.min(chunk).min(left);
+        grants.push((id, take));
+        left -= take;
+    }
+    grants
+}
+
 /// Partition one decode step's sequences into `workers` shards balanced
 /// by cache length (LPT greedy: longest first onto the lightest shard).
 /// Per-token decode cost is dominated by walking the quantized pages, so
@@ -125,6 +157,26 @@ mod tests {
         let (batches, overflow) = plan_decode_batches(&m, vec![(9, 99_999)], 16);
         assert!(batches.is_empty());
         assert_eq!(overflow, vec![9]);
+    }
+
+    #[test]
+    fn prefill_quota_is_fcfs_and_bounded() {
+        // head request takes a full chunk; the rest of the budget spills
+        // FCFS onto the next request
+        let rem = vec![(1u64, 10usize), (2, 50), (3, 4)];
+        let grants = plan_prefill_chunks(&rem, 8, 8);
+        assert_eq!(grants, vec![(1, 8)]);
+        // bigger budget: one chunk each until the budget runs out
+        let grants = plan_prefill_chunks(&rem, 8, 20);
+        assert_eq!(grants, vec![(1, 8), (2, 8), (3, 4)]);
+        let total: usize = grants.iter().map(|&(_, t)| t).sum();
+        assert!(total <= 20);
+        // a short tail takes only what it needs
+        let grants = plan_prefill_chunks(&[(7, 3)], 8, 8);
+        assert_eq!(grants, vec![(7, 3)]);
+        // finished entries are skipped, empty input is fine
+        assert!(plan_prefill_chunks(&[(9, 0)], 8, 8).is_empty());
+        assert!(plan_prefill_chunks(&[], 8, 8).is_empty());
     }
 
     #[test]

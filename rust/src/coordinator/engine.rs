@@ -1,20 +1,27 @@
 //! The serving engine: scheduler + cache + backend in one decode loop.
 //!
-//! `step()` is one scheduler iteration: admit up to `prefill_per_step`
-//! queued requests (prefill + cache fill + first token), then run one
-//! decode iteration across every running sequence — natively through the
-//! fixed [`DecodePool`] (thread-parallel over balanced cache-length
-//! shards) or inline when `decode_workers <= 1`, or batched into AOT
-//! shape buckets on the PJRT backend.
+//! `step()` is one scheduler iteration.  With chunked prefill OFF (the
+//! legacy phase model) it admits up to `prefill_per_step` queued requests
+//! and prefills each whole prompt inline, then decodes.  With
+//! `EngineOpts::prefill_chunk > 0` (native backend) the engine is a
+//! continuously-batched loop: admissions enter `Prefilling` with a
+//! resumable cursor, each step grants at most one chunk's worth of
+//! prefill tokens (FCFS across prefilling sequences, planned by
+//! [`super::batcher::plan_prefill_chunks`]), and a decode iteration for
+//! every `Decoding` sequence runs in the SAME step — so no running
+//! sequence ever waits more than one chunk's compute for its next token.
+//! Decode fans over the fixed [`DecodePool`] (thread-parallel over
+//! balanced cache-length shards) or runs inline when `decode_workers <=
+//! 1`, or batches into AOT shape buckets on the PJRT backend.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::backpressure::{AdmissionPolicy, AdmitDecision};
-use super::batcher::{plan_decode_batches, plan_decode_shards};
+use super::batcher::{plan_decode_batches, plan_decode_shards, plan_prefill_chunks};
 use super::metrics::Metrics;
 use super::pool::{DecodePool, DecodeTask, StepResult};
 use super::request::{Request, RequestId, RequestState, Tracked};
@@ -51,6 +58,17 @@ pub struct EngineOpts {
     /// Decode threads for the native backend: > 1 fans each decode
     /// iteration over a fixed worker pool (0 and 1 both mean inline).
     pub decode_workers: usize,
+    /// Chunked prefill (native backend): prompts enter the cache this
+    /// many tokens per engine step, interleaved with decode iterations —
+    /// 0 disables chunking (whole prompt prefills inline, stalling the
+    /// step).  Greedy rollouts are bit-identical at any chunk size.
+    pub prefill_chunk: usize,
+    /// With chunked prefill: finalize (quantize) full groups as chunks
+    /// land instead of at end-of-prompt.  Cheaper residency for very long
+    /// prompts, but later chunks attend through the LUT at the paper's
+    /// quantization error, so rollouts are no longer bit-identical to the
+    /// unchunked path.
+    pub prefill_quantize_eagerly: bool,
 }
 
 impl Default for EngineOpts {
@@ -63,6 +81,8 @@ impl Default for EngineOpts {
             cache_budget_bytes: usize::MAX,
             seed: 0,
             decode_workers: 0,
+            prefill_chunk: 0,
+            prefill_quantize_eagerly: false,
         }
     }
 }
@@ -76,6 +96,28 @@ pub struct Completion {
     pub total_s: Option<f64>,
     /// true if the sequence outgrew every AOT bucket and was truncated
     pub truncated: bool,
+    /// true if admission rejected the request outright (never ran);
+    /// distinct from `truncated`, which means it RAN but was cut short
+    pub rejected: bool,
+    /// why admission rejected it (see [`AdmitDecision::reason`])
+    pub reason: Option<&'static str>,
+}
+
+impl Completion {
+    /// The reply a rejected request gets: no tokens, no timings, and an
+    /// explicit reason so clients can tell backpressure from truncation.
+    pub fn rejected(id: RequestId, prompt_len: usize, why: AdmitDecision) -> Self {
+        Completion {
+            id,
+            prompt_len,
+            tokens: Vec::new(),
+            ttft_s: None,
+            total_s: None,
+            truncated: false,
+            rejected: true,
+            reason: Some(why.reason()),
+        }
+    }
 }
 
 pub struct Engine {
@@ -84,6 +126,9 @@ pub struct Engine {
     cache: CacheManager,
     queue: VecDeque<Tracked>,
     running: HashMap<RequestId, Tracked>,
+    /// arrival order of sequences currently in `Prefilling` (chunked
+    /// prefill grants are FCFS over this queue)
+    prefill_order: VecDeque<RequestId>,
     /// id -> cache id (same value; kept for clarity)
     pub metrics: Metrics,
     opts: EngineOpts,
@@ -111,6 +156,7 @@ impl Engine {
             cache,
             queue: VecDeque::new(),
             running: HashMap::new(),
+            prefill_order: VecDeque::new(),
             metrics: Metrics::new(),
             opts,
             rng: Rng::new(opts.seed),
@@ -122,6 +168,15 @@ impl Engine {
     /// Decode parallelism of the native backend (1 = inline).
     pub fn decode_pool_width(&self) -> usize {
         self.pool.as_ref().map(|p| p.width()).unwrap_or(1)
+    }
+
+    /// Chunked-prefill grant size in effect (0 = whole-prompt prefill).
+    pub fn prefill_chunk_size(&self) -> usize {
+        if self.chunked_prefill() {
+            self.opts.prefill_chunk
+        } else {
+            0
+        }
     }
 
     /// Native engine from synthetic weights (tests/benches).
@@ -162,14 +217,23 @@ impl Engine {
         self.queue.is_empty() && self.running.is_empty()
     }
 
+    /// Lifecycle + generated-token count of a running request (None once
+    /// finished or never admitted) — observability for tests and the
+    /// server's introspection.
+    pub fn progress(&self, id: RequestId) -> Option<(RequestState, usize)> {
+        self.running.get(&id).map(|t| (t.state, t.generated.len()))
+    }
+
     pub fn cache_report(&self) -> crate::kvcache::MemoryReport {
         self.cache.report()
     }
 
-    /// Submit a request; rejects under backpressure.
+    /// Submit a request; rejects under backpressure (or an empty prompt).
     pub fn submit(&mut self, req: Request) -> std::result::Result<(), AdmitDecision> {
         let expected = req.prompt.len() + req.max_new_tokens;
-        match self.opts.admission.admit(self.queue.len(), &self.cache, expected) {
+        let decision =
+            self.opts.admission.admit(self.queue.len(), &self.cache, req.prompt.len(), expected);
+        match decision {
             AdmitDecision::Admit => {
                 self.metrics.requests_submitted += 1;
                 self.queue.push_back(Tracked::new(req));
@@ -182,19 +246,46 @@ impl Engine {
         }
     }
 
+    /// True when this engine runs the chunked-prefill continuous loop
+    /// (native backend, `prefill_chunk > 0`; SnapKV needs whole-prompt
+    /// importance, so it keeps the inline path).
+    fn chunked_prefill(&self) -> bool {
+        self.opts.prefill_chunk > 0
+            && self.opts.snapkv.is_none()
+            && matches!(self.backend, Backend::Native(_))
+    }
+
     /// One scheduler iteration; returns completions.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
-        let plan = self.opts.policy.plan(self.queue.len(), self.running.len());
+        let chunked = self.chunked_prefill();
+        let plan = if chunked {
+            let prefilling = self.prefill_order.len();
+            let decoding = self.running.len() - prefilling;
+            self.opts.policy.plan_chunked(self.queue.len(), prefilling, decoding)
+        } else {
+            self.opts.policy.plan(self.queue.len(), self.running.len())
+        };
         for _ in 0..plan.admit {
             let Some(mut tr) = self.queue.pop_front() else { break };
             self.metrics
                 .queue_delay
                 .record_secs(tr.arrived.elapsed().as_secs_f64());
-            self.prefill_one(&mut tr)?;
+            if chunked {
+                tr.state = RequestState::Prefilling;
+                self.cache.create(tr.req.id);
+                self.prefill_order.push_back(tr.req.id);
+            } else {
+                self.prefill_one(&mut tr)?;
+            }
             self.running.insert(tr.req.id, tr);
         }
+        if chunked && !self.prefill_order.is_empty() {
+            self.prefill_chunk_phase()?;
+        }
         let mut done = Vec::new();
-        if plan.decode && !self.running.is_empty() {
+        // the plan says decode MAY run; confirm against actual states
+        // (chunked admissions can still be mid-prefill)
+        if plan.decode && self.running.values().any(|t| t.state == RequestState::Decoding) {
             self.decode_iteration(&mut done)?;
         }
         Ok(done)
@@ -210,6 +301,60 @@ impl Engine {
     }
 
     // ---------------------------------------------------------- prefill
+
+    /// Run this step's prefill-chunk grants: at most one chunk's worth of
+    /// prompt tokens total (FCFS across prefilling sequences), so decode
+    /// iterations never wait longer than one chunk's compute.  A sequence
+    /// whose last chunk lands here samples its first token and moves to
+    /// `Decoding` in the same step.
+    fn prefill_chunk_phase(&mut self) -> Result<()> {
+        let chunk = self.opts.prefill_chunk;
+        let eager = self.opts.prefill_quantize_eagerly;
+        let stalled = self.running.values().any(|t| t.state == RequestState::Decoding);
+        let t0 = Instant::now();
+        let remaining: Vec<(RequestId, usize)> = self
+            .prefill_order
+            .iter()
+            .map(|&id| (id, self.running[&id].prefill_remaining()))
+            .collect();
+        for (id, take) in plan_prefill_chunks(&remaining, chunk, chunk) {
+            let shared = self.cache.get(id).context("prefilling sequence lost its cache")?;
+            let logits = {
+                let Backend::Native(model) = &mut self.backend else {
+                    bail!("chunked prefill requires the native backend");
+                };
+                let tr = &self.running[&id];
+                let pos = tr.prefill_pos;
+                // only the prompt's final chunk needs the lm_head pass
+                let finishing = pos + take == tr.req.prompt.len();
+                let mut cache = shared.lock().unwrap();
+                model.prefill_chunk(&tr.req.prompt[pos..pos + take], pos, &mut cache, eager, finishing)
+            };
+            let tr = self.running.get_mut(&id).unwrap();
+            tr.prefill_pos += take;
+            self.metrics.prefill_tokens += take as u64;
+            self.metrics.prefill_chunks += 1;
+            if tr.prefill_remaining() == 0 {
+                if !eager {
+                    // quantize full groups now, in append order — the same
+                    // groups the unchunked path would have produced
+                    shared.lock().unwrap().flush_groups();
+                }
+                let tok = tr.req.sampler.sample(&logits, &mut self.rng);
+                tr.generated.push(tok);
+                tr.first_token_at = Some(Instant::now());
+                tr.state = RequestState::Decoding;
+                self.metrics.decode_tokens += 1;
+                self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
+            }
+        }
+        self.prefill_order
+            .retain(|id| self.running.get(id).is_some_and(|t| t.state == RequestState::Prefilling));
+        if stalled {
+            self.metrics.decode_stall.record_secs(t0.elapsed().as_secs_f64());
+        }
+        Ok(())
+    }
 
     fn prefill_one(&mut self, tr: &mut Tracked) -> Result<()> {
         tr.state = RequestState::Prefilling;
@@ -288,6 +433,7 @@ impl Engine {
         };
 
         // first generated token comes from the prefill logits
+        tr.prefill_pos = prompt.len();
         let tok = tr.req.sampler.sample(&logits, &mut self.rng);
         tr.generated.push(tok);
         tr.first_token_at = Some(Instant::now());
@@ -302,18 +448,22 @@ impl Engine {
     fn decode_iteration(&mut self, done: &mut Vec<Completion>) -> Result<()> {
         let step_t = Instant::now();
         let ids: Vec<RequestId> = self.running.keys().cloned().collect();
-        // collect (id, quantized cache len) for batching
+        // collect (id, quantized cache len) for batching; sequences still
+        // prefilling (chunked mode) don't decode yet
         let mut seqs: Vec<(u64, usize)> = Vec::new();
         for &id in &ids {
             let tr = &self.running[&id];
-            if tr.done() {
+            if tr.state != RequestState::Decoding || tr.done() {
                 continue;
             }
             let qlen = self.cache.get(id).map(|c| c.lock().unwrap().quantized_len()).unwrap_or(0);
             seqs.push((id, qlen));
         }
 
-        let mut truncated: Vec<RequestId> = Vec::new();
+        // decoded sequence count this iteration (drives decode_steps /
+        // decode_batch_sum identically on both backends)
+        let mut decoded = 0usize;
+        let mut truncated: HashSet<RequestId> = HashSet::new();
         match &mut self.backend {
             Backend::Native(model) => {
                 if let Some(pool) = self.pool.as_mut().filter(|_| seqs.len() > 1) {
@@ -360,8 +510,7 @@ impl Engine {
                         self.metrics.decode_tokens += 1;
                     }
                 }
-                self.metrics.decode_steps += 1;
-                self.metrics.decode_batch_sum += seqs.len() as u64;
+                decoded = seqs.len();
             }
             Backend::Pjrt(rt) => {
                 let (batches, overflow) =
@@ -423,20 +572,25 @@ impl Engine {
                         tr.generated.push(tok);
                         self.metrics.decode_tokens += 1;
                     }
-                    self.metrics.decode_steps += 1;
-                    self.metrics.decode_batch_sum += b.ids.len() as u64;
+                    decoded += b.ids.len();
                 }
             }
         }
-        self.metrics
-            .per_token
-            .record_secs(step_t.elapsed().as_secs_f64());
+        if decoded > 0 {
+            // one decode iteration — however many bucket batches it took
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_batch_sum += decoded as u64;
+            self.metrics
+                .per_token
+                .record_secs(step_t.elapsed().as_secs_f64());
+        }
 
-        // retire finished / truncated sequences
+        // retire finished / truncated sequences (never mid-prefill)
         let now_ids: Vec<RequestId> = self.running.keys().cloned().collect();
         for id in now_ids {
             let is_trunc = truncated.contains(&id);
-            let finished = self.running[&id].done() || is_trunc;
+            let tr = &self.running[&id];
+            let finished = is_trunc || (tr.state == RequestState::Decoding && tr.done());
             if finished {
                 let mut tr = self.running.remove(&id).unwrap();
                 tr.state = RequestState::Finished;
@@ -453,6 +607,8 @@ impl Engine {
                     ttft_s: tr.ttft(),
                     total_s: tr.total_latency(),
                     truncated: is_trunc,
+                    rejected: false,
+                    reason: None,
                 });
             }
         }
@@ -563,6 +719,112 @@ mod tests {
         assert_eq!(eng.decode_pool_width(), 4);
         let eng2 = Engine::native_synthetic(tiny_cfg(), 10, 4.0, EngineOpts::default());
         assert_eq!(eng2.decode_pool_width(), 1);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_unchunked_greedy_rollouts() {
+        // Greedy decode output must be bit-identical with chunked prefill
+        // on/off, at any chunk size and any decode-pool width.
+        let run = |chunk: usize, workers: usize| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = chunk;
+            opts.decode_workers = workers;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 42, 4.0, opts);
+            let prompts: Vec<Vec<u32>> = vec![
+                vec![1, 2, 3],
+                (0..17).map(|i| (i * 5 % 60) as u32).collect(),
+                (0..40).map(|i| (i * 3 % 64) as u32).collect(),
+                (0..9).map(|i| ((i + 7) % 64) as u32).collect(),
+            ];
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(Request::greedy(i as u64, p.clone(), 10)).unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            assert_eq!(done.len(), 4);
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        let base = run(0, 1);
+        for chunk in [1usize, 5, 8, 16, 64] {
+            for workers in [1usize, 4] {
+                assert_eq!(base, run(chunk, workers), "chunk={chunk} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn long_prefill_does_not_stall_running_decoders() {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 4;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 43, 4.0, opts);
+        eng.submit(Request::greedy(1, vec![1, 2, 3], 64)).unwrap();
+        // one step admits + prefills the short prompt (single chunk) and
+        // runs its first decode iteration
+        eng.step().unwrap();
+        assert_eq!(eng.progress(1).unwrap(), (RequestState::Decoding, 2));
+        // a long prompt arrives while 1 is decoding: 32 tokens at chunk 4
+        // = 8 chunked steps, and sequence 1 must gain a token on EVERY
+        // one of them (inter-token gap bounded by one chunk's compute)
+        let long: Vec<u32> = (0..32).map(|i| (i % 64) as u32).collect();
+        eng.submit(Request::greedy(2, long, 4)).unwrap();
+        let mut interleaved_steps = 0;
+        while eng.metrics.prefill_chunks < 1 + 8 {
+            let (_, before) = eng.progress(1).unwrap();
+            eng.step().unwrap();
+            let (_, after) = eng.progress(1).unwrap();
+            assert_eq!(after, before + 1, "decoder stalled behind a prefill chunk");
+            interleaved_steps += 1;
+        }
+        assert_eq!(interleaved_steps, 8, "32-token prompt should take 8 chunks of 4");
+        assert_eq!(eng.progress(2).unwrap().0, RequestState::Decoding);
+        // the stall histogram saw every chunk that ran alongside decoders
+        assert_eq!(eng.metrics.decode_stall.count(), 8);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(eng.metrics.requests_finished, 2);
+    }
+
+    #[test]
+    fn eager_chunked_engine_completes() {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.prefill_quantize_eagerly = true;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 44, 4.0, opts);
+        let prompt: Vec<u32> = (0..30).map(|i| (i % 64) as u32).collect();
+        eng.submit(Request::greedy(1, prompt, 6)).unwrap();
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 6);
+        assert!(!done[0].rejected && !done[0].truncated);
+        assert_eq!(eng.metrics.prefill_chunks, 4, "30 tokens at chunk 8");
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_not_run() {
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 3, 4.0, EngineOpts::default());
+        let r = eng.submit(Request::greedy(1, vec![], 4));
+        assert_eq!(r, Err(AdmitDecision::EmptyPrompt));
+        assert_eq!(eng.metrics.requests_rejected, 1);
+        assert!(eng.idle(), "rejected request must not enter the queue");
+    }
+
+    #[test]
+    fn rejected_completion_is_distinguishable_from_truncation() {
+        let c = Completion::rejected(9, 5, AdmitDecision::QueueFull);
+        assert!(c.rejected && !c.truncated);
+        assert_eq!(c.reason, Some("queue_full"));
+        assert_eq!(c.prompt_len, 5);
+        assert!(c.tokens.is_empty());
+    }
+
+    #[test]
+    fn decode_steps_count_iterations() {
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 6, 4.0, EngineOpts::default());
+        eng.submit(Request::greedy(1, vec![1, 2, 3], 5)).unwrap();
+        eng.run_to_completion().unwrap();
+        // first token from prefill, then 4 decode iterations of batch 1
+        assert_eq!(eng.metrics.decode_steps, 4);
+        assert_eq!(eng.metrics.decode_batch_sum, 4);
+        assert!((eng.metrics.mean_batch() - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -12,13 +12,22 @@ pub struct Metrics {
     pub requests_finished: u64,
     pub requests_rejected: u64,
     pub prefill_tokens: u64,
+    /// prefill chunks executed (chunked-prefill engines only)
+    pub prefill_chunks: u64,
     pub decode_tokens: u64,
+    /// decode iterations: exactly one per engine step that decoded at
+    /// least one token, on BOTH backends (the PJRT path used to count one
+    /// per bucket batch, which skewed `mean_batch` across backends)
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
     pub ttft: LatencyHist,
     pub per_token: LatencyHist,
     pub e2e: LatencyHist,
     pub queue_delay: LatencyHist,
+    /// time decoding sequences spent stalled behind prefill-chunk work,
+    /// recorded once per engine step that ran chunks while ≥1 sequence
+    /// was decoding — the head-of-line blocking chunked prefill bounds
+    pub decode_stall: LatencyHist,
 }
 
 impl Default for Metrics {
@@ -35,6 +44,7 @@ impl Metrics {
             requests_finished: 0,
             requests_rejected: 0,
             prefill_tokens: 0,
+            prefill_chunks: 0,
             decode_tokens: 0,
             decode_steps: 0,
             decode_batch_sum: 0,
@@ -42,6 +52,7 @@ impl Metrics {
             per_token: LatencyHist::new(),
             e2e: LatencyHist::new(),
             queue_delay: LatencyHist::new(),
+            decode_stall: LatencyHist::new(),
         }
     }
 
@@ -65,7 +76,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "reqs {}/{} (rej {}), prefill {} tok, decode {} tok @ {:.1} tok/s, \
              mean batch {:.2}, ttft p50 {:.1}ms p95 {:.1}ms, tok p50 {:.2}ms",
             self.requests_finished,
@@ -78,7 +89,15 @@ impl Metrics {
             self.ttft.p(50.0) * 1e3,
             self.ttft.p(95.0) * 1e3,
             self.per_token.p(50.0) * 1e3,
-        )
+        );
+        if self.prefill_chunks > 0 {
+            s.push_str(&format!(
+                ", {} chunks, decode stall p95 {:.2}ms",
+                self.prefill_chunks,
+                self.decode_stall.p(95.0) * 1e3,
+            ));
+        }
+        s
     }
 }
 

@@ -2,9 +2,11 @@
 //!
 //! * [`request`] — request/response types + lifecycle state machine
 //! * [`backpressure`] — admission control against queue depth and the
-//!   cache manager's memory budget
-//! * [`batcher`] — dynamic batching into the AOT shape buckets
-//! * [`scheduler`] — prefill/decode interleaving policy
+//!   cache manager's memory budget, with typed rejection reasons
+//! * [`batcher`] — dynamic batching into the AOT shape buckets + the
+//!   chunked-prefill token-quota planner
+//! * [`scheduler`] — prefill/decode interleaving policy (whole-prompt or
+//!   chunked continuous batching)
 //! * [`engine`] — ties backend (native or PJRT) + cache + scheduler into
 //!   the decode loop
 //! * [`pool`] — fixed decode worker pool: thread-parallel native decode

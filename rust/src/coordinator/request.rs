@@ -45,6 +45,9 @@ impl Request {
 pub struct Tracked {
     pub req: Request,
     pub state: RequestState,
+    /// prompt tokens already prefilled — the resumable `Prefilling`
+    /// cursor under chunked prefill (== prompt len once decoding)
+    pub prefill_pos: usize,
     pub generated: Vec<u32>,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
@@ -56,11 +59,17 @@ impl Tracked {
         Tracked {
             req,
             state: RequestState::Queued,
+            prefill_pos: 0,
             generated: Vec::new(),
             arrived: Instant::now(),
             first_token_at: None,
             finished_at: None,
         }
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> usize {
+        self.req.prompt.len().saturating_sub(self.prefill_pos)
     }
 
     pub fn done(&self) -> bool {

@@ -34,6 +34,25 @@ impl SchedulerPolicy {
         let admit = queued.min(self.prefill_per_step).min(slots);
         StepPlan { admit, decode: running > 0 || admit > 0 }
     }
+
+    /// Plan for the chunked-prefill engine, where admitted requests stay
+    /// in `Prefilling` across several steps.  `prefill_per_step` bounds
+    /// the number of CONCURRENTLY prefilling sequences rather than
+    /// admissions per step: admitting more while others are mid-prefill
+    /// only multiplies half-filled caches without finishing anyone's
+    /// prompt sooner (the chunk quota is FCFS).
+    pub fn plan_chunked(&self, queued: usize, prefilling: usize, decoding: usize) -> StepPlan {
+        let running = prefilling + decoding;
+        let slots = self.max_running.saturating_sub(running);
+        let admit = queued
+            .min(self.prefill_per_step.saturating_sub(prefilling))
+            .min(slots);
+        // decode MAY run: something is already decoding, or this step's
+        // prefill work (running or newly admitted) can finish a prompt
+        // and decode it in the same iteration — the engine refines this
+        // against actual request states after the chunk phase
+        StepPlan { admit, decode: decoding > 0 || prefilling > 0 || admit > 0 }
+    }
 }
 
 #[cfg(test)]
@@ -58,5 +77,22 @@ mod tests {
     fn idle_engine_does_nothing() {
         let p = SchedulerPolicy::default();
         assert_eq!(p.plan(0, 0), StepPlan { admit: 0, decode: false });
+    }
+
+    #[test]
+    fn chunked_plan_bounds_concurrent_prefills() {
+        let p = SchedulerPolicy { prefill_per_step: 2, max_running: 8 };
+        // nothing prefilling: admit up to the bound (the admitted prompt
+        // may finish prefill and decode this very step)
+        assert_eq!(p.plan_chunked(5, 0, 0), StepPlan { admit: 2, decode: true });
+        // one mid-prefill: only one more slot
+        assert_eq!(p.plan_chunked(5, 1, 3), StepPlan { admit: 1, decode: true });
+        // saturated prefill lane: no admissions, decode continues
+        assert_eq!(p.plan_chunked(5, 2, 3), StepPlan { admit: 0, decode: true });
+        // fully idle: nothing to do
+        assert_eq!(p.plan_chunked(0, 0, 0), StepPlan { admit: 0, decode: false });
+        // running cap still applies
+        let tight = SchedulerPolicy { prefill_per_step: 4, max_running: 4 };
+        assert_eq!(tight.plan_chunked(9, 1, 3).admit, 0);
     }
 }

@@ -96,6 +96,41 @@ impl SequenceCache {
         self.next_pos += tokens;
     }
 
+    /// Append a prefill chunk WITHOUT finalizing groups: layout as
+    /// [`SequenceCache::append_prefill`], but every token lands in the fp
+    /// residual tail.  Chunked prefill uses this so later chunks attend
+    /// over exact fp keys; call [`SequenceCache::flush_groups`] once the
+    /// whole prompt is in to quantize full groups in append order (the
+    /// same groups eager appends would have produced).
+    ///
+    /// Residency note: until the flush, the whole prompt sits in the
+    /// cache at fp width — the same transient peak the unchunked path
+    /// reaches through its full-prompt `k_all`/`v_all` staging buffers,
+    /// but now visible to [`SequenceCache::nbytes`], so concurrent
+    /// admission checks see it (and get MORE conservative, not less).
+    /// For prompts where that fp window matters, eager finalization
+    /// (`EngineOpts::prefill_quantize_eagerly`) caps it at one chunk.
+    pub fn append_prefill_deferred(&mut self, k: &[f32], v: &[f32], tokens: usize) {
+        let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
+        assert_eq!(k.len(), l * h * tokens * d);
+        for layer in 0..l {
+            for head in 0..h {
+                let off = (layer * h + head) * tokens * d;
+                self.stream_mut(layer, head)
+                    .append_block_deferred(&k[off..off + tokens * d], &v[off..off + tokens * d]);
+            }
+        }
+        self.next_pos += tokens;
+    }
+
+    /// Finalize every full group across all streams (end of a deferred
+    /// chunked prefill).
+    pub fn flush_groups(&mut self) {
+        for st in &mut self.streams {
+            st.flush_groups();
+        }
+    }
+
     /// Physical bytes at rest across streams.
     pub fn nbytes(&self) -> usize {
         self.streams.iter().map(|s| s.nbytes()).sum()

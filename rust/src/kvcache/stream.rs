@@ -77,8 +77,8 @@ impl StreamCache {
         debug_assert_eq!(v.len(), self.d);
         self.resid_k.extend_from_slice(k);
         self.resid_v.extend_from_slice(v);
-        if self.resid_len() == self.spec.group {
-            self.finalize_group();
+        if self.resid_len() >= self.spec.group {
+            self.flush_groups();
             true
         } else {
             false
@@ -96,16 +96,50 @@ impl StreamCache {
         }
     }
 
-    fn finalize_group(&mut self) {
-        debug_assert_eq!(self.resid_len(), self.spec.group);
-        let g = polar::encode_group(&self.resid_k, self.d, &self.spec);
-        self.key_groups.push(g);
-        let vals = std::mem::take(&mut self.resid_v);
-        self.value_groups.push(match self.value_bits {
-            None => GroupValues::Fp(vals),
-            Some(bits) => GroupValues::Quant(value::encode(&vals, self.d, bits)),
-        });
-        self.resid_k.clear();
+    /// Bulk append WITHOUT finalizing groups: the residual tail grows past
+    /// `group` tokens and stays fp until [`StreamCache::flush_groups`].
+    /// Chunked prefill appends each chunk this way so later chunks attend
+    /// over exact fp keys; finalization order at flush time matches what
+    /// incremental [`StreamCache::append`] would have produced.
+    pub fn append_block_deferred(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len() % self.d, 0);
+        debug_assert_eq!(v.len(), k.len());
+        self.resid_k.extend_from_slice(k);
+        self.resid_v.extend_from_slice(v);
+    }
+
+    /// Finalize as many full groups as the residual holds, oldest first.
+    /// All full groups are encoded in place and the flushed prefix is
+    /// drained ONCE — a long deferred residual (chunked prefill's
+    /// end-of-prompt flush) costs O(T·d), not O(T²·d/g) front-drains.
+    pub fn flush_groups(&mut self) {
+        let gd = self.spec.group * self.d;
+        let full = self.resid_k.len() / gd;
+        if full == 0 {
+            return;
+        }
+        for gi in 0..full {
+            let off = gi * gd;
+            let g = polar::encode_group(&self.resid_k[off..off + gd], self.d, &self.spec);
+            self.key_groups.push(g);
+            self.value_groups.push(match self.value_bits {
+                None => GroupValues::Fp(self.resid_v[off..off + gd].to_vec()),
+                Some(bits) => {
+                    GroupValues::Quant(value::encode(&self.resid_v[off..off + gd], self.d, bits))
+                }
+            });
+        }
+        // one front drain, and on BOTH buffers, so each keeps its
+        // preallocated capacity (a previous mem::take of resid_v
+        // discarded it, forcing a reallocation per finalized group on
+        // the append hot path)
+        self.resid_k.drain(..full * gd);
+        self.resid_v.drain(..full * gd);
+        // a deferred chunked prefill can have grown these to prompt size;
+        // give that slack back to the allocator (nbytes() never charged
+        // it) while keeping the steady-state one-group capacity
+        self.resid_k.shrink_to(gd);
+        self.resid_v.shrink_to(gd);
     }
 
     /// Physical bytes at rest (codes packed; fp tensors charged as fp16 to
@@ -178,6 +212,50 @@ mod tests {
         assert_eq!(a.quantized_len(), b.quantized_len());
         assert_eq!(a.decode_keys(), b.decode_keys());
         assert_eq!(a.resid_k, b.resid_k);
+    }
+
+    #[test]
+    fn finalize_preserves_capacity_of_both_residual_buffers() {
+        let mut rng = Rng::new(11);
+        let d = 16;
+        let mut sc = StreamCache::new(d, spec(), None);
+        // enough appends to finalize two groups
+        for _ in 0..17 {
+            let k = rng.normal_vec(d);
+            let v = rng.normal_vec(d);
+            sc.append(&k, &v);
+        }
+        assert_eq!(sc.key_groups.len(), 2);
+        // both buffers must keep the preallocated group-sized capacity —
+        // resid_v previously lost its buffer to mem::take every group
+        assert!(sc.resid_k.capacity() >= sc.spec.group * d, "resid_k realloc");
+        assert!(sc.resid_v.capacity() >= sc.spec.group * d, "resid_v realloc");
+    }
+
+    #[test]
+    fn deferred_append_plus_flush_matches_eager() {
+        let mut rng = Rng::new(12);
+        let d = 8;
+        let tokens = 21; // 2 full groups + 5 residual at group=8
+        let k = rng.normal_vec(tokens * d);
+        let v = rng.normal_vec(tokens * d);
+        let mut eager = StreamCache::new(d, spec(), Some(4));
+        eager.append_block(&k, &v);
+        let mut deferred = StreamCache::new(d, spec(), Some(4));
+        // split across uneven "chunks" like a chunked prefill would
+        deferred.append_block_deferred(&k[..5 * d], &v[..5 * d]);
+        assert_eq!(deferred.quantized_len(), 0, "no groups before flush");
+        deferred.append_block_deferred(&k[5 * d..], &v[5 * d..]);
+        assert_eq!(deferred.resid_len(), tokens);
+        deferred.flush_groups();
+        assert_eq!(deferred.quantized_len(), eager.quantized_len());
+        assert_eq!(deferred.decode_keys(), eager.decode_keys());
+        assert_eq!(deferred.resid_k, eager.resid_k);
+        assert_eq!(deferred.resid_v, eager.resid_v);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        deferred.decode_values_into(0, &mut a);
+        eager.decode_values_into(0, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! | [`kvcache`] | paged quantized cache: groups, residual buffer, eviction, memory accounting, shard-safe sequence handles |
 //! | [`model`] | Rust-native twin of the L2 JAX model (config, shared weights, forward) |
 //! | [`runtime`] | PJRT client (feature `pjrt`, stubbed offline), artifact manifest, layout marshalling, shape-bucket executors |
-//! | [`coordinator`] | request router, dynamic batcher, scheduler, engine, metrics |
+//! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, engine, metrics |
 //! | [`coordinator::pool`] | batched thread-parallel LUT decode: fixed worker pool, thread-local `QkLut` scratch, balanced cache-length shards (`benches/decode_batch.rs` tracks it) |
 //! | [`server`] | JSON-lines TCP front-end + client |
 //! | [`workload`] | synthetic activation / request generators (outlier profiles) |

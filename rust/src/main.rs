@@ -3,13 +3,17 @@
 //! ```text
 //! polarquant info      --artifacts artifacts/
 //! polarquant serve     --artifacts artifacts/ --addr 127.0.0.1:7733 --workers 2 --backend pjrt
-//! polarquant serve     --backend synthetic --workers 2 --decode-workers 4
+//! polarquant serve     --backend synthetic --workers 2 --decode-workers 4 --prefill-chunk 64
 //! polarquant generate  --artifacts artifacts/ --prompt 1,2,3 --max-tokens 16 --backend native
 //! polarquant fidelity  --profile qwen-like --d 128 --tokens 512
 //! ```
 //!
 //! `--decode-workers N` (native/synthetic backends) fans each engine's
 //! decode iteration over a fixed N-thread pool (see `coordinator::pool`).
+//! `--prefill-chunk N` (native/synthetic) enables chunked prefill with
+//! continuous batching: prompts enter the cache N tokens per engine step,
+//! so decode iterations of running sequences never stall behind a long
+//! prompt for more than one chunk's compute (0 = off, the default).
 //!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
@@ -108,7 +112,13 @@ fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
     let mut opts = EngineOpts::default();
     // native decode threads per engine (--decode-workers N; 1 = inline)
     opts.decode_workers = args.usize("decode-workers", 1);
-    match args.get("backend", "pjrt").as_str() {
+    // chunked prefill tokens per engine step (0 = whole-prompt prefill)
+    opts.prefill_chunk = args.usize("prefill-chunk", 0);
+    let backend = args.get("backend", "pjrt");
+    if opts.prefill_chunk > 0 && backend == "pjrt" {
+        bail!("--prefill-chunk requires the native or synthetic backend");
+    }
+    match backend.as_str() {
         "pjrt" => Engine::pjrt_from_artifacts(&dir, opts),
         "native" => Engine::native_from_artifacts(&dir, opts),
         "synthetic" => Ok(Engine::native_synthetic(

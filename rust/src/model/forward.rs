@@ -2,7 +2,11 @@
 //!
 //! `prefill` runs full-precision causal attention over the prompt (the
 //! JAX prefill graph's twin) and streams the post-RoPE K/V into the
-//! quantized cache.  `decode_step` is the serving hot path: attention
+//! quantized cache.  `prefill_chunk` is its resumable form: one chunk of
+//! a prompt at a time, attending over whatever the cache already holds
+//! (quantized groups via the LUT, fp residual densely) plus the chunk's
+//! own causal prefix — the primitive under the engine's chunked-prefill
+//! continuous batching.  `decode_step` is the serving hot path: attention
 //! scores over the quantized region come from the PolarQuant LUT
 //! ([`crate::quant::lut::QkLut`]), the fp residual tail and the current
 //! token are scored densely, and the value product uses the fused
@@ -94,6 +98,10 @@ impl Model {
     /// Prefill that additionally accumulates SnapKV importance: the
     /// column-sums of post-softmax attention from the last
     /// `window` query positions, summed over layers and heads.
+    ///
+    /// NOTE: [`Model::prefill_chunk`] mirrors this layer stack and is
+    /// held bit-identical to it by test — apply any math change (bias,
+    /// norm eps, op order) to both.
     pub fn prefill_kv_importance(
         &mut self,
         tokens: &[u32],
@@ -228,6 +236,249 @@ impl Model {
         let mut logits = vec![0.0f32; cfg.vocab];
         matmul_into(&xl, &self.weights.get("lm_head").data, 1, d, cfg.vocab, &mut logits);
         (logits, k_all, v_all, importance)
+    }
+
+    /// Resumable prefill: run `tokens` (one chunk of a prompt) through the
+    /// stack, attending over everything already in `cache` — quantized key
+    /// groups through the PolarQuant LUT, the fp residual tail densely —
+    /// plus the chunk's own causal prefix, then append the chunk's
+    /// post-RoPE K/V.  Returns the last chunk position's logits, so the
+    /// final chunk of a prompt yields the first-token logits.
+    ///
+    /// `start_pos` must equal `cache.next_pos`; RoPE positions continue
+    /// from it, so a prompt split into chunks of ANY size reproduces the
+    /// unchunked [`Model::prefill`] positions exactly.
+    ///
+    /// `quantize_eagerly` picks where the chunk's K/V lands:
+    ///
+    /// * `false` (exact, the engine default): the chunk is appended with
+    ///   group finalization DEFERRED, so every earlier prompt token is
+    ///   still fp when later chunks score against it and the whole chunked
+    ///   prefill is bit-identical to the unchunked one.  The caller must
+    ///   [`SequenceCache::flush_groups`] after the last chunk; groups then
+    ///   finalize in append order, exactly as the unchunked path's would.
+    /// * `true` (memory-bound serving): full groups quantize as soon as a
+    ///   chunk lands, so later chunks score the quantized region through
+    ///   the LUT — cheaper residency during long prefills, at the paper's
+    ///   quantization error instead of bit-exactness.
+    ///
+    /// `need_logits` should be true only for a prompt's FINAL chunk: the
+    /// final norm + `d × vocab` lm_head projection is skipped (returning
+    /// an empty vec) otherwise, since intermediate chunks' logits are
+    /// never sampled and the wasted projection would inflate exactly the
+    /// decode stall chunking exists to bound.
+    ///
+    /// This deliberately duplicates the layer stack of
+    /// [`Model::prefill_kv_importance`] rather than delegating: the
+    /// handwritten full-prompt pass is the independent reference that
+    /// `chunked_prefill_is_bit_identical_to_unchunked` locks this kernel
+    /// against bit-for-bit.  Any edit to either copy that diverges the
+    /// math (bias, norm eps, op order) fails that test immediately —
+    /// keep them in lock-step.
+    pub fn prefill_chunk(
+        &mut self,
+        tokens: &[u32],
+        start_pos: usize,
+        cache: &mut SequenceCache,
+        quantize_eagerly: bool,
+        need_logits: bool,
+    ) -> Vec<f32> {
+        let cfg = self.cfg.clone();
+        let c = tokens.len();
+        assert!(c > 0, "empty prefill chunk");
+        debug_assert_eq!(start_pos, cache.next_pos, "chunk must resume at cache.next_pos");
+        let (d, h, kv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
+        let hq = cfg.q_per_kv();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let embed = self.weights.get("embed");
+        let mut x = vec![0.0f32; c * d];
+        for (n, &tok) in tokens.iter().enumerate() {
+            x[n * d..(n + 1) * d].copy_from_slice(embed.row(tok as usize));
+        }
+
+        let mut k_all = vec![0.0f32; cfg.n_layers * kv * c * dh];
+        let mut v_all = vec![0.0f32; cfg.n_layers * kv * c * dh];
+        let mut xn = vec![0.0f32; c * d];
+        let mut q = vec![0.0f32; c * h * dh];
+        let mut kl = vec![0.0f32; c * kv * dh];
+        let mut vl = vec![0.0f32; c * kv * dh];
+        let mut attn = vec![0.0f32; c * h * dh];
+        // LUT scratch sized for ALL the chunk's queries at once, so each
+        // quantized group is unpacked and its basis built once per
+        // (layer, kv-head) — not once per chunk row.  Only needed when
+        // the cache already holds quantized groups (eager mode).
+        let mut chunk_lut =
+            (cache.quantized_len() > 0).then(|| QkLut::new(cfg.polar_spec(), dh, c * hq));
+        let mut scores: Vec<Vec<f32>> = vec![Vec::new(); c * hq];
+
+        for layer in 0..cfg.n_layers {
+            let gamma = self.weights.layer("norm_attn", layer);
+            for n in 0..c {
+                rms_norm(&x[n * d..(n + 1) * d], gamma, 1e-5, &mut xn[n * d..(n + 1) * d]);
+            }
+            matmul_into(&xn, self.weights.layer("wq", layer), c, d, h * dh, &mut q);
+            matmul_into(&xn, self.weights.layer("wk", layer), c, d, kv * dh, &mut kl);
+            {
+                let bk = self.weights.layer("bk", layer);
+                for n in 0..c {
+                    for j in 0..kv * dh {
+                        kl[n * kv * dh + j] += bk[j];
+                    }
+                }
+            }
+            matmul_into(&xn, self.weights.layer("wv", layer), c, d, kv * dh, &mut vl);
+            for n in 0..c {
+                let pos = (start_pos + n) as u32;
+                for head in 0..h {
+                    rope_rotate_inplace(
+                        &mut q[(n * h + head) * dh..(n * h + head + 1) * dh],
+                        pos,
+                        &self.freqs,
+                    );
+                }
+                for head in 0..kv {
+                    rope_rotate_inplace(
+                        &mut kl[(n * kv + head) * dh..(n * kv + head + 1) * dh],
+                        pos,
+                        &self.freqs,
+                    );
+                }
+            }
+            // mixed attention: cached (quantized via LUT + fp residual)
+            // context, then the chunk's own causal prefix.  All cached
+            // groups precede every chunk position, so the quantized
+            // region needs no causal mask and all c×hq queries score it
+            // in ONE scores_groups pass per kv-head.
+            attn.fill(0.0);
+            for khead in 0..kv {
+                let st = cache.stream(layer, khead);
+                let qlen = st.quantized_len();
+                let rlen = st.resid_len();
+                if let Some(lut) = chunk_lut.as_mut() {
+                    let mut qs: Vec<&[f32]> = Vec::with_capacity(c * hq);
+                    for n in 0..c {
+                        for i in 0..hq {
+                            let head = khead * hq + i;
+                            qs.push(&q[(n * h + head) * dh..(n * h + head + 1) * dh]);
+                        }
+                    }
+                    lut.scores_groups(&qs, &st.key_groups, &mut scores);
+                } else {
+                    for sc in scores.iter_mut() {
+                        sc.clear();
+                    }
+                }
+                for n in 0..c {
+                    for i in 0..hq {
+                        let head = khead * hq + i;
+                        let qrow = &q[(n * h + head) * dh..(n * h + head + 1) * dh];
+                        let sc = &mut scores[n * hq + i];
+                        for r in 0..rlen {
+                            sc.push(dot(qrow, &st.resid_k[r * dh..(r + 1) * dh]));
+                        }
+                        for m in 0..=n {
+                            sc.push(dot(
+                                qrow,
+                                &kl[(m * kv + khead) * dh..(m * kv + khead + 1) * dh],
+                            ));
+                        }
+                        debug_assert_eq!(sc.len(), qlen + rlen + n + 1);
+                        for v in sc.iter_mut() {
+                            *v *= scale;
+                        }
+                        softmax_inplace(sc);
+                    }
+                    for i in 0..hq {
+                        let head = khead * hq + i;
+                        let w = &scores[n * hq + i];
+                        let out = &mut attn[(n * h + head) * dh..(n * h + head + 1) * dh];
+                        let g = cfg.group;
+                        for (gi, gv) in st.value_groups.iter().enumerate() {
+                            let wslice = &w[gi * g..gi * g + st.key_groups[gi].tokens];
+                            match gv {
+                                GroupValues::Fp(vals) => {
+                                    for (m, &wm) in wslice.iter().enumerate() {
+                                        axpy(wm, &vals[m * dh..(m + 1) * dh], out);
+                                    }
+                                }
+                                GroupValues::Quant(enc) => {
+                                    value::weighted_sum_into(wslice, enc, dh, out);
+                                }
+                            }
+                        }
+                        for r in 0..rlen {
+                            axpy(w[qlen + r], &st.resid_v[r * dh..(r + 1) * dh], out);
+                        }
+                        for m in 0..=n {
+                            axpy(
+                                w[qlen + rlen + m],
+                                &vl[(m * kv + khead) * dh..(m * kv + khead + 1) * dh],
+                                out,
+                            );
+                        }
+                    }
+                }
+            }
+            // store this layer's chunk K/V in (L, Kv, C, d) layout
+            for n in 0..c {
+                for head in 0..kv {
+                    let dst = ((layer * kv + head) * c + n) * dh;
+                    k_all[dst..dst + dh]
+                        .copy_from_slice(&kl[(n * kv + head) * dh..(n * kv + head + 1) * dh]);
+                    v_all[dst..dst + dh]
+                        .copy_from_slice(&vl[(n * kv + head) * dh..(n * kv + head + 1) * dh]);
+                }
+            }
+            // o proj + residual (matmul_into zero-fills, so one buffer
+            // serves every row)
+            let wo = self.weights.layer("wo", layer);
+            let mut o = vec![0.0f32; d];
+            for n in 0..c {
+                matmul_into(&attn[n * h * dh..(n + 1) * h * dh], wo, 1, h * dh, d, &mut o);
+                for j in 0..d {
+                    x[n * d + j] += o[j];
+                }
+            }
+            // mlp
+            let gm = self.weights.layer("norm_mlp", layer);
+            let wg = self.weights.layer("w_gate", layer);
+            let wu = self.weights.layer("w_up", layer);
+            let wd = self.weights.layer("w_down", layer);
+            let f = cfg.ffn;
+            let mut gate = vec![0.0f32; f];
+            let mut up = vec![0.0f32; f];
+            let mut down = vec![0.0f32; d];
+            let mut xrow = vec![0.0f32; d];
+            for n in 0..c {
+                rms_norm(&x[n * d..(n + 1) * d], gm, 1e-5, &mut xrow);
+                matmul_into(&xrow, wg, 1, d, f, &mut gate);
+                matmul_into(&xrow, wu, 1, d, f, &mut up);
+                for j in 0..f {
+                    gate[j] = silu(gate[j]) * up[j];
+                }
+                matmul_into(&gate, wd, 1, f, d, &mut down);
+                for j in 0..d {
+                    x[n * d + j] += down[j];
+                }
+            }
+        }
+        // final norm + logits at the chunk's last position (final chunk
+        // only — intermediate chunks' logits are never sampled)
+        let mut logits = Vec::new();
+        if need_logits {
+            let gamma = self.weights.get("norm_final");
+            let mut xl = vec![0.0f32; d];
+            rms_norm(&x[(c - 1) * d..c * d], &gamma.data, 1e-5, &mut xl);
+            logits = vec![0.0f32; cfg.vocab];
+            matmul_into(&xl, &self.weights.get("lm_head").data, 1, d, cfg.vocab, &mut logits);
+        }
+
+        if quantize_eagerly {
+            cache.append_prefill(&k_all, &v_all, c);
+        } else {
+            cache.append_prefill_deferred(&k_all, &v_all, c);
+        }
+        logits
     }
 
     /// One decode step over the quantized cache: returns logits and
@@ -454,6 +705,86 @@ mod tests {
         assert_eq!(cache.len(), 13);
         assert_eq!(cache.next_pos, 13);
         assert_eq!(cache.quantized_len(), 8);
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_unchunked() {
+        // Exact-mode chunked prefill (deferred finalization) must
+        // reproduce Model::prefill bit-for-bit: same logits at the last
+        // prompt position, same quantized groups, same residual — at ANY
+        // chunk size, including chunk=1 and chunk > prompt.
+        let cfg = test_cfg();
+        let w = Weights::synthetic(&cfg, 21, 4.0);
+        let mut model = Model::new(cfg.clone(), w);
+        let mut rng = Rng::new(31);
+        let toks: Vec<u32> = (0..23).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut c_ref = SequenceCache::new(cfg.cache_config(None));
+        let want = model.prefill(&toks, &mut c_ref);
+        for chunk in [1usize, 3, 8, 23, 40] {
+            let mut c = SequenceCache::new(cfg.cache_config(None));
+            let mut got = Vec::new();
+            let mut pos = 0;
+            while pos < toks.len() {
+                let take = chunk.min(toks.len() - pos);
+                let last = pos + take == toks.len();
+                let l = model.prefill_chunk(&toks[pos..pos + take], pos, &mut c, false, last);
+                assert_eq!(l.is_empty(), !last, "logits only on the final chunk");
+                got = l;
+                pos += take;
+            }
+            c.flush_groups();
+            assert_eq!(got, want, "chunk={chunk}: last-position logits differ");
+            assert_eq!(c.next_pos, c_ref.next_pos);
+            assert_eq!(c.quantized_len(), c_ref.quantized_len(), "chunk={chunk}");
+            for (a, b) in c.streams.iter().zip(&c_ref.streams) {
+                assert_eq!(a.decode_keys(), b.decode_keys(), "chunk={chunk}: keys");
+                assert_eq!(a.resid_k, b.resid_k, "chunk={chunk}: resid_k");
+                assert_eq!(a.resid_v, b.resid_v, "chunk={chunk}: resid_v");
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_chunk_matches_decode_step_over_quantized_cache() {
+        // Eager mode against a cache holding quantized groups exercises
+        // the LUT + residual + in-chunk mixed path; a 1-token chunk is
+        // exactly one decode step, so the logits must agree bit-for-bit.
+        let cfg = test_cfg();
+        let w = Weights::synthetic(&cfg, 22, 4.0);
+        let mut model = Model::new(cfg.clone(), w);
+        let mut rng = Rng::new(32);
+        let toks: Vec<u32> = (0..20).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut cache = SequenceCache::new(cfg.cache_config(Some(4)));
+        model.prefill(&toks, &mut cache);
+        assert!(cache.quantized_len() > 0, "need quantized groups for the LUT path");
+        let mut c2 = cache.clone();
+        let want = model.decode_step(9, &mut cache).to_vec();
+        let got = model.prefill_chunk(&[9], 20, &mut c2, true, true);
+        assert_eq!(got, want);
+        assert_eq!(c2.len(), cache.len());
+        assert_eq!(c2.quantized_len(), cache.quantized_len());
+    }
+
+    #[test]
+    fn eager_chunked_prefill_stays_close_to_exact() {
+        // Eager finalization scores later chunks against quantized keys —
+        // not bit-identical, but within the paper's near-lossless drift.
+        let cfg = test_cfg();
+        let w = Weights::synthetic(&cfg, 23, 4.0);
+        let mut model = Model::new(cfg.clone(), w);
+        let mut rng = Rng::new(33);
+        let toks: Vec<u32> = (0..24).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut c_ref = SequenceCache::new(cfg.cache_config(None));
+        let want = model.prefill(&toks, &mut c_ref);
+        let mut c = SequenceCache::new(cfg.cache_config(None));
+        let mut got = Vec::new();
+        let n_chunks = toks.chunks(8).count();
+        for (ci, ch) in toks.chunks(8).enumerate() {
+            got = model.prefill_chunk(ch, ci * 8, &mut c, true, ci + 1 == n_chunks);
+        }
+        assert_eq!(c.quantized_len(), 24, "eager chunks finalized groups mid-prefill");
+        let cos = crate::tensor::ops::cosine(&got, &want);
+        assert!(cos > 0.95, "cos {cos}");
     }
 
     #[test]

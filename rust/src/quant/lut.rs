@@ -191,10 +191,12 @@ impl QkLut {
     /// `out[s][h]` receives the scores of sequence `s`, query head `h`.
     /// Each sequence's cos/sin basis is built once per group and shared by
     /// all of its GQA query heads; across sequences the LUT/basis/unpack
-    /// scratch is reused, so a worker thread scores its entire shard with
-    /// zero allocation at steady state.  This is the kernel the
-    /// [`crate::coordinator::pool::DecodePool`] workers and the
-    /// `decode_batch` bench drive.
+    /// scratch is reused, so a caller can score a whole shard of
+    /// sequences with zero allocation at steady state.  The
+    /// `decode_batch` bench and the batch-equivalence proptests drive
+    /// this wrapper; [`crate::coordinator::pool::DecodePool`] workers
+    /// reach the same inner [`QkLut::scores_groups`] kernel through
+    /// `Model::decode_step`, one sequence at a time.
     pub fn scores_batch(&mut self, jobs: &[SeqScoreJob<'_>], out: &mut [Vec<Vec<f32>>]) {
         assert_eq!(jobs.len(), out.len());
         for (job, o) in jobs.iter().zip(out.iter_mut()) {

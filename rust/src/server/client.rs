@@ -17,10 +17,15 @@ pub struct Client {
 pub struct GenerateReply {
     pub id: u64,
     pub worker: usize,
+    pub prompt_len: usize,
     pub tokens: Vec<u32>,
     pub ttft_ms: f64,
     pub total_ms: f64,
     pub truncated: bool,
+    /// the engine refused the request (backpressure / bad prompt); see
+    /// `reason` — distinct from `truncated`, which ran but was cut short
+    pub rejected: bool,
+    pub reason: Option<String>,
 }
 
 impl Client {
@@ -56,6 +61,7 @@ impl Client {
         Ok(GenerateReply {
             id: v.usize_or("id", 0) as u64,
             worker: v.usize_or("worker", 0),
+            prompt_len: v.usize_or("prompt_len", 0),
             tokens: v
                 .get("tokens")
                 .and_then(|t| t.as_arr())
@@ -64,6 +70,8 @@ impl Client {
             ttft_ms: v.f64_or("ttft_ms", 0.0),
             total_ms: v.f64_or("total_ms", 0.0),
             truncated: v.get("truncated").and_then(|b| b.as_bool()).unwrap_or(false),
+            rejected: v.get("rejected").and_then(|b| b.as_bool()).unwrap_or(false),
+            reason: v.get("reason").and_then(|r| r.as_str()).map(|s| s.to_string()),
         })
     }
 }

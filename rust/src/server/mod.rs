@@ -6,8 +6,14 @@
 //!
 //! ```text
 //! -> {"prompt": [1,2,3], "max_tokens": 16, "session": 7}
-//! <- {"id": 0, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8}
+//! <- {"id": 0, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8,
+//!     "truncated": false, "rejected": false}
 //! ```
+//!
+//! A request the engine refuses (backpressure, empty prompt) still gets a
+//! reply: `"rejected": true` plus a `"reason"` string
+//! (`queue_full` | `memory_pressure` | `empty_prompt`) — distinguishable
+//! from `"truncated"`, which means the request RAN but was cut short.
 
 pub mod client;
 pub mod worker;

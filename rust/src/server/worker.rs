@@ -30,32 +30,30 @@ struct Job {
     reply: Sender<Completion>,
 }
 
+/// Submit a job to the engine; a rejected request gets an explicit
+/// `rejected` reply with the `AdmitDecision` reason instead of a silently
+/// dropped `Sender` (which left `handle_conn` waiting on a channel that
+/// could never deliver).  EVERY path that submits must go through here.
+fn submit_job(engine: &mut Engine, job: Job, replies: &mut HashMap<u64, Sender<Completion>>) {
+    let id = job.req.id;
+    let prompt_len = job.req.prompt.len();
+    match engine.submit(job.req) {
+        Ok(()) => {
+            replies.insert(id, job.reply);
+        }
+        Err(why) => {
+            let _ = job.reply.send(Completion::rejected(id, prompt_len, why));
+        }
+    }
+}
+
 fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
     let mut replies: HashMap<u64, Sender<Completion>> = HashMap::new();
     loop {
         // drain new jobs; block briefly when idle
         loop {
             match rx.try_recv() {
-                Ok(job) => {
-                    let id = job.req.id;
-                    match engine.submit(job.req) {
-                        Ok(()) => {
-                            replies.insert(id, job.reply);
-                        }
-                        Err(why) => {
-                            // rejected: synthesize an empty completion
-                            let _ = job.reply.send(Completion {
-                                id,
-                                prompt_len: 0,
-                                tokens: vec![],
-                                ttft_s: None,
-                                total_s: None,
-                                truncated: true,
-                            });
-                            let _ = why;
-                        }
-                    }
-                }
+                Ok(job) => submit_job(engine, job, &mut replies),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     if engine.idle() {
@@ -70,12 +68,7 @@ fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
                 return;
             }
             match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(job) => {
-                    let id = job.req.id;
-                    if engine.submit(job.req).is_ok() {
-                        replies.insert(id, job.reply);
-                    }
-                }
+                Ok(job) => submit_job(engine, job, &mut replies),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
@@ -139,6 +132,12 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
                 eprintln!(
                     "[server] engine {w}: decode pool width {}",
                     engine.decode_pool_width()
+                );
+            }
+            if engine.prefill_chunk_size() > 0 {
+                eprintln!(
+                    "[server] engine {w}: chunked prefill, {} tokens/step",
+                    engine.prefill_chunk_size()
                 );
             }
             worker_loop(&mut engine, rx, &sd)
@@ -222,14 +221,20 @@ fn handle_conn(
         let tokens = Value::Arr(
             completion.tokens.iter().map(|&t| num(t as f64)).collect(),
         );
-        let reply = obj(vec![
+        let mut fields = vec![
             ("id", num(id as f64)),
             ("worker", num(worker as f64)),
+            ("prompt_len", num(completion.prompt_len as f64)),
             ("tokens", tokens),
             ("ttft_ms", num(completion.ttft_s.unwrap_or(0.0) * 1e3)),
             ("total_ms", num(completion.total_s.unwrap_or(0.0) * 1e3)),
             ("truncated", Value::Bool(completion.truncated)),
-        ]);
+            ("rejected", Value::Bool(completion.rejected)),
+        ];
+        if let Some(reason) = completion.reason {
+            fields.push(("reason", json::s(reason)));
+        }
+        let reply = obj(fields);
         writeln!(stream, "{}", json::write(&reply))?;
     }
 }

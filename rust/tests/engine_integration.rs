@@ -128,6 +128,94 @@ fn server_session_affinity() {
 }
 
 #[test]
+fn every_client_gets_a_reply_when_the_queue_is_full() {
+    // Regression: with max_queue = 0 every submit is rejected.  The old
+    // worker_loop idle branch (recv_timeout) dropped the reply Sender on
+    // rejection, so handle_conn's rx.recv() failed and the connection
+    // died with no response — clients hung or errored.  Now every client
+    // must receive an explicit rejected reply, on BOTH intake paths.
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.admission.max_queue = 0;
+        Engine::native_synthetic(cfg.clone(), 300 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    // sequential requests land on the idle recv_timeout branch (the
+    // engine drains instantly between them)
+    let mut client = Client::connect(&handle.addr).unwrap();
+    for i in 0..3 {
+        let reply = client.generate(&[1, 2, 3], 4, None).unwrap();
+        assert!(reply.rejected, "request {i} must be rejected, not hang");
+        assert_eq!(reply.reason.as_deref(), Some("queue_full"));
+        assert!(!reply.truncated, "rejection must not masquerade as truncation");
+        assert!(reply.tokens.is_empty());
+        assert_eq!(reply.prompt_len, 3, "rejected reply keeps the real prompt_len");
+    }
+    // a concurrent burst exercises the drain-loop path too
+    let mut threads = Vec::new();
+    for _ in 0..4 {
+        let addr = handle.addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.generate(&[5, 6], 4, None).unwrap()
+        }));
+    }
+    for t in threads {
+        let reply = t.join().unwrap();
+        assert!(reply.rejected && !reply.truncated);
+    }
+    handle.stop();
+}
+
+#[test]
+fn empty_prompt_is_rejected_with_reason_over_the_wire() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        Engine::native_synthetic(cfg.clone(), 400 + w as u64, 4.0, EngineOpts::default())
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    // a {} request parses to an empty prompt — previously this panicked
+    // the engine thread mid-prefill and killed every later connection
+    let reply = client.generate(&[], 4, None).unwrap();
+    assert!(reply.rejected);
+    assert_eq!(reply.reason.as_deref(), Some("empty_prompt"));
+    // the worker survives: a valid request still completes
+    let ok = client.generate(&[1, 2, 3], 4, None).unwrap();
+    assert!(!ok.rejected);
+    assert_eq!(ok.tokens.len(), 4);
+    handle.stop();
+}
+
+#[test]
+fn chunked_prefill_server_matches_unchunked() {
+    // End-to-end through the TCP front-end: same session, same prompts,
+    // chunked vs unchunked engines must return identical greedy tokens.
+    let run = |chunk: usize| {
+        let cfg = toy_cfg();
+        let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = chunk;
+            opts.decode_workers = 2;
+            Engine::native_synthetic(cfg.clone(), 500 + w as u64, 4.0, opts)
+        });
+        let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        let mut out = Vec::new();
+        for t in 0..3u32 {
+            let prompt: Vec<u32> = (0..30).map(|i| (i * 3 + t) % 64).collect();
+            let reply = client.generate(&prompt, 8, Some(t as u64)).unwrap();
+            assert!(!reply.rejected && !reply.truncated);
+            out.push(reply.tokens);
+        }
+        handle.stop();
+        out
+    };
+    assert_eq!(run(0), run(7));
+}
+
+#[test]
 fn snapkv_native_engine_end_to_end() {
     let cfg = toy_cfg();
     let mut opts = EngineOpts::default();
