@@ -234,6 +234,78 @@ fn chunked_section(quick: bool, chunk: usize) -> Vec<Value> {
     rows
 }
 
+/// Prefix-reuse probe: N requests sharing one long "system prompt"
+/// served by a prefix-caching engine vs a cold one.  Reports prefill
+/// tokens actually run (vs reused), logical vs physical cache bytes while
+/// the batch decodes (the refcount-sharing savings), and decode-step
+/// latency — the paged-cache acceptance numbers CI tracks per commit.
+fn prefix_run(prefix: bool, sharers: usize, prefix_len: usize) -> Value {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 32; // multiple of engine_cfg group=16
+    opts.prefill_quantize_eagerly = true; // identical math in both modes
+    opts.prefix_cache = prefix;
+    opts.policy.max_running = 64;
+    opts.policy.prefill_per_step = 1; // serialized prefills: stable chunk
+    opts.admission.max_queue = 256;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 7, 6.0, opts);
+    let mut rng = Rng::new(17);
+    let system: Vec<u32> = (0..prefix_len).map(|_| rng.below(128) as u32).collect();
+    // warm request registers the shared prefix (also timed for cold)
+    eng.submit(Request::greedy(0, system.clone(), 4)).unwrap();
+    eng.run_to_completion().unwrap();
+    let prefill0 = eng.metrics.prefill_tokens;
+    let t0 = std::time::Instant::now();
+    for i in 0..sharers {
+        let prompt: Vec<u32> = system
+            .iter()
+            .cloned()
+            .chain((0..8).map(|_| rng.below(128) as u32))
+            .collect();
+        eng.submit(Request::greedy(1 + i as u64, prompt, 16)).unwrap();
+    }
+    // drain the batch, tracking peak residency both ways: shared pages
+    // are resident once physically however many sequences reference them
+    let (mut peak_logical, mut peak_physical) = (0usize, 0usize);
+    while !eng.idle() {
+        eng.step().unwrap();
+        let r = eng.cache_report();
+        peak_logical = peak_logical.max(r.bytes);
+        peak_physical = peak_physical.max(r.physical_bytes);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let prefill_ran = eng.metrics.prefill_tokens - prefill0;
+    let label = if prefix { "prefix on " } else { "prefix off" };
+    println!(
+        "{label}: prefill {prefill_ran:>6} tok (reused {:>6}), peak bytes {:>9} logical / {:>9} physical, tok p50 {:>7.3} ms, {wall:.3}s",
+        eng.metrics.prefix_tokens_reused,
+        peak_logical,
+        peak_physical,
+        eng.metrics.per_token.p(50.0) * 1e3,
+    );
+    obj(vec![
+        ("prefix_cache", Value::Bool(prefix)),
+        ("sharers", num(sharers as f64)),
+        ("prefix_len", num(prefix_len as f64)),
+        ("prefill_tokens_ran", num(prefill_ran as f64)),
+        ("prefix_tokens_reused", num(eng.metrics.prefix_tokens_reused as f64)),
+        ("prefix_hits", num(eng.metrics.prefix_hits as f64)),
+        ("peak_logical_bytes", num(peak_logical as f64)),
+        ("peak_physical_bytes", num(peak_physical as f64)),
+        ("pages_in_use", num(eng.metrics.pages_in_use as f64)),
+        ("decode_tok_p50_ms", num(eng.metrics.per_token.p(50.0) * 1e3)),
+        ("wall_s", num(wall)),
+    ])
+}
+
+fn prefix_section(quick: bool) -> Vec<Value> {
+    let (sharers, prefix_len) = if quick { (8, 128) } else { (32, 512) };
+    println!("# prefix reuse: {sharers} requests sharing a {prefix_len}-token system prompt");
+    println!("# shared-prefix batch vs cold batch (same prompts, prefix cache off)\n");
+    let rows = vec![prefix_run(false, sharers, prefix_len), prefix_run(true, sharers, prefix_len)];
+    println!();
+    rows
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -284,6 +356,7 @@ fn main() {
     let kernel_rows = kernel_section(ctx, opts);
     let engine_rows = engine_section(quick);
     let chunked_rows = chunked_section(quick, chunk);
+    let prefix_rows = prefix_section(quick);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -301,6 +374,7 @@ fn main() {
         ("kernel", Value::Arr(kernel_rows)),
         ("engine", Value::Arr(engine_rows)),
         ("chunked_prefill", Value::Arr(chunked_rows)),
+        ("prefix_reuse", Value::Arr(prefix_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

@@ -4,17 +4,19 @@
 
 use crate::kvcache::CacheManager;
 
+/// NOTE: the concurrency cap lives on
+/// [`crate::coordinator::scheduler::SchedulerPolicy::max_running`] — the
+/// scheduler owns it.  A `max_running` here too (as an early revision
+/// had) is config drift waiting to happen.
 #[derive(Clone, Copy, Debug)]
 pub struct AdmissionPolicy {
     /// max requests waiting for prefill
     pub max_queue: usize,
-    /// max concurrently decoding sequences
-    pub max_running: usize,
 }
 
 impl Default for AdmissionPolicy {
     fn default() -> Self {
-        AdmissionPolicy { max_queue: 256, max_running: 64 }
+        AdmissionPolicy { max_queue: 256 }
     }
 }
 
@@ -83,7 +85,7 @@ mod tests {
 
     #[test]
     fn queue_limit() {
-        let p = AdmissionPolicy { max_queue: 2, max_running: 8 };
+        let p = AdmissionPolicy { max_queue: 2 };
         let c = cache(usize::MAX);
         assert_eq!(p.admit(1, &c, 4, 10), AdmitDecision::Admit);
         assert_eq!(p.admit(2, &c, 4, 10), AdmitDecision::QueueFull);

@@ -74,10 +74,21 @@ pub type PrefillGrant = (u64, usize);
 /// tokens — the engine's bound on how long a decode iteration can stall
 /// behind prefill work.  With `budget == chunk` (the engine default) at
 /// most one chunk's compute separates consecutive decode iterations.
+///
+/// `aligned` forbids PARTIAL grants (a sequence receiving less than
+/// `min(chunk, rem)` because an earlier grant ate most of the budget):
+/// planning stops instead.  The prefix-caching engine requires this —
+/// page sharing is only sound if every sequence's chunk boundaries sit
+/// at fixed multiples of `chunk`, independent of what else is
+/// prefilling, so that an eagerly quantized page is a deterministic
+/// function of the token prefix alone.  Leftover budget after a short
+/// final chunk then goes unused, which costs a little utilization, never
+/// correctness.
 pub fn plan_prefill_chunks(
     remaining: &[(u64, usize)], // (request id, prompt tokens left) in arrival order
     chunk: usize,
     budget: usize,
+    aligned: bool,
 ) -> Vec<PrefillGrant> {
     assert!(chunk > 0, "chunk size must be positive");
     let mut grants = Vec::new();
@@ -89,11 +100,25 @@ pub fn plan_prefill_chunks(
         if rem == 0 {
             continue;
         }
-        let take = rem.min(chunk).min(left);
+        let take = rem.min(chunk);
+        if aligned && take > left {
+            break;
+        }
+        let take = take.min(left);
         grants.push((id, take));
         left -= take;
     }
     grants
+}
+
+/// Pages a sequence must be able to allocate before growing to
+/// `tokens_after` total cache tokens, given it already holds
+/// `pages_held` pages of `group` tokens each.  Drives the engine's
+/// pool-capacity checks: one decode step's append needs a page exactly
+/// when the residual is one token short of a group, and a prefill
+/// chunk/flush needs pages for every full group it will finalize.
+pub fn pages_needed(tokens_after: usize, pages_held: usize, group: usize) -> usize {
+    (tokens_after / group).saturating_sub(pages_held)
 }
 
 /// Partition one decode step's sequences into `workers` shards balanced
@@ -164,19 +189,33 @@ mod tests {
         // head request takes a full chunk; the rest of the budget spills
         // FCFS onto the next request
         let rem = vec![(1u64, 10usize), (2, 50), (3, 4)];
-        let grants = plan_prefill_chunks(&rem, 8, 8);
+        let grants = plan_prefill_chunks(&rem, 8, 8, false);
         assert_eq!(grants, vec![(1, 8)]);
         // bigger budget: one chunk each until the budget runs out
-        let grants = plan_prefill_chunks(&rem, 8, 20);
+        let grants = plan_prefill_chunks(&rem, 8, 20, false);
         assert_eq!(grants, vec![(1, 8), (2, 8), (3, 4)]);
         let total: usize = grants.iter().map(|&(_, t)| t).sum();
         assert!(total <= 20);
         // a short tail takes only what it needs
-        let grants = plan_prefill_chunks(&[(7, 3)], 8, 8);
+        let grants = plan_prefill_chunks(&[(7, 3)], 8, 8, false);
         assert_eq!(grants, vec![(7, 3)]);
         // finished entries are skipped, empty input is fine
-        assert!(plan_prefill_chunks(&[(9, 0)], 8, 8).is_empty());
-        assert!(plan_prefill_chunks(&[], 8, 8).is_empty());
+        assert!(plan_prefill_chunks(&[(9, 0)], 8, 8, false).is_empty());
+        assert!(plan_prefill_chunks(&[], 8, 8, false).is_empty());
+    }
+
+    #[test]
+    fn aligned_planning_never_cuts_partial_chunks() {
+        // head's short final chunk (5 of 8) leaves 3 budget: unaligned
+        // planning would hand request 2 a misaligned 3-token grant;
+        // aligned planning stops instead
+        let rem = vec![(1u64, 5usize), (2, 50)];
+        assert_eq!(plan_prefill_chunks(&rem, 8, 8, false), vec![(1, 5), (2, 3)]);
+        assert_eq!(plan_prefill_chunks(&rem, 8, 8, true), vec![(1, 5)]);
+        // full chunks still spill under a bigger budget
+        assert_eq!(plan_prefill_chunks(&rem, 8, 16, true), vec![(1, 5), (2, 8)]);
+        // a grant that IS the sequence's whole remainder stays allowed
+        assert_eq!(plan_prefill_chunks(&[(9, 4)], 8, 8, true), vec![(9, 4)]);
     }
 
     #[test]
@@ -199,6 +238,20 @@ mod tests {
             max_load <= total / 4 + max_item,
             "max {max_load} total {total} item {max_item}"
         );
+    }
+
+    #[test]
+    fn pages_needed_counts_only_new_full_groups() {
+        // decode growth: a page is needed exactly when the appended token
+        // completes a group
+        assert_eq!(pages_needed(16, 1, 8), 1);
+        assert_eq!(pages_needed(15, 1, 8), 0);
+        // prefill flush: all full groups at once, minus whatever a prefix
+        // hit already attached
+        assert_eq!(pages_needed(20, 0, 8), 2);
+        assert_eq!(pages_needed(20, 2, 8), 0);
+        // over-held (adopted more than the tokens ask) never underflows
+        assert_eq!(pages_needed(8, 3, 8), 0);
     }
 
     #[test]

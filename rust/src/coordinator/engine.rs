@@ -13,6 +13,14 @@
 //! Decode fans over the fixed [`DecodePool`] (thread-parallel over
 //! balanced cache-length shards) or runs inline when `decode_workers <=
 //! 1`, or batches into AOT shape buckets on the PJRT backend.
+//!
+//! The cache behind all of it is the refcounted group-page pool
+//! (`kvcache::pool`): with `EngineOpts::prefix_cache` prompts attach to
+//! already-pooled prefix pages and skip that prefill work, and with
+//! `EngineOpts::cache_pages` bounding the pool the engine degrades by
+//! LRU-reclaiming cached pages and then PREEMPTING the youngest decoding
+//! sequence (requeue through chunked prefill + token replay) instead of
+//! stalling or rejecting mid-flight work.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
@@ -21,11 +29,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::backpressure::{AdmissionPolicy, AdmitDecision};
-use super::batcher::{plan_decode_batches, plan_decode_shards, plan_prefill_chunks};
+use super::batcher::{pages_needed, plan_decode_batches, plan_decode_shards, plan_prefill_chunks};
 use super::metrics::Metrics;
 use super::pool::{DecodePool, DecodeTask, StepResult};
 use super::request::{Request, RequestId, RequestState, Tracked};
-use super::scheduler::SchedulerPolicy;
+use super::scheduler::{pick_preemption_victim, SchedulerPolicy};
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
 use crate::kvcache::CacheManager;
 use crate::model::{Model, ModelConfig, Weights};
@@ -69,6 +77,22 @@ pub struct EngineOpts {
     /// quantization error, so rollouts are no longer bit-identical to the
     /// unchunked path.
     pub prefill_quantize_eagerly: bool,
+    /// Physical page-pool capacity in group-pages (0 = unbounded).  When
+    /// the pool runs dry mid-decode the engine reclaims refcount-zero
+    /// cached prefix pages LRU, then preempts the youngest decoding
+    /// sequence (releasing its pages and requeueing it through chunked
+    /// prefill) instead of stalling.  Enforcement lives in the chunked
+    /// scheduler: on non-chunked paths (whole-prompt prefill, SnapKV,
+    /// PJRT) the cap only feeds accounting and is NOT enforced — the CLI
+    /// rejects those combinations.
+    pub cache_pages: usize,
+    /// Prefix caching (chunked native engines only): prompts attach to
+    /// already-pooled pages of any previously-served prompt sharing their
+    /// prefix, refcounted, and skip prefilling those tokens.  Forces
+    /// eager group finalization with a group-aligned chunk so shared and
+    /// cold prefills run the identical computation — greedy decode is
+    /// bit-identical with the flag on or off.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineOpts {
@@ -83,6 +107,8 @@ impl Default for EngineOpts {
             decode_workers: 0,
             prefill_chunk: 0,
             prefill_quantize_eagerly: false,
+            cache_pages: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -141,7 +167,20 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(backend: Backend, cfg: ModelConfig, opts: EngineOpts) -> Self {
-        let cache = CacheManager::new(cfg.cache_config(opts.value_bits), opts.cache_budget_bytes);
+        let mut opts = opts;
+        if opts.prefix_cache && opts.prefill_chunk > 0 {
+            // Prefix sharing hands out QUANTIZED pages, so a prompt that
+            // attaches to them must score the rest of its prefill exactly
+            // the way a cold prefill would: eager finalization (cold runs
+            // quantize as chunks land too) with the chunk aligned to the
+            // group (chunk boundaries of shared and cold runs coincide).
+            // Under those two constraints the shared path is bit-identical
+            // to the cold path — see `adopt_prefix`.
+            opts.prefill_quantize_eagerly = true;
+            opts.prefill_chunk = opts.prefill_chunk.div_ceil(cfg.group) * cfg.group;
+        }
+        let cache = CacheManager::new(cfg.cache_config(opts.value_bits), opts.cache_budget_bytes)
+            .with_page_capacity(opts.cache_pages);
         // the pool shares the native model's weights; PJRT decode batches
         // inside the graph instead, so it never uses one
         let pool = match &backend {
@@ -177,6 +216,21 @@ impl Engine {
         } else {
             0
         }
+    }
+
+    /// Page-pool capacity in effect (0 = unbounded).
+    pub fn cache_pages(&self) -> usize {
+        if self.cache.pool().bounded() {
+            self.cache.pool().capacity()
+        } else {
+            0
+        }
+    }
+
+    /// True when prompts attach to shared prefix pages (chunked native
+    /// engines with `EngineOpts::prefix_cache`).
+    pub fn prefix_caching(&self) -> bool {
+        self.opts.prefix_cache && self.chunked_prefill()
     }
 
     /// Native engine from synthetic weights (tests/benches).
@@ -273,6 +327,9 @@ impl Engine {
             if chunked {
                 tr.state = RequestState::Prefilling;
                 self.cache.create(tr.req.id);
+                if self.prefix_caching() {
+                    self.adopt_prefix(&mut tr);
+                }
                 self.prefill_order.push_back(tr.req.id);
             } else {
                 self.prefill_one(&mut tr)?;
@@ -286,8 +343,17 @@ impl Engine {
         // the plan says decode MAY run; confirm against actual states
         // (chunked admissions can still be mid-prefill)
         if plan.decode && self.running.values().any(|t| t.state == RequestState::Decoding) {
+            if chunked {
+                // every decoding sequence must be able to cut its next
+                // page; reclaim or preempt BEFORE the step so the append
+                // path deep in the model never has to fail
+                self.ensure_decode_pages();
+            }
             self.decode_iteration(&mut done)?;
         }
+        // paged-cache gauges ride along on every step
+        self.metrics.pages_in_use = self.cache.pool().pages_in_use() as u64;
+        self.metrics.pages_evicted = self.cache.pool().pages_evicted();
         Ok(done)
     }
 
@@ -302,14 +368,54 @@ impl Engine {
 
     // ---------------------------------------------------------- prefill
 
+    /// Attach the longest already-pooled prefix of this prompt
+    /// (refcounted page shares) and jump the prefill cursor past it.
+    ///
+    /// Bit-identity argument: pages only register under eager,
+    /// group-aligned chunking with ALIGNED grants (prefix mode plans
+    /// prefill chunks with `aligned = true`, so no sequence ever receives
+    /// a partial leftover-budget grant) — page `g` is therefore a
+    /// deterministic function of `prompt[..(g+1)*group]`, independent of
+    /// concurrent traffic.  Adoption is additionally truncated to a CHUNK
+    /// multiple — from there on, a shared prefill's chunk boundaries,
+    /// cache state, and therefore every K/V it computes coincide exactly
+    /// with the cold prefill's.  Greedy decode over the resulting cache
+    /// is then the same computation either way.
+    fn adopt_prefix(&mut self, tr: &mut Tracked) {
+        let chunk = self.opts.prefill_chunk;
+        let prompt = &tr.req.prompt;
+        // always leave >= 1 token to prefill: the final chunk produces the
+        // logits the first sampled token comes from
+        let max_share = (prompt.len().saturating_sub(1) / chunk) * chunk;
+        if max_share == 0 {
+            return;
+        }
+        let group = self.cfg.group;
+        let mut pages = self.cache.pool().lookup_prefix(prompt, group, max_share);
+        // truncate the hit to a chunk boundary (see above)
+        pages.truncate((pages.len() * group / chunk) * chunk / group);
+        if pages.is_empty() {
+            return;
+        }
+        let shared = pages.iter().map(|p| p.tokens).sum::<usize>();
+        let handle = self.cache.get(tr.req.id).expect("cache created at admission");
+        handle.lock().unwrap().adopt_pages(pages);
+        tr.prefill_pos = shared;
+        self.metrics.prefix_hits += 1;
+        self.metrics.prefix_tokens_reused += shared as u64;
+    }
+
     /// Run this step's prefill-chunk grants: at most one chunk's worth of
     /// prompt tokens total (FCFS across prefilling sequences), so decode
     /// iterations never wait longer than one chunk's compute.  A sequence
     /// whose last chunk lands here samples its first token and moves to
-    /// `Decoding` in the same step.
+    /// `Decoding` in the same step — unless it is recovering from a
+    /// preemption, in which case its next tokens are already known and
+    /// the decode phase replays them instead.
     fn prefill_chunk_phase(&mut self) -> Result<()> {
         let chunk = self.opts.prefill_chunk;
-        let eager = self.opts.prefill_quantize_eagerly;
+        let eager = self.opts.prefill_quantize_eagerly || self.prefix_caching();
+        let group = self.cfg.group;
         let stalled = self.running.values().any(|t| t.state == RequestState::Decoding);
         let t0 = Instant::now();
         let remaining: Vec<(RequestId, usize)> = self
@@ -317,18 +423,50 @@ impl Engine {
             .iter()
             .map(|&id| (id, self.running[&id].prefill_remaining()))
             .collect();
-        for (id, take) in plan_prefill_chunks(&remaining, chunk, chunk) {
+        // prefix mode demands ALIGNED grants: every sequence's chunk
+        // boundaries must sit at fixed multiples of `chunk` regardless of
+        // concurrent prefill traffic, or the eagerly quantized pages it
+        // registers would not be a pure function of the token prefix
+        let aligned = self.prefix_caching();
+        for (gi, (id, take)) in
+            plan_prefill_chunks(&remaining, chunk, chunk, aligned).into_iter().enumerate()
+        {
             let shared = self.cache.get(id).context("prefilling sequence lost its cache")?;
+            // page budget for what this grant will finalize: eager mode
+            // cuts pages as the chunk lands, exact mode all at once on the
+            // finishing flush.  If the pool can't cover it even after LRU
+            // reclaim, skip the grant — decoders keep draining and free
+            // pages — EXCEPT for the head-of-queue grant, which always
+            // proceeds (transient overshoot beats a stall with nothing
+            // decoding).
+            {
+                let cache = shared.lock().unwrap();
+                let tr = &self.running[&id];
+                let finishing = tr.prefill_pos + take == tr.req.prompt.len();
+                let tokens_after = if eager || finishing { tr.prefill_pos + take } else { 0 };
+                let need = pages_needed(tokens_after, cache.pages.len(), group);
+                if need > 0 && !self.cache.pool().try_free(need) && gi > 0 {
+                    continue;
+                }
+            }
             let logits = {
                 let Backend::Native(model) = &mut self.backend else {
                     bail!("chunked prefill requires the native backend");
                 };
                 let tr = &self.running[&id];
                 let pos = tr.prefill_pos;
-                // only the prompt's final chunk needs the lm_head pass
+                // only the prompt's final chunk needs the lm_head pass,
+                // and only when a first token will actually be sampled
+                // (a preemption-recovery prefill never samples)
                 let finishing = pos + take == tr.req.prompt.len();
                 let mut cache = shared.lock().unwrap();
-                model.prefill_chunk(&tr.req.prompt[pos..pos + take], pos, &mut cache, eager, finishing)
+                model.prefill_chunk(
+                    &tr.req.prompt[pos..pos + take],
+                    pos,
+                    &mut cache,
+                    eager,
+                    finishing && tr.generated.is_empty(),
+                )
             };
             let tr = self.running.get_mut(&id).unwrap();
             tr.prefill_pos += take;
@@ -337,15 +475,30 @@ impl Engine {
             if tr.prefill_remaining() == 0 {
                 if !eager {
                     // quantize full groups now, in append order — the same
-                    // groups the unchunked path would have produced
+                    // pages the unchunked path would have produced
                     shared.lock().unwrap().flush_groups();
                 }
-                let tok = tr.req.sampler.sample(&logits, &mut self.rng);
-                tr.generated.push(tok);
-                tr.first_token_at = Some(Instant::now());
+                if self.prefix_caching() {
+                    // register the prompt's pages for future sharers, ONCE
+                    // per prefill (per-chunk registration would re-hash the
+                    // whole prefix every chunk — O(prompt²/chunk)).
+                    // Idempotent, and generated-region pages never
+                    // register: the token slice bound stops at the prompt.
+                    let cache = shared.lock().unwrap();
+                    let tr = &self.running[&id];
+                    self.cache.pool().register_prefix(&cache.pages, &tr.req.prompt);
+                }
+                let tr = self.running.get_mut(&id).unwrap();
+                if tr.generated.is_empty() {
+                    let tok = tr.req.sampler.sample(&logits, &mut self.rng);
+                    tr.generated.push(tok);
+                    tr.first_token_at = Some(Instant::now());
+                    self.metrics.decode_tokens += 1;
+                    self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
+                }
+                // else: preemption recovery — tokens already exist; the
+                // decode phase replays them into the rebuilt cache
                 tr.state = RequestState::Decoding;
-                self.metrics.decode_tokens += 1;
-                self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
             }
         }
         self.prefill_order
@@ -354,6 +507,68 @@ impl Engine {
             self.metrics.decode_stall.record_secs(t0.elapsed().as_secs_f64());
         }
         Ok(())
+    }
+
+    // ------------------------------------------------- preemptive eviction
+
+    /// Make sure every decoding sequence can cut the page its next append
+    /// might need.  Shortfall order: reclaim LRU refcount-zero prefix
+    /// pages, then preempt the youngest decoding sequence (release its
+    /// pages, requeue it through chunked prefill) — repeatedly, until the
+    /// demand fits or only one decoder remains (which is then allowed a
+    /// transient overshoot rather than preempting itself forever).
+    fn ensure_decode_pages(&mut self) {
+        if !self.cache.pool().bounded() {
+            return;
+        }
+        let group = self.cfg.group;
+        loop {
+            let mut decoding: Vec<(RequestId, Instant)> = Vec::new();
+            let mut need = 0usize;
+            for (&id, tr) in &self.running {
+                if tr.state != RequestState::Decoding || tr.done() {
+                    continue;
+                }
+                decoding.push((id, tr.arrived));
+                if let Some(c) = self.cache.get(id) {
+                    let c = c.lock().unwrap();
+                    need += pages_needed(c.len() + 1, c.pages.len(), group);
+                }
+            }
+            if need == 0 || self.cache.pool().try_free(need) {
+                return;
+            }
+            if decoding.len() <= 1 {
+                // preempting the only decoder cannot help anyone — let it
+                // overshoot by its one page and keep making progress
+                return;
+            }
+            let victim = pick_preemption_victim(&decoding).expect("nonempty");
+            self.preempt(victim);
+        }
+    }
+
+    /// Release the sequence's pages and send it back through chunked
+    /// prefill.  Its generated tokens are kept: the recovery prefill
+    /// rebuilds the prompt region (re-attaching any still-cached prefix
+    /// pages for free), then the decode phase REPLAYS the generated
+    /// tokens — feeding each known token without sampling — until the
+    /// cache catches back up.  In exact (deferred) chunking mode the
+    /// replayed computation is the original one, so the victim's final
+    /// rollout is bit-identical to an unpreempted run.
+    fn preempt(&mut self, id: RequestId) {
+        let tr = self.running.get_mut(&id).expect("victim is running");
+        debug_assert_eq!(tr.state, RequestState::Decoding);
+        tr.state = RequestState::Prefilling;
+        tr.prefill_pos = 0;
+        self.cache.reset(id);
+        if self.prefix_caching() {
+            let mut tr = self.running.remove(&id).expect("victim is running");
+            self.adopt_prefix(&mut tr);
+            self.running.insert(id, tr);
+        }
+        self.prefill_order.push_back(id);
+        self.metrics.preemptions += 1;
     }
 
     fn prefill_one(&mut self, tr: &mut Tracked) -> Result<()> {
@@ -449,14 +664,31 @@ impl Engine {
         let step_t = Instant::now();
         let ids: Vec<RequestId> = self.running.keys().cloned().collect();
         // collect (id, quantized cache len) for batching; sequences still
-        // prefilling (chunked mode) don't decode yet
+        // prefilling (chunked mode) don't decode yet.  `feeds` carries the
+        // token each sequence steps on: normally its last generated token,
+        // but a sequence recovering from preemption REPLAYS its known
+        // generated tokens (cache behind by k steps -> feed generated[fed]
+        // without sampling) until the cache catches back up.
         let mut seqs: Vec<(u64, usize)> = Vec::new();
+        let mut feeds: HashMap<RequestId, (u32, bool)> = HashMap::new();
         for &id in &ids {
             let tr = &self.running[&id];
             if tr.state != RequestState::Decoding || tr.done() {
                 continue;
             }
-            let qlen = self.cache.get(id).map(|c| c.lock().unwrap().quantized_len()).unwrap_or(0);
+            let Some(c) = self.cache.get(id) else { continue };
+            let (qlen, next_pos) = {
+                let c = c.lock().unwrap();
+                (c.quantized_len(), c.next_pos)
+            };
+            let fed = next_pos - tr.req.prompt.len();
+            let feed = if fed + 1 < tr.generated.len() {
+                (tr.generated[fed], true) // replay: token known, no sample
+            } else {
+                debug_assert_eq!(fed + 1, tr.generated.len());
+                (*tr.generated.last().unwrap(), false)
+            };
+            feeds.insert(id, feed);
             seqs.push((id, qlen));
         }
 
@@ -477,13 +709,15 @@ impl Engine {
                         for &id in shard {
                             let tr = &self.running[&id];
                             let cache = self.cache.get(id).context("cache missing")?;
+                            let (last_token, replay) = feeds[&id];
                             pool.submit(
                                 w,
                                 DecodeTask {
                                     id,
                                     cache,
-                                    last_token: *tr.generated.last().unwrap(),
+                                    last_token,
                                     sampler: tr.req.sampler,
+                                    replay,
                                 },
                             );
                         }
@@ -492,6 +726,9 @@ impl Engine {
                     results.clear();
                     pool.flush(&mut results);
                     for r in &results {
+                        if r.replay {
+                            continue; // cache rebuilt; token already known
+                        }
                         let tr = self.running.get_mut(&r.id).unwrap();
                         tr.generated.push(r.token);
                         self.metrics.decode_tokens += 1;
@@ -499,12 +736,15 @@ impl Engine {
                     self.step_results = results;
                 } else {
                     for &(id, _) in &seqs {
-                        let tr = self.running.get_mut(&id).unwrap();
-                        let last = *tr.generated.last().unwrap();
+                        let (feed, replay) = feeds[&id];
                         let shared = self.cache.get(id).context("cache missing")?;
                         let mut cache = shared.lock().unwrap();
-                        let logits = model.decode_step(last, &mut cache).to_vec();
+                        let logits = model.decode_step(feed, &mut cache).to_vec();
                         drop(cache);
+                        if replay {
+                            continue; // cache rebuilt; token already known
+                        }
+                        let tr = self.running.get_mut(&id).unwrap();
                         let tok = tr.req.sampler.sample(&logits, &mut self.rng);
                         tr.generated.push(tok);
                         self.metrics.decode_tokens += 1;
@@ -825,6 +1065,92 @@ mod tests {
         assert_eq!(eng.metrics.decode_steps, 4);
         assert_eq!(eng.metrics.decode_batch_sum, 4);
         assert!((eng.metrics.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_cache_reuses_pages_and_keeps_greedy_rollouts_bit_identical() {
+        // Requests served one after another on the SAME engine: with
+        // prefix caching on, later prompts sharing a prefix must attach
+        // to pooled pages (fewer prefill tokens) yet produce exactly the
+        // tokens the prefix-off engine produces, at any pool width.
+        let base: Vec<u32> = (0..32).map(|i| (i * 5 % 64) as u32).collect();
+        let prompts: Vec<Vec<u32>> = vec![
+            base.clone(),
+            base.iter().cloned().chain([7, 9, 11]).collect(),
+            base.iter().cloned().chain([3, 1]).collect(),
+            (0..20).map(|i| (i * 11 % 64) as u32).collect(), // unrelated
+        ];
+        let run = |prefix: bool, workers: usize| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 16; // multiple of group=8
+            opts.prefill_quantize_eagerly = true; // prefix mode forces this anyway
+            opts.prefix_cache = prefix;
+            opts.decode_workers = workers;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 77, 4.0, opts);
+            let mut outs = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(Request::greedy(i as u64, p.clone(), 8)).unwrap();
+                let done = eng.run_to_completion().unwrap();
+                outs.push(done[0].tokens.clone());
+            }
+            (outs, eng.metrics.prefill_tokens, eng.metrics.prefix_hits)
+        };
+        let (cold, cold_tokens, cold_hits) = run(false, 1);
+        assert_eq!(cold_hits, 0);
+        for workers in [1usize, 4] {
+            let (shared, shared_tokens, hits) = run(true, workers);
+            assert_eq!(cold, shared, "workers={workers}: rollouts must be bit-identical");
+            assert!(hits >= 2, "prompts 2 and 3 share prompt 1's prefix (hits {hits})");
+            assert!(
+                shared_tokens < cold_tokens,
+                "shared prefill {shared_tokens} must skip tokens vs cold {cold_tokens}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_exhaustion_preempts_youngest_and_both_complete_exactly() {
+        // Two decoders under a pool too small for both to grow: the
+        // younger one must be preempted (not rejected, not stalled), and
+        // BOTH rollouts must match an unconstrained run bit-for-bit —
+        // exact-mode recovery re-prefills the prompt and replays the
+        // already-generated tokens.
+        let run = |pages: usize| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 8; // exact (deferred) mode: bit-identical recovery
+            opts.cache_pages = pages;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 91, 4.0, opts);
+            // group=8, streams=4: prompt 8 = 1 page each; 24 generated
+            // tokens grow each sequence by 3 more pages
+            eng.submit(Request::greedy(1, (0..8).map(|i| i as u32).collect(), 24)).unwrap();
+            eng.step().unwrap(); // seq 1 prefilled + decoding before 2 arrives
+            eng.submit(Request::greedy(2, (8..16).map(|i| i as u32).collect(), 24)).unwrap();
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            assert_eq!(done.len(), 2);
+            assert!(done.iter().all(|c| !c.rejected && !c.truncated));
+            let preemptions = eng.metrics.preemptions;
+            (done.into_iter().map(|c| c.tokens).collect::<Vec<_>>(), preemptions)
+        };
+        let (unconstrained, p0) = run(0);
+        assert_eq!(p0, 0, "unbounded pool must never preempt");
+        let (constrained, p) = run(4);
+        assert!(p > 0, "4-page pool cannot hold two 4-page sequences without preempting");
+        assert_eq!(unconstrained, constrained, "preemption must not change any rollout");
+    }
+
+    #[test]
+    fn preempted_decoder_allows_transient_overshoot_when_alone() {
+        // one decoder, pool of 1 page: it must finish by overshooting
+        // (never self-preempt into a livelock)
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.cache_pages = 1;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 92, 4.0, opts);
+        eng.submit(Request::greedy(1, vec![1, 2, 3, 4], 20)).unwrap();
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 20);
+        assert_eq!(eng.metrics.preemptions, 0, "a lone decoder never preempts itself");
     }
 
     #[test]

@@ -28,6 +28,18 @@ pub struct Metrics {
     /// recorded once per engine step that ran chunks while ≥1 sequence
     /// was decoding — the head-of-line blocking chunked prefill bounds
     pub decode_stall: LatencyHist,
+    /// requests whose prompt attached to ≥1 already-pooled prefix page
+    pub prefix_hits: u64,
+    /// prompt tokens skipped at prefill because their pages were shared
+    pub prefix_tokens_reused: u64,
+    /// decoding sequences preempted (pages released, requeued to prefill)
+    /// because the page pool was exhausted
+    pub preemptions: u64,
+    /// physical pages resident in the pool (gauge, synced per step)
+    pub pages_in_use: u64,
+    /// refcount-zero cached prefix pages reclaimed under pressure
+    /// (gauge, synced per step from the pool's counter)
+    pub pages_evicted: u64,
 }
 
 impl Default for Metrics {
@@ -53,6 +65,11 @@ impl Metrics {
             e2e: LatencyHist::new(),
             queue_delay: LatencyHist::new(),
             decode_stall: LatencyHist::new(),
+            prefix_hits: 0,
+            prefix_tokens_reused: 0,
+            preemptions: 0,
+            pages_in_use: 0,
+            pages_evicted: 0,
         }
     }
 
@@ -97,6 +114,18 @@ impl Metrics {
                 self.decode_stall.p(95.0) * 1e3,
             ));
         }
+        if self.pages_in_use > 0 || self.pages_evicted > 0 || self.preemptions > 0 {
+            s.push_str(&format!(
+                ", pages {} (evicted {}), preempt {}",
+                self.pages_in_use, self.pages_evicted, self.preemptions,
+            ));
+        }
+        if self.prefix_hits > 0 {
+            s.push_str(&format!(
+                ", prefix hits {} ({} tok reused)",
+                self.prefix_hits, self.prefix_tokens_reused,
+            ));
+        }
         s
     }
 }
@@ -117,5 +146,20 @@ mod tests {
     fn summary_is_printable() {
         let m = Metrics::new();
         assert!(m.summary().contains("reqs"));
+        assert!(!m.summary().contains("prefix hits"), "quiet when unused");
+    }
+
+    #[test]
+    fn summary_surfaces_paged_cache_counters() {
+        let mut m = Metrics::new();
+        m.pages_in_use = 12;
+        m.pages_evicted = 3;
+        m.preemptions = 1;
+        m.prefix_hits = 5;
+        m.prefix_tokens_reused = 640;
+        let s = m.summary();
+        assert!(s.contains("pages 12 (evicted 3)"), "{s}");
+        assert!(s.contains("preempt 1"), "{s}");
+        assert!(s.contains("prefix hits 5 (640 tok reused)"), "{s}");
     }
 }

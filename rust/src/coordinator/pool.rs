@@ -35,6 +35,11 @@ pub struct DecodeTask {
     pub cache: SharedSeq,
     pub last_token: u32,
     pub sampler: Sampler,
+    /// Preemption-recovery replay: the fed token is already known (it was
+    /// generated before the sequence lost its pages), so the step only
+    /// rebuilds cache state — the logits are discarded, nothing is
+    /// sampled, and no RNG is consumed.
+    pub replay: bool,
 }
 
 /// One sampled token, keyed back to its request.
@@ -42,6 +47,9 @@ pub struct DecodeTask {
 pub struct StepResult {
     pub id: u64,
     pub token: u32,
+    /// true for replay steps: `token` is meaningless and must not be
+    /// appended to the request's generation
+    pub replay: bool,
 }
 
 enum Msg {
@@ -84,8 +92,12 @@ impl DecodePool {
                                 // assigned this sequence for the step
                                 let mut cache = t.cache.lock().unwrap();
                                 let logits = m.decode_step(t.last_token, &mut cache);
-                                let token = t.sampler.sample(logits, &mut rng);
-                                results.push(StepResult { id: t.id, token });
+                                let token = if t.replay {
+                                    0 // state-rebuild only; logits discarded
+                                } else {
+                                    t.sampler.sample(logits, &mut rng)
+                                };
+                                results.push(StepResult { id: t.id, token, replay: t.replay });
                             }
                             if result_tx.send((results, tasks)).is_err() {
                                 return;
@@ -206,6 +218,7 @@ mod tests {
                     cache: c.clone(),
                     last_token: 3,
                     sampler: Sampler::Greedy,
+                    replay: false,
                 },
             );
         }
@@ -233,7 +246,13 @@ mod tests {
         for step in 0..4 {
             pool.submit(
                 0,
-                DecodeTask { id: 1, cache: cache.clone(), last_token: 2, sampler: Sampler::Greedy },
+                DecodeTask {
+                    id: 1,
+                    cache: cache.clone(),
+                    last_token: 2,
+                    sampler: Sampler::Greedy,
+                    replay: false,
+                },
             );
             out.clear();
             pool.flush(&mut out);

@@ -55,9 +55,28 @@ impl SchedulerPolicy {
     }
 }
 
+/// Preemptive-eviction victim selection: when the page pool is exhausted
+/// mid-decode, the YOUNGEST decoding sequence is preempted — it has the
+/// least sunk compute to recompute and the oldest sequences keep their
+/// latency SLO.  `decoding` carries any monotone arrival key (the engine
+/// passes arrival `Instant`s); ties break toward the larger id, i.e.
+/// the later admission.  Returns `None` when nothing is decoding.
+pub fn pick_preemption_victim<K: Ord + Copy>(decoding: &[(u64, K)]) -> Option<u64> {
+    decoding.iter().max_by_key(|&&(id, k)| (k, id)).map(|&(id, _)| id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn victim_is_youngest_with_id_tiebreak() {
+        assert_eq!(pick_preemption_victim::<u32>(&[]), None);
+        assert_eq!(pick_preemption_victim(&[(7, 10u32)]), Some(7));
+        assert_eq!(pick_preemption_victim(&[(1, 5u32), (2, 9), (3, 7)]), Some(2));
+        // equal arrival keys: the higher id (later admission) goes
+        assert_eq!(pick_preemption_victim(&[(4, 1u32), (9, 1)]), Some(9));
+    }
 
     #[test]
     fn admits_up_to_limit() {

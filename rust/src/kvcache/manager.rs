@@ -7,10 +7,20 @@
 //! disjoint shards per step, so every per-sequence lock is uncontended in
 //! the steady state — the mutex only arbitrates against management-plane
 //! reads like [`CacheManager::report`].
+//!
+//! Every sequence allocates its pages from one shared [`PagePool`], so
+//! admission is O(1): the pool's atomic counters are exact (pages
+//! reconcile on drop, residual tails on every mutation), and shared
+//! prefix pages are counted ONCE — `admits` never locks a sequence.
+//! [`CacheManager::report`] keeps the old walk as the slow debug path and
+//! reports both views: `bytes` (logical, per-sequence sum) and
+//! `physical_bytes` (deduplicated, what the hardware holds).
 
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
+use super::pool::PagePool;
 use super::seq::{CacheConfig, SequenceCache};
 
 /// Shard-safe handle to one sequence's cache.  Clone is an `Arc` bump;
@@ -22,7 +32,13 @@ pub type SharedSeq = Arc<Mutex<SequenceCache>>;
 pub struct MemoryReport {
     pub sequences: usize,
     pub tokens: usize,
+    /// logical bytes: every sequence's pages summed, shared pages counted
+    /// per sequence (what you'd pay without prefix sharing / COW forks)
     pub bytes: usize,
+    /// physical bytes from the pool's exact counters: shared pages once
+    pub physical_bytes: usize,
+    /// physical pages resident in the pool
+    pub pages: usize,
     pub budget_bytes: usize,
 }
 
@@ -31,8 +47,13 @@ impl MemoryReport {
         if self.budget_bytes == 0 {
             0.0
         } else {
-            self.bytes as f64 / self.budget_bytes as f64
+            self.physical_bytes as f64 / self.budget_bytes as f64
         }
+    }
+
+    /// Bytes saved by sharing (logical - physical).
+    pub fn shared_savings(&self) -> usize {
+        self.bytes.saturating_sub(self.physical_bytes)
     }
 }
 
@@ -41,15 +62,34 @@ pub struct CacheManager {
     cfg: CacheConfig,
     budget_bytes: usize,
     seqs: HashMap<u64, SharedSeq>,
+    pool: PagePool,
 }
 
 impl CacheManager {
     pub fn new(cfg: CacheConfig, budget_bytes: usize) -> Self {
-        CacheManager { cfg, budget_bytes, seqs: HashMap::new() }
+        CacheManager {
+            cfg,
+            budget_bytes,
+            seqs: HashMap::new(),
+            pool: PagePool::new(usize::MAX),
+        }
+    }
+
+    /// Bound the pool at `pages` physical pages (0 = unbounded).
+    pub fn with_page_capacity(mut self, pages: usize) -> Self {
+        if pages > 0 {
+            self.pool = PagePool::new(pages);
+        }
+        self
     }
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// The shared page pool (allocation, prefix index, exact counters).
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
     }
 
     /// Estimated bytes for a sequence of `tokens` (used for admission
@@ -71,17 +111,47 @@ impl CacheManager {
         streams * (groups * (key_group_bytes + val_group_bytes) + resid_bytes)
     }
 
-    /// True if a new sequence of `tokens` would fit the budget.
+    /// Exact physical bytes at rest, O(1): the pool's page counter
+    /// (shared pages once) + every live residual tail.  No sequence lock
+    /// is taken — this is what makes admission constant-time.
+    pub fn physical_bytes(&self) -> usize {
+        let c = self.pool.counters();
+        c.page_bytes.load(Ordering::Relaxed) + c.resid_bytes.load(Ordering::Relaxed)
+    }
+
+    /// True if a new sequence of `tokens` would fit the budget.  O(1).
     pub fn admits(&self, tokens: usize) -> bool {
-        self.report().bytes + self.estimate_bytes(tokens) <= self.budget_bytes
+        self.physical_bytes() + self.estimate_bytes(tokens) <= self.budget_bytes
     }
 
     /// Create (or fetch) the sequence and return a shard-safe handle.
     pub fn create(&mut self, id: u64) -> SharedSeq {
+        let cfg = self.cfg.clone();
+        let pool = self.pool.clone();
         self.seqs
             .entry(id)
-            .or_insert_with(|| Arc::new(Mutex::new(SequenceCache::new(self.cfg.clone()))))
+            .or_insert_with(|| Arc::new(Mutex::new(SequenceCache::new_pooled(cfg, pool))))
             .clone()
+    }
+
+    /// Replace the sequence's cache with a fresh empty one (preemption:
+    /// the old pages drop as soon as the last outstanding handle does).
+    pub fn reset(&mut self, id: u64) -> SharedSeq {
+        let fresh: SharedSeq = Arc::new(Mutex::new(SequenceCache::new_pooled(
+            self.cfg.clone(),
+            self.pool.clone(),
+        )));
+        self.seqs.insert(id, fresh.clone());
+        fresh
+    }
+
+    /// Copy-on-write fork of `src` registered as `dst` (n-way sampling):
+    /// finalized pages are shared refcounted, residual tails deep-copied.
+    pub fn fork(&mut self, src: u64, dst: u64) -> Option<SharedSeq> {
+        let forked = self.seqs.get(&src)?.lock().unwrap().fork();
+        let shared: SharedSeq = Arc::new(Mutex::new(forked));
+        self.seqs.insert(dst, shared.clone());
+        Some(shared)
     }
 
     /// Shard-safe handle for an existing sequence.
@@ -101,6 +171,10 @@ impl CacheManager {
         self.seqs.is_empty()
     }
 
+    /// Full memory breakdown.  This is the SLOW debug/observability path:
+    /// it locks and walks every live sequence to compute the logical
+    /// view; the physical fields come from the same O(1) counters
+    /// admission uses.
     pub fn report(&self) -> MemoryReport {
         let mut bytes = 0;
         let mut tokens = 0;
@@ -113,6 +187,8 @@ impl CacheManager {
             sequences: self.seqs.len(),
             tokens,
             bytes,
+            physical_bytes: self.physical_bytes(),
+            pages: self.pool.pages_in_use(),
             budget_bytes: self.budget_bytes,
         }
     }
@@ -171,6 +247,63 @@ mod tests {
         let est = m.estimate_bytes(tokens);
         let ratio = est as f64 / actual as f64;
         assert!((0.5..=2.0).contains(&ratio), "est {est} actual {actual}");
+    }
+
+    #[test]
+    fn o1_physical_accounting_matches_walk_without_sharing() {
+        // the exact counters admission reads must agree with the slow
+        // lock-walk whenever no pages are shared
+        let c = cfg();
+        let mut m = CacheManager::new(c.clone(), usize::MAX);
+        let mut rng = Rng::new(25);
+        for id in 0..3 {
+            let tokens = 10 + 7 * id as usize; // mixed page/residual splits
+            let block = c.n_layers * c.n_kv_heads * tokens * c.head_dim;
+            let (k, v) = (rng.normal_vec(block), rng.normal_vec(block));
+            m.create(id).lock().unwrap().append_prefill(&k, &v, tokens);
+        }
+        let r = m.report();
+        assert_eq!(r.physical_bytes, r.bytes, "no sharing -> views agree");
+        assert_eq!(r.physical_bytes, m.physical_bytes());
+        // decode-step growth keeps them reconciled
+        let step = c.n_layers * c.n_kv_heads * c.head_dim;
+        m.get(0).unwrap().lock().unwrap().append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        let r = m.report();
+        assert_eq!(r.physical_bytes, r.bytes);
+        // release drops both
+        m.release(0);
+        m.release(1);
+        m.release(2);
+        let r = m.report();
+        assert_eq!(r.physical_bytes, 0);
+        assert_eq!(r.tokens, 0);
+        assert_eq!(r.pages, 0);
+    }
+
+    #[test]
+    fn forked_pages_are_counted_once_physically() {
+        let c = cfg();
+        let mut m = CacheManager::new(c.clone(), usize::MAX);
+        let mut rng = Rng::new(26);
+        let tokens = 24; // 3 pages at group 8
+        let block = c.n_layers * c.n_kv_heads * tokens * c.head_dim;
+        let (k, v) = (rng.normal_vec(block), rng.normal_vec(block));
+        m.create(1).lock().unwrap().append_prefill(&k, &v, tokens);
+        let solo = m.report();
+        m.fork(1, 2).expect("fork");
+        m.fork(1, 3).expect("fork");
+        let shared = m.report();
+        assert_eq!(shared.sequences, 3);
+        assert_eq!(shared.physical_bytes, solo.physical_bytes, "forks add no physical pages");
+        assert_eq!(shared.bytes, 3 * solo.bytes, "logical view triples");
+        assert!(shared.shared_savings() > 0);
+        assert_eq!(shared.pages, 3);
+        // releasing every sequence returns the pool to zero
+        m.release(1);
+        m.release(2);
+        m.release(3);
+        assert_eq!(m.report().physical_bytes, 0);
+        assert_eq!(m.pool().pages_in_use(), 0, "refcounts drain to zero");
     }
 
     #[test]

@@ -1,20 +1,26 @@
 //! Quantized paged KV-cache: the object the paper studies, as a serving
 //! substrate.
 //!
-//! * [`stream`] — one (layer, kv-head) stream: PolarQuant-encoded key
-//!   groups, (optionally quantized) values, and the fp residual tail that
-//!   buffers tokens until a full group can be finalized.
-//! * [`seq`] — a sequence's cache across all layers/heads, with the
-//!   append/finalize state machine and dense export for the PJRT graphs.
+//! * [`pool`] — the refcounted group-page pool: fixed-size pages (one
+//!   finalized key group + its values per stream), exact O(1) atomic
+//!   accounting, the verified prefix index, and LRU reclamation of
+//!   refcount-zero cached pages.
+//! * [`stream`] — one (layer, kv-head) stream's fp residual tail and the
+//!   group encoder that cuts its slice of each page.
+//! * [`seq`] — a sequence's cache: shared page handles across all
+//!   layers/heads, the append/finalize state machine, COW forks, and the
+//!   dense export for the PJRT graphs.
 //! * [`eviction`] — SnapKV-style prompt compression (Table 8).
-//! * [`manager`] — multi-sequence allocation, global memory budget,
-//!   accounting that backs the Table 4 memory column.
+//! * [`manager`] — multi-sequence allocation over one shared pool, with
+//!   constant-time admission against the global memory budget.
 
 pub mod eviction;
 pub mod manager;
+pub mod pool;
 pub mod seq;
 pub mod stream;
 
 pub use manager::{CacheManager, MemoryReport, SharedSeq};
-pub use seq::{CacheConfig, SequenceCache};
+pub use pool::{Page, PagePool};
+pub use seq::{CacheConfig, SequenceCache, StreamView};
 pub use stream::StreamCache;

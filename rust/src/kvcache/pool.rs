@@ -1,0 +1,466 @@
+//! Refcounted group-page pool: the shared physical store behind every
+//! sequence cache.
+//!
+//! A [`Page`] is the allocation unit of the paged KV cache: ONE finalized
+//! (quantized) key group plus its values for EVERY (layer, kv-head)
+//! stream of a sequence — i.e. a horizontal slice of `spec.group` tokens
+//! across the whole model.  Sequences hold `Arc<Page>` handles, so
+//!
+//! * **sharing is a refcount bump** — N sequences whose prompts share a
+//!   prefix attach to the same physical pages (prefix caching), and
+//!   [`crate::kvcache::SequenceCache::fork`] is copy-on-write by
+//!   construction: finalized pages are shared, only the fp residual tail
+//!   is deep-copied;
+//! * **accounting is exact and O(1)** — pages carry a handle to the
+//!   pool's atomic counters and reconcile on `Drop`, so
+//!   `CacheManager::admits` never walks live sequences;
+//! * **eviction is precise** — the prefix index holds its own `Arc`, so a
+//!   cached page with `strong_count == 1` is provably referenced by no
+//!   sequence and can be reclaimed LRU when the pool is exhausted.
+//!
+//! Sharing quantized pages across sequences is EXACT, not approximate: a
+//! finalized `PolarGroup` is a deterministic function of the post-RoPE
+//! keys at fixed absolute positions, which (under eager chunked prefill)
+//! are themselves a deterministic function of the token prefix.  The
+//! prefix index therefore keys pages by a verified hash-chain over the
+//! token prefix — equal chain means equal pages, bit for bit.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::stream::GroupValues;
+use crate::quant::polar::PolarGroup;
+
+/// Pool-wide accounting, shared by every page and sequence the pool has
+/// adopted.  All counters are atomics so the decode workers' appends and
+/// the engine thread's admission checks never contend on a lock.
+#[derive(Debug, Default)]
+pub struct PoolCounters {
+    /// physical pages resident (each shared page counted ONCE)
+    pub pages: AtomicUsize,
+    /// physical bytes of those pages
+    pub page_bytes: AtomicUsize,
+    /// fp residual-tail bytes across live sequences (fp16-charged)
+    pub resid_bytes: AtomicUsize,
+    /// logical tokens across live sequences (shared pages counted per
+    /// sequence — the "what you'd pay without sharing" token count)
+    pub seq_tokens: AtomicUsize,
+    /// refcount-zero prefix pages reclaimed under pressure
+    pub pages_evicted: AtomicU64,
+}
+
+/// One finalized group across all streams: `keys[s]` / `vals[s]` belong
+/// to stream `s` (= layer * n_kv_heads + head).  Immutable once built —
+/// that is what makes sharing across sequences sound.
+#[derive(Debug)]
+pub struct Page {
+    pub keys: Vec<PolarGroup>,
+    pub vals: Vec<GroupValues>,
+    /// tokens this page covers (== spec.group; pages are only cut from
+    /// full groups)
+    pub tokens: usize,
+    nbytes: usize,
+    /// accounting handle; `None` for pages of an un-pooled sequence
+    counters: Option<Arc<PoolCounters>>,
+}
+
+impl Page {
+    pub fn new(keys: Vec<PolarGroup>, vals: Vec<GroupValues>, tokens: usize) -> Self {
+        debug_assert_eq!(keys.len(), vals.len());
+        let nbytes = keys.iter().map(|g| g.nbytes()).sum::<usize>()
+            + vals.iter().map(|v| v.nbytes(true)).sum::<usize>();
+        Page { keys, vals, tokens, nbytes, counters: None }
+    }
+
+    /// Physical bytes at rest (same accounting as the pre-paged cache:
+    /// codes packed, params fp32, values fp16-charged).
+    pub fn nbytes(&self) -> usize {
+        self.nbytes
+    }
+}
+
+impl Drop for Page {
+    fn drop(&mut self) {
+        if let Some(c) = &self.counters {
+            c.pages.fetch_sub(1, Ordering::Relaxed);
+            c.page_bytes.fetch_sub(self.nbytes, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One prefix-index entry: the page for the group whose token chain
+/// hashes to the map key, plus enough material to VERIFY the chain (so a
+/// hash collision can only cause a miss, never a wrong share).
+struct PrefixEntry {
+    /// chain hash of the parent group (`ROOT_HASH` for the first group)
+    parent: u64,
+    /// the exact tokens this group covers
+    toks: Vec<u32>,
+    page: Arc<Page>,
+    /// LRU clock value of the last hit/registration
+    tick: u64,
+}
+
+const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+
+fn chain_hash(parent: u64, toks: &[u32]) -> u64 {
+    // FNV-1a over the parent hash then the group's token ids: cheap,
+    // deterministic, and collisions are harmless (entries are verified)
+    let mut h = 0x1000_0000_01b3u64 ^ parent;
+    for &t in toks {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct PrefixIndex {
+    entries: HashMap<u64, PrefixEntry>,
+    clock: u64,
+}
+
+/// Hard ceiling on prefix-index entries when the pool itself is
+/// unbounded.  Without it, a long-running server with `--prefix-cache on`
+/// and no `--cache-pages` cap would pin every distinct prompt's pages
+/// forever (nothing else evicts index entries) and leak without bound
+/// under diverse traffic.  Bounded pools use their page capacity instead —
+/// the index can never outgrow what is resident.
+const UNBOUNDED_PREFIX_CAP: usize = 32_768;
+
+/// Cloneable handle to the shared page pool: capacity bookkeeping plus
+/// the prefix index.  Page *data* is never behind this lock — readers go
+/// straight through their `Arc<Page>` handles; the mutex only guards the
+/// index (touched at prefill/registration rate, not decode rate).
+#[derive(Clone)]
+pub struct PagePool {
+    index: Arc<Mutex<PrefixIndex>>,
+    counters: Arc<PoolCounters>,
+    /// physical page capacity; `usize::MAX` = unbounded
+    capacity: usize,
+}
+
+impl std::fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagePool")
+            .field("capacity", &self.capacity)
+            .field("pages_in_use", &self.pages_in_use())
+            .field("page_bytes", &self.page_bytes())
+            .finish()
+    }
+}
+
+impl PagePool {
+    /// `capacity` bounds physical resident pages (`usize::MAX` for
+    /// unbounded — the accounting still runs).
+    pub fn new(capacity: usize) -> Self {
+        PagePool {
+            index: Arc::new(Mutex::new(PrefixIndex { entries: HashMap::new(), clock: 0 })),
+            counters: Arc::new(PoolCounters::default()),
+            capacity,
+        }
+    }
+
+    pub fn counters(&self) -> &Arc<PoolCounters> {
+        &self.counters
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn bounded(&self) -> bool {
+        self.capacity != usize::MAX
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.counters.pages.load(Ordering::Relaxed)
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.counters.page_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn pages_evicted(&self) -> u64 {
+        self.counters.pages_evicted.load(Ordering::Relaxed)
+    }
+
+    /// Pages allocatable right now without reclaiming anything.
+    pub fn free_pages(&self) -> usize {
+        self.capacity.saturating_sub(self.pages_in_use())
+    }
+
+    /// Take ownership of a freshly finalized page: attach the accounting
+    /// handle and hand back the shared form.  Never fails — capacity is
+    /// enforced ahead of time by the scheduler via [`PagePool::try_free`]
+    /// (a transient one-page overshoot beats a fallible deep-in-the-model
+    /// allocation path).
+    pub fn adopt(&self, mut page: Page) -> Arc<Page> {
+        debug_assert!(page.counters.is_none());
+        self.counters.pages.fetch_add(1, Ordering::Relaxed);
+        self.counters.page_bytes.fetch_add(page.nbytes, Ordering::Relaxed);
+        page.counters = Some(self.counters.clone());
+        Arc::new(page)
+    }
+
+    /// Ensure `need` pages can be allocated, reclaiming LRU refcount-zero
+    /// prefix pages if necessary.  Returns false if the shortfall remains
+    /// (every resident page is still referenced by some sequence) — the
+    /// engine then preempts a decoding sequence instead of stalling.
+    pub fn try_free(&self, need: usize) -> bool {
+        if need <= self.free_pages() {
+            return true;
+        }
+        let mut idx = self.index.lock().unwrap();
+        while self.free_pages() < need {
+            // LRU entry whose page no sequence holds (the index owns the
+            // only Arc)
+            let victim = idx
+                .entries
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(&h, _)| h);
+            match victim {
+                Some(h) => {
+                    idx.entries.remove(&h);
+                    self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Longest already-pooled prefix of `tokens`, as verified chain pages
+    /// (each covering `group` tokens), capped at `max_tokens`.  Hits
+    /// refresh the LRU clock.
+    pub fn lookup_prefix(&self, tokens: &[u32], group: usize, max_tokens: usize) -> Vec<Arc<Page>> {
+        let mut idx = self.index.lock().unwrap();
+        idx.clock += 1;
+        let tick = idx.clock;
+        let mut pages = Vec::new();
+        let mut parent = ROOT_HASH;
+        let mut pos = 0;
+        while pos + group <= tokens.len().min(max_tokens) {
+            let toks = &tokens[pos..pos + group];
+            let h = chain_hash(parent, toks);
+            match idx.entries.get_mut(&h) {
+                // verify BOTH the tokens and the chain parent: equal hash
+                // alone is not proof of an equal prefix
+                Some(e) if e.parent == parent && e.toks == toks => {
+                    e.tick = tick;
+                    pages.push(e.page.clone());
+                }
+                _ => break,
+            }
+            parent = h;
+            pos += group;
+        }
+        pages
+    }
+
+    /// Register a sequence's finalized pages under the token prefix that
+    /// produced them.  Only pages covering tokens entirely inside
+    /// `tokens` are registered (a page straddling the prompt/generation
+    /// boundary is request-private).  Idempotent: existing entries are
+    /// left untouched, so repeated registration as chunks land is cheap.
+    pub fn register_prefix(&self, pages: &[Arc<Page>], tokens: &[u32]) {
+        let cap = self.capacity.min(UNBOUNDED_PREFIX_CAP);
+        let mut idx = self.index.lock().unwrap();
+        idx.clock += 1;
+        let tick = idx.clock;
+        let mut parent = ROOT_HASH;
+        let mut pos = 0;
+        for page in pages {
+            if pos + page.tokens > tokens.len() {
+                break;
+            }
+            let toks = &tokens[pos..pos + page.tokens];
+            let h = chain_hash(parent, toks);
+            if !idx.entries.contains_key(&h) {
+                // bound the index: past the cap, a new entry must displace
+                // the LRU refcount-zero one, or it simply isn't cached
+                if idx.entries.len() >= cap {
+                    let lru = idx
+                        .entries
+                        .iter()
+                        .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                        .min_by_key(|(_, e)| e.tick)
+                        .map(|(&k, _)| k);
+                    match lru {
+                        Some(k) => {
+                            idx.entries.remove(&k);
+                            self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => break,
+                    }
+                }
+                idx.entries.insert(
+                    h,
+                    PrefixEntry { parent, toks: toks.to_vec(), page: page.clone(), tick },
+                );
+            }
+            parent = h;
+            pos += page.tokens;
+        }
+    }
+
+    /// Prefix-index entries currently held (tests/observability).
+    pub fn indexed_pages(&self) -> usize {
+        self.index.lock().unwrap().entries.len()
+    }
+
+    /// Drop every cached prefix entry regardless of recency (tests).
+    pub fn clear_prefix_index(&self) {
+        let mut idx = self.index.lock().unwrap();
+        let n = idx
+            .entries
+            .iter()
+            .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+            .count() as u64;
+        idx.entries.retain(|_, e| Arc::strong_count(&e.page) > 1);
+        self.counters.pages_evicted.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::polar::{self, PolarSpec};
+    use crate::util::rng::Rng;
+
+    fn page(seed: u64) -> Page {
+        let spec = PolarSpec::new(4, 4, 4);
+        let d = 8;
+        let mut rng = Rng::new(seed);
+        let streams = 2;
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..streams {
+            let k = rng.normal_vec(spec.group * d);
+            keys.push(polar::encode_group(&k, d, &spec));
+            vals.push(GroupValues::Fp(rng.normal_vec(spec.group * d)));
+        }
+        Page::new(keys, vals, spec.group)
+    }
+
+    #[test]
+    fn adopt_and_drop_reconcile_counters() {
+        let pool = PagePool::new(8);
+        let p1 = pool.adopt(page(1));
+        let p2 = pool.adopt(page(2));
+        assert_eq!(pool.pages_in_use(), 2);
+        assert!(pool.page_bytes() > 0);
+        assert_eq!(pool.free_pages(), 6);
+        let clone = p1.clone(); // refcount bump, no physical change
+        assert_eq!(pool.pages_in_use(), 2);
+        drop(p1);
+        drop(clone);
+        drop(p2);
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.page_bytes(), 0);
+    }
+
+    #[test]
+    fn prefix_chain_roundtrip_and_partial_hit() {
+        let pool = PagePool::new(usize::MAX);
+        let g = 4;
+        let toks: Vec<u32> = (0..12).collect();
+        let pages: Vec<_> = (0..3).map(|i| pool.adopt(page(10 + i))).collect();
+        pool.register_prefix(&pages, &toks);
+        assert_eq!(pool.indexed_pages(), 3);
+        // full match
+        let hit = pool.lookup_prefix(&toks, g, usize::MAX);
+        assert_eq!(hit.len(), 3);
+        assert!(Arc::ptr_eq(&hit[0], &pages[0]));
+        // longest-prefix: diverge in the second group
+        let mut other = toks.clone();
+        other[5] = 99;
+        let hit = pool.lookup_prefix(&other, g, usize::MAX);
+        assert_eq!(hit.len(), 1, "only the first group matches");
+        // cap respected
+        let hit = pool.lookup_prefix(&toks, g, 8);
+        assert_eq!(hit.len(), 2);
+        // shorter-than-group prompt: no hit
+        assert!(pool.lookup_prefix(&toks[..3], g, usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn chain_keying_distinguishes_same_group_different_prefix() {
+        // the SAME tokens at group 2 must not be shared across different
+        // first groups — the chain hash keys on the whole prefix
+        let pool = PagePool::new(usize::MAX);
+        let g = 4;
+        let a: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let b: Vec<u32> = vec![5, 6, 7, 8, 9, 9, 9, 9];
+        let pa: Vec<_> = (0..2).map(|i| pool.adopt(page(20 + i))).collect();
+        pool.register_prefix(&pa, &a);
+        let hit = pool.lookup_prefix(&b, g, usize::MAX);
+        assert!(hit.is_empty(), "chain with different first group must miss");
+    }
+
+    #[test]
+    fn try_free_reclaims_lru_unreferenced_only() {
+        let pool = PagePool::new(3);
+        let toks: Vec<u32> = (0..8).collect();
+        let p0 = pool.adopt(page(30));
+        let p1 = pool.adopt(page(31));
+        pool.register_prefix(&[p0.clone(), p1.clone()], &toks);
+        // a third page held by a "sequence"
+        let held = pool.adopt(page(32));
+        assert_eq!(pool.free_pages(), 0);
+        // p0/p1 still referenced here -> nothing reclaimable
+        assert!(!pool.try_free(1));
+        // release the sequence refs; index entries become refcount-zero
+        drop(p0);
+        drop(p1);
+        assert!(pool.try_free(1), "LRU prefix page must be reclaimed");
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.pages_evicted(), 1);
+        // the reclaimed entry was the LRU one (registered first => oldest
+        // tick); the survivor still verifies for the 2-group chain's head
+        assert_eq!(pool.indexed_pages(), 1);
+        drop(held);
+        assert!(pool.try_free(3));
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn bounded_pool_caps_the_prefix_index_by_displacing_lru() {
+        // capacity 2: registering a third (unreferenced) chain entry must
+        // displace the LRU one instead of growing the index
+        let pool = PagePool::new(2);
+        let toks_a: Vec<u32> = (0..4).collect();
+        let toks_b: Vec<u32> = (100..104).collect();
+        let toks_c: Vec<u32> = (200..204).collect();
+        let pa = pool.adopt(page(50));
+        pool.register_prefix(std::slice::from_ref(&pa), &toks_a);
+        drop(pa);
+        let pb = pool.adopt(page(51));
+        pool.register_prefix(std::slice::from_ref(&pb), &toks_b);
+        drop(pb);
+        assert_eq!(pool.indexed_pages(), 2);
+        let pc = pool.adopt(page(52));
+        pool.register_prefix(std::slice::from_ref(&pc), &toks_c);
+        drop(pc);
+        assert_eq!(pool.indexed_pages(), 2, "index stays at cap");
+        assert_eq!(pool.pages_evicted(), 1);
+        // the oldest chain (a) was displaced; b and c survive
+        assert!(pool.lookup_prefix(&toks_a, 4, usize::MAX).is_empty());
+        assert_eq!(pool.lookup_prefix(&toks_b, 4, usize::MAX).len(), 1);
+        assert_eq!(pool.lookup_prefix(&toks_c, 4, usize::MAX).len(), 1);
+    }
+
+    #[test]
+    fn register_skips_pages_past_the_token_limit() {
+        let pool = PagePool::new(usize::MAX);
+        let pages: Vec<_> = (0..3).map(|i| pool.adopt(page(40 + i))).collect();
+        // only 9 tokens: the third page (tokens 8..12) straddles the end
+        let toks: Vec<u32> = (0..9).collect();
+        pool.register_prefix(&pages, &toks);
+        assert_eq!(pool.indexed_pages(), 2);
+    }
+}

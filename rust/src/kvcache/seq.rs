@@ -1,8 +1,20 @@
-//! Per-sequence cache across all (layer, kv-head) streams, plus the dense
-//! export that marshals it into the fixed-shape decode graphs.
+//! Per-sequence cache across all (layer, kv-head) streams: refcounted
+//! page handles for the quantized region, per-stream fp residual tails,
+//! plus the dense export that marshals it into the fixed-shape decode
+//! graphs.
+//!
+//! The quantized region is a `Vec<Arc<Page>>` — each page one finalized
+//! group across every stream, possibly shared with other sequences
+//! (prefix caching) or with forks (copy-on-write).  Pages are immutable;
+//! all mutation happens in the tails, so sharing never needs locks or
+//! copies.
 
-use super::stream::StreamCache;
-use crate::quant::polar::PolarSpec;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::pool::{Page, PagePool};
+use super::stream::{GroupValues, StreamCache};
+use crate::quant::polar::{PolarGroup, PolarSpec};
 
 /// Cache geometry + codec config (derived from the artifact manifest).
 #[derive(Clone, Debug)]
@@ -22,103 +34,132 @@ impl CacheConfig {
 }
 
 /// All streams of one sequence.  Every stream holds the same token count —
-/// the state machine appends to all of them per decode step.
-#[derive(Clone, Debug)]
+/// the state machine appends to all of them per decode step, and pages
+/// are cut across all streams at once.
+#[derive(Debug)]
 pub struct SequenceCache {
     pub cfg: CacheConfig,
+    /// finalized groups, oldest first; `pages[g].keys[s]` is group `g` of
+    /// stream `s`
+    pub pages: Vec<Arc<Page>>,
+    /// per-stream fp residual tails
     pub streams: Vec<StreamCache>,
     /// absolute position of the next token (== tokens appended so far)
     pub next_pos: usize,
+    /// tokens covered by `pages` (kept O(1) for the decode hot path)
+    quantized_tokens: usize,
+    /// accounting + allocation home; `None` for standalone caches
+    pool: Option<PagePool>,
+    /// this sequence's current contribution to the pool's resid/token
+    /// counters (reconciled on every mutation and on Drop)
+    acc_resid_bytes: usize,
+    acc_tokens: usize,
 }
 
 impl SequenceCache {
     pub fn new(cfg: CacheConfig) -> Self {
+        Self::build(cfg, None)
+    }
+
+    /// A cache whose pages live in (and are accounted by) `pool`.
+    pub fn new_pooled(cfg: CacheConfig, pool: PagePool) -> Self {
+        Self::build(cfg, Some(pool))
+    }
+
+    fn build(cfg: CacheConfig, pool: Option<PagePool>) -> Self {
         let streams = (0..cfg.streams())
             .map(|_| StreamCache::new(cfg.head_dim, cfg.spec, cfg.value_bits))
             .collect();
-        SequenceCache { cfg, streams, next_pos: 0 }
+        SequenceCache {
+            cfg,
+            pages: Vec::new(),
+            streams,
+            next_pos: 0,
+            quantized_tokens: 0,
+            pool,
+            acc_resid_bytes: 0,
+            acc_tokens: 0,
+        }
     }
 
+    /// Borrowed view of one (layer, kv-head) stream: its slice of every
+    /// page plus its fp tail.
     #[inline]
-    pub fn stream(&self, layer: usize, head: usize) -> &StreamCache {
-        &self.streams[layer * self.cfg.n_kv_heads + head]
-    }
-
-    #[inline]
-    pub fn stream_mut(&mut self, layer: usize, head: usize) -> &mut StreamCache {
-        &mut self.streams[layer * self.cfg.n_kv_heads + head]
+    pub fn stream(&self, layer: usize, head: usize) -> StreamView<'_> {
+        let idx = layer * self.cfg.n_kv_heads + head;
+        StreamView { pages: &self.pages, idx, tail: &self.streams[idx] }
     }
 
     pub fn len(&self) -> usize {
-        self.streams[0].len()
+        self.quantized_tokens + self.resid_len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Tokens in finalized (paged) groups.
     pub fn quantized_len(&self) -> usize {
-        self.streams[0].quantized_len()
+        self.quantized_tokens
     }
 
+    /// Tokens in the fp residual tails (same across streams).
     pub fn resid_len(&self) -> usize {
         self.streams[0].resid_len()
     }
 
     /// Append one decode step's K/V: `k`/`v` are (L, Kv, d) row-major —
     /// exactly the `new_k`/`new_v` output layout of the decode graph.
+    /// Cuts a page when the tails fill.
     pub fn append_step(&mut self, k: &[f32], v: &[f32]) {
         let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
         assert_eq!(k.len(), l * h * d);
         assert_eq!(v.len(), k.len());
-        for layer in 0..l {
-            for head in 0..h {
-                let off = (layer * h + head) * d;
-                self.stream_mut(layer, head)
-                    .append(&k[off..off + d], &v[off..off + d]);
-            }
+        for (s, st) in self.streams.iter_mut().enumerate() {
+            let off = s * d;
+            st.push_token(&k[off..off + d], &v[off..off + d]);
         }
         self.next_pos += 1;
+        if self.resid_len() >= self.cfg.spec.group {
+            self.cut_pages();
+        }
+        self.sync_accounting();
     }
 
-    /// Append a prefill block: `k`/`v` are (L, Kv, T, d) row-major —
-    /// the prefill graph's cache output layout.
+    /// Append a prefill block: `k`/`v` are (L, Kv, T, d) row-major — the
+    /// prefill graph's cache output layout.  Finalizes as many full
+    /// groups as possible.
     pub fn append_prefill(&mut self, k: &[f32], v: &[f32], tokens: usize) {
-        let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
-        assert_eq!(k.len(), l * h * tokens * d);
-        for layer in 0..l {
-            for head in 0..h {
-                let off = (layer * h + head) * tokens * d;
-                self.stream_mut(layer, head)
-                    .append_block(&k[off..off + tokens * d], &v[off..off + tokens * d]);
-            }
-        }
-        self.next_pos += tokens;
+        self.push_prefill(k, v, tokens);
+        self.cut_pages();
+        self.sync_accounting();
     }
 
     /// Append a prefill chunk WITHOUT finalizing groups: layout as
-    /// [`SequenceCache::append_prefill`], but every token lands in the fp
-    /// residual tail.  Chunked prefill uses this so later chunks attend
+    /// [`SequenceCache::append_prefill`], but every token stays in the fp
+    /// residual tails.  Chunked prefill uses this so later chunks attend
     /// over exact fp keys; call [`SequenceCache::flush_groups`] once the
-    /// whole prompt is in to quantize full groups in append order (the
-    /// same groups eager appends would have produced).
+    /// whole prompt is in to cut pages in append order (the same pages
+    /// eager appends would have produced).
     ///
     /// Residency note: until the flush, the whole prompt sits in the
     /// cache at fp width — the same transient peak the unchunked path
     /// reaches through its full-prompt `k_all`/`v_all` staging buffers,
-    /// but now visible to [`SequenceCache::nbytes`], so concurrent
-    /// admission checks see it (and get MORE conservative, not less).
-    /// For prompts where that fp window matters, eager finalization
-    /// (`EngineOpts::prefill_quantize_eagerly`) caps it at one chunk.
+    /// but visible to [`SequenceCache::nbytes`] AND to the pool's exact
+    /// resid counters, so concurrent admission checks see it (and get
+    /// MORE conservative, not less).
     pub fn append_prefill_deferred(&mut self, k: &[f32], v: &[f32], tokens: usize) {
+        self.push_prefill(k, v, tokens);
+        self.sync_accounting();
+    }
+
+    fn push_prefill(&mut self, k: &[f32], v: &[f32], tokens: usize) {
         let (l, h, d) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim);
         assert_eq!(k.len(), l * h * tokens * d);
-        for layer in 0..l {
-            for head in 0..h {
-                let off = (layer * h + head) * tokens * d;
-                self.stream_mut(layer, head)
-                    .append_block_deferred(&k[off..off + tokens * d], &v[off..off + tokens * d]);
-            }
+        assert_eq!(v.len(), k.len());
+        for (s, st) in self.streams.iter_mut().enumerate() {
+            let off = s * tokens * d;
+            st.push_block(&k[off..off + tokens * d], &v[off..off + tokens * d]);
         }
         self.next_pos += tokens;
     }
@@ -126,14 +167,189 @@ impl SequenceCache {
     /// Finalize every full group across all streams (end of a deferred
     /// chunked prefill).
     pub fn flush_groups(&mut self) {
-        for st in &mut self.streams {
-            st.flush_groups();
+        self.cut_pages();
+        self.sync_accounting();
+    }
+
+    /// Encode all full groups in every tail and assemble them into
+    /// cross-stream pages (allocated from the pool when attached).
+    fn cut_pages(&mut self) {
+        let g = self.cfg.spec.group;
+        let full = self.resid_len() / g;
+        if full == 0 {
+            return;
+        }
+        // encode per stream first (one front-drain per tail), then
+        // transpose group-major into pages
+        let mut per_stream: Vec<_> = self
+            .streams
+            .iter_mut()
+            .map(|st| st.encode_full_groups().into_iter())
+            .collect();
+        for _ in 0..full {
+            let mut keys = Vec::with_capacity(per_stream.len());
+            let mut vals = Vec::with_capacity(per_stream.len());
+            for it in per_stream.iter_mut() {
+                let (k, v) = it.next().expect("streams finalize in lockstep");
+                keys.push(k);
+                vals.push(v);
+            }
+            let page = Page::new(keys, vals, g);
+            let page = match &self.pool {
+                Some(pool) => pool.adopt(page),
+                None => Arc::new(page),
+            };
+            self.pages.push(page);
+            self.quantized_tokens += g;
         }
     }
 
-    /// Physical bytes at rest across streams.
+    /// Attach already-finalized pages (a prefix-cache hit) to this EMPTY
+    /// cache: shares them refcounted and advances `next_pos` past the
+    /// covered tokens, so prefill resumes right after the shared prefix.
+    pub fn adopt_pages(&mut self, pages: Vec<Arc<Page>>) {
+        assert!(self.is_empty() && self.next_pos == 0, "prefix pages attach before prefill");
+        for p in pages {
+            self.quantized_tokens += p.tokens;
+            self.next_pos += p.tokens;
+            self.pages.push(p);
+        }
+        self.sync_accounting();
+    }
+
+    /// Copy-on-write fork for n-way sampling from one prompt: finalized
+    /// pages are SHARED (refcount bump, no bytes copied); only the fp
+    /// residual tails are deep-copied.  Either side cutting new pages
+    /// later appends to its own `pages` vec — the other side never sees
+    /// them, and the shared prefix is immutable by construction.
+    pub fn fork(&self) -> SequenceCache {
+        self.clone()
+    }
+
+    /// Physical bytes at rest across pages + tails.  NOTE: counts every
+    /// page this sequence references, including pages shared with other
+    /// sequences — the per-sequence "logical" size.  The pool's counters
+    /// are the physical (deduplicated) truth.
     pub fn nbytes(&self) -> usize {
-        self.streams.iter().map(|s| s.nbytes()).sum()
+        self.pages.iter().map(|p| p.nbytes()).sum::<usize>()
+            + self.streams.iter().map(|s| s.nbytes()).sum::<usize>()
+    }
+
+    /// Reconcile this sequence's contribution to the pool's exact O(1)
+    /// residual/token counters.
+    fn sync_accounting(&mut self) {
+        let Some(pool) = &self.pool else { return };
+        let c = pool.counters();
+        let rb: usize = self.streams.iter().map(|s| s.nbytes()).sum();
+        let tok = self.len();
+        if rb >= self.acc_resid_bytes {
+            c.resid_bytes.fetch_add(rb - self.acc_resid_bytes, Ordering::Relaxed);
+        } else {
+            c.resid_bytes.fetch_sub(self.acc_resid_bytes - rb, Ordering::Relaxed);
+        }
+        if tok >= self.acc_tokens {
+            c.seq_tokens.fetch_add(tok - self.acc_tokens, Ordering::Relaxed);
+        } else {
+            c.seq_tokens.fetch_sub(self.acc_tokens - tok, Ordering::Relaxed);
+        }
+        self.acc_resid_bytes = rb;
+        self.acc_tokens = tok;
+    }
+}
+
+impl Clone for SequenceCache {
+    fn clone(&self) -> Self {
+        let mut c = SequenceCache {
+            cfg: self.cfg.clone(),
+            pages: self.pages.clone(), // Arc bumps — pages are shared
+            streams: self.streams.clone(),
+            next_pos: self.next_pos,
+            quantized_tokens: self.quantized_tokens,
+            pool: self.pool.clone(),
+            acc_resid_bytes: 0,
+            acc_tokens: 0,
+        };
+        // the clone contributes its own residual bytes/tokens
+        c.sync_accounting();
+        c
+    }
+}
+
+impl Drop for SequenceCache {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.pool {
+            let c = pool.counters();
+            c.resid_bytes.fetch_sub(self.acc_resid_bytes, Ordering::Relaxed);
+            c.seq_tokens.fetch_sub(self.acc_tokens, Ordering::Relaxed);
+        }
+        // pages reconcile themselves on their own Drop (last Arc wins)
+    }
+}
+
+/// Borrowed per-stream view: group `gi` of this stream is
+/// `pages[gi].keys[idx]`, and the fp tail rides along.  `Copy` so the
+/// forward pass can hold one per (layer, head) without borrow gymnastics.
+#[derive(Clone, Copy)]
+pub struct StreamView<'a> {
+    pages: &'a [Arc<Page>],
+    idx: usize,
+    tail: &'a StreamCache,
+}
+
+impl<'a> StreamView<'a> {
+    /// This stream's finalized key groups, oldest first — feeds straight
+    /// into [`crate::quant::QkLut::scores_groups`].
+    pub fn key_groups(self) -> impl ExactSizeIterator<Item = &'a PolarGroup> {
+        self.pages.iter().map(move |p| &p.keys[self.idx])
+    }
+
+    /// (key group, value group) pairs, oldest first.
+    pub fn groups(self) -> impl ExactSizeIterator<Item = (&'a PolarGroup, &'a GroupValues)> {
+        self.pages.iter().map(move |p| (&p.keys[self.idx], &p.vals[self.idx]))
+    }
+
+    pub fn n_groups(self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn quantized_len(self) -> usize {
+        self.pages.iter().map(|p| p.tokens).sum()
+    }
+
+    pub fn resid_len(self) -> usize {
+        self.tail.resid_len()
+    }
+
+    pub fn len(self) -> usize {
+        self.quantized_len() + self.resid_len()
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+
+    /// fp residual keys, row-major (resid_len x d).
+    pub fn resid_k(self) -> &'a [f32] {
+        &self.tail.resid_k
+    }
+
+    /// fp residual values, row-major (resid_len x d).
+    pub fn resid_v(self) -> &'a [f32] {
+        &self.tail.resid_v
+    }
+
+    /// Dequantized values of group `gi` appended into `out`.
+    pub fn decode_values_into(self, gi: usize, out: &mut Vec<f32>) {
+        self.pages[gi].vals[self.idx].decode_into(self.tail.d, out);
+    }
+
+    /// Dequantize all finalized keys (test/eval path).
+    pub fn decode_keys(self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.quantized_len() * self.tail.d);
+        for g in self.key_groups() {
+            crate::quant::polar::decode_group_into(g, self.tail.d, &mut out);
+        }
+        out
     }
 }
 
@@ -195,7 +411,7 @@ impl SequenceCache {
             for head in 0..h {
                 let st = self.stream(layer, head);
                 let base = layer * h + head;
-                for (gi, grp) in st.key_groups.iter().enumerate() {
+                for (gi, (grp, _)) in st.groups().enumerate() {
                     // codes
                     grp.theta_codes.unpack_into(&mut codes_scratch);
                     for n in 0..grp.tokens {
@@ -225,8 +441,8 @@ impl SequenceCache {
                 }
                 // residual
                 let roff = base * r_cap * d;
-                out.resid_k[roff..roff + st.resid_k.len()].copy_from_slice(&st.resid_k);
-                out.resid_v[roff..roff + st.resid_v.len()].copy_from_slice(&st.resid_v);
+                out.resid_k[roff..roff + st.resid_k().len()].copy_from_slice(st.resid_k());
+                out.resid_v[roff..roff + st.resid_v().len()].copy_from_slice(st.resid_v());
             }
         }
         out
@@ -263,8 +479,16 @@ mod tests {
         assert_eq!(seq.next_pos, 10);
         assert_eq!(seq.quantized_len(), 8);
         assert_eq!(seq.resid_len(), 2);
-        for st in &seq.streams {
-            assert_eq!(st.len(), 10);
+        assert_eq!(seq.pages.len(), 2);
+        for p in &seq.pages {
+            assert_eq!(p.keys.len(), c.streams());
+            assert_eq!(p.vals.len(), c.streams());
+            assert_eq!(p.tokens, c.spec.group);
+        }
+        for l in 0..c.n_layers {
+            for h in 0..c.n_kv_heads {
+                assert_eq!(seq.stream(l, h).len(), 10);
+            }
         }
     }
 
@@ -283,6 +507,66 @@ mod tests {
         seq.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
         assert_eq!(seq.quantized_len(), 8);
         assert_eq!(seq.resid_len(), 0);
+    }
+
+    #[test]
+    fn deferred_prefill_plus_flush_matches_eager() {
+        let mut rng = Rng::new(12);
+        let c = cfg();
+        let t = 11; // 2 full groups + 3 residual at group=4
+        let block = c.n_layers * c.n_kv_heads * t * c.head_dim;
+        let k = rng.normal_vec(block);
+        let v = rng.normal_vec(block);
+        let mut eager = SequenceCache::new(c.clone());
+        eager.append_prefill(&k, &v, t);
+        let mut deferred = SequenceCache::new(c.clone());
+        deferred.append_prefill_deferred(&k, &v, t);
+        assert_eq!(deferred.quantized_len(), 0, "no pages before flush");
+        assert_eq!(deferred.resid_len(), t);
+        deferred.flush_groups();
+        assert_eq!(deferred.quantized_len(), eager.quantized_len());
+        for l in 0..c.n_layers {
+            for h in 0..c.n_kv_heads {
+                let a = deferred.stream(l, h);
+                let b = eager.stream(l, h);
+                assert_eq!(a.decode_keys(), b.decode_keys());
+                assert_eq!(a.resid_k(), b.resid_k());
+                assert_eq!(a.resid_v(), b.resid_v());
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_pages_and_copies_tails() {
+        let mut rng = Rng::new(13);
+        let c = cfg();
+        let mut seq = SequenceCache::new(c.clone());
+        let t = 10; // 2 pages + 2 residual
+        let block = c.n_layers * c.n_kv_heads * t * c.head_dim;
+        seq.append_prefill(&rng.normal_vec(block), &rng.normal_vec(block), t);
+        let baseline_keys = seq.stream(0, 0).decode_keys();
+        let baseline_resid = seq.stream(0, 0).resid_k().to_vec();
+
+        let mut fork = seq.fork();
+        assert_eq!(fork.len(), seq.len());
+        for (a, b) in seq.pages.iter().zip(&fork.pages) {
+            assert!(Arc::ptr_eq(a, b), "fork must share pages, not copy");
+            assert_eq!(Arc::strong_count(a), 2);
+        }
+        // diverge the fork: it cuts its OWN page, parent must not move
+        let step = c.n_layers * c.n_kv_heads * c.head_dim;
+        for _ in 0..2 {
+            fork.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+        }
+        assert_eq!(fork.quantized_len(), 12);
+        assert_eq!(seq.quantized_len(), 8, "parent untouched by fork growth");
+        assert_eq!(seq.stream(0, 0).decode_keys(), baseline_keys);
+        assert_eq!(seq.stream(0, 0).resid_k(), &baseline_resid[..]);
+        // shared pages still shared; the fork's new page is private
+        assert_eq!(Arc::strong_count(&seq.pages[0]), 2);
+        assert_eq!(Arc::strong_count(&fork.pages[2]), 1);
+        drop(fork);
+        assert_eq!(Arc::strong_count(&seq.pages[0]), 1, "refcount drops on release");
     }
 
     #[test]
@@ -315,6 +599,23 @@ mod tests {
         for j in 0..d {
             assert_eq!(dense.resid_k[base + j], k[koff + j]);
         }
+    }
+
+    #[test]
+    fn memory_shrinks_with_fewer_bits() {
+        let mut rng = Rng::new(4);
+        let mut c = cfg();
+        c.head_dim = 32;
+        c.spec = PolarSpec::new(5, 5, 8);
+        let block = c.n_layers * c.n_kv_heads * 64 * c.head_dim;
+        let k = rng.normal_vec(block);
+        let v = rng.normal_vec(block);
+        let mut big = SequenceCache::new(c.clone());
+        big.append_prefill(&k, &v, 64);
+        c.spec = PolarSpec::new(2, 2, 8);
+        let mut small = SequenceCache::new(c.clone());
+        small.append_prefill(&k, &v, 64);
+        assert!(small.nbytes() < big.nbytes());
     }
 
     #[test]

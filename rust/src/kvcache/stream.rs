@@ -1,15 +1,18 @@
-//! One KV stream: the cache of a single (layer, kv-head) pair.
+//! One KV stream's fp residual tail: the cache of a single
+//! (layer, kv-head) pair BEFORE quantization.
 //!
-//! Keys: PolarQuant groups (bit-packed) + an fp residual ring that holds
-//! the most recent `< group` tokens (the "residual length" every
+//! Keys and values buffer here at full precision until a whole
+//! `spec.group` of tokens is present (the "residual length" every
 //! quantization serving system keeps — paper §B notes all baselines need
-//! one).  Values: fp32 rows aligned with the quantized keys, or token-wise
-//! quantized per finalized group when `value_bits` is set (Table 7).
+//! one).  Finalized groups do NOT live here: encoding cuts them into
+//! cross-stream [`crate::kvcache::pool::Page`]s owned (and possibly
+//! shared) at the sequence level — this type only encodes and drains its
+//! slice of each page.
 
 use crate::quant::polar::{self, PolarGroup, PolarSpec};
 use crate::quant::value;
 
-/// Value storage for finalized groups.
+/// Value storage for one finalized group of one stream.
 #[derive(Clone, Debug)]
 pub enum GroupValues {
     Fp(Vec<f32>),
@@ -23,18 +26,23 @@ impl GroupValues {
             GroupValues::Quant(e) => e.nbytes(),
         }
     }
+
+    /// Dequantized rows appended into `out`.
+    pub fn decode_into(&self, d: usize, out: &mut Vec<f32>) {
+        match self {
+            GroupValues::Fp(v) => out.extend_from_slice(v),
+            GroupValues::Quant(e) => out.extend_from_slice(&value::decode(e, d)),
+        }
+    }
 }
 
+/// The fp tail of one stream: tokens not yet cut into a page
+/// (row-major tokens x d).
 #[derive(Clone, Debug)]
 pub struct StreamCache {
     pub d: usize,
     pub spec: PolarSpec,
     pub value_bits: Option<u32>,
-    /// finalized (quantized) key groups
-    pub key_groups: Vec<PolarGroup>,
-    /// values per finalized group, aligned with `key_groups`
-    pub value_groups: Vec<GroupValues>,
-    /// fp tail: tokens not yet forming a full group (row-major tokens x d)
     pub resid_k: Vec<f32>,
     pub resid_v: Vec<f32>,
 }
@@ -45,16 +53,9 @@ impl StreamCache {
             d,
             spec,
             value_bits,
-            key_groups: Vec::new(),
-            value_groups: Vec::new(),
             resid_k: Vec::with_capacity(spec.group * d),
             resid_v: Vec::with_capacity(spec.group * d),
         }
-    }
-
-    /// Tokens in finalized (quantized) groups.
-    pub fn quantized_len(&self) -> usize {
-        self.key_groups.iter().map(|g| g.tokens).sum()
     }
 
     /// Tokens in the fp residual tail.
@@ -62,110 +63,61 @@ impl StreamCache {
         self.resid_k.len() / self.d
     }
 
-    pub fn len(&self) -> usize {
-        self.quantized_len() + self.resid_len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Append one post-RoPE (k, v) token; finalize a group when the
-    /// residual fills.  Returns true if a group was finalized.
-    pub fn append(&mut self, k: &[f32], v: &[f32]) -> bool {
+    /// Append one post-RoPE (k, v) token to the tail.  Finalization is
+    /// the sequence's job ([`crate::kvcache::SequenceCache`] cuts pages
+    /// across ALL streams once the tails fill) — a lone stream never
+    /// decides on its own.
+    pub fn push_token(&mut self, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.d);
         debug_assert_eq!(v.len(), self.d);
         self.resid_k.extend_from_slice(k);
         self.resid_v.extend_from_slice(v);
-        if self.resid_len() >= self.spec.group {
-            self.flush_groups();
-            true
-        } else {
-            false
-        }
     }
 
-    /// Bulk append (e.g. prompt prefill).  Finalizes as many full groups
-    /// as possible.
-    pub fn append_block(&mut self, k: &[f32], v: &[f32]) {
-        let tokens = k.len() / self.d;
-        debug_assert_eq!(k.len(), tokens * self.d);
-        debug_assert_eq!(v.len(), k.len());
-        for n in 0..tokens {
-            self.append(&k[n * self.d..(n + 1) * self.d], &v[n * self.d..(n + 1) * self.d]);
-        }
-    }
-
-    /// Bulk append WITHOUT finalizing groups: the residual tail grows past
-    /// `group` tokens and stays fp until [`StreamCache::flush_groups`].
-    /// Chunked prefill appends each chunk this way so later chunks attend
-    /// over exact fp keys; finalization order at flush time matches what
-    /// incremental [`StreamCache::append`] would have produced.
-    pub fn append_block_deferred(&mut self, k: &[f32], v: &[f32]) {
+    /// Bulk append (prefill block or deferred chunk).
+    pub fn push_block(&mut self, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len() % self.d, 0);
         debug_assert_eq!(v.len(), k.len());
         self.resid_k.extend_from_slice(k);
         self.resid_v.extend_from_slice(v);
     }
 
-    /// Finalize as many full groups as the residual holds, oldest first.
-    /// All full groups are encoded in place and the flushed prefix is
-    /// drained ONCE — a long deferred residual (chunked prefill's
-    /// end-of-prompt flush) costs O(T·d), not O(T²·d/g) front-drains.
-    pub fn flush_groups(&mut self) {
+    /// Encode every full group the tail holds, oldest first, and drain
+    /// the encoded prefix ONCE — a long deferred residual (chunked
+    /// prefill's end-of-prompt flush) costs O(T·d), not O(T²·d/g)
+    /// front-drains.  Returns one (keys, values) pair per group; the
+    /// caller assembles them into cross-stream pages.
+    pub fn encode_full_groups(&mut self) -> Vec<(PolarGroup, GroupValues)> {
         let gd = self.spec.group * self.d;
         let full = self.resid_k.len() / gd;
-        if full == 0 {
-            return;
-        }
+        let mut out = Vec::with_capacity(full);
         for gi in 0..full {
             let off = gi * gd;
             let g = polar::encode_group(&self.resid_k[off..off + gd], self.d, &self.spec);
-            self.key_groups.push(g);
-            self.value_groups.push(match self.value_bits {
+            let v = match self.value_bits {
                 None => GroupValues::Fp(self.resid_v[off..off + gd].to_vec()),
                 Some(bits) => {
                     GroupValues::Quant(value::encode(&self.resid_v[off..off + gd], self.d, bits))
                 }
-            });
+            };
+            out.push((g, v));
         }
-        // one front drain, and on BOTH buffers, so each keeps its
-        // preallocated capacity (a previous mem::take of resid_v
-        // discarded it, forcing a reallocation per finalized group on
-        // the append hot path)
-        self.resid_k.drain(..full * gd);
-        self.resid_v.drain(..full * gd);
-        // a deferred chunked prefill can have grown these to prompt size;
-        // give that slack back to the allocator (nbytes() never charged
-        // it) while keeping the steady-state one-group capacity
-        self.resid_k.shrink_to(gd);
-        self.resid_v.shrink_to(gd);
-    }
-
-    /// Physical bytes at rest (codes packed; fp tensors charged as fp16 to
-    /// match the paper's accounting).
-    pub fn nbytes(&self) -> usize {
-        let keys: usize = self.key_groups.iter().map(|g| g.nbytes()).sum();
-        let vals: usize = self.value_groups.iter().map(|v| v.nbytes(true)).sum();
-        let resid = (self.resid_k.len() + self.resid_v.len()) * 2;
-        keys + vals + resid
-    }
-
-    /// Dequantize all finalized keys (test/eval path).
-    pub fn decode_keys(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.quantized_len() * self.d);
-        for g in &self.key_groups {
-            polar::decode_group_into(g, self.d, &mut out);
+        if full > 0 {
+            // one front drain, on BOTH buffers, so each keeps its
+            // preallocated capacity; then give back any deferred-prefill
+            // slack beyond the steady-state one-group capacity
+            self.resid_k.drain(..full * gd);
+            self.resid_v.drain(..full * gd);
+            self.resid_k.shrink_to(gd);
+            self.resid_v.shrink_to(gd);
         }
         out
     }
 
-    /// Dequantized values of group `gi` appended into `out`.
-    pub fn decode_values_into(&self, gi: usize, out: &mut Vec<f32>) {
-        match &self.value_groups[gi] {
-            GroupValues::Fp(v) => out.extend_from_slice(v),
-            GroupValues::Quant(e) => out.extend_from_slice(&value::decode(e, self.d)),
-        }
+    /// Physical bytes of the tail at rest (fp tensors charged as fp16 to
+    /// match the paper's accounting).
+    pub fn nbytes(&self) -> usize {
+        (self.resid_k.len() + self.resid_v.len()) * 2
     }
 }
 
@@ -179,83 +131,65 @@ mod tests {
     }
 
     #[test]
-    fn append_finalizes_full_groups() {
+    fn tail_buffers_until_encoded() {
         let mut rng = Rng::new(1);
         let d = 16;
         let mut sc = StreamCache::new(d, spec(), None);
-        for i in 0..19 {
+        for _ in 0..19 {
             let k = rng.normal_vec(d);
             let v = rng.normal_vec(d);
-            let finalized = sc.append(&k, &v);
-            assert_eq!(finalized, (i + 1) % 8 == 0);
+            sc.push_token(&k, &v);
         }
-        assert_eq!(sc.quantized_len(), 16);
-        assert_eq!(sc.resid_len(), 3);
-        assert_eq!(sc.len(), 19);
-        assert_eq!(sc.key_groups.len(), 2);
-        assert_eq!(sc.value_groups.len(), 2);
+        assert_eq!(sc.resid_len(), 19);
+        let groups = sc.encode_full_groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(sc.resid_len(), 3, "partial group stays fp");
+        for (g, v) in &groups {
+            assert_eq!(g.tokens, 8);
+            assert!(matches!(v, GroupValues::Fp(x) if x.len() == 8 * d));
+        }
     }
 
     #[test]
-    fn block_append_equals_token_append() {
+    fn block_push_equals_token_push() {
         let mut rng = Rng::new(2);
         let d = 8;
         let tokens = 21;
         let k = rng.normal_vec(tokens * d);
         let v = rng.normal_vec(tokens * d);
         let mut a = StreamCache::new(d, spec(), None);
-        a.append_block(&k, &v);
+        a.push_block(&k, &v);
         let mut b = StreamCache::new(d, spec(), None);
         for n in 0..tokens {
-            b.append(&k[n * d..(n + 1) * d], &v[n * d..(n + 1) * d]);
+            b.push_token(&k[n * d..(n + 1) * d], &v[n * d..(n + 1) * d]);
         }
-        assert_eq!(a.quantized_len(), b.quantized_len());
-        assert_eq!(a.decode_keys(), b.decode_keys());
+        assert_eq!(a.resid_k, b.resid_k);
+        assert_eq!(a.resid_v, b.resid_v);
+        let ga: Vec<_> = a.encode_full_groups();
+        let gb: Vec<_> = b.encode_full_groups();
+        assert_eq!(ga.len(), gb.len());
+        for ((x, _), (y, _)) in ga.iter().zip(&gb) {
+            assert_eq!(x.theta_codes.unpack(), y.theta_codes.unpack());
+            assert_eq!(x.rho_codes.unpack(), y.rho_codes.unpack());
+        }
         assert_eq!(a.resid_k, b.resid_k);
     }
 
     #[test]
-    fn finalize_preserves_capacity_of_both_residual_buffers() {
+    fn encode_preserves_capacity_of_both_residual_buffers() {
         let mut rng = Rng::new(11);
         let d = 16;
         let mut sc = StreamCache::new(d, spec(), None);
-        // enough appends to finalize two groups
         for _ in 0..17 {
             let k = rng.normal_vec(d);
             let v = rng.normal_vec(d);
-            sc.append(&k, &v);
+            sc.push_token(&k, &v);
         }
-        assert_eq!(sc.key_groups.len(), 2);
-        // both buffers must keep the preallocated group-sized capacity —
-        // resid_v previously lost its buffer to mem::take every group
+        let _ = sc.encode_full_groups();
+        // both buffers keep the preallocated group-sized capacity —
+        // a historical mem::take of resid_v lost its buffer every group
         assert!(sc.resid_k.capacity() >= sc.spec.group * d, "resid_k realloc");
         assert!(sc.resid_v.capacity() >= sc.spec.group * d, "resid_v realloc");
-    }
-
-    #[test]
-    fn deferred_append_plus_flush_matches_eager() {
-        let mut rng = Rng::new(12);
-        let d = 8;
-        let tokens = 21; // 2 full groups + 5 residual at group=8
-        let k = rng.normal_vec(tokens * d);
-        let v = rng.normal_vec(tokens * d);
-        let mut eager = StreamCache::new(d, spec(), Some(4));
-        eager.append_block(&k, &v);
-        let mut deferred = StreamCache::new(d, spec(), Some(4));
-        // split across uneven "chunks" like a chunked prefill would
-        deferred.append_block_deferred(&k[..5 * d], &v[..5 * d]);
-        assert_eq!(deferred.quantized_len(), 0, "no groups before flush");
-        deferred.append_block_deferred(&k[5 * d..], &v[5 * d..]);
-        assert_eq!(deferred.resid_len(), tokens);
-        deferred.flush_groups();
-        assert_eq!(deferred.quantized_len(), eager.quantized_len());
-        assert_eq!(deferred.decode_keys(), eager.decode_keys());
-        assert_eq!(deferred.resid_k, eager.resid_k);
-        assert_eq!(deferred.resid_v, eager.resid_v);
-        let (mut a, mut b) = (Vec::new(), Vec::new());
-        deferred.decode_values_into(0, &mut a);
-        eager.decode_values_into(0, &mut b);
-        assert_eq!(a, b);
     }
 
     #[test]
@@ -265,24 +199,13 @@ mod tests {
         let mut sc = StreamCache::new(d, spec(), Some(4));
         let k = rng.normal_vec(8 * d);
         let v = rng.normal_vec(8 * d);
-        sc.append_block(&k, &v);
+        sc.push_block(&k, &v);
+        let groups = sc.encode_full_groups();
+        assert_eq!(groups.len(), 1);
         let mut dec = Vec::new();
-        sc.decode_values_into(0, &mut dec);
+        groups[0].1.decode_into(d, &mut dec);
         assert_eq!(dec.len(), 8 * d);
         let err = crate::tensor::ops::mse(&v, &dec);
         assert!(err < 0.01, "4-bit value err {err}");
-    }
-
-    #[test]
-    fn memory_shrinks_with_fewer_bits() {
-        let mut rng = Rng::new(4);
-        let d = 32;
-        let k = rng.normal_vec(64 * d);
-        let v = rng.normal_vec(64 * d);
-        let mut big = StreamCache::new(d, PolarSpec::new(5, 5, 8), None);
-        big.append_block(&k, &v);
-        let mut small = StreamCache::new(d, PolarSpec::new(2, 2, 8), None);
-        small.append_block(&k, &v);
-        assert!(small.nbytes() < big.nbytes());
     }
 }

@@ -14,6 +14,12 @@
 //! continuous batching: prompts enter the cache N tokens per engine step,
 //! so decode iterations of running sequences never stall behind a long
 //! prompt for more than one chunk's compute (0 = off, the default).
+//! `--cache-pages N` caps the page pool at N group-pages (0 = unbounded):
+//! on exhaustion the engine reclaims refcount-zero cached prefix pages
+//! LRU, then preempts the youngest decoder instead of stalling.
+//! `--prefix-cache on` (requires `--prefill-chunk`) shares quantized
+//! prefix pages across requests, refcounted — repeated system prompts
+//! prefill once.
 //!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
@@ -114,9 +120,27 @@ fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
     opts.decode_workers = args.usize("decode-workers", 1);
     // chunked prefill tokens per engine step (0 = whole-prompt prefill)
     opts.prefill_chunk = args.usize("prefill-chunk", 0);
+    // page-pool capacity in group-pages (0 = unbounded); exhaustion
+    // preempts the youngest decoder instead of stalling
+    opts.cache_pages = args.usize("cache-pages", 0);
+    // prefix caching: share quantized prefix pages across requests
+    opts.prefix_cache = match args.get("prefix-cache", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("--prefix-cache takes on|off, got '{other}'"),
+    };
     let backend = args.get("backend", "pjrt");
     if opts.prefill_chunk > 0 && backend == "pjrt" {
         bail!("--prefill-chunk requires the native or synthetic backend");
+    }
+    if opts.prefix_cache && (opts.prefill_chunk == 0 || backend == "pjrt") {
+        bail!("--prefix-cache on requires --prefill-chunk > 0 on the native/synthetic backend");
+    }
+    if opts.cache_pages > 0 && (opts.prefill_chunk == 0 || backend == "pjrt") {
+        // the capacity check + preemption live in the chunked scheduler;
+        // accepting the flag elsewhere would advertise a cap that never
+        // engages (PagePool::adopt itself never fails)
+        bail!("--cache-pages requires --prefill-chunk > 0 on the native/synthetic backend");
     }
     match backend.as_str() {
         "pjrt" => Engine::pjrt_from_artifacts(&dir, opts),

@@ -348,12 +348,15 @@ impl Model {
             // context, then the chunk's own causal prefix.  All cached
             // groups precede every chunk position, so the quantized
             // region needs no causal mask and all c×hq queries score it
-            // in ONE scores_groups pass per kv-head.
+            // in ONE scores_groups pass per kv-head — straight off the
+            // (possibly shared) pages, no group copy.
             attn.fill(0.0);
             for khead in 0..kv {
                 let st = cache.stream(layer, khead);
                 let qlen = st.quantized_len();
                 let rlen = st.resid_len();
+                let resid_k = st.resid_k();
+                let resid_v = st.resid_v();
                 if let Some(lut) = chunk_lut.as_mut() {
                     let mut qs: Vec<&[f32]> = Vec::with_capacity(c * hq);
                     for n in 0..c {
@@ -362,7 +365,7 @@ impl Model {
                             qs.push(&q[(n * h + head) * dh..(n * h + head + 1) * dh]);
                         }
                     }
-                    lut.scores_groups(&qs, &st.key_groups, &mut scores);
+                    lut.scores_groups(&qs, st.key_groups(), &mut scores);
                 } else {
                     for sc in scores.iter_mut() {
                         sc.clear();
@@ -374,7 +377,7 @@ impl Model {
                         let qrow = &q[(n * h + head) * dh..(n * h + head + 1) * dh];
                         let sc = &mut scores[n * hq + i];
                         for r in 0..rlen {
-                            sc.push(dot(qrow, &st.resid_k[r * dh..(r + 1) * dh]));
+                            sc.push(dot(qrow, &resid_k[r * dh..(r + 1) * dh]));
                         }
                         for m in 0..=n {
                             sc.push(dot(
@@ -393,8 +396,8 @@ impl Model {
                         let w = &scores[n * hq + i];
                         let out = &mut attn[(n * h + head) * dh..(n * h + head + 1) * dh];
                         let g = cfg.group;
-                        for (gi, gv) in st.value_groups.iter().enumerate() {
-                            let wslice = &w[gi * g..gi * g + st.key_groups[gi].tokens];
+                        for (gi, (kg, gv)) in st.groups().enumerate() {
+                            let wslice = &w[gi * g..gi * g + kg.tokens];
                             match gv {
                                 GroupValues::Fp(vals) => {
                                     for (m, &wm) in wslice.iter().enumerate() {
@@ -407,7 +410,7 @@ impl Model {
                             }
                         }
                         for r in 0..rlen {
-                            axpy(w[qlen + r], &st.resid_v[r * dh..(r + 1) * dh], out);
+                            axpy(w[qlen + r], &resid_v[r * dh..(r + 1) * dh], out);
                         }
                         for m in 0..=n {
                             axpy(
@@ -518,11 +521,13 @@ impl Model {
                 let st = cache.stream(layer, khead);
                 let qlen = st.quantized_len();
                 let rlen = st.resid_len();
+                let resid_k = st.resid_k();
+                let resid_v = st.resid_v();
                 let total = qlen + rlen + 1;
 
                 // 1) quantized region via LUT (all hq query heads at once),
-                //    scoring straight off the cache's group pages — no
-                //    PolarEncoded clone on the hot path
+                //    scoring straight off the (possibly shared) cache
+                //    pages — no group copy on the hot path
                 {
                     let qs: Vec<&[f32]> = (0..hq)
                         .map(|i| {
@@ -530,14 +535,14 @@ impl Model {
                             &self.q[head * dh..(head + 1) * dh]
                         })
                         .collect();
-                    self.lut.scores_groups(&qs, &st.key_groups, &mut self.scores);
+                    self.lut.scores_groups(&qs, st.key_groups(), &mut self.scores);
                 }
                 for (i, sc) in self.scores.iter_mut().enumerate() {
                     let head = khead * hq + i;
                     let qrow = &self.q[head * dh..(head + 1) * dh];
                     // 2) fp residual tail
                     for r in 0..rlen {
-                        sc.push(dot(qrow, &st.resid_k[r * dh..(r + 1) * dh]));
+                        sc.push(dot(qrow, &resid_k[r * dh..(r + 1) * dh]));
                     }
                     // 3) self
                     sc.push(dot(qrow, &self.k[khead * dh..(khead + 1) * dh]));
@@ -553,8 +558,8 @@ impl Model {
                     let w = &self.scores[i];
                     let out = &mut self.attn_out[head * dh..(head + 1) * dh];
                     let g = cfg.group;
-                    for (gi, gv) in st.value_groups.iter().enumerate() {
-                        let wslice = &w[gi * g..gi * g + st.key_groups[gi].tokens];
+                    for (gi, (kg, gv)) in st.groups().enumerate() {
+                        let wslice = &w[gi * g..gi * g + kg.tokens];
                         match gv {
                             GroupValues::Fp(vals) => {
                                 for (n, &wn) in wslice.iter().enumerate() {
@@ -567,7 +572,7 @@ impl Model {
                         }
                     }
                     for r in 0..rlen {
-                        axpy(w[qlen + r], &st.resid_v[r * dh..(r + 1) * dh], out);
+                        axpy(w[qlen + r], &resid_v[r * dh..(r + 1) * dh], out);
                     }
                     axpy(w[total - 1], &self.v[khead * dh..(khead + 1) * dh], out);
                 }
@@ -736,10 +741,14 @@ mod tests {
             assert_eq!(got, want, "chunk={chunk}: last-position logits differ");
             assert_eq!(c.next_pos, c_ref.next_pos);
             assert_eq!(c.quantized_len(), c_ref.quantized_len(), "chunk={chunk}");
-            for (a, b) in c.streams.iter().zip(&c_ref.streams) {
-                assert_eq!(a.decode_keys(), b.decode_keys(), "chunk={chunk}: keys");
-                assert_eq!(a.resid_k, b.resid_k, "chunk={chunk}: resid_k");
-                assert_eq!(a.resid_v, b.resid_v, "chunk={chunk}: resid_v");
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_kv_heads {
+                    let a = c.stream(l, h);
+                    let b = c_ref.stream(l, h);
+                    assert_eq!(a.decode_keys(), b.decode_keys(), "chunk={chunk}: keys");
+                    assert_eq!(a.resid_k(), b.resid_k(), "chunk={chunk}: resid_k");
+                    assert_eq!(a.resid_v(), b.resid_v(), "chunk={chunk}: resid_v");
+                }
             }
         }
     }

@@ -109,17 +109,22 @@ impl QkLut {
         self.scores_groups(qs, &enc.groups, out);
     }
 
-    /// Core kernel over a borrowed group slice — the paged kvcache stores
-    /// its groups inline ([`crate::kvcache::StreamCache::key_groups`]), so
-    /// the decode hot path scores straight off the cache pages without
-    /// materializing a `PolarEncoded` clone.
+    /// Core kernel over borrowed groups — generic over any in-order group
+    /// source, so the paged kvcache's per-stream view
+    /// ([`crate::kvcache::StreamView::key_groups`], one group per shared
+    /// page) feeds it directly, with no contiguous `Vec<PolarGroup>` (and
+    /// no `PolarEncoded` clone) materialized on the decode hot path.
+    /// Plain slices still work (`&[PolarGroup]` iterates by reference).
     ///
     /// Fast path (r+t <= 8): the group's combined (rho<<t | theta) codes
     /// are unpacked ONCE into a byte scratch; rho is dequantized into a
     /// staging row shared by all heads; the per-head loop is a pure
     /// gather+fma over that row.  See EXPERIMENTS.md §Perf for the
     /// before/after.
-    pub fn scores_groups(&mut self, qs: &[&[f32]], groups: &[PolarGroup], out: &mut [Vec<f32>]) {
+    pub fn scores_groups<'g, I>(&mut self, qs: &[&[f32]], groups: I, out: &mut [Vec<f32>])
+    where
+        I: IntoIterator<Item = &'g PolarGroup>,
+    {
         assert_eq!(qs.len(), out.len());
         assert!(qs.len() * self.d2 * (1 << self.spec.t_bits) <= self.lut.len());
         for o in out.iter_mut() {

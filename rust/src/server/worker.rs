@@ -140,6 +140,16 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
                     engine.prefill_chunk_size()
                 );
             }
+            if engine.cache_pages() > 0 {
+                eprintln!(
+                    "[server] engine {w}: page pool capped at {} group-pages \
+                     (preemptive eviction on exhaustion)",
+                    engine.cache_pages()
+                );
+            }
+            if engine.prefix_caching() {
+                eprintln!("[server] engine {w}: prefix caching ON (refcounted page sharing)");
+            }
             worker_loop(&mut engine, rx, &sd)
         }));
     }

@@ -216,6 +216,67 @@ fn chunked_prefill_server_matches_unchunked() {
 }
 
 #[test]
+fn prefix_cache_server_end_to_end_matches_cold_server() {
+    // Through the TCP front-end: a server with prefix caching must return
+    // exactly the tokens a cold server returns, while actually sharing
+    // pages for repeated prefixes.
+    let run = |prefix: bool| {
+        let cfg = toy_cfg();
+        let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 16; // multiple of group=8
+            opts.prefill_quantize_eagerly = true; // same math prefix on/off
+            opts.prefix_cache = prefix;
+            Engine::native_synthetic(cfg.clone(), 600 + w as u64, 4.0, opts)
+        });
+        let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        let system: Vec<u32> = (0..32).map(|i| (i * 7 % 64) as u32).collect();
+        let mut out = Vec::new();
+        for t in 0..3u32 {
+            // shared 32-token "system prompt" + distinct user tail
+            let prompt: Vec<u32> =
+                system.iter().cloned().chain([t + 1, t + 2, t + 3]).collect();
+            let reply = client.generate(&prompt, 6, Some(1)).unwrap();
+            assert!(!reply.rejected && !reply.truncated);
+            out.push(reply.tokens);
+        }
+        handle.stop();
+        out
+    };
+    assert_eq!(run(false), run(true));
+}
+
+#[test]
+fn preemption_under_prefix_caching_recovers_through_cached_pages() {
+    // Eager/prefix mode + a tiny pool: preempted sequences re-attach to
+    // their own still-cached prompt pages on recovery, so re-prefill is
+    // nearly free — and everything still completes.
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 8;
+    opts.prefix_cache = true;
+    opts.cache_pages = 6;
+    let mut eng = Engine::native_synthetic(toy_cfg(), 93, 4.0, opts);
+    // warm the prefix index with the shared prompt
+    let prompt: Vec<u32> = (0..16).map(|i| (i * 3 % 64) as u32).collect();
+    eng.submit(Request::greedy(1, prompt.clone(), 4)).unwrap();
+    eng.run_to_completion().unwrap();
+    assert!(eng.cache_report().pages > 0 || eng.metrics.pages_in_use > 0);
+    // two long decoders sharing that prompt, pool too small for both
+    eng.submit(Request::greedy(2, prompt.clone(), 24)).unwrap();
+    eng.step().unwrap();
+    eng.submit(Request::greedy(3, prompt.clone(), 24)).unwrap();
+    let mut done = eng.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.tokens.len(), 24, "req {} must complete fully", c.id);
+        assert!(!c.rejected, "pool pressure must preempt, not reject");
+    }
+    assert!(eng.metrics.prefix_hits >= 2, "both sharers attach to cached prompt pages");
+}
+
+#[test]
 fn snapkv_native_engine_end_to_end() {
     let cfg = toy_cfg();
     let mut opts = EngineOpts::default();

@@ -122,7 +122,7 @@ fn decode_graph_matches_native_model_with_quantized_cache() {
             let r = st.resid_len() - 1;
             for j in 0..dh {
                 let a = out.new_k[(l * cfg.n_kv_heads + h) * dh + j];
-                let b = st.resid_k[r * dh + j];
+                let b = st.resid_k()[r * dh + j];
                 assert!(
                     (a - b).abs() < 2e-3 * (1.0 + b.abs()),
                     "new_k mismatch l{l} h{h} j{j}: {a} vs {b}"

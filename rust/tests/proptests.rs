@@ -213,12 +213,100 @@ fn prop_cache_append_invariants() {
             assert_eq!(seq.quantized_len() + seq.resid_len(), seq.len());
             assert_eq!(seq.quantized_len() % group, 0);
             assert!(seq.resid_len() < group);
-            for st in &seq.streams {
-                assert_eq!(st.len(), seq.len());
-                assert_eq!(st.key_groups.len(), st.value_groups.len());
+            // every page spans every stream; every stream view agrees on
+            // the sequence length
+            for p in &seq.pages {
+                assert_eq!(p.keys.len(), cfg.streams(), "seed {seed}");
+                assert_eq!(p.vals.len(), cfg.streams(), "seed {seed}");
+                assert_eq!(p.tokens, group, "seed {seed}");
+            }
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_kv_heads {
+                    assert_eq!(seq.stream(l, h).len(), seq.len(), "seed {seed}");
+                }
             }
         }
         assert_eq!(seq.next_pos, total);
+    }
+}
+
+#[test]
+fn prop_cow_fork_divergence() {
+    // Fork a pooled sequence, decode DIFFERENT tokens into each side:
+    // the parent's pages and residual must be untouched by the fork's
+    // growth (and vice versa), shared pages stay physically single, and
+    // releasing both sides drains every refcount to zero.
+    use polarquant::kvcache::CacheManager;
+    for seed in 0..40 {
+        let mut rng = Rng::new(9000 + seed);
+        let group = [4usize, 8][rng.below(2)];
+        let cfg = CacheConfig {
+            n_layers: rng.range(1, 3),
+            n_kv_heads: rng.range(1, 3),
+            head_dim: 8,
+            spec: PolarSpec::new(4, 4, group),
+            value_bits: if rng.chance(0.5) { Some(4) } else { None },
+        };
+        let mut m = CacheManager::new(cfg.clone(), usize::MAX);
+        let step = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim;
+        let prompt_tokens = rng.range(group, 4 * group);
+        {
+            let parent = m.create(1);
+            let mut parent = parent.lock().unwrap();
+            for _ in 0..prompt_tokens {
+                parent.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+            }
+        }
+        let physical_before = m.report().physical_bytes;
+        m.fork(1, 2).expect("fork");
+
+        // snapshot the parent, then grow ONLY the fork
+        let snap_keys: Vec<Vec<f32>> = {
+            let p = m.get(1).unwrap();
+            let p = p.lock().unwrap();
+            (0..cfg.n_layers)
+                .flat_map(|l| {
+                    (0..cfg.n_kv_heads)
+                        .map(|h| {
+                            let mut v = p.stream(l, h).decode_keys();
+                            v.extend_from_slice(p.stream(l, h).resid_k());
+                            v
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .collect()
+        };
+        let grow = rng.range(1, 2 * group);
+        {
+            let f = m.get(2).unwrap();
+            let mut f = f.lock().unwrap();
+            for _ in 0..grow {
+                f.append_step(&rng.normal_vec(step), &rng.normal_vec(step));
+            }
+        }
+        {
+            let p = m.get(1).unwrap();
+            let p = p.lock().unwrap();
+            assert_eq!(p.len(), prompt_tokens, "seed {seed}: parent length moved");
+            let mut si = 0;
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_kv_heads {
+                    let mut v = p.stream(l, h).decode_keys();
+                    v.extend_from_slice(p.stream(l, h).resid_k());
+                    assert_eq!(v, snap_keys[si], "seed {seed}: parent stream mutated");
+                    si += 1;
+                }
+            }
+        }
+        // shared pages counted once physically, twice logically
+        let r = m.report();
+        assert!(r.physical_bytes < r.bytes, "seed {seed}: fork must share");
+        assert!(r.physical_bytes >= physical_before, "seed {seed}");
+        // release everything: refcounts must drain to zero
+        m.release(1);
+        m.release(2);
+        assert_eq!(m.pool().pages_in_use(), 0, "seed {seed}: leaked pages");
+        assert_eq!(m.report().physical_bytes, 0, "seed {seed}: leaked bytes");
     }
 }
 
@@ -298,7 +386,7 @@ fn prop_export_dense_roundtrips_codes() {
             for h in 0..cfg.n_kv_heads {
                 let st = seq.stream(l, h);
                 let base = (l * cfg.n_kv_heads + h) * s_cap * d2;
-                for (gi, g) in st.key_groups.iter().enumerate() {
+                for (gi, g) in st.key_groups().enumerate() {
                     let tc = g.theta_codes.unpack();
                     for n in 0..g.tokens {
                         for j in 0..d2 {
