@@ -17,8 +17,13 @@
 //! wall time) while long prompts arrive mid-decode, chunking off vs on
 //! (`--prefill-chunk N`, default 16) — the head-of-line-blocking probe
 //! CI tracks per commit.
+//!
+//! Tier section: shared-prefix requests served cold (full re-prefill),
+//! resident (RAM prefix hit), and demoted-then-promoted (pages faulted
+//! back from the disk tier) — promotion latency, tier hit counts, and
+//! peak resident bytes per mode.
 
-use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::coordinator::{Engine, EngineOpts, Request, TierOpts};
 use polarquant::model::ModelConfig;
 use polarquant::quant::kivi::{self, KiviQk, KiviSpec};
 use polarquant::quant::polar::{self, PolarEncoded, PolarSpec};
@@ -306,6 +311,102 @@ fn prefix_section(quick: bool) -> Vec<Value> {
     rows
 }
 
+/// Tier probe: N requests sharing one long system prompt, served three
+/// ways — cold (prefix index cleared before every request: full
+/// re-prefill), resident (plain RAM prefix hit), and tier (every cached
+/// page demoted to disk before each request, so the hit PROMOTES).  The
+/// per-request wall time of the tier row IS the promotion latency the
+/// ISSUE asks CI to track, next to the cold bound it must beat and the
+/// resident floor it cannot.
+fn tier_run(mode: &str, sharers: usize, prefix_len: usize) -> Value {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 32; // multiple of engine_cfg group=16
+    opts.prefix_cache = true;
+    opts.policy.max_running = 64;
+    opts.policy.prefill_per_step = 1;
+    opts.admission.max_queue = 256;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 7, 6.0, opts);
+    let dir = std::env::temp_dir()
+        .join(format!("polarquant-tier-bench-{}-{mode}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    if mode == "tier" {
+        eng.attach_tier(&TierOpts { dir: dir.clone(), max_bytes: u64::MAX, snapshot: false })
+            .expect("attach tier");
+    }
+    let mut rng = Rng::new(19);
+    let system: Vec<u32> = (0..prefix_len).map(|_| rng.below(128) as u32).collect();
+    // warm request registers the shared prefix
+    eng.submit(Request::greedy(0, system.clone(), 4)).unwrap();
+    eng.run_to_completion().unwrap();
+    let between = |eng: &mut Engine| match mode {
+        "cold" => {
+            eng.page_pool().clear_prefix_index();
+        }
+        "tier" => {
+            eng.page_pool().demote_all();
+        }
+        _ => {}
+    };
+    between(&mut eng);
+    let prefill0 = eng.metrics.prefill_tokens;
+    let mut peak_physical = 0usize;
+    let mut request_ms = Vec::with_capacity(sharers);
+    for i in 0..sharers {
+        let prompt: Vec<u32> = system
+            .iter()
+            .cloned()
+            .chain((0..8).map(|_| rng.below(128) as u32))
+            .collect();
+        let t0 = std::time::Instant::now();
+        eng.submit(Request::greedy(1 + i as u64, prompt, 8)).unwrap();
+        while !eng.idle() {
+            eng.step().unwrap();
+            peak_physical = peak_physical.max(eng.cache_report().physical_bytes);
+        }
+        request_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        between(&mut eng);
+    }
+    let mean_ms = request_ms.iter().sum::<f64>() / sharers as f64;
+    let prefill_ran = eng.metrics.prefill_tokens - prefill0;
+    let pool = eng.page_pool();
+    println!(
+        "{mode:>8}: request mean {mean_ms:>8.3} ms, prefill {prefill_ran:>6} tok, tier hits {:>3} \
+         (promoted {:>3}, demoted {:>3}), peak resident {:>9} B, {:>9} B on disk",
+        pool.tier_hits(),
+        pool.pages_promoted(),
+        pool.pages_demoted(),
+        peak_physical,
+        pool.bytes_on_disk(),
+    );
+    let row = obj(vec![
+        ("mode", json::s(mode)),
+        ("sharers", num(sharers as f64)),
+        ("prefix_len", num(prefix_len as f64)),
+        ("request_mean_ms", num(mean_ms)),
+        ("prefill_tokens_ran", num(prefill_ran as f64)),
+        ("tier_hits", num(pool.tier_hits() as f64)),
+        ("pages_promoted", num(pool.pages_promoted() as f64)),
+        ("pages_demoted", num(pool.pages_demoted() as f64)),
+        ("peak_physical_bytes", num(peak_physical as f64)),
+        ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
+    ]);
+    let _ = std::fs::remove_dir_all(&dir);
+    row
+}
+
+fn tier_section(quick: bool) -> Vec<Value> {
+    let (sharers, prefix_len) = if quick { (6, 128) } else { (16, 512) };
+    println!("# tier: {sharers} requests sharing a {prefix_len}-token system prompt");
+    println!("# cold re-prefill vs resident prefix hit vs demoted-then-promoted (disk)\n");
+    let rows = vec![
+        tier_run("cold", sharers, prefix_len),
+        tier_run("resident", sharers, prefix_len),
+        tier_run("tier", sharers, prefix_len),
+    ];
+    println!();
+    rows
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -357,6 +458,7 @@ fn main() {
     let engine_rows = engine_section(quick);
     let chunked_rows = chunked_section(quick, chunk);
     let prefix_rows = prefix_section(quick);
+    let tier_rows = tier_section(quick);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -375,6 +477,7 @@ fn main() {
         ("engine", Value::Arr(engine_rows)),
         ("chunked_prefill", Value::Arr(chunked_rows)),
         ("prefix_reuse", Value::Arr(prefix_rows)),
+        ("tier", Value::Arr(tier_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

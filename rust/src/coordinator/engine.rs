@@ -35,7 +35,7 @@ use super::pool::{DecodePool, DecodeTask, StepResult};
 use super::request::{Request, RequestId, RequestState, Tracked};
 use super::scheduler::{pick_preemption_victim, SchedulerPolicy};
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
-use crate::kvcache::CacheManager;
+use crate::kvcache::{CacheManager, PagePool, TierConfig};
 use crate::model::{Model, ModelConfig, Weights};
 use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
@@ -51,6 +51,21 @@ pub enum Backend {
 pub struct SnapKvOpts {
     pub budget: usize,
     pub window: usize,
+}
+
+/// Disk-tier configuration (`--tier-dir`, `--tier-bytes`, `--snapshot`).
+/// Attached AFTER construction via [`Engine::attach_tier`] so
+/// [`EngineOpts`] stays `Copy`.
+#[derive(Clone, Debug)]
+pub struct TierOpts {
+    /// Segment + snapshot directory for THIS engine (multi-worker servers
+    /// give each engine its own subdirectory).
+    pub dir: std::path::PathBuf,
+    /// Demotion stops (plain eviction resumes) past this many segment
+    /// bytes.
+    pub max_bytes: u64,
+    /// Persist the prefix index at shutdown (`Engine::snapshot_tier`).
+    pub snapshot: bool,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -163,6 +178,10 @@ pub struct Engine {
     pool: Option<DecodePool>,
     /// recycled gather buffer for pool results
     step_results: Vec<StepResult>,
+    /// disk tier attached to the page pool (None = RAM-only pool)
+    tier: Option<TierOpts>,
+    /// prefix entries restored from a snapshot at attach time
+    tier_restored: usize,
 }
 
 impl Engine {
@@ -201,6 +220,57 @@ impl Engine {
             rng: Rng::new(opts.seed),
             pool,
             step_results: Vec::new(),
+            tier: None,
+            tier_restored: 0,
+        }
+    }
+
+    /// Attach the disk tier to this engine's page pool (requires prefix
+    /// caching: the tier persists prefix-index pages).  Restores a
+    /// snapshot left by an earlier process when one exists AND was
+    /// written under the same model/codec config — the config
+    /// fingerprint guards against warm-starting from another model's
+    /// pages.  Returns the number of restored prefix entries.
+    pub fn attach_tier(&mut self, t: &TierOpts) -> Result<usize> {
+        if !self.prefix_caching() {
+            bail!("the tier stores prefix-cache pages: enable prefix caching first");
+        }
+        if self.tier.is_some() {
+            bail!("tier already attached");
+        }
+        let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
+        let restored = self
+            .cache
+            .pool()
+            .attach_tier(TierConfig::new(t.dir.clone(), t.max_bytes, tag))?;
+        self.tier = Some(t.clone());
+        self.tier_restored = restored;
+        Ok(restored)
+    }
+
+    /// The attached tier's options, if any (server startup log).
+    pub fn tier(&self) -> Option<&TierOpts> {
+        self.tier.as_ref()
+    }
+
+    /// Prefix entries restored from a snapshot at attach time.
+    pub fn tier_restored(&self) -> usize {
+        self.tier_restored
+    }
+
+    /// The shared page pool (tier counters, demotion hooks — tests,
+    /// benches, and the server's introspection).
+    pub fn page_pool(&self) -> &PagePool {
+        self.cache.pool()
+    }
+
+    /// Persist the prefix index if a tier with `snapshot: true` is
+    /// attached; `Ok(None)` when there is nothing to do.  Called by the
+    /// server worker on graceful shutdown and by `generate` at exit.
+    pub fn snapshot_tier(&self) -> Result<Option<(usize, u64)>> {
+        match &self.tier {
+            Some(t) if t.snapshot => self.cache.pool().snapshot().map(Some),
+            _ => Ok(None),
         }
     }
 
@@ -351,9 +421,13 @@ impl Engine {
             }
             self.decode_iteration(&mut done)?;
         }
-        // paged-cache gauges ride along on every step
+        // paged-cache + tier gauges ride along on every step
         self.metrics.pages_in_use = self.cache.pool().pages_in_use() as u64;
         self.metrics.pages_evicted = self.cache.pool().pages_evicted();
+        self.metrics.tier_hits = self.cache.pool().tier_hits();
+        self.metrics.pages_demoted = self.cache.pool().pages_demoted();
+        self.metrics.pages_promoted = self.cache.pool().pages_promoted();
+        self.metrics.bytes_on_disk = self.cache.pool().bytes_on_disk();
         Ok(done)
     }
 
@@ -583,6 +657,7 @@ impl Engine {
                     let (logits, k, v, imp) =
                         model.prefill_kv_importance(&prompt, sk.window);
                     let keep = snapkv_select(&imp, sk.budget, sk.window);
+                    self.metrics.snapkv_tokens_dropped += (prompt.len() - keep.len()) as u64;
                     let shared = self.cache.create(id);
                     let mut cache = shared.lock().unwrap();
                     let (l, kv, dh, t) =
@@ -854,6 +929,32 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+/// Fingerprint of everything that determines a page's bit pattern: the
+/// model geometry + codec spec + value width.  Two engines share a tier
+/// snapshot only when their fingerprints match — adopting pages cut
+/// under any other config would be silently wrong, not just lossy.
+fn config_fingerprint(cfg: &ModelConfig, value_bits: Option<u32>) -> u64 {
+    let fields = [
+        cfg.vocab as u64,
+        cfg.d_model as u64,
+        cfg.n_layers as u64,
+        cfg.n_heads as u64,
+        cfg.n_kv_heads as u64,
+        cfg.head_dim as u64,
+        cfg.ffn as u64,
+        cfg.rope_base.to_bits() as u64,
+        cfg.group as u64,
+        cfg.r_bits as u64,
+        cfg.t_bits as u64,
+        value_bits.map(|b| b as u64 + 1).unwrap_or(0),
+    ];
+    let mut bytes = Vec::with_capacity(fields.len() * 8);
+    for v in fields {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    crate::kvcache::tier::serde::fnv1a(&bytes)
 }
 
 #[cfg(test)]

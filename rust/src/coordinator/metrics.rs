@@ -40,6 +40,17 @@ pub struct Metrics {
     /// refcount-zero cached prefix pages reclaimed under pressure
     /// (gauge, synced per step from the pool's counter)
     pub pages_evicted: u64,
+    /// prefix lookups that promoted ≥1 page from the disk tier
+    /// (gauge, synced per step from the tier counters)
+    pub tier_hits: u64,
+    /// cached pages spilled to the disk tier instead of dropped
+    pub pages_demoted: u64,
+    /// pages read back from the tier and re-adopted on a prefix hit
+    pub pages_promoted: u64,
+    /// segment bytes held by the disk tier
+    pub bytes_on_disk: u64,
+    /// prompt tokens dropped by SnapKV compression before quantization
+    pub snapkv_tokens_dropped: u64,
 }
 
 impl Default for Metrics {
@@ -70,6 +81,11 @@ impl Metrics {
             preemptions: 0,
             pages_in_use: 0,
             pages_evicted: 0,
+            tier_hits: 0,
+            pages_demoted: 0,
+            pages_promoted: 0,
+            bytes_on_disk: 0,
+            snapkv_tokens_dropped: 0,
         }
     }
 
@@ -126,6 +142,19 @@ impl Metrics {
                 self.prefix_hits, self.prefix_tokens_reused,
             ));
         }
+        if self.tier_hits > 0
+            || self.pages_demoted > 0
+            || self.pages_promoted > 0
+            || self.bytes_on_disk > 0
+        {
+            s.push_str(&format!(
+                ", tier hits {} (demoted {}, promoted {}, {} B on disk)",
+                self.tier_hits, self.pages_demoted, self.pages_promoted, self.bytes_on_disk,
+            ));
+        }
+        if self.snapkv_tokens_dropped > 0 {
+            s.push_str(&format!(", snapkv dropped {} tok", self.snapkv_tokens_dropped));
+        }
         s
     }
 }
@@ -161,5 +190,19 @@ mod tests {
         assert!(s.contains("pages 12 (evicted 3)"), "{s}");
         assert!(s.contains("preempt 1"), "{s}");
         assert!(s.contains("prefix hits 5 (640 tok reused)"), "{s}");
+        assert!(!s.contains("tier hits"), "tier line quiet when unused: {s}");
+    }
+
+    #[test]
+    fn summary_surfaces_tier_and_snapkv_counters() {
+        let mut m = Metrics::new();
+        m.tier_hits = 4;
+        m.pages_demoted = 9;
+        m.pages_promoted = 6;
+        m.bytes_on_disk = 12345;
+        m.snapkv_tokens_dropped = 77;
+        let s = m.summary();
+        assert!(s.contains("tier hits 4 (demoted 9, promoted 6, 12345 B on disk)"), "{s}");
+        assert!(s.contains("snapkv dropped 77 tok"), "{s}");
     }
 }

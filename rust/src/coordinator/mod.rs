@@ -23,6 +23,6 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Backend, Completion, Engine, EngineOpts};
+pub use engine::{Backend, Completion, Engine, EngineOpts, TierOpts};
 pub use pool::{DecodePool, DecodeTask, StepResult};
 pub use request::{Request, RequestId, RequestState};

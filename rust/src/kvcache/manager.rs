@@ -39,6 +39,8 @@ pub struct MemoryReport {
     pub physical_bytes: usize,
     /// physical pages resident in the pool
     pub pages: usize,
+    /// segment bytes held by the disk tier (0 when no tier is attached)
+    pub bytes_on_disk: u64,
     pub budget_bytes: usize,
 }
 
@@ -189,6 +191,7 @@ impl CacheManager {
             bytes,
             physical_bytes: self.physical_bytes(),
             pages: self.pool.pages_in_use(),
+            bytes_on_disk: self.pool.bytes_on_disk(),
             budget_bytes: self.budget_bytes,
         }
     }

@@ -13,14 +13,19 @@
 //! * [`eviction`] — SnapKV-style prompt compression (Table 8).
 //! * [`manager`] — multi-sequence allocation over one shared pool, with
 //!   constant-time admission against the global memory budget.
+//! * [`tier`] — the disk tier under the pool: versioned page serde,
+//!   append-only segment store, background demotion, on-demand
+//!   promotion, and persistent prefix-cache snapshots for warm starts.
 
 pub mod eviction;
 pub mod manager;
 pub mod pool;
 pub mod seq;
 pub mod stream;
+pub mod tier;
 
 pub use manager::{CacheManager, MemoryReport, SharedSeq};
 pub use pool::{Page, PagePool};
 pub use seq::{CacheConfig, SequenceCache, StreamView};
 pub use stream::StreamCache;
+pub use tier::{SegmentStore, TierConfig, TierRef};

@@ -27,10 +27,20 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
 
+use anyhow::{bail, Context, Result};
+
 use super::stream::GroupValues;
+use super::tier::{
+    read_snapshot, spawn_writer, write_snapshot, DemoteJob, SegmentStore, SnapshotEntry,
+    TierBackend, TierConfig, TierCounters,
+};
 use crate::quant::polar::PolarGroup;
+
+/// Roll segment files at this size (append-only; see `tier::store`).
+const SEGMENT_ROLL_BYTES: u64 = 64 << 20;
 
 /// Pool-wide accounting, shared by every page and sequence the pool has
 /// adopted.  All counters are atomics so the decode workers' appends and
@@ -43,9 +53,6 @@ pub struct PoolCounters {
     pub page_bytes: AtomicUsize,
     /// fp residual-tail bytes across live sequences (fp16-charged)
     pub resid_bytes: AtomicUsize,
-    /// logical tokens across live sequences (shared pages counted per
-    /// sequence — the "what you'd pay without sharing" token count)
-    pub seq_tokens: AtomicUsize,
     /// refcount-zero prefix pages reclaimed under pressure
     pub pages_evicted: AtomicU64,
 }
@@ -89,17 +96,38 @@ impl Drop for Page {
     }
 }
 
+/// Where a cached prefix page currently lives.
+///
+/// * `Resident` — in RAM; the ordinary PR-3 state.  The `Option<TierRef>`
+///   remembers a known-good on-disk copy when one exists (the page was
+///   promoted, or its background write landed after a re-promotion):
+///   pages are immutable, so that record stays valid forever and a later
+///   demotion or snapshot is a FREE slot flip instead of a rewrite — a
+///   hot prefix set does not grow the segments on every restart cycle.
+/// * `Queued` — handed to the tier's background writer; still in RAM
+///   (the queue holds an `Arc`) but already discounted from the
+///   capacity check via `demote_inflight`.  A lookup hit cancels the
+///   state back to `Resident` for free (the write still lands and is
+///   recorded as the known copy when it does).
+/// * `Tiered` — on disk only; a lookup hit reads, checks, and re-adopts
+///   the page (promotion).  A corrupt record degrades to a miss.
+pub(crate) enum Slot {
+    Resident(Arc<Page>, Option<super::tier::TierRef>),
+    Queued(Arc<Page>),
+    Tiered(super::tier::TierRef),
+}
+
 /// One prefix-index entry: the page for the group whose token chain
 /// hashes to the map key, plus enough material to VERIFY the chain (so a
 /// hash collision can only cause a miss, never a wrong share).
-struct PrefixEntry {
+pub(crate) struct PrefixEntry {
     /// chain hash of the parent group (`ROOT_HASH` for the first group)
-    parent: u64,
+    pub(crate) parent: u64,
     /// the exact tokens this group covers
-    toks: Vec<u32>,
-    page: Arc<Page>,
+    pub(crate) toks: Vec<u32>,
+    pub(crate) slot: Slot,
     /// LRU clock value of the last hit/registration
-    tick: u64,
+    pub(crate) tick: u64,
 }
 
 const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
@@ -117,9 +145,11 @@ fn chain_hash(parent: u64, toks: &[u32]) -> u64 {
     h
 }
 
-struct PrefixIndex {
-    entries: HashMap<u64, PrefixEntry>,
-    clock: u64,
+pub(crate) struct PrefixIndex {
+    pub(crate) entries: HashMap<u64, PrefixEntry>,
+    pub(crate) clock: u64,
+    /// attached disk tier (None = PR-3 behavior: reclaim drops pages)
+    pub(crate) tier: Option<TierBackend>,
 }
 
 /// Hard ceiling on prefix-index entries when the pool itself is
@@ -138,6 +168,9 @@ const UNBOUNDED_PREFIX_CAP: usize = 32_768;
 pub struct PagePool {
     index: Arc<Mutex<PrefixIndex>>,
     counters: Arc<PoolCounters>,
+    /// tier counters/gauges, readable without the index lock (zeros
+    /// until/unless a tier is attached)
+    tier_stats: Arc<TierCounters>,
     /// physical page capacity; `usize::MAX` = unbounded
     capacity: usize,
 }
@@ -157,8 +190,13 @@ impl PagePool {
     /// unbounded — the accounting still runs).
     pub fn new(capacity: usize) -> Self {
         PagePool {
-            index: Arc::new(Mutex::new(PrefixIndex { entries: HashMap::new(), clock: 0 })),
+            index: Arc::new(Mutex::new(PrefixIndex {
+                entries: HashMap::new(),
+                clock: 0,
+                tier: None,
+            })),
             counters: Arc::new(PoolCounters::default()),
+            tier_stats: Arc::new(TierCounters::default()),
             capacity,
         }
     }
@@ -187,9 +225,14 @@ impl PagePool {
         self.counters.pages_evicted.load(Ordering::Relaxed)
     }
 
-    /// Pages allocatable right now without reclaiming anything.
+    /// Pages allocatable right now without reclaiming anything.  Pages
+    /// queued to the tier writer count as free already: the reclaim that
+    /// queued them has logically released their capacity, the RAM just
+    /// lags by one bounded write (see `tier::TierConfig::queue_depth`).
     pub fn free_pages(&self) -> usize {
-        self.capacity.saturating_sub(self.pages_in_use())
+        let in_use = self.counters.pages.load(Ordering::Relaxed);
+        let inflight = self.tier_stats.demote_inflight.load(Ordering::Relaxed);
+        self.capacity.saturating_sub(in_use.saturating_sub(inflight))
     }
 
     /// Take ownership of a freshly finalized page: attach the accounting
@@ -206,58 +249,182 @@ impl PagePool {
     }
 
     /// Ensure `need` pages can be allocated, reclaiming LRU refcount-zero
-    /// prefix pages if necessary.  Returns false if the shortfall remains
-    /// (every resident page is still referenced by some sequence) — the
-    /// engine then preempts a decoding sequence instead of stalling.
+    /// prefix pages if necessary.  With a tier attached the reclaim
+    /// DEMOTES instead of dropping: the entry survives pointing at disk,
+    /// and the page's RAM frees as soon as the background writer lands
+    /// it.  Returns false if the shortfall remains (every resident page
+    /// is still referenced by some sequence) — the engine then preempts
+    /// a decoding sequence instead of stalling.
     pub fn try_free(&self, need: usize) -> bool {
         if need <= self.free_pages() {
             return true;
         }
-        let mut idx = self.index.lock().unwrap();
+        let mut guard = self.index.lock().unwrap();
+        self.reclaim_locked(&mut guard, need)
+    }
+
+    /// The reclaim loop behind [`PagePool::try_free`], callable by paths
+    /// that already hold the index lock (promotion).
+    fn reclaim_locked(&self, idx: &mut PrefixIndex, need: usize) -> bool {
         while self.free_pages() < need {
-            // LRU entry whose page no sequence holds (the index owns the
-            // only Arc)
+            // LRU resident entry whose page no sequence holds (the index
+            // owns the only Arc); Queued entries are already on their way
+            // out, Tiered ones hold no RAM
             let victim = idx
                 .entries
                 .iter()
-                .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                .filter(
+                    |(_, e)| matches!(&e.slot, Slot::Resident(p, _) if Arc::strong_count(p) == 1),
+                )
                 .min_by_key(|(_, e)| e.tick)
                 .map(|(&h, _)| h);
             match victim {
-                Some(h) => {
-                    idx.entries.remove(&h);
-                    self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
-                }
+                Some(h) => self.demote_or_evict(idx, h),
                 None => return false,
             }
         }
         true
     }
 
+    /// Reclaim one refcount-zero resident entry.  A page with a known
+    /// on-disk copy demotes for FREE (slot flip, RAM drops, no write —
+    /// pages are immutable so the old record is still exact); otherwise
+    /// queue it to the tier writer (entry kept, capacity freed
+    /// immediately via the inflight discount) when the tier has demotion
+    /// open, is under its byte budget, and has queue room; otherwise
+    /// drop the entry outright.
+    fn demote_or_evict(&self, idx: &mut PrefixIndex, h: u64) {
+        if let Some(tier) = &idx.tier {
+            let known = match &idx.entries[&h].slot {
+                Slot::Resident(_, known) => *known,
+                _ => unreachable!("demotion victims are resident"),
+            };
+            if let Some(r) = known {
+                idx.entries.get_mut(&h).unwrap().slot = Slot::Tiered(r);
+                self.tier_stats.pages_demoted.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            let under_budget =
+                self.tier_stats.bytes_on_disk.load(Ordering::Relaxed) < tier.max_bytes;
+            if let (Some(tx), true) = (tier.tx.as_ref(), under_budget) {
+                let page = match &idx.entries[&h].slot {
+                    Slot::Resident(p, _) => p.clone(),
+                    _ => unreachable!("demotion victims are resident"),
+                };
+                match tx.try_send(DemoteJob { hash: h, page: page.clone() }) {
+                    Ok(()) => {
+                        self.tier_stats.demote_inflight.fetch_add(1, Ordering::Relaxed);
+                        idx.entries.get_mut(&h).unwrap().slot = Slot::Queued(page);
+                        return;
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        // never stall reclaim on the writer: fall through
+                        // to plain eviction and note the overflow
+                        self.tier_stats.demote_overflow.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {}
+                }
+            }
+        }
+        idx.entries.remove(&h);
+        self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Longest already-pooled prefix of `tokens`, as verified chain pages
     /// (each covering `group` tokens), capped at `max_tokens`.  Hits
-    /// refresh the LRU clock.
+    /// refresh the LRU clock.  A hit on a demoted entry PROMOTES the
+    /// page: it is read back from the segment store, checksum-verified,
+    /// re-adopted into the pool, and the entry goes resident again — a
+    /// corrupt record degrades to a miss (the entry is dropped and the
+    /// chain stops there), never a panic.
+    ///
+    /// Capacity: a bounded pool promotes like it allocates — each page
+    /// first reclaims room ([`PagePool::try_free`] semantics); if nothing
+    /// is reclaimable the chain stops there and the tail stays on disk
+    /// (the caller prefills those tokens instead, under the ordinary
+    /// preemption machinery).  Promotion never overshoots the cap.
+    ///
+    /// The disk read runs under the index lock — a deliberate tradeoff:
+    /// lookups happen at admission rate (not decode rate) and the only
+    /// other lock user is the tier writer, whose worst case is falling
+    /// back to plain eviction when its queue fills, never blocking a
+    /// decode step.
     pub fn lookup_prefix(&self, tokens: &[u32], group: usize, max_tokens: usize) -> Vec<Arc<Page>> {
-        let mut idx = self.index.lock().unwrap();
+        let mut guard = self.index.lock().unwrap();
+        let idx = &mut *guard;
         idx.clock += 1;
         let tick = idx.clock;
+        let store = idx.tier.as_ref().map(|t| t.store.clone());
         let mut pages = Vec::new();
+        let mut promoted = 0u64;
         let mut parent = ROOT_HASH;
         let mut pos = 0;
+        enum Got {
+            Page(Arc<Page>),
+            Promote(super::tier::TierRef),
+            Miss,
+        }
         while pos + group <= tokens.len().min(max_tokens) {
             let toks = &tokens[pos..pos + group];
             let h = chain_hash(parent, toks);
-            match idx.entries.get_mut(&h) {
-                // verify BOTH the tokens and the chain parent: equal hash
-                // alone is not proof of an equal prefix
-                Some(e) if e.parent == parent && e.toks == toks => {
-                    e.tick = tick;
-                    pages.push(e.page.clone());
+            // verify BOTH the tokens and the chain parent: equal hash
+            // alone is not proof of an equal prefix
+            let got = match idx.entries.get_mut(&h) {
+                Some(e) if e.parent == parent && e.toks == toks => match &e.slot {
+                    Slot::Resident(p, _) => {
+                        e.tick = tick;
+                        Got::Page(p.clone())
+                    }
+                    Slot::Queued(p) => {
+                        // cancel the demotion: the page is wanted again
+                        // (the in-flight write still lands, and the
+                        // writer records it as the known on-disk copy)
+                        let p = p.clone();
+                        e.slot = Slot::Resident(p.clone(), None);
+                        e.tick = tick;
+                        Got::Page(p)
+                    }
+                    Slot::Tiered(tref) => Got::Promote(*tref),
+                },
+                _ => Got::Miss,
+            };
+            match got {
+                Got::Page(p) => pages.push(p),
+                Got::Promote(r) => {
+                    // make room first (chain pages already promoted are
+                    // pinned by `pages`, so they are never victims); a dry
+                    // bounded pool stops the chain instead of overshooting
+                    if !self.reclaim_locked(idx, 1) {
+                        break;
+                    }
+                    match store.as_ref().map(|s| s.get(r)) {
+                        Some(Ok(page)) => {
+                            let arc = self.adopt(page);
+                            if let Some(e) = idx.entries.get_mut(&h) {
+                                // keep the ref: the record stays exact, so
+                                // re-demoting this page later is free
+                                e.slot = Slot::Resident(arc.clone(), Some(r));
+                                e.tick = tick;
+                            }
+                            promoted += 1;
+                            pages.push(arc);
+                        }
+                        // corrupt/unreadable record, or the tier
+                        // vanished: treat as a miss
+                        _ => {
+                            idx.entries.remove(&h);
+                            break;
+                        }
+                    }
                 }
-                _ => break,
+                Got::Miss => break,
             }
             parent = h;
             pos += group;
+        }
+        if promoted > 0 {
+            self.tier_stats.tier_hits.fetch_add(1, Ordering::Relaxed);
+            self.tier_stats.pages_promoted.fetch_add(promoted, Ordering::Relaxed);
         }
         pages
     }
@@ -268,8 +435,16 @@ impl PagePool {
     /// boundary is request-private).  Idempotent: existing entries are
     /// left untouched, so repeated registration as chunks land is cheap.
     pub fn register_prefix(&self, pages: &[Arc<Page>], tokens: &[u32]) {
-        let cap = self.capacity.min(UNBOUNDED_PREFIX_CAP);
-        let mut idx = self.index.lock().unwrap();
+        let mut guard = self.index.lock().unwrap();
+        let idx = &mut *guard;
+        // with a tier attached, the index may legitimately outgrow the
+        // page capacity: Tiered entries hold no RAM, so only the global
+        // entry cap applies (pool capacity is bounded by disk, not memory)
+        let cap = if idx.tier.is_some() {
+            UNBOUNDED_PREFIX_CAP
+        } else {
+            self.capacity.min(UNBOUNDED_PREFIX_CAP)
+        };
         idx.clock += 1;
         let tick = idx.clock;
         let mut parent = ROOT_HASH;
@@ -280,27 +455,56 @@ impl PagePool {
             }
             let toks = &tokens[pos..pos + page.tokens];
             let h = chain_hash(parent, toks);
-            if !idx.entries.contains_key(&h) {
+            let exists = match idx.entries.get_mut(&h) {
+                Some(e) => {
+                    // re-registering a chain whose entry was demoted: the
+                    // registering sequence holds the page resident, so
+                    // upgrade in place, keeping the disk record as the
+                    // known copy (same chain => bit-identical page) — but
+                    // only after verifying the chain, never across a hash
+                    // collision
+                    if e.parent == parent && e.toks == toks {
+                        if let Slot::Tiered(r) = e.slot {
+                            e.slot = Slot::Resident(page.clone(), Some(r));
+                            e.tick = tick;
+                        }
+                    }
+                    true
+                }
+                None => false,
+            };
+            if !exists {
                 // bound the index: past the cap, a new entry must displace
-                // the LRU refcount-zero one, or it simply isn't cached
+                // the LRU removable one, or it simply isn't cached
                 if idx.entries.len() >= cap {
                     let lru = idx
                         .entries
                         .iter()
-                        .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                        .filter(|(_, e)| match &e.slot {
+                            Slot::Resident(p, _) => Arc::strong_count(p) == 1,
+                            Slot::Queued(_) => false, // writer owns it
+                            Slot::Tiered(_) => true,  // forgetting a ref is free
+                        })
                         .min_by_key(|(_, e)| e.tick)
                         .map(|(&k, _)| k);
                     match lru {
                         Some(k) => {
+                            if matches!(idx.entries[&k].slot, Slot::Resident(..)) {
+                                self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
+                            }
                             idx.entries.remove(&k);
-                            self.counters.pages_evicted.fetch_add(1, Ordering::Relaxed);
                         }
                         None => break,
                     }
                 }
                 idx.entries.insert(
                     h,
-                    PrefixEntry { parent, toks: toks.to_vec(), page: page.clone(), tick },
+                    PrefixEntry {
+                        parent,
+                        toks: toks.to_vec(),
+                        slot: Slot::Resident(page.clone(), None),
+                        tick,
+                    },
                 );
             }
             parent = h;
@@ -313,16 +517,195 @@ impl PagePool {
         self.index.lock().unwrap().entries.len()
     }
 
+    /// Prefix-index entries currently living on disk only.
+    pub fn tiered_pages(&self) -> usize {
+        self.index
+            .lock()
+            .unwrap()
+            .entries
+            .values()
+            .filter(|e| matches!(e.slot, Slot::Tiered(_)))
+            .count()
+    }
+
     /// Drop every cached prefix entry regardless of recency (tests).
     pub fn clear_prefix_index(&self) {
         let mut idx = self.index.lock().unwrap();
         let n = idx
             .entries
-            .iter()
-            .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+            .values()
+            .filter(|e| matches!(&e.slot, Slot::Resident(p, _) if Arc::strong_count(p) == 1))
             .count() as u64;
-        idx.entries.retain(|_, e| Arc::strong_count(&e.page) > 1);
+        idx.entries.retain(|_, e| match &e.slot {
+            Slot::Resident(p, _) => Arc::strong_count(p) > 1,
+            Slot::Queued(_) => true, // writer still owns it; let it finish
+            Slot::Tiered(_) => false,
+        });
         self.counters.pages_evicted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    // ------------------------------------------------------------- tier
+
+    /// Attach a disk tier: reclaim demotes instead of dropping, lookups
+    /// promote, and a snapshot written by an earlier process under the
+    /// same `config_tag` warm-starts the prefix index (all entries come
+    /// back `Tiered`; pages fault in lazily on their first hit).
+    ///
+    /// Returns the number of restored prefix entries.  A present-but-
+    /// unreadable snapshot (corruption, version or config-tag mismatch)
+    /// is reported and ignored — the pool starts cold, it never trusts a
+    /// bad index.
+    pub fn attach_tier(&self, cfg: TierConfig) -> Result<usize> {
+        // cheap early rejection: don't scan directories or spawn a writer
+        // just to find out a tier is already there (re-checked under the
+        // lock below against races)
+        if self.index.lock().unwrap().tier.is_some() {
+            bail!("tier already attached to this pool");
+        }
+        let store = Arc::new(SegmentStore::open(&cfg.dir, SEGMENT_ROLL_BYTES)?);
+        self.tier_stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
+        let restored = match read_snapshot(&cfg.dir, cfg.config_tag) {
+            Ok(Some(entries)) => entries,
+            Ok(None) => Vec::new(),
+            Err(e) => {
+                eprintln!("[tier] ignoring unusable snapshot in {}: {e:#}", cfg.dir.display());
+                Vec::new()
+            }
+        };
+        let (tx, rx) = sync_channel(cfg.queue_depth.max(1));
+        let writer = spawn_writer(
+            Arc::downgrade(&self.index),
+            store.clone(),
+            self.tier_stats.clone(),
+            rx,
+        );
+        let mut idx = self.index.lock().unwrap();
+        if idx.tier.is_some() {
+            bail!("tier already attached to this pool");
+        }
+        let n = restored.len();
+        for e in restored {
+            idx.clock += 1;
+            let tick = idx.clock;
+            let h = chain_hash(e.parent, &e.toks);
+            idx.entries.insert(
+                h,
+                PrefixEntry { parent: e.parent, toks: e.toks, slot: Slot::Tiered(e.tref), tick },
+            );
+        }
+        idx.tier = Some(TierBackend {
+            store,
+            tx: Some(tx),
+            writer: Some(writer),
+            max_bytes: cfg.max_bytes,
+            dir: cfg.dir,
+            config_tag: cfg.config_tag,
+        });
+        Ok(n)
+    }
+
+    pub fn tier_attached(&self) -> bool {
+        self.index.lock().unwrap().tier.is_some()
+    }
+
+    /// Tier counters (zeros when no tier is attached).
+    pub fn tier_hits(&self) -> u64 {
+        self.tier_stats.tier_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn pages_demoted(&self) -> u64 {
+        self.tier_stats.pages_demoted.load(Ordering::Relaxed)
+    }
+
+    pub fn pages_promoted(&self) -> u64 {
+        self.tier_stats.pages_promoted.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.tier_stats.bytes_on_disk.load(Ordering::Relaxed)
+    }
+
+    /// Synchronously demote every refcount-zero resident prefix entry
+    /// (tests/benches force the demote→promote cycle deterministically;
+    /// production demotion goes through the background writer instead).
+    pub fn demote_all(&self) -> usize {
+        let mut guard = self.index.lock().unwrap();
+        let idx = &mut *guard;
+        let Some(store) = idx.tier.as_ref().map(|t| t.store.clone()) else { return 0 };
+        let mut n = 0;
+        for e in idx.entries.values_mut() {
+            // a known on-disk copy flips for free; only never-written
+            // pages cost a record
+            let flip = match &e.slot {
+                Slot::Resident(p, known) if Arc::strong_count(p) == 1 => match known {
+                    Some(r) => Some(*r),
+                    None => match store.put(p) {
+                        Ok(r) => Some(r),
+                        Err(err) => {
+                            eprintln!("[tier] demote_all write failed: {err:#}");
+                            None
+                        }
+                    },
+                },
+                _ => None,
+            };
+            if let Some(r) = flip {
+                e.slot = Slot::Tiered(r);
+                self.tier_stats.pages_demoted.fetch_add(1, Ordering::Relaxed);
+                n += 1;
+            }
+        }
+        self.tier_stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
+        n
+    }
+
+    /// Persist the prefix index for a warm start: drain the background
+    /// writer, write every still-resident entry's page to the segment
+    /// store, and atomically replace the snapshot index file.  Demotion
+    /// is sealed afterwards (this is a shutdown operation) but lookups —
+    /// including promotions — keep working.
+    ///
+    /// Returns (entries persisted, bytes on disk).
+    pub fn snapshot(&self) -> Result<(usize, u64)> {
+        // 1. seal the demotion queue and drain the writer — after the
+        //    join every Queued entry has become Tiered (or reverted to
+        //    Resident on a write error).  The index lock is NOT held
+        //    across the join: the writer needs it to flip entries.
+        let (store, dir, tag, writer) = {
+            let mut idx = self.index.lock().unwrap();
+            let Some(t) = idx.tier.as_mut() else { bail!("no tier attached") };
+            t.tx = None;
+            (t.store.clone(), t.dir.clone(), t.config_tag, t.writer.take())
+        };
+        if let Some(w) = writer {
+            let _ = w.join();
+        }
+        // 2. persist: entries with a known on-disk copy just re-record
+        //    their refs (immutable pages — the old record is still
+        //    exact); only never-written pages cost a new record
+        let mut out: Vec<SnapshotEntry> = Vec::new();
+        {
+            let mut guard = self.index.lock().unwrap();
+            let idx = &mut *guard;
+            for e in idx.entries.values_mut() {
+                let tref = match &mut e.slot {
+                    Slot::Tiered(r) => *r,
+                    Slot::Resident(_, Some(r)) => *r,
+                    Slot::Resident(p, known) => {
+                        let r = store.put(p).context("snapshot page write")?;
+                        *known = Some(r);
+                        r
+                    }
+                    Slot::Queued(p) => store.put(p).context("snapshot page write")?,
+                };
+                out.push(SnapshotEntry { parent: e.parent, toks: e.toks.clone(), tref });
+            }
+        }
+        store.sync()?;
+        write_snapshot(&dir, tag, &out)?;
+        let bytes = store.bytes_on_disk();
+        self.tier_stats.bytes_on_disk.store(bytes, Ordering::Relaxed);
+        Ok((out.len(), bytes))
     }
 }
 
@@ -462,5 +845,176 @@ mod tests {
         let toks: Vec<u32> = (0..9).collect();
         pool.register_prefix(&pages, &toks);
         assert_eq!(pool.indexed_pages(), 2);
+    }
+
+    // --------------------------------------------------------- tiering
+
+    fn tier_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("polarquant-pool-tier-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn wait_until(what: &str, f: impl Fn() -> bool) {
+        for _ in 0..2000 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    #[test]
+    fn demote_then_promote_is_bit_exact_and_counted() {
+        let dir = tier_dir("roundtrip");
+        let pool = PagePool::new(usize::MAX);
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let toks: Vec<u32> = (0..8).collect();
+        let originals: Vec<Vec<u8>> = (0..2)
+            .map(|i| crate::kvcache::tier::serde::encode_page(&page(60 + i)))
+            .collect();
+        let pages: Vec<_> = (0..2).map(|i| pool.adopt(page(60 + i))).collect();
+        pool.register_prefix(&pages, &toks);
+        drop(pages);
+        assert_eq!(pool.demote_all(), 2);
+        assert_eq!(pool.tiered_pages(), 2);
+        assert_eq!(pool.pages_in_use(), 0, "demoted pages hold no RAM");
+        assert!(pool.bytes_on_disk() > 0);
+        // promotion: the lookup faults both pages back in, bit-exact
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 2);
+        for (p, want) in hit.iter().zip(&originals) {
+            assert_eq!(&crate::kvcache::tier::serde::encode_page(p), want);
+        }
+        assert_eq!(pool.tier_hits(), 1);
+        assert_eq!(pool.pages_promoted(), 2);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.tiered_pages(), 0);
+        // a second lookup is a plain resident hit — no new promotion
+        let again = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(again.len(), 2);
+        assert_eq!(pool.pages_promoted(), 2);
+        drop(hit);
+        drop(again);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_segment_record_is_a_miss_not_a_panic() {
+        let dir = tier_dir("corrupt");
+        let pool = PagePool::new(usize::MAX);
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let toks: Vec<u32> = (0..8).collect();
+        let pages: Vec<_> = (0..2).map(|i| pool.adopt(page(70 + i))).collect();
+        pool.register_prefix(&pages, &toks);
+        drop(pages);
+        assert_eq!(pool.demote_all(), 2);
+        // scribble over every segment file: all records invalid
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().is_some_and(|e| e == "bin") {
+                let len = std::fs::metadata(&p).unwrap().len() as usize;
+                std::fs::write(&p, vec![0xAAu8; len]).unwrap();
+            }
+        }
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert!(hit.is_empty(), "corrupt records must miss, got {} pages", hit.len());
+        assert!(pool.indexed_pages() < 2, "corrupt entry dropped from the index");
+        assert_eq!(pool.pages_promoted(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bounded_pool_demotes_through_the_background_writer() {
+        let dir = tier_dir("writer");
+        let pool = PagePool::new(3);
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let toks: Vec<u32> = (0..8).collect();
+        let p0 = pool.adopt(page(80));
+        let p1 = pool.adopt(page(81));
+        pool.register_prefix(&[p0.clone(), p1.clone()], &toks);
+        drop(p0);
+        drop(p1);
+        let _held = pool.adopt(page(82));
+        assert_eq!(pool.free_pages(), 0);
+        // reclaim demotes the LRU entry instead of dropping it: capacity
+        // frees immediately (inflight discount), the entry survives
+        assert!(pool.try_free(1));
+        assert_eq!(pool.indexed_pages(), 2, "demotion keeps the prefix entry");
+        assert_eq!(pool.pages_evicted(), 0, "demotion is not eviction");
+        wait_until("background demotion write", || pool.pages_demoted() == 1);
+        wait_until("page RAM released", || pool.pages_in_use() == 2);
+        assert_eq!(pool.tiered_pages(), 1);
+        // the chain still resolves end-to-end: head promotes from disk,
+        // tail was never demoted
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(pool.pages_promoted(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bounded_pool_promotion_stops_at_capacity_instead_of_overshooting() {
+        let dir = tier_dir("promote-cap");
+        let pool = PagePool::new(2);
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let toks: Vec<u32> = (0..8).collect();
+        let pages: Vec<_> = (0..2).map(|i| pool.adopt(page(95 + i))).collect();
+        pool.register_prefix(&pages, &toks);
+        drop(pages);
+        assert_eq!(pool.demote_all(), 2);
+        assert_eq!(pool.pages_in_use(), 0);
+        // an unrelated resident page leaves room for exactly ONE promotion
+        let _held = pool.adopt(page(97));
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 1, "chain must stop when the pool is full");
+        assert_eq!(pool.pages_in_use(), 2, "promotion never overshoots the cap");
+        assert_eq!(pool.pages_promoted(), 1);
+        assert_eq!(pool.tiered_pages(), 1, "the tail stays on disk");
+        // with room back, the full chain resolves
+        drop(hit);
+        drop(_held);
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 2);
+        assert!(pool.pages_in_use() <= 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_restores_the_prefix_index_into_a_fresh_pool() {
+        let dir = tier_dir("snapshot");
+        let toks: Vec<u32> = (0..12).collect();
+        let originals: Vec<Vec<u8>> = (0..3)
+            .map(|i| crate::kvcache::tier::serde::encode_page(&page(90 + i)))
+            .collect();
+        {
+            let pool = PagePool::new(usize::MAX);
+            pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 42)).unwrap();
+            let pages: Vec<_> = (0..3).map(|i| pool.adopt(page(90 + i))).collect();
+            pool.register_prefix(&pages, &toks);
+            drop(pages);
+            let (entries, bytes) = pool.snapshot().unwrap();
+            assert_eq!(entries, 3);
+            assert!(bytes > 0);
+        }
+        // a different config tag must refuse the snapshot
+        let other = PagePool::new(usize::MAX);
+        assert_eq!(other.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 7)).unwrap(), 0);
+        // same tag: warm start with every entry tiered, pages fault in
+        let pool = PagePool::new(usize::MAX);
+        let restored = pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 42)).unwrap();
+        assert_eq!(restored, 3);
+        assert_eq!(pool.tiered_pages(), 3);
+        assert_eq!(pool.pages_in_use(), 0);
+        let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 3);
+        for (p, want) in hit.iter().zip(&originals) {
+            assert_eq!(&crate::kvcache::tier::serde::encode_page(p), want);
+        }
+        assert_eq!(pool.tier_hits(), 1);
+        assert_eq!(pool.pages_promoted(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

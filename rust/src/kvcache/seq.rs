@@ -50,10 +50,9 @@ pub struct SequenceCache {
     quantized_tokens: usize,
     /// accounting + allocation home; `None` for standalone caches
     pool: Option<PagePool>,
-    /// this sequence's current contribution to the pool's resid/token
-    /// counters (reconciled on every mutation and on Drop)
+    /// this sequence's current contribution to the pool's residual-byte
+    /// counter (reconciled on every mutation and on Drop)
     acc_resid_bytes: usize,
-    acc_tokens: usize,
 }
 
 impl SequenceCache {
@@ -78,7 +77,6 @@ impl SequenceCache {
             quantized_tokens: 0,
             pool,
             acc_resid_bytes: 0,
-            acc_tokens: 0,
         }
     }
 
@@ -207,6 +205,9 @@ impl SequenceCache {
     /// Attach already-finalized pages (a prefix-cache hit) to this EMPTY
     /// cache: shares them refcounted and advances `next_pos` past the
     /// covered tokens, so prefill resumes right after the shared prefix.
+    /// The pages may have just been PROMOTED from the disk tier
+    /// (`kvcache::tier`) — promotion is bit-exact, so a tiered hit and a
+    /// resident hit attach indistinguishable pages.
     pub fn adopt_pages(&mut self, pages: Vec<Arc<Page>>) {
         assert!(self.is_empty() && self.next_pos == 0, "prefix pages attach before prefill");
         for p in pages {
@@ -236,24 +237,19 @@ impl SequenceCache {
     }
 
     /// Reconcile this sequence's contribution to the pool's exact O(1)
-    /// residual/token counters.
+    /// residual-byte counter.  (Pages reconcile themselves on `Drop`;
+    /// token totals come from the slow `report()` walk — a per-token
+    /// atomic nobody reads is not worth the hot-path cacheline traffic.)
     fn sync_accounting(&mut self) {
         let Some(pool) = &self.pool else { return };
         let c = pool.counters();
         let rb: usize = self.streams.iter().map(|s| s.nbytes()).sum();
-        let tok = self.len();
         if rb >= self.acc_resid_bytes {
             c.resid_bytes.fetch_add(rb - self.acc_resid_bytes, Ordering::Relaxed);
         } else {
             c.resid_bytes.fetch_sub(self.acc_resid_bytes - rb, Ordering::Relaxed);
         }
-        if tok >= self.acc_tokens {
-            c.seq_tokens.fetch_add(tok - self.acc_tokens, Ordering::Relaxed);
-        } else {
-            c.seq_tokens.fetch_sub(self.acc_tokens - tok, Ordering::Relaxed);
-        }
         self.acc_resid_bytes = rb;
-        self.acc_tokens = tok;
     }
 }
 
@@ -267,9 +263,8 @@ impl Clone for SequenceCache {
             quantized_tokens: self.quantized_tokens,
             pool: self.pool.clone(),
             acc_resid_bytes: 0,
-            acc_tokens: 0,
         };
-        // the clone contributes its own residual bytes/tokens
+        // the clone contributes its own residual bytes
         c.sync_accounting();
         c
     }
@@ -280,7 +275,6 @@ impl Drop for SequenceCache {
         if let Some(pool) = &self.pool {
             let c = pool.counters();
             c.resid_bytes.fetch_sub(self.acc_resid_bytes, Ordering::Relaxed);
-            c.seq_tokens.fetch_sub(self.acc_tokens, Ordering::Relaxed);
         }
         // pages reconcile themselves on their own Drop (last Arc wins)
     }

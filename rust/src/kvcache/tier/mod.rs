@@ -1,0 +1,37 @@
+//! Tiered page store: spill-to-disk offload for the prefix cache.
+//!
+//! PolarQuant pages are tiny and immutable — one finalized, bit-packed
+//! key group (plus values) across every stream — which makes a second
+//! storage tier nearly free: pages serialize compactly, verify by
+//! checksum, and promote back bit-exactly.  This subsystem turns the
+//! PR-3 page pool into a two-level hierarchy:
+//!
+//! * [`serde`] — the versioned binary [`crate::kvcache::Page`] codec
+//!   (packed code bitstreams + params + values, FNV-64 checksummed;
+//!   decode is bit-exact, corruption is an `Err`, never a panic).
+//! * [`store`] — the append-only segment file store:
+//!   `put(page) -> TierRef`, `get(TierRef) -> Page`, segments immutable
+//!   once written so persisted refs survive restarts.
+//! * [`tier`] — the policy plumbing: bounded demotion queue + background
+//!   writer (reclaim never blocks on disk), shared counters, and the
+//!   snapshot codec that persists the prefix index for warm starts.
+//!
+//! The policy itself is wired into [`crate::kvcache::PagePool`]: under
+//! capacity pressure, refcount-zero cached pages are *demoted* (index
+//! entry kept, pointing at a [`TierRef`]) instead of dropped, and a
+//! prefix lookup that lands on a demoted entry *promotes* the page back
+//! into RAM (`tier_hits`).  `PagePool::snapshot` / `attach_tier` persist
+//! and restore the whole index across process restarts, so a server
+//! warm-starts with its prefix cache populated.
+
+pub mod serde;
+pub mod store;
+#[allow(clippy::module_inception)]
+pub mod tier;
+
+pub use store::{SegmentStore, TierRef};
+pub use tier::{TierConfig, TierCounters};
+
+pub(crate) use tier::{
+    read_snapshot, spawn_writer, write_snapshot, DemoteJob, SnapshotEntry, TierBackend,
+};

@@ -1,0 +1,348 @@
+//! Compact, versioned binary codec for [`Page`] — the unit the tiered
+//! store writes to disk.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! u32 magic "PQPG"   u16 version   u16 flags (0)
+//! u32 tokens         u32 n_streams
+//! per stream:
+//!   key group : u32 d2, 4 * d2 f32 params (rho_z, rho_s, theta_z, theta_s),
+//!               packed rho codes, packed theta codes
+//!   values    : u8 tag (0 = fp, 1 = quant)
+//!               fp    -> u32 len, len f32
+//!               quant -> u32 tokens, tokens f32 z, tokens f32 s, packed codes
+//! u64 fnv1a-64 checksum over every preceding byte
+//! ```
+//!
+//! A packed code stream is `u8 bits, u32 n, ceil(n*bits/8) bytes` — the
+//! exact at-rest bitstream from [`crate::quant::pack::PackedCodes`], so
+//! encode→decode is bit-for-bit: dequantization of a promoted page is the
+//! same arithmetic on the same codes and the same param bit patterns.
+//! The fused `combined` plane (see [`PolarGroup::combined`]) is NOT
+//! stored: it is a pure function of the rho/theta planes and is rebuilt
+//! at decode, byte-identical to what `encode_group` would have produced.
+//!
+//! Decoding is fully checked: the checksum is verified before parsing,
+//! every length field is bounds-checked against the buffer, and trailing
+//! garbage is rejected — a corrupt record yields `Err`, never a panic and
+//! never a silently wrong page.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kvcache::pool::Page;
+use crate::kvcache::stream::GroupValues;
+use crate::quant::int_n::IntEncoded;
+use crate::quant::pack::PackedCodes;
+use crate::quant::polar::PolarGroup;
+
+pub const PAGE_MAGIC: u32 = 0x5051_5047; // "PQPG"
+pub const PAGE_VERSION: u16 = 1;
+
+/// FNV-1a 64 — the same cheap deterministic hash family the prefix index
+/// chains with; here it guards against torn/corrupt segment records.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------- writing
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_packed(buf: &mut Vec<u8>, p: &PackedCodes) {
+    buf.push(p.bits as u8);
+    put_u32(buf, p.n as u32);
+    buf.extend_from_slice(p.as_bytes());
+}
+
+/// Serialize one page into a self-contained checksummed record.
+pub fn encode_page(page: &Page) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + page.nbytes());
+    put_u32(&mut buf, PAGE_MAGIC);
+    put_u16(&mut buf, PAGE_VERSION);
+    put_u16(&mut buf, 0); // flags, reserved
+    put_u32(&mut buf, page.tokens as u32);
+    put_u32(&mut buf, page.keys.len() as u32);
+    for (g, v) in page.keys.iter().zip(&page.vals) {
+        put_u32(&mut buf, g.rho_z.len() as u32);
+        put_f32s(&mut buf, &g.rho_z);
+        put_f32s(&mut buf, &g.rho_s);
+        put_f32s(&mut buf, &g.theta_z);
+        put_f32s(&mut buf, &g.theta_s);
+        put_packed(&mut buf, &g.rho_codes);
+        put_packed(&mut buf, &g.theta_codes);
+        match v {
+            GroupValues::Fp(x) => {
+                buf.push(0);
+                put_u32(&mut buf, x.len() as u32);
+                put_f32s(&mut buf, x);
+            }
+            GroupValues::Quant(e) => {
+                buf.push(1);
+                put_u32(&mut buf, e.z.len() as u32);
+                put_f32s(&mut buf, &e.z);
+                put_f32s(&mut buf, &e.s);
+                put_packed(&mut buf, &e.codes);
+            }
+        }
+    }
+    let sum = fnv1a(&buf);
+    put_u64(&mut buf, sum);
+    buf
+}
+
+// ------------------------------------------------------------- reading
+
+/// Bounds-checked cursor over an untrusted buffer — shared by the page
+/// codec here and the snapshot-index codec in `super::tier`.
+pub(crate) struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Self {
+        Cur { b, p: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.b.len() - self.p,
+            "tier record truncated: want {n} bytes at {}, have {}",
+            self.p,
+            self.b.len() - self.p
+        );
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn packed(&mut self) -> Result<PackedCodes> {
+        let bits = self.u8()? as u32;
+        ensure!((1..=8).contains(&bits), "packed stream: bad bit width {bits}");
+        let n = self.u32()? as usize;
+        let raw = self.take((n * bits as usize).div_ceil(8))?;
+        PackedCodes::from_raw(bits, n, raw.to_vec()).map_err(anyhow::Error::msg)
+    }
+
+    pub(crate) fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+/// Rebuild the fused (rho << t_bits | theta) plane when it exists —
+/// byte-identical to `polar::encode_group`'s construction.
+fn rebuild_combined(rc: &PackedCodes, tc: &PackedCodes) -> Option<PackedCodes> {
+    if rc.bits + tc.bits <= 8 {
+        let r = rc.unpack();
+        let t = tc.unpack();
+        let mixed: Vec<u8> = r.iter().zip(&t).map(|(&r, &t)| (r << tc.bits) | t).collect();
+        Some(PackedCodes::from_codes(&mixed, rc.bits + tc.bits))
+    } else {
+        None
+    }
+}
+
+/// Parse and verify one record.  Any corruption — bad magic, unknown
+/// version, failed checksum, inconsistent lengths, trailing bytes —
+/// returns `Err`.
+pub fn decode_page(buf: &[u8]) -> Result<Page> {
+    ensure!(buf.len() >= 4 + 2 + 2 + 4 + 4 + 8, "tier record too short ({} bytes)", buf.len());
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    ensure!(fnv1a(body) == want, "tier record checksum mismatch");
+
+    let mut c = Cur::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == PAGE_MAGIC, "tier record bad magic {magic:#x}");
+    let version = c.u16()?;
+    ensure!(version == PAGE_VERSION, "tier record version {version} (reader is v{PAGE_VERSION})");
+    let _flags = c.u16()?;
+    let tokens = c.u32()? as usize;
+    let n_streams = c.u32()? as usize;
+    ensure!(tokens > 0, "tier record: zero-token page");
+    ensure!(n_streams > 0, "tier record: zero streams");
+
+    let mut keys = Vec::with_capacity(n_streams.min(4096));
+    let mut vals = Vec::with_capacity(n_streams.min(4096));
+    for _ in 0..n_streams {
+        let d2 = c.u32()? as usize;
+        let rho_z = c.f32s(d2)?;
+        let rho_s = c.f32s(d2)?;
+        let theta_z = c.f32s(d2)?;
+        let theta_s = c.f32s(d2)?;
+        let rho_codes = c.packed()?;
+        let theta_codes = c.packed()?;
+        ensure!(
+            rho_codes.n == tokens * d2 && theta_codes.n == tokens * d2,
+            "tier record: code count disagrees with geometry"
+        );
+        let combined = rebuild_combined(&rho_codes, &theta_codes);
+        keys.push(PolarGroup {
+            rho_codes,
+            theta_codes,
+            combined,
+            rho_z,
+            rho_s,
+            theta_z,
+            theta_s,
+            tokens,
+        });
+        match c.u8()? {
+            0 => {
+                let len = c.u32()? as usize;
+                ensure!(len % tokens == 0, "tier record: fp value len not token-aligned");
+                vals.push(GroupValues::Fp(c.f32s(len)?));
+            }
+            1 => {
+                let vt = c.u32()? as usize;
+                ensure!(vt == tokens, "tier record: value token count disagrees");
+                let z = c.f32s(vt)?;
+                let s = c.f32s(vt)?;
+                let codes = c.packed()?;
+                let bits = codes.bits;
+                ensure!(codes.n % vt == 0, "tier record: value code count not token-aligned");
+                vals.push(GroupValues::Quant(IntEncoded { codes, z, s, bits }));
+            }
+            t => bail!("tier record: unknown value tag {t}"),
+        }
+    }
+    ensure!(c.done(), "tier record: {} trailing bytes", body.len() - c.p);
+    Ok(Page::new(keys, vals, tokens))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::polar::{self, PolarSpec};
+    use crate::quant::value;
+    use crate::util::rng::Rng;
+
+    fn page(seed: u64, r: u32, t: u32, group: usize, d: usize, n: usize, vb: Option<u32>) -> Page {
+        let spec = PolarSpec::new(r, t, group);
+        let mut rng = Rng::new(seed);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..n {
+            let k = rng.normal_vec(group * d);
+            keys.push(polar::encode_group(&k, d, &spec));
+            let v = rng.normal_vec(group * d);
+            vals.push(match vb {
+                None => GroupValues::Fp(v),
+                Some(b) => GroupValues::Quant(value::encode(&v, d, b)),
+            });
+        }
+        Page::new(keys, vals, group)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        for (seed, vbits) in [(1u64, None), (2, Some(4)), (3, Some(2))] {
+            let p = page(seed, 4, 4, 8, 16, 3, vbits);
+            let enc = encode_page(&p);
+            let dec = decode_page(&enc).expect("decode");
+            // re-encoding the decoded page reproduces the exact bytes —
+            // codes, params, and values are bit-identical
+            assert_eq!(encode_page(&dec), enc);
+            assert_eq!(dec.tokens, p.tokens);
+            assert_eq!(dec.nbytes(), p.nbytes());
+            for (a, b) in p.keys.iter().zip(&dec.keys) {
+                assert_eq!(a.rho_codes, b.rho_codes);
+                assert_eq!(a.theta_codes, b.theta_codes);
+                assert_eq!(a.combined, b.combined, "fused plane rebuilt identically");
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a.rho_z), bits(&b.rho_z));
+                assert_eq!(bits(&a.theta_s), bits(&b.theta_s));
+            }
+        }
+    }
+
+    #[test]
+    fn wide_codes_skip_the_fused_plane() {
+        // r+t > 8: combined is None on encode and stays None after decode
+        let p = page(9, 5, 5, 4, 8, 2, None);
+        assert!(p.keys[0].combined.is_none());
+        let dec = decode_page(&encode_page(&p)).unwrap();
+        assert!(dec.keys[0].combined.is_none());
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicking() {
+        let p = page(4, 3, 3, 4, 8, 2, Some(4));
+        let enc = encode_page(&p);
+        // every single-byte flip breaks the checksum (or the checksum
+        // itself) and must be rejected
+        for i in [0usize, 5, enc.len() / 2, enc.len() - 9, enc.len() - 1] {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x41;
+            assert!(decode_page(&bad).is_err(), "flip at {i} accepted");
+        }
+        // truncation at any point is rejected
+        for cut in [0usize, 7, enc.len() / 3, enc.len() - 1] {
+            assert!(decode_page(&enc[..cut]).is_err(), "truncation to {cut} accepted");
+        }
+        // trailing garbage is rejected
+        let mut long = enc.clone();
+        long.extend_from_slice(&[0u8; 4]);
+        assert!(decode_page(&long).is_err());
+    }
+
+    #[test]
+    fn version_bump_is_rejected() {
+        let p = page(5, 4, 4, 4, 8, 1, None);
+        let mut enc = encode_page(&p);
+        enc[4] = 99; // version field
+        let body_len = enc.len() - 8;
+        let sum = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_page(&enc).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+}

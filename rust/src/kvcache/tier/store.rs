@@ -1,0 +1,215 @@
+//! Append-only segment file store for demoted pages.
+//!
+//! Pages are serialized ([`super::serde`]) and appended to numbered
+//! segment files (`seg-000042.bin`) under the tier directory; a
+//! [`TierRef`] names a record by (segment, offset, length).  Segments are
+//! immutable once written: on restart the writer continues with a FRESH
+//! segment id, so every `TierRef` persisted by an earlier run (the
+//! snapshot's prefix index) stays valid forever — space from orphaned
+//! records (entries displaced, re-registered, or re-snapshotted) is the
+//! cost of never rewriting in place.
+//!
+//! Reads open the segment file per call: promotion runs at prefix-lookup
+//! (admission) rate, not decode rate, and an fd cache would buy nothing
+//! at that frequency.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::serde;
+use crate::kvcache::pool::Page;
+
+/// Name of one on-disk record: which segment, where, how long.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierRef {
+    pub seg: u32,
+    pub off: u64,
+    pub len: u32,
+}
+
+struct SegWriter {
+    seg: u32,
+    off: u64,
+    file: Option<File>,
+}
+
+pub struct SegmentStore {
+    dir: PathBuf,
+    /// start a new segment once the current one reaches this size
+    roll_bytes: u64,
+    w: Mutex<SegWriter>,
+    bytes: AtomicU64,
+}
+
+fn seg_path(dir: &Path, seg: u32) -> PathBuf {
+    dir.join(format!("seg-{seg:06}.bin"))
+}
+
+impl SegmentStore {
+    /// Open (or create) the store at `dir`.  Existing segments are
+    /// scanned for the byte total and the next free segment id; their
+    /// contents are only ever read, never appended to.
+    pub fn open(dir: &Path, roll_bytes: u64) -> Result<Self> {
+        fs::create_dir_all(dir).with_context(|| format!("creating tier dir {}", dir.display()))?;
+        let mut next_seg = 0u32;
+        let mut total = 0u64;
+        for entry in fs::read_dir(dir).context("scanning tier dir")? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(id) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".bin")) else {
+                continue;
+            };
+            let Ok(id) = id.parse::<u32>() else { continue };
+            next_seg = next_seg.max(id + 1);
+            total += entry.metadata()?.len();
+        }
+        Ok(SegmentStore {
+            dir: dir.to_path_buf(),
+            roll_bytes: roll_bytes.max(1),
+            w: Mutex::new(SegWriter { seg: next_seg, off: 0, file: None }),
+            bytes: AtomicU64::new(total),
+        })
+    }
+
+    /// Total bytes across every segment (including records orphaned by
+    /// displacement or re-registration).
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Serialize and append one page; returns where it landed.
+    pub fn put(&self, page: &Page) -> Result<TierRef> {
+        let rec = serde::encode_page(page);
+        let mut w = self.w.lock().unwrap();
+        if w.file.is_none() || (w.off > 0 && w.off + rec.len() as u64 > self.roll_bytes) {
+            if w.file.is_some() {
+                w.seg += 1;
+            }
+            let path = seg_path(&self.dir, w.seg);
+            let file = OpenOptions::new()
+                .create_new(true)
+                .write(true)
+                .open(&path)
+                .with_context(|| format!("creating segment {}", path.display()))?;
+            w.file = Some(file);
+            w.off = 0;
+        }
+        w.file.as_mut().unwrap().write_all(&rec).context("appending to segment")?;
+        let tref = TierRef { seg: w.seg, off: w.off, len: rec.len() as u32 };
+        w.off += rec.len() as u64;
+        self.bytes.fetch_add(rec.len() as u64, Ordering::Relaxed);
+        Ok(tref)
+    }
+
+    /// Read back and decode one record.  Corruption (checksum, lengths,
+    /// short read) comes back as `Err` — the caller degrades to a cache
+    /// miss.
+    pub fn get(&self, r: TierRef) -> Result<Page> {
+        let path = seg_path(&self.dir, r.seg);
+        let mut f =
+            File::open(&path).with_context(|| format!("opening segment {}", path.display()))?;
+        f.seek(SeekFrom::Start(r.off)).context("seeking record")?;
+        let mut buf = vec![0u8; r.len as usize];
+        f.read_exact(&mut buf).context("reading record")?;
+        serde::decode_page(&buf)
+    }
+
+    /// Flush the active segment to stable storage (snapshot path).
+    pub fn sync(&self) -> Result<()> {
+        let w = self.w.lock().unwrap();
+        if let Some(f) = &w.file {
+            f.sync_all().context("syncing segment")?;
+        }
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::stream::GroupValues;
+    use crate::quant::polar::{self, PolarSpec};
+    use crate::util::rng::Rng;
+
+    fn page(seed: u64) -> Page {
+        let spec = PolarSpec::new(4, 4, 4);
+        let d = 8;
+        let mut rng = Rng::new(seed);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..2 {
+            keys.push(polar::encode_group(&rng.normal_vec(spec.group * d), d, &spec));
+            vals.push(GroupValues::Fp(rng.normal_vec(spec.group * d)));
+        }
+        Page::new(keys, vals, spec.group)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("polarquant-store-test-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_rolling() {
+        let dir = tmp("roll");
+        // tiny roll size: every page gets its own segment
+        let store = SegmentStore::open(&dir, 1).unwrap();
+        let refs: Vec<TierRef> = (0..3).map(|i| store.put(&page(i)).unwrap()).collect();
+        assert!(refs[0].seg != refs[2].seg, "tiny roll size must cut segments");
+        assert!(store.bytes_on_disk() > 0);
+        for (i, r) in refs.iter().enumerate() {
+            let got = store.get(*r).unwrap();
+            assert_eq!(serde::encode_page(&got), serde::encode_page(&page(i as u64)));
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_preserves_old_records_and_advances_segments() {
+        let dir = tmp("reopen");
+        let r0 = {
+            let store = SegmentStore::open(&dir, 1 << 20).unwrap();
+            store.put(&page(7)).unwrap()
+        };
+        let store = SegmentStore::open(&dir, 1 << 20).unwrap();
+        assert!(store.bytes_on_disk() > 0, "existing bytes counted on reopen");
+        let r1 = store.put(&page(8)).unwrap();
+        assert!(r1.seg > r0.seg, "reopen must never append into an old segment");
+        // both generations readable; a ref to a missing segment errors
+        assert_eq!(serde::encode_page(&store.get(r0).unwrap()), serde::encode_page(&page(7)));
+        assert_eq!(serde::encode_page(&store.get(r1).unwrap()), serde::encode_page(&page(8)));
+        assert!(store.get(TierRef { seg: 999, off: 0, len: 4 }).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_record_comes_back_as_err() {
+        let dir = tmp("corrupt");
+        let store = SegmentStore::open(&dir, 1 << 20).unwrap();
+        let r = store.put(&page(3)).unwrap();
+        store.sync().unwrap();
+        // flip a byte in the middle of the record
+        let path = seg_path(&dir, r.seg);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = r.off as usize + r.len as usize / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, bytes).unwrap();
+        assert!(store.get(r).is_err(), "corrupt record must be rejected");
+        // a ref past the end of the file errors too (short read)
+        let bogus = TierRef { seg: r.seg, off: r.off + 1, len: r.len };
+        assert!(store.get(bogus).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

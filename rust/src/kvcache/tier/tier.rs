@@ -1,0 +1,280 @@
+//! Tier policy plumbing: the demotion queue + background writer, the
+//! shared tier counters, and the persistent prefix-index snapshot codec.
+//!
+//! The policy itself (WHEN to demote, WHAT a lookup promotes) lives in
+//! [`crate::kvcache::pool::PagePool`] because it is inseparable from the
+//! prefix index's state machine; this module owns everything that runs
+//! OFF the engine thread and everything that touches the snapshot file.
+//!
+//! Demotion protocol: the reclaim path never writes to disk.  It flips a
+//! refcount-zero prefix entry to `Queued`, hands its `Arc<Page>` to a
+//! bounded channel, and moves on — `demote_inflight` discounts queued
+//! pages from the pool's capacity check so the reclaim takes effect
+//! immediately (the RAM itself frees moments later, when the writer
+//! finishes the record and drops the last `Arc`; transient overshoot is
+//! bounded by the queue depth).  If the channel is full the page is
+//! simply evicted instead — demotion is an optimization, never a stall.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+
+use anyhow::{ensure, Context, Result};
+
+use super::serde::{fnv1a, Cur};
+use super::store::{SegmentStore, TierRef};
+use crate::kvcache::pool::{Page, PrefixIndex, Slot};
+
+/// Configuration for attaching a tier to a [`crate::kvcache::PagePool`].
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Directory for segment files + the snapshot index.  One pool per
+    /// directory — engines in a multi-worker server each get a subdir.
+    pub dir: PathBuf,
+    /// Stop demoting (fall back to plain eviction) once the segments
+    /// reach this size; promotion keeps working.
+    pub max_bytes: u64,
+    /// Fingerprint of the model/codec config the pages were cut under; a
+    /// snapshot written under a different tag is ignored at restore.
+    pub config_tag: u64,
+    /// Demotion queue depth — bounds both the writer backlog and the
+    /// transient capacity overshoot while writes land.
+    pub queue_depth: usize,
+}
+
+impl TierConfig {
+    pub fn new(dir: PathBuf, max_bytes: u64, config_tag: u64) -> Self {
+        TierConfig { dir, max_bytes, config_tag, queue_depth: 64 }
+    }
+}
+
+/// Monotone counters + gauges for the tier, readable without the index
+/// lock (the engine mirrors them into its metrics every step).
+#[derive(Debug, Default)]
+pub struct TierCounters {
+    /// prefix lookups that promoted at least one page from disk
+    pub tier_hits: AtomicU64,
+    /// pages written to segments by the background writer / demote_all
+    pub pages_demoted: AtomicU64,
+    /// pages read back and re-adopted on a prefix hit
+    pub pages_promoted: AtomicU64,
+    /// current segment bytes (gauge, mirrored from the store)
+    pub bytes_on_disk: AtomicU64,
+    /// pages queued to the writer whose RAM has not yet been released —
+    /// discounted from the pool's capacity check
+    pub demote_inflight: AtomicUsize,
+    /// demotions skipped because the writer queue was full (the page was
+    /// plainly evicted instead)
+    pub demote_overflow: AtomicU64,
+}
+
+/// One queued demotion: the prefix-index key plus the page to persist.
+pub(crate) struct DemoteJob {
+    pub hash: u64,
+    pub page: Arc<Page>,
+}
+
+/// The tier half that lives inside the prefix index (everything it
+/// guards is index state or reached from index operations).
+pub(crate) struct TierBackend {
+    pub(crate) store: Arc<SegmentStore>,
+    /// `None` once a snapshot has sealed the tier (no further demotion;
+    /// promotion keeps working)
+    pub(crate) tx: Option<SyncSender<DemoteJob>>,
+    pub(crate) writer: Option<JoinHandle<()>>,
+    pub(crate) max_bytes: u64,
+    pub(crate) dir: PathBuf,
+    pub(crate) config_tag: u64,
+}
+
+/// Background writer: drains the demotion queue, appends each page to
+/// the segment store, then flips the index entry `Queued -> Tiered` so
+/// its RAM can go.  Holds only a `Weak` to the index — dropping the last
+/// pool handle closes the channel and the thread exits on its own.
+pub(crate) fn spawn_writer(
+    index: Weak<Mutex<PrefixIndex>>,
+    store: Arc<SegmentStore>,
+    stats: Arc<TierCounters>,
+    rx: Receiver<DemoteJob>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("tier-writer".into())
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                let res = store.put(&job.page);
+                stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
+                let Some(ix) = index.upgrade() else { break };
+                {
+                    let mut idx = ix.lock().unwrap();
+                    if let Some(e) = idx.entries.get_mut(&job.hash) {
+                        // only flip if the entry still queues THIS page;
+                        // if a lookup re-promoted it mid-write, record
+                        // the landed copy so a later demotion is free.
+                        // A displacement-replaced entry is left alone.
+                        let queued_here =
+                            matches!(&e.slot, Slot::Queued(p) if Arc::ptr_eq(p, &job.page));
+                        let repromoted_here = matches!(
+                            &e.slot,
+                            Slot::Resident(p, None) if Arc::ptr_eq(p, &job.page)
+                        );
+                        if queued_here {
+                            match res {
+                                Ok(tref) => {
+                                    e.slot = Slot::Tiered(tref);
+                                    stats.pages_demoted.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(ref err) => {
+                                    // disk refused: keep the page resident
+                                    // and reclaimable the ordinary way
+                                    eprintln!("[tier] demotion write failed: {err:#}");
+                                    e.slot = Slot::Resident(job.page.clone(), None);
+                                }
+                            }
+                        } else if repromoted_here {
+                            if let Ok(tref) = res {
+                                e.slot = Slot::Resident(job.page.clone(), Some(tref));
+                            }
+                        }
+                    }
+                }
+                drop(job.page);
+                stats.demote_inflight.fetch_sub(1, Ordering::Relaxed);
+            }
+        })
+        .expect("spawning tier writer")
+}
+
+// ------------------------------------------------- snapshot index codec
+
+const INDEX_MAGIC: u32 = 0x5051_4958; // "PQIX"
+const INDEX_VERSION: u16 = 1;
+const INDEX_FILE: &str = "prefix-index.bin";
+
+/// One persisted prefix-index entry: enough to re-verify the chain
+/// (`parent` + exact tokens) and to find the page on disk.
+pub(crate) struct SnapshotEntry {
+    pub parent: u64,
+    pub toks: Vec<u32>,
+    pub tref: TierRef,
+}
+
+/// Write the snapshot index atomically (tmp + rename).
+pub(crate) fn write_snapshot(dir: &Path, config_tag: u64, entries: &[SnapshotEntry]) -> Result<()> {
+    let mut buf = Vec::with_capacity(32 + entries.len() * 64);
+    buf.extend_from_slice(&INDEX_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&INDEX_VERSION.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 2]); // reserved
+    buf.extend_from_slice(&config_tag.to_le_bytes());
+    buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        buf.extend_from_slice(&e.parent.to_le_bytes());
+        buf.extend_from_slice(&(e.toks.len() as u32).to_le_bytes());
+        for t in &e.toks {
+            buf.extend_from_slice(&t.to_le_bytes());
+        }
+        buf.extend_from_slice(&e.tref.seg.to_le_bytes());
+        buf.extend_from_slice(&e.tref.off.to_le_bytes());
+        buf.extend_from_slice(&e.tref.len.to_le_bytes());
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp"));
+    std::fs::write(&tmp, &buf).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join(INDEX_FILE)).context("renaming snapshot index")?;
+    Ok(())
+}
+
+/// Read the snapshot index.  `Ok(None)` means no snapshot (cold start);
+/// `Err` means a snapshot exists but is unreadable — the caller warns
+/// and starts cold rather than trusting it.  A `config_tag` mismatch is
+/// an error too: pages cut under a different model/codec must never be
+/// shared into this pool.
+pub(crate) fn read_snapshot(dir: &Path, config_tag: u64) -> Result<Option<Vec<SnapshotEntry>>> {
+    let path = dir.join(INDEX_FILE);
+    let buf = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    ensure!(buf.len() >= 4 + 2 + 2 + 8 + 4 + 8, "snapshot index too short");
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    ensure!(fnv1a(body) == want, "snapshot index checksum mismatch");
+    let mut c = Cur::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == INDEX_MAGIC, "snapshot index bad magic {magic:#x}");
+    let version = c.u16()?;
+    ensure!(version == INDEX_VERSION, "snapshot index version {version}");
+    c.take(2)?; // reserved
+    let tag = c.u64()?;
+    ensure!(
+        tag == config_tag,
+        "snapshot index config tag {tag:#x} != this engine's {config_tag:#x} \
+         (pages from a different model/codec config)"
+    );
+    let n = c.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let parent = c.u64()?;
+        let ntoks = c.u32()? as usize;
+        let toks = c.u32s(ntoks)?;
+        let seg = c.u32()?;
+        let off = c.u64()?;
+        let len = c.u32()?;
+        out.push(SnapshotEntry { parent, toks, tref: TierRef { seg, off, len } });
+    }
+    ensure!(c.done(), "snapshot index trailing bytes");
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("polarquant-tiersnap-test-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn snapshot_index_roundtrip() {
+        let dir = tmp("roundtrip");
+        let entries = vec![
+            SnapshotEntry {
+                parent: 0xdead_beef,
+                toks: vec![1, 2, 3, 4],
+                tref: TierRef { seg: 0, off: 0, len: 100 },
+            },
+            SnapshotEntry {
+                parent: 42,
+                toks: vec![9; 7],
+                tref: TierRef { seg: 3, off: 4096, len: 17 },
+            },
+        ];
+        write_snapshot(&dir, 7777, &entries).unwrap();
+        let back = read_snapshot(&dir, 7777).unwrap().expect("snapshot present");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].parent, 0xdead_beef);
+        assert_eq!(back[0].toks, vec![1, 2, 3, 4]);
+        assert_eq!(back[1].tref, TierRef { seg: 3, off: 4096, len: 17 });
+        // missing file is a clean cold start
+        let empty = tmp("empty");
+        assert!(read_snapshot(&empty, 7777).unwrap().is_none());
+        // a different config tag is rejected
+        assert!(read_snapshot(&dir, 8888).is_err());
+        // corruption is rejected
+        let path = dir.join(INDEX_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(read_snapshot(&dir, 7777).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&empty).unwrap();
+    }
+}

@@ -25,6 +25,7 @@
 //! | [`tensor`] | minimal f32 tensor substrate (matmul, softmax, RoPE, norms) |
 //! | [`quant`] | PolarQuant + every baseline codec, bit-packing, decode LUT |
 //! | [`kvcache`] | paged quantized cache: refcounted group-page pool with prefix sharing + COW forks, residual buffers, eviction, exact O(1) memory accounting, shard-safe sequence handles |
+//! | [`kvcache::tier`] | disk tier under the pool: versioned page serde + checksums, append-only segment store, background demotion / on-demand promotion, persistent prefix-cache snapshots |
 //! | [`model`] | Rust-native twin of the L2 JAX model (config, shared weights, forward) |
 //! | [`runtime`] | PJRT client (feature `pjrt`, stubbed offline), artifact manifest, layout marshalling, shape-bucket executors |
 //! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, engine, metrics |

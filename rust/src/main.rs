@@ -3,23 +3,31 @@
 //! ```text
 //! polarquant info      --artifacts artifacts/
 //! polarquant serve     --artifacts artifacts/ --addr 127.0.0.1:7733 --workers 2 --backend pjrt
-//! polarquant serve     --backend synthetic --workers 2 --decode-workers 4 --prefill-chunk 64
+//! polarquant serve     --backend synthetic --workers 2 --decode-workers 4 --prefill-chunk 64 \
+//!                      --prefix-cache on --tier-dir /var/tmp/pq-tier --snapshot on
 //! polarquant generate  --artifacts artifacts/ --prompt 1,2,3 --max-tokens 16 --backend native
 //! polarquant fidelity  --profile qwen-like --d 128 --tokens 512
+//! polarquant client    --addr 127.0.0.1:7733 --prompt 1,2,3 --max-tokens 8
+//! polarquant client    --addr 127.0.0.1:7733 --admin shutdown
 //! ```
+//!
+//! Every subcommand takes `--help`.  The parser is strict: unknown
+//! flags, missing values, duplicate flags, and stray positional
+//! arguments are errors, not silently swallowed.
 //!
 //! `--decode-workers N` (native/synthetic backends) fans each engine's
 //! decode iteration over a fixed N-thread pool (see `coordinator::pool`).
 //! `--prefill-chunk N` (native/synthetic) enables chunked prefill with
-//! continuous batching: prompts enter the cache N tokens per engine step,
-//! so decode iterations of running sequences never stall behind a long
-//! prompt for more than one chunk's compute (0 = off, the default).
-//! `--cache-pages N` caps the page pool at N group-pages (0 = unbounded):
-//! on exhaustion the engine reclaims refcount-zero cached prefix pages
-//! LRU, then preempts the youngest decoder instead of stalling.
-//! `--prefix-cache on` (requires `--prefill-chunk`) shares quantized
-//! prefix pages across requests, refcounted — repeated system prompts
-//! prefill once.
+//! continuous batching (0 = off).  `--cache-pages N` caps the page pool
+//! at N group-pages; `--prefix-cache on` shares quantized prefix pages
+//! across requests.  `--tier-dir PATH` attaches the disk tier under the
+//! page pool (requires `--prefix-cache on`): cold prefix pages spill to
+//! append-only segments instead of being dropped, promote back on a hit,
+//! and — with `--snapshot on` — the whole prefix index persists across
+//! restarts (written on `{"admin":"shutdown"}`, restored at boot).
+//! `--snapkv-budget N --snapkv-window W` (native/synthetic, whole-prompt
+//! prefill only) compresses each prompt to its N most-attended tokens
+//! before quantization (paper Table 8).
 //!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
@@ -30,65 +38,246 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::coordinator::engine::SnapKvOpts;
+use polarquant::coordinator::{Engine, EngineOpts, Request, TierOpts};
 use polarquant::eval::{eval_codec, Table};
 use polarquant::quant::QuantSpec;
 use polarquant::runtime::Manifest;
-use polarquant::server::serve;
+use polarquant::server::{serve, Client};
+use polarquant::util::json;
 use polarquant::workload::ActivationProfile;
 
-/// Tiny hand-rolled flag parser: `--key value` pairs after the subcommand.
+// ------------------------------------------------------------ CLI spec
+
+struct FlagSpec {
+    name: &'static str,
+    value: &'static str,
+    default: &'static str,
+    help: &'static str,
+}
+
+struct CmdSpec {
+    name: &'static str,
+    about: &'static str,
+    flags: &'static [FlagSpec],
+}
+
+const fn flag(
+    name: &'static str,
+    value: &'static str,
+    default: &'static str,
+    help: &'static str,
+) -> FlagSpec {
+    FlagSpec { name, value, default, help }
+}
+
+const INFO: CmdSpec = CmdSpec {
+    name: "info",
+    about: "print the artifact manifest (model config, weights, AOT graphs)",
+    flags: &[flag("artifacts", "DIR", "artifacts", "artifact directory")],
+};
+
+const SERVE: CmdSpec = CmdSpec {
+    name: "serve",
+    about: "run the JSON-lines TCP server (one engine per worker)",
+    flags: &[
+        flag("artifacts", "DIR", "artifacts", "artifact directory (pjrt/native backends)"),
+        flag("addr", "HOST:PORT", "127.0.0.1:7733", "listen address"),
+        flag("workers", "N", "1", "engine worker threads"),
+        flag("backend", "NAME", "pjrt", "pjrt | native | synthetic"),
+        flag("decode-workers", "N", "1", "decode threads per engine (1 = inline)"),
+        flag("prefill-chunk", "N", "0", "chunked prefill tokens per step (0 = off)"),
+        flag("cache-pages", "N", "0", "page-pool capacity in group-pages (0 = unbounded)"),
+        flag("prefix-cache", "on|off", "off", "share quantized prefix pages across requests"),
+        flag("snapkv-budget", "N", "0", "SnapKV prompt compression budget (0 = off)"),
+        flag("snapkv-window", "W", "8", "SnapKV observation window (with --snapkv-budget)"),
+        flag("tier-dir", "DIR", "", "disk tier directory (requires --prefix-cache on)"),
+        flag("tier-bytes", "N", "1073741824", "stop demoting past this many segment bytes"),
+        flag("snapshot", "on|off", "on", "persist the prefix index at graceful shutdown"),
+    ],
+};
+
+const GENERATE: CmdSpec = CmdSpec {
+    name: "generate",
+    about: "one-shot greedy generation through a local engine",
+    flags: &[
+        flag("artifacts", "DIR", "artifacts", "artifact directory (pjrt/native backends)"),
+        flag("backend", "NAME", "pjrt", "pjrt | native | synthetic"),
+        flag("prompt", "T1,T2,..", "1,2,3", "comma-separated prompt token ids"),
+        flag("max-tokens", "N", "16", "tokens to generate"),
+        flag("decode-workers", "N", "1", "decode threads (1 = inline)"),
+        flag("prefill-chunk", "N", "0", "chunked prefill tokens per step (0 = off)"),
+        flag("cache-pages", "N", "0", "page-pool capacity in group-pages (0 = unbounded)"),
+        flag("prefix-cache", "on|off", "off", "share quantized prefix pages across requests"),
+        flag("snapkv-budget", "N", "0", "SnapKV prompt compression budget (0 = off)"),
+        flag("snapkv-window", "W", "8", "SnapKV observation window (with --snapkv-budget)"),
+        flag("tier-dir", "DIR", "", "disk tier directory (requires --prefix-cache on)"),
+        flag("tier-bytes", "N", "1073741824", "stop demoting past this many segment bytes"),
+        flag("snapshot", "on|off", "on", "persist the prefix index at exit"),
+    ],
+};
+
+const FIDELITY: CmdSpec = CmdSpec {
+    name: "fidelity",
+    about: "key-cache fidelity table across codecs on a synthetic profile",
+    flags: &[
+        flag("profile", "NAME", "llama31-like", "activation profile"),
+        flag("d", "N", "128", "head dimension"),
+        flag("tokens", "N", "512", "tokens per stream"),
+        flag("group", "N", "128", "quantization group size"),
+    ],
+};
+
+const CLIENT: CmdSpec = CmdSpec {
+    name: "client",
+    about: "one-shot JSON-lines client (generation or admin)",
+    flags: &[
+        flag("addr", "HOST:PORT", "127.0.0.1:7733", "server address"),
+        flag("prompt", "T1,T2,..", "1,2,3", "comma-separated prompt token ids"),
+        flag("max-tokens", "N", "16", "tokens to generate"),
+        flag("session", "N", "", "session id for router affinity"),
+        flag("admin", "CMD", "", "admin command instead of generating: metrics | shutdown"),
+    ],
+};
+
+const CMDS: &[&CmdSpec] = &[&INFO, &SERVE, &GENERATE, &FIDELITY, &CLIENT];
+
+// ---------------------------------------------------------- arg parser
+
+/// Strict `--key value` parser over one subcommand's flag spec.
+#[derive(Debug)]
 struct Args {
     flags: HashMap<String, String>,
 }
 
+#[derive(Debug)]
+enum Parsed {
+    Help,
+    Flags(Args),
+}
+
 impl Args {
-    fn parse(argv: &[String]) -> Self {
+    /// Rejects unknown flags, flags without a value (including a
+    /// trailing `--key`), duplicate flags, and stray positionals.
+    /// `--help`/`-h` anywhere wins and short-circuits.
+    fn parse(argv: &[String], spec: &CmdSpec) -> Result<Parsed, String> {
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Ok(Parsed::Help);
+        }
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
-            if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), val);
-                i += 2;
-            } else {
-                i += 1;
+            let tok = &argv[i];
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected argument '{tok}' (flags are --key value)"));
+            };
+            let Some(fs) = spec.flags.iter().find(|f| f.name == key) else {
+                return Err(format!("unknown flag --{key} for '{}'", spec.name));
+            };
+            let Some(val) = argv.get(i + 1) else {
+                return Err(format!("--{key} expects a value ({})", fs.value));
+            };
+            if val.starts_with("--") {
+                return Err(format!("--{key} expects a value ({}), got '{val}'", fs.value));
             }
+            if flags.insert(key.to_string(), val.clone()).is_some() {
+                return Err(format!("--{key} given twice"));
+            }
+            i += 2;
         }
-        Args { flags }
+        Ok(Parsed::Flags(Args { flags }))
     }
 
     fn get(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
-    fn usize(&self, key: &str, default: usize) -> usize {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key}: expected an integer, got '{v}'")),
+        }
     }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    fn on_off(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key, if default { "on" } else { "off" }).as_str() {
+            "on" => Ok(true),
+            "off" => Ok(false),
+            other => bail!("--{key} takes on|off, got '{other}'"),
+        }
+    }
+}
+
+fn usage(spec: &CmdSpec) -> String {
+    let mut s = format!("polarquant {} — {}\n\nflags:\n", spec.name, spec.about);
+    for f in spec.flags {
+        let default = if f.default.is_empty() {
+            String::new()
+        } else {
+            format!(" [default: {}]", f.default)
+        };
+        s.push_str(&format!("  --{:<16} {:<10} {}{}\n", f.name, f.value, f.help, default));
+    }
+    s
+}
+
+fn global_usage() -> String {
+    let mut s = String::from("usage: polarquant <command> [--flags]\n\ncommands:\n");
+    for c in CMDS {
+        s.push_str(&format!("  {:<10} {}\n", c.name, c.about));
+    }
+    s.push_str("\nrun `polarquant <command> --help` for the command's flags\n");
+    s
 }
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
-    let args = Args::parse(&argv[1.min(argv.len())..]);
+    if matches!(cmd, "help" | "--help" | "-h") {
+        print!("{}", global_usage());
+        return;
+    }
+    let Some(spec) = CMDS.iter().find(|c| c.name == cmd) else {
+        eprintln!("unknown command '{cmd}'\n\n{}", global_usage());
+        std::process::exit(2);
+    };
+    let args = match Args::parse(&argv[1..], spec) {
+        Ok(Parsed::Help) => {
+            print!("{}", usage(spec));
+            return;
+        }
+        Ok(Parsed::Flags(a)) => a,
+        Err(msg) => {
+            eprintln!("error: {msg}\n\n{}", usage(spec));
+            std::process::exit(2);
+        }
+    };
     let result = match cmd {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
         "fidelity" => cmd_fidelity(&args),
-        _ => {
-            eprintln!(
-                "usage: polarquant <info|serve|generate|fidelity> [--flags]\n\
-                 see crate docs / README for details"
-            );
-            Ok(())
-        }
+        "client" => cmd_client(&args),
+        _ => unreachable!("spec table covers every command"),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
+
+// ------------------------------------------------------------ commands
 
 fn artifacts(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts", "artifacts"))
@@ -113,23 +302,32 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
-    let dir = artifacts(args);
+/// The validated engine configuration a worker builds from.  Splitting
+/// validation from construction lets `serve` reject a bad flag
+/// combination up front instead of panicking inside a worker thread.
+struct EngineSpec {
+    opts: EngineOpts,
+    backend: String,
+    /// (base dir, max bytes, snapshot) — each worker tiers into its own
+    /// subdirectory of the base
+    tier: Option<(PathBuf, u64, bool)>,
+}
+
+fn engine_spec(args: &Args) -> Result<EngineSpec> {
     let mut opts = EngineOpts::default();
     // native decode threads per engine (--decode-workers N; 1 = inline)
-    opts.decode_workers = args.usize("decode-workers", 1);
+    opts.decode_workers = args.usize("decode-workers", 1)?;
     // chunked prefill tokens per engine step (0 = whole-prompt prefill)
-    opts.prefill_chunk = args.usize("prefill-chunk", 0);
+    opts.prefill_chunk = args.usize("prefill-chunk", 0)?;
     // page-pool capacity in group-pages (0 = unbounded); exhaustion
     // preempts the youngest decoder instead of stalling
-    opts.cache_pages = args.usize("cache-pages", 0);
+    opts.cache_pages = args.usize("cache-pages", 0)?;
     // prefix caching: share quantized prefix pages across requests
-    opts.prefix_cache = match args.get("prefix-cache", "off").as_str() {
-        "on" => true,
-        "off" => false,
-        other => bail!("--prefix-cache takes on|off, got '{other}'"),
-    };
+    opts.prefix_cache = args.on_off("prefix-cache", false)?;
     let backend = args.get("backend", "pjrt");
+    if !matches!(backend.as_str(), "pjrt" | "native" | "synthetic") {
+        bail!("unknown backend '{backend}' (pjrt|native|synthetic)");
+    }
     if opts.prefill_chunk > 0 && backend == "pjrt" {
         bail!("--prefill-chunk requires the native or synthetic backend");
     }
@@ -142,32 +340,97 @@ fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
         // engages (PagePool::adopt itself never fails)
         bail!("--cache-pages requires --prefill-chunk > 0 on the native/synthetic backend");
     }
-    match backend.as_str() {
-        "pjrt" => Engine::pjrt_from_artifacts(&dir, opts),
-        "native" => Engine::native_from_artifacts(&dir, opts),
-        "synthetic" => Ok(Engine::native_synthetic(
+    let snapkv_budget = args.usize("snapkv-budget", 0)?;
+    if snapkv_budget > 0 {
+        if backend == "pjrt" {
+            bail!("--snapkv-budget requires the native or synthetic backend");
+        }
+        if opts.prefill_chunk > 0 {
+            bail!(
+                "--snapkv-budget is incompatible with --prefill-chunk: SnapKV scores \
+                 importance over the WHOLE prompt's attention, so prefill stays inline"
+            );
+        }
+        let window = args.usize("snapkv-window", 8)?;
+        if window == 0 || window > snapkv_budget {
+            bail!("--snapkv-window must be in 1..=budget (got {window}, budget {snapkv_budget})");
+        }
+        opts.snapkv = Some(SnapKvOpts { budget: snapkv_budget, window });
+    }
+    let tier_dir = args.get("tier-dir", "");
+    let tier = if tier_dir.is_empty() {
+        None
+    } else {
+        if !opts.prefix_cache {
+            bail!("--tier-dir requires --prefix-cache on (the tier stores prefix-index pages)");
+        }
+        Some((
+            PathBuf::from(&tier_dir),
+            args.u64("tier-bytes", 1 << 30)?,
+            args.on_off("snapshot", true)?,
+        ))
+    };
+    Ok(EngineSpec { opts, backend, tier })
+}
+
+fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
+    let spec = engine_spec(args)?;
+    let dir = artifacts(args);
+    let mut engine = match spec.backend.as_str() {
+        "pjrt" => Engine::pjrt_from_artifacts(&dir, spec.opts)?,
+        "native" => Engine::native_from_artifacts(&dir, spec.opts)?,
+        _ => Engine::native_synthetic(
             polarquant::model::ModelConfig::tiny(),
             worker as u64,
             6.0,
-            opts,
-        )),
-        other => bail!("unknown backend '{other}' (pjrt|native|synthetic)"),
+            spec.opts,
+        ),
+    };
+    if let Some((base, max_bytes, snapshot)) = spec.tier {
+        // one pool per directory: each worker engine tiers into its own
+        // subdir so segment files and snapshots never interleave
+        let topts = TierOpts {
+            dir: base.join(format!("worker-{worker}")),
+            max_bytes,
+            snapshot,
+        };
+        let restored = engine.attach_tier(&topts)?;
+        eprintln!(
+            "[engine {worker}] tier attached at {} ({restored} prefix entries restored, \
+             {} bytes on disk)",
+            topts.dir.display(),
+            engine.page_pool().bytes_on_disk(),
+        );
     }
+    Ok(engine)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7733");
-    let workers = args.usize("workers", 1);
+    let workers = args.usize("workers", 1)?;
+    // validate the flag combination up front (cheap — no model is built),
+    // and pre-flight the tier directory: an unwritable path must fail the
+    // command here, not panic a worker thread after "serving on ..."
+    let spec = engine_spec(args)?;
+    if let Some((base, _, _)) = &spec.tier {
+        std::fs::create_dir_all(base)
+            .with_context(|| format!("--tier-dir {} is not writable", base.display()))?;
+    }
     let flags: HashMap<String, String> = args.flags.clone();
     let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
         let args = Args { flags: flags.clone() };
         build_engine(&args, w).expect("engine construction failed")
     });
     let handle = serve(factory, &addr, workers)?;
-    println!("serving on {} with {} workers (ctrl-c to stop)", handle.addr, workers);
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    println!(
+        "serving on {} with {} workers (send {{\"admin\":\"shutdown\"}} to stop gracefully)",
+        handle.addr, workers
+    );
+    // parks until a client requests shutdown; workers drain and snapshot
+    // their tiers on the way out
+    handle.wait();
+    println!("server stopped");
+    Ok(())
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -177,7 +440,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         .filter(|s| !s.is_empty())
         .map(|s| s.trim().parse().context("bad token id"))
         .collect::<Result<_>>()?;
-    let max_tokens = args.usize("max-tokens", 16);
+    let max_tokens = args.usize("max-tokens", 16)?;
     let mut engine = build_engine(args, 0)?;
     engine.submit(Request::greedy(1, prompt, max_tokens)).ok();
     let done = engine.run_to_completion()?;
@@ -190,6 +453,48 @@ fn cmd_generate(args: &Args) -> Result<()> {
         c.tokens.len()
     );
     println!("{}", engine.metrics.summary());
+    if let Some((entries, bytes)) = engine.snapshot_tier()? {
+        println!("tier snapshot written ({entries} prefix entries, {bytes} bytes on disk)");
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7733");
+    let mut client = Client::connect(&addr)?;
+    match args.get("admin", "").as_str() {
+        "" => {
+            let prompt: Vec<u32> = args
+                .get("prompt", "1,2,3")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().context("bad token id"))
+                .collect::<Result<_>>()?;
+            let max_tokens = args.usize("max-tokens", 16)?;
+            let session = match args.get("session", "").as_str() {
+                "" => None,
+                s => Some(s.parse::<u64>().context("--session: expected an integer")?),
+            };
+            let r = client.generate(&prompt, max_tokens, session)?;
+            if r.rejected {
+                bail!("request rejected: {}", r.reason.as_deref().unwrap_or("unknown"));
+            }
+            println!(
+                "{{\"id\": {}, \"worker\": {}, \"tokens\": {:?}, \"ttft_ms\": {:.2}, \
+                 \"total_ms\": {:.2}, \"truncated\": {}}}",
+                r.id, r.worker, r.tokens, r.ttft_ms, r.total_ms, r.truncated
+            );
+        }
+        "metrics" => {
+            let v = client.metrics()?;
+            println!("{}", json::write(&v));
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("shutdown requested");
+        }
+        other => bail!("unknown --admin command '{other}' (metrics | shutdown)"),
+    }
     Ok(())
 }
 
@@ -197,9 +502,9 @@ fn cmd_fidelity(args: &Args) -> Result<()> {
     let profile_name = args.get("profile", "llama31-like");
     let profile = ActivationProfile::by_name(&profile_name)
         .with_context(|| format!("unknown profile '{profile_name}'"))?;
-    let d = args.usize("d", 128);
-    let tokens = args.usize("tokens", 512);
-    let group = args.usize("group", 128);
+    let d = args.usize("d", 128)?;
+    let tokens = args.usize("tokens", 512)?;
+    let group = args.usize("group", 128)?;
     let mut t = Table::new(
         &format!("Key-cache fidelity — {profile_name} (d={d}, T={tokens})"),
         &["method", "bits", "key MSE", "attn KL", "top8"],
@@ -226,4 +531,106 @@ fn cmd_fidelity(args: &Args) -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parse_ok(parts: &[&str], spec: &CmdSpec) -> Args {
+        match Args::parse(&sv(parts), spec) {
+            Ok(Parsed::Flags(a)) => a,
+            Ok(Parsed::Help) => panic!("unexpected --help"),
+            Err(e) => panic!("unexpected parse error: {e}"),
+        }
+    }
+
+    #[test]
+    fn parses_known_flags() {
+        let a = parse_ok(&["--workers", "2", "--backend", "synthetic"], &SERVE);
+        assert_eq!(a.usize("workers", 1).unwrap(), 2);
+        assert_eq!(a.get("backend", "pjrt"), "synthetic");
+        // defaults fill in for everything not given
+        assert_eq!(a.usize("prefill-chunk", 0).unwrap(), 0);
+        assert!(!a.on_off("prefix-cache", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        let err = Args::parse(&sv(&["--wrokers", "2"]), &SERVE).unwrap_err();
+        assert!(err.contains("unknown flag --wrokers"), "{err}");
+        // a flag valid for another subcommand is still unknown here
+        let err = Args::parse(&sv(&["--profile", "x"]), &SERVE).unwrap_err();
+        assert!(err.contains("unknown flag --profile"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_flag_without_value() {
+        let err = Args::parse(&sv(&["--workers"]), &SERVE).unwrap_err();
+        assert!(err.contains("--workers expects a value"), "{err}");
+        // ...and a flag whose "value" is the next flag
+        let err = Args::parse(&sv(&["--prefix-cache", "--workers", "2"]), &SERVE).unwrap_err();
+        assert!(err.contains("--prefix-cache expects a value"), "{err}");
+    }
+
+    #[test]
+    fn rejects_positionals_and_duplicates() {
+        let err = Args::parse(&sv(&["oops"]), &SERVE).unwrap_err();
+        assert!(err.contains("unexpected argument 'oops'"), "{err}");
+        let err = Args::parse(&sv(&["--workers", "1", "--workers", "2"]), &SERVE).unwrap_err();
+        assert!(err.contains("given twice"), "{err}");
+    }
+
+    #[test]
+    fn help_short_circuits_anywhere() {
+        assert!(matches!(Args::parse(&sv(&["--help"]), &SERVE), Ok(Parsed::Help)));
+        assert!(matches!(
+            Args::parse(&sv(&["--workers", "2", "-h"]), &SERVE),
+            Ok(Parsed::Help)
+        ));
+        // help text lists every flag with its default
+        let u = usage(&SERVE);
+        for f in SERVE.flags {
+            assert!(u.contains(&format!("--{}", f.name)), "usage missing --{}: {u}", f.name);
+        }
+        assert!(global_usage().contains("client"));
+    }
+
+    #[test]
+    fn typed_getters_reject_garbage() {
+        let a = parse_ok(&["--workers", "two"], &SERVE);
+        assert!(a.usize("workers", 1).is_err());
+        let a = parse_ok(&["--prefix-cache", "maybe"], &SERVE);
+        assert!(a.on_off("prefix-cache", false).is_err());
+    }
+
+    #[test]
+    fn engine_spec_validates_flag_combinations() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // snapkv needs inline prefill
+        let parts = ["--backend", "synthetic", "--snapkv-budget", "16", "--prefill-chunk", "8"];
+        let err = spec_of(&parts).err().expect("snapkv + chunking must be rejected");
+        assert!(format!("{err:#}").contains("incompatible"), "{err:#}");
+        // window must fit the budget
+        let parts = ["--backend", "synthetic", "--snapkv-budget", "4", "--snapkv-window", "9"];
+        assert!(spec_of(&parts).is_err());
+        // tier needs prefix caching
+        let parts = ["--backend", "synthetic", "--tier-dir", "/tmp/x"];
+        let err = spec_of(&parts).err().expect("tier without prefix cache must be rejected");
+        assert!(format!("{err:#}").contains("--prefix-cache"), "{err:#}");
+        // valid combinations pass without building a model
+        let parts = ["--backend", "synthetic", "--snapkv-budget", "16"];
+        assert!(spec_of(&parts).is_ok());
+        let parts = [
+            "--backend", "synthetic", "--prefill-chunk", "16", "--prefix-cache", "on",
+            "--tier-dir", "/tmp/x",
+        ];
+        let spec = spec_of(&parts).unwrap();
+        assert!(spec.tier.is_some());
+        assert!(spec.opts.prefix_cache);
+    }
 }

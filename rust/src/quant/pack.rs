@@ -69,6 +69,30 @@ impl PackedCodes {
     pub fn nbytes(&self) -> usize {
         self.data.len()
     }
+
+    /// The raw little-endian bitstream — the at-rest form the tiered page
+    /// store serializes verbatim (`kvcache::tier::serde`).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Rebuild a packed buffer from its serialized parts.  The byte
+    /// length must be exactly what `n` codes of `bits` bits occupy —
+    /// anything else means a corrupt or truncated record, and the caller
+    /// (the tier codec) must treat it as such, never panic.
+    pub fn from_raw(bits: u32, n: usize, data: Vec<u8>) -> Result<Self, String> {
+        if !(1..=8).contains(&bits) {
+            return Err(format!("packed codes: bits {bits} out of range 1..=8"));
+        }
+        let want = (n * bits as usize).div_ceil(8);
+        if data.len() != want {
+            return Err(format!(
+                "packed codes: {} bytes for {n} codes of {bits} bits (want {want})",
+                data.len()
+            ));
+        }
+        Ok(PackedCodes { bits, n, data })
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +123,19 @@ mod tests {
         let codes = vec![7u8; 100];
         let p = PackedCodes::from_codes(&codes, 3);
         assert_eq!(p.nbytes(), (100 * 3 + 7) / 8);
+    }
+
+    #[test]
+    fn raw_bytes_roundtrip_and_length_validation() {
+        let codes: Vec<u8> = (0..37).map(|i| (i % 8) as u8).collect();
+        let p = PackedCodes::from_codes(&codes, 3);
+        let rebuilt = PackedCodes::from_raw(3, p.n, p.as_bytes().to_vec()).unwrap();
+        assert_eq!(rebuilt, p);
+        assert_eq!(rebuilt.unpack(), codes);
+        // wrong length / wrong bit width are rejected, not mis-decoded
+        assert!(PackedCodes::from_raw(3, p.n + 1, p.as_bytes().to_vec()).is_err());
+        assert!(PackedCodes::from_raw(0, p.n, p.as_bytes().to_vec()).is_err());
+        assert!(PackedCodes::from_raw(9, p.n, p.as_bytes().to_vec()).is_err());
     }
 
     #[test]

@@ -74,4 +74,27 @@ impl Client {
             reason: v.get("reason").and_then(|r| r.as_str()).map(|s| s.to_string()),
         })
     }
+
+    fn admin(&mut self, cmd: &str) -> Result<Value> {
+        writeln!(self.stream, "{}", json::write(&obj(vec![("admin", json::s(cmd))])))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = json::parse(line.trim()).map_err(anyhow::Error::msg)?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {:?}", err.as_str());
+        }
+        Ok(v)
+    }
+
+    /// Fleet counters: per-worker objects under `"workers"` plus summed
+    /// totals (`tier_hits`, `pages_demoted`, `prefix_hits`, ...) at the
+    /// top level.
+    pub fn metrics(&mut self) -> Result<Value> {
+        self.admin("metrics")
+    }
+
+    /// Ask the server to drain, snapshot its tiers, and exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.admin("shutdown").map(|_| ())
+    }
 }

@@ -14,6 +14,19 @@
 //! reply: `"rejected": true` plus a `"reason"` string
 //! (`queue_full` | `memory_pressure` | `empty_prompt`) — distinguishable
 //! from `"truncated"`, which means the request RAN but was cut short.
+//!
+//! Admin requests share the same JSON-lines framing:
+//!
+//! ```text
+//! -> {"admin": "metrics"}    # per-worker counters + fleet totals
+//! -> {"admin": "shutdown"}   # drain, snapshot tiers, exit the server
+//! ```
+//!
+//! `shutdown` is how the tiered page store's prefix-cache snapshot gets
+//! written: each worker finishes its in-flight requests, persists its
+//! tier (when `--tier-dir`/`--snapshot on` are set), and exits; the
+//! `serve` process then returns.  A SIGKILL instead of admin shutdown
+//! skips the snapshot — the next boot simply starts cold.
 
 pub mod client;
 pub mod worker;

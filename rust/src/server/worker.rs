@@ -25,9 +25,11 @@ use crate::util::json::{self, num, obj, Value};
 /// workers by design — each owns its model and cache).
 pub type EngineFactory = Arc<dyn Fn(usize) -> Engine + Send + Sync>;
 
-struct Job {
-    req: Request,
-    reply: Sender<Completion>,
+enum Job {
+    Run { req: Request, reply: Sender<Completion> },
+    /// Admin introspection: the worker answers with its counters
+    /// immediately, even mid-batch.
+    Metrics { reply: Sender<Value> },
 }
 
 /// Submit a job to the engine; a rejected request gets an explicit
@@ -35,16 +37,49 @@ struct Job {
 /// dropped `Sender` (which left `handle_conn` waiting on a channel that
 /// could never deliver).  EVERY path that submits must go through here.
 fn submit_job(engine: &mut Engine, job: Job, replies: &mut HashMap<u64, Sender<Completion>>) {
-    let id = job.req.id;
-    let prompt_len = job.req.prompt.len();
-    match engine.submit(job.req) {
-        Ok(()) => {
-            replies.insert(id, job.reply);
+    match job {
+        Job::Run { req, reply } => {
+            let id = req.id;
+            let prompt_len = req.prompt.len();
+            match engine.submit(req) {
+                Ok(()) => {
+                    replies.insert(id, reply);
+                }
+                Err(why) => {
+                    let _ = reply.send(Completion::rejected(id, prompt_len, why));
+                }
+            }
         }
-        Err(why) => {
-            let _ = job.reply.send(Completion::rejected(id, prompt_len, why));
+        Job::Metrics { reply } => {
+            let _ = reply.send(metrics_value(engine));
         }
     }
+}
+
+/// One worker's counters as a JSON object.  Tier values come straight
+/// from the pool (not the per-step metric gauges) so an admin query after
+/// the last step still sees the final promotion/demotion counts.
+fn metrics_value(engine: &Engine) -> Value {
+    let m = &engine.metrics;
+    let pool = engine.page_pool();
+    obj(vec![
+        ("requests_submitted", num(m.requests_submitted as f64)),
+        ("requests_finished", num(m.requests_finished as f64)),
+        ("requests_rejected", num(m.requests_rejected as f64)),
+        ("prefill_tokens", num(m.prefill_tokens as f64)),
+        ("decode_tokens", num(m.decode_tokens as f64)),
+        ("prefix_hits", num(m.prefix_hits as f64)),
+        ("prefix_tokens_reused", num(m.prefix_tokens_reused as f64)),
+        ("preemptions", num(m.preemptions as f64)),
+        ("pages_in_use", num(pool.pages_in_use() as f64)),
+        ("pages_evicted", num(pool.pages_evicted() as f64)),
+        ("tier_hits", num(pool.tier_hits() as f64)),
+        ("pages_demoted", num(pool.pages_demoted() as f64)),
+        ("pages_promoted", num(pool.pages_promoted() as f64)),
+        ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
+        ("snapkv_tokens_dropped", num(m.snapkv_tokens_dropped as f64)),
+        ("summary", json::s(&m.summary())),
+    ])
 }
 
 fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
@@ -110,6 +145,22 @@ impl ServerHandle {
             let _ = w.join();
         }
     }
+
+    /// Block until the server shuts down on its own — i.e. until a
+    /// client sends `{"admin": "shutdown"}` and every worker drains,
+    /// snapshots its tier, and exits.  The `serve` subcommand parks on
+    /// this instead of sleeping forever, so graceful shutdown (and the
+    /// tier snapshot it triggers) is reachable over the wire.
+    pub fn wait(mut self) {
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+    }
 }
 
 /// Start a server on `addr` ("127.0.0.1:0" for an ephemeral port) with
@@ -150,7 +201,26 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             if engine.prefix_caching() {
                 eprintln!("[server] engine {w}: prefix caching ON (refcounted page sharing)");
             }
-            worker_loop(&mut engine, rx, &sd)
+            if let Some(t) = engine.tier() {
+                eprintln!(
+                    "[server] engine {w}: tiered page store at {} ({} prefix entries \
+                     restored, {} bytes on disk, snapshot {})",
+                    t.dir.display(),
+                    engine.tier_restored(),
+                    engine.page_pool().bytes_on_disk(),
+                    if t.snapshot { "on" } else { "off" },
+                );
+            }
+            worker_loop(&mut engine, rx, &sd);
+            // graceful exit: persist the prefix cache for the next boot
+            match engine.snapshot_tier() {
+                Ok(Some((entries, bytes))) => eprintln!(
+                    "[server] engine {w}: tier snapshot written ({entries} prefix entries, \
+                     {bytes} bytes on disk)"
+                ),
+                Ok(None) => {}
+                Err(e) => eprintln!("[server] engine {w}: tier snapshot failed: {e:#}"),
+            }
         }));
     }
     let router = Arc::new(Mutex::new(Router::new(n_workers)));
@@ -166,8 +236,9 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             let senders = senders.clone();
             let router = router.clone();
             let next_id = next_id.clone();
+            let sd = sd.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &senders, &router, &next_id);
+                let _ = handle_conn(stream, &senders, &router, &next_id, &sd);
             });
         }
     });
@@ -180,11 +251,67 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
     })
 }
 
+/// Answer an `{"admin": ...}` request.  `metrics` fans out to every
+/// worker and returns both the per-worker objects and fleet totals for
+/// the counters monitoring cares about; `shutdown` flips the flag that
+/// makes each worker exit (and snapshot its tier) once idle.
+fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Value {
+    match cmd {
+        "shutdown" => {
+            shutdown.store(true, Ordering::Relaxed);
+            obj(vec![("admin", json::s("shutdown")), ("ok", Value::Bool(true))])
+        }
+        "metrics" => {
+            let mut per_worker = Vec::new();
+            for s in senders {
+                let (tx, rx) = channel();
+                if s.send(Job::Metrics { reply: tx }).is_ok() {
+                    if let Ok(v) = rx.recv_timeout(Duration::from_secs(10)) {
+                        per_worker.push(v);
+                    }
+                }
+            }
+            const TOTALS: &[&str] = &[
+                "requests_finished",
+                "requests_rejected",
+                "prefill_tokens",
+                "decode_tokens",
+                "prefix_hits",
+                "prefix_tokens_reused",
+                "preemptions",
+                "pages_in_use",
+                "pages_evicted",
+                "tier_hits",
+                "pages_demoted",
+                "pages_promoted",
+                "bytes_on_disk",
+                "snapkv_tokens_dropped",
+            ];
+            let mut fields: Vec<(&str, Value)> =
+                vec![("admin", json::s("metrics")), ("ok", Value::Bool(true))];
+            for &key in TOTALS {
+                let total: f64 = per_worker
+                    .iter()
+                    .map(|w| w.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0))
+                    .sum();
+                fields.push((key, num(total)));
+            }
+            fields.push(("workers", Value::Arr(per_worker)));
+            obj(fields)
+        }
+        other => obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", json::s(&format!("unknown admin command '{other}'"))),
+        ]),
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     senders: &[Sender<Job>],
     router: &Arc<Mutex<Router>>,
     next_id: &Arc<Mutex<u64>>,
+    shutdown: &AtomicBool,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
@@ -205,6 +332,11 @@ fn handle_conn(
                 continue;
             }
         };
+        if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
+            let reply = handle_admin(cmd, senders, shutdown);
+            writeln!(stream, "{}", json::write(&reply))?;
+            continue;
+        }
         let prompt: Vec<u32> = v
             .get("prompt")
             .and_then(|p| p.as_arr())
@@ -223,7 +355,7 @@ fn handle_conn(
         req.session = session;
         let (tx, rx) = channel();
         senders[worker]
-            .send(Job { req, reply: tx })
+            .send(Job::Run { req, reply: tx })
             .map_err(|_| anyhow::anyhow!("worker {} gone", worker))?;
         let completion = rx.recv().context("worker dropped reply")?;
         router.lock().unwrap().complete(worker);

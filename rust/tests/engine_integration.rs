@@ -287,6 +287,32 @@ fn snapkv_native_engine_end_to_end() {
     eng.submit(req).unwrap();
     let done = eng.run_to_completion().unwrap();
     assert_eq!(done[0].tokens.len(), 6);
+    // 48-token prompt compressed to the 12-token budget
+    assert_eq!(eng.metrics.snapkv_tokens_dropped, 48 - 12);
+    assert!(eng.metrics.summary().contains("snapkv dropped 36 tok"));
+}
+
+#[test]
+fn snapkv_over_the_wire_reports_tokens_dropped() {
+    // The serve-path wiring for --snapkv-budget/--snapkv-window: a
+    // compressed prompt decodes normally and the admin metrics carry the
+    // dropped-token count.
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.snapkv = Some(SnapKvOpts { budget: 16, window: 4 });
+        Engine::native_synthetic(cfg.clone(), 700 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..40).map(|i| (i * 3 % 64) as u32).collect();
+    let reply = client.generate(&prompt, 5, None).unwrap();
+    assert!(!reply.rejected && !reply.truncated);
+    assert_eq!(reply.tokens.len(), 5, "compressed prompt must still decode");
+    let m = client.metrics().unwrap();
+    let dropped = m.get("snapkv_tokens_dropped").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(dropped, (40 - 16) as f64, "40-token prompt at budget 16");
+    handle.stop();
 }
 
 #[test]

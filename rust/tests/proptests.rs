@@ -4,8 +4,11 @@
 
 use polarquant::coordinator::router::Router;
 use polarquant::kvcache::eviction::snapkv_select;
-use polarquant::kvcache::{CacheConfig, SequenceCache};
+use polarquant::kvcache::stream::GroupValues;
+use polarquant::kvcache::tier::serde::{decode_page, encode_page};
+use polarquant::kvcache::{CacheConfig, Page, SequenceCache};
 use polarquant::quant::pack::PackedCodes;
+use polarquant::quant::value;
 use polarquant::quant::polar::{self, PolarSpec};
 use polarquant::quant::{dequantize, qparams, quantize, QkLut, QuantSpec, SeqScoreJob};
 use polarquant::tensor::ops::dot;
@@ -114,6 +117,55 @@ fn prop_scores_batch_matches_per_sequence() {
             assert_eq!(batched[s], single, "seed {seed} seq {s}");
             assert_eq!(batched[s][0].len(), encs[s].tokens(), "seed {seed} seq {s}");
         }
+    }
+}
+
+#[test]
+fn prop_page_serde_roundtrip_is_bit_exact() {
+    // Random specs and group shapes: encode -> decode -> re-encode must
+    // reproduce the exact bytes (codes, param bit patterns, values), and
+    // any single-byte corruption must be rejected, never panic or
+    // mis-decode.
+    for seed in 0..80 {
+        let mut rng = Rng::new(10_000 + seed);
+        let r_bits = rng.range(1, 9) as u32;
+        let t_bits = rng.range(1, 9) as u32;
+        let group = [2usize, 4, 8, 16][rng.below(4)];
+        let d = 2 * rng.range(1, 17);
+        let streams = rng.range(1, 5);
+        let value_bits = if rng.chance(0.5) { Some(rng.range(1, 9) as u32) } else { None };
+        let spec = PolarSpec::new(r_bits, t_bits, group);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..streams {
+            keys.push(polar::encode_group(&rng.normal_vec(group * d), d, &spec));
+            let v = rng.normal_vec(group * d);
+            vals.push(match value_bits {
+                None => GroupValues::Fp(v),
+                Some(b) => GroupValues::Quant(value::encode(&v, d, b)),
+            });
+        }
+        let page = Page::new(keys, vals, group);
+        let enc = encode_page(&page);
+        let dec = decode_page(&enc)
+            .unwrap_or_else(|e| panic!("seed {seed} r{r_bits} t{t_bits} g{group} d{d}: {e:#}"));
+        assert_eq!(encode_page(&dec), enc, "seed {seed}: roundtrip not bit-exact");
+        assert_eq!(dec.tokens, page.tokens, "seed {seed}");
+        assert_eq!(dec.nbytes(), page.nbytes(), "seed {seed}");
+        // the fused plane is rebuilt exactly when it should exist
+        assert_eq!(
+            dec.keys[0].combined.is_some(),
+            r_bits + t_bits <= 8,
+            "seed {seed}: combined plane presence"
+        );
+        // corrupt one random byte: the checksum must catch it
+        let mut bad = enc.clone();
+        let i = rng.below(bad.len());
+        bad[i] ^= (1 + rng.below(255)) as u8;
+        assert!(decode_page(&bad).is_err(), "seed {seed}: flip at {i}/{} accepted", bad.len());
+        // truncation at a random point is rejected too
+        let cut = rng.below(enc.len());
+        assert!(decode_page(&enc[..cut]).is_err(), "seed {seed}: truncation to {cut} accepted");
     }
 }
 

@@ -1,0 +1,195 @@
+//! Tiered page store, end to end: greedy decode must be bit-identical
+//! with tiering on vs off — including after a demote→promote cycle and
+//! after a snapshot/restore across a server restart — and the tier
+//! counters must actually move.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use polarquant::coordinator::{Engine, EngineOpts, Request, TierOpts};
+use polarquant::model::ModelConfig;
+use polarquant::server::{serve, Client};
+
+fn toy_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.vocab = 64;
+    cfg.d_model = 32;
+    cfg.n_heads = 4;
+    cfg.n_kv_heads = 2;
+    cfg.head_dim = 16;
+    cfg.ffn = 48;
+    cfg.group = 8;
+    cfg.resid = 16;
+    cfg
+}
+
+fn prefix_opts() -> EngineOpts {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 8; // == group: aligned chunks
+    opts.prefix_cache = true;
+    opts
+}
+
+fn tier_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("polarquant-tier-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn tier_opts(dir: &PathBuf, snapshot: bool) -> TierOpts {
+    TierOpts { dir: dir.clone(), max_bytes: u64::MAX, snapshot }
+}
+
+/// Shared 24-token system prefix (3 pages at group 8) + distinct tails.
+fn prompts() -> Vec<Vec<u32>> {
+    let system: Vec<u32> = (0..24).map(|i| (i * 5 % 64) as u32).collect();
+    (0..4u32)
+        .map(|t| system.iter().cloned().chain([t + 1, t + 2]).collect())
+        .collect()
+}
+
+#[test]
+fn greedy_decode_bit_identical_across_demote_promote_cycle() {
+    // Reference: prefix caching on, NO tier — requests served one after
+    // another so later prompts hit the prefix cache.
+    let serve_all = |eng: &mut Engine| -> Vec<Vec<u32>> {
+        let mut outs = Vec::new();
+        for (i, p) in prompts().into_iter().enumerate() {
+            eng.submit(Request::greedy(i as u64, p, 8)).unwrap();
+            let done = eng.run_to_completion().unwrap();
+            outs.push(done[0].tokens.clone());
+        }
+        outs
+    };
+    let mut cold = Engine::native_synthetic(toy_cfg(), 7, 4.0, prefix_opts());
+    let want = serve_all(&mut cold);
+    assert_eq!(cold.metrics.tier_hits, 0);
+
+    // Tiered engine: serve the first prompt, force every cached page to
+    // disk, then serve the rest — they must promote from disk and still
+    // produce exactly the same rollouts.
+    let dir = tier_dir("cycle");
+    let mut eng = Engine::native_synthetic(toy_cfg(), 7, 4.0, prefix_opts());
+    assert_eq!(eng.attach_tier(&tier_opts(&dir, false)).unwrap(), 0);
+    let mut outs = Vec::new();
+    for (i, p) in prompts().into_iter().enumerate() {
+        eng.submit(Request::greedy(i as u64, p, 8)).unwrap();
+        let done = eng.run_to_completion().unwrap();
+        outs.push(done[0].tokens.clone());
+        // after every request, push the whole prefix cache to disk so the
+        // next sharer MUST promote
+        let demoted = eng.page_pool().demote_all();
+        if i == 0 {
+            assert!(demoted > 0, "first prompt's pages must be demotable");
+        }
+    }
+    assert_eq!(outs, want, "demote→promote must not change a single token");
+    assert!(eng.metrics.tier_hits >= 2, "later sharers promote (hits {})", eng.metrics.tier_hits);
+    assert!(eng.metrics.pages_promoted >= 3, "3-page prefix promoted");
+    assert!(eng.metrics.pages_demoted > 0);
+    assert!(eng.metrics.bytes_on_disk > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn snapshot_then_restore_warm_starts_a_fresh_engine() {
+    let dir = tier_dir("warm");
+    let all = prompts();
+    // engine 1: serve the prefix, snapshot, shut down
+    {
+        let mut eng = Engine::native_synthetic(toy_cfg(), 9, 4.0, prefix_opts());
+        eng.attach_tier(&tier_opts(&dir, true)).unwrap();
+        eng.submit(Request::greedy(1, all[0].clone(), 8)).unwrap();
+        eng.run_to_completion().unwrap();
+        let (entries, bytes) = eng.snapshot_tier().unwrap().expect("snapshot configured");
+        assert!(entries >= 3, "3-page prefix persisted (got {entries})");
+        assert!(bytes > 0);
+    }
+    // reference for the second prompt: a cold engine with no tier
+    let want = {
+        let mut eng = Engine::native_synthetic(toy_cfg(), 9, 4.0, prefix_opts());
+        eng.submit(Request::greedy(2, all[1].clone(), 8)).unwrap();
+        eng.run_to_completion().unwrap()[0].tokens.clone()
+    };
+    // engine 2: fresh process image, same dir — restores the index and
+    // serves the sharing prompt off promoted pages
+    let mut eng = Engine::native_synthetic(toy_cfg(), 9, 4.0, prefix_opts());
+    let restored = eng.attach_tier(&tier_opts(&dir, true)).unwrap();
+    assert!(restored >= 3, "snapshot entries restored (got {restored})");
+    let before = eng.metrics.prefill_tokens;
+    eng.submit(Request::greedy(2, all[1].clone(), 8)).unwrap();
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done[0].tokens, want, "warm-started rollout must match cold");
+    assert!(eng.metrics.tier_hits >= 1, "restored entries promote on first hit");
+    assert!(eng.metrics.pages_promoted >= 3);
+    assert!(
+        eng.metrics.prefill_tokens - before < all[1].len() as u64,
+        "promoted prefix skips prefill work"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn a_mismatched_model_config_refuses_the_snapshot() {
+    let dir = tier_dir("tagged");
+    {
+        let mut eng = Engine::native_synthetic(toy_cfg(), 3, 4.0, prefix_opts());
+        eng.attach_tier(&tier_opts(&dir, true)).unwrap();
+        eng.submit(Request::greedy(1, prompts()[0].clone(), 4)).unwrap();
+        eng.run_to_completion().unwrap();
+        eng.snapshot_tier().unwrap().unwrap();
+    }
+    // a different geometry must start cold, not adopt foreign pages
+    let mut other_cfg = toy_cfg();
+    other_cfg.n_layers = 1;
+    let mut eng = Engine::native_synthetic(other_cfg, 3, 4.0, prefix_opts());
+    assert_eq!(eng.attach_tier(&tier_opts(&dir, false)).unwrap(), 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn server_restart_over_tcp_reports_tier_hits_on_the_second_run() {
+    // The CI smoke in test form: serve → shared-prefix workload → admin
+    // shutdown (writes the snapshot) → new server on the same dir →
+    // same workload → admin metrics shows tier_hits > 0, and the tokens
+    // match run 1 exactly.
+    let dir = tier_dir("restart");
+    let cfg = toy_cfg();
+    let factory = |dir: PathBuf, cfg: ModelConfig| -> polarquant::server::EngineFactory {
+        Arc::new(move |w| {
+            let mut eng = Engine::native_synthetic(cfg.clone(), 11, 4.0, prefix_opts());
+            eng.attach_tier(&TierOpts {
+                dir: dir.join(format!("worker-{w}")),
+                max_bytes: u64::MAX,
+                snapshot: true,
+            })
+            .unwrap();
+            eng
+        })
+    };
+    let run = |factory: polarquant::server::EngineFactory| -> (Vec<Vec<u32>>, f64) {
+        let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+        let addr = handle.addr.clone();
+        let mut client = Client::connect(&addr).unwrap();
+        let mut outs = Vec::new();
+        for p in prompts() {
+            let reply = client.generate(&p, 6, Some(1)).unwrap();
+            assert!(!reply.rejected && !reply.truncated);
+            outs.push(reply.tokens);
+        }
+        let m = client.metrics().unwrap();
+        let hits = m.get("tier_hits").and_then(|v| v.as_f64()).unwrap();
+        // graceful shutdown: workers drain, snapshot, exit
+        client.shutdown().unwrap();
+        handle.wait();
+        (outs, hits)
+    };
+    let (first, hits1) = run(factory(dir.clone(), cfg.clone()));
+    assert_eq!(hits1, 0.0, "run 1 starts cold");
+    let (second, hits2) = run(factory(dir.clone(), cfg));
+    assert!(hits2 > 0.0, "run 2 must warm-start from the snapshot (tier_hits {hits2})");
+    assert_eq!(first, second, "restart must not change any rollout");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

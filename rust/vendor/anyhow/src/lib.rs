@@ -2,7 +2,8 @@
 //!
 //! The serving image has no crates.io access, so this path dependency
 //! provides exactly the surface the workspace uses: [`Error`], [`Result`],
-//! the [`Context`] extension trait, and the `anyhow!` / `bail!` macros.
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros.
 //! Error values carry a chain of context strings (outermost first); `{}`
 //! prints the outermost message, `{:#}` prints the full `a: b: c` chain,
 //! `{:?}` prints the anyhow-style multi-line report.
@@ -127,6 +128,22 @@ macro_rules! bail {
     };
 }
 
+/// Early-return an `Err(anyhow!(..))` unless the condition holds —
+/// the validation workhorse of the tier codec's untrusted-input paths.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +180,18 @@ mod tests {
             bail!("nope {}", 1);
         }
         assert_eq!(format!("{:#}", bails().unwrap_err()), "nope 1");
+    }
+
+    #[test]
+    fn ensure_returns_early_only_on_false() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(format!("{:#}", check(12).unwrap_err()), "x too big: 12");
+        assert!(format!("{:#}", check(5).unwrap_err()).contains("x != 5"));
     }
 
     #[test]
