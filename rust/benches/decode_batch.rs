@@ -22,8 +22,14 @@
 //! resident (RAM prefix hit), and demoted-then-promoted (pages faulted
 //! back from the disk tier) — promotion latency, tier hit counts, and
 //! peak resident bytes per mode.
+//!
+//! Streaming section: client-visible time-to-first-output and
+//! inter-token latency, one-shot vs streaming API over the same request
+//! mix — the latency visibility the streaming session API adds.
 
-use polarquant::coordinator::{Engine, EngineOpts, Request, TierOpts};
+use std::time::Instant;
+
+use polarquant::coordinator::{Engine, EngineOpts, Event, Request, TierOpts};
 use polarquant::model::ModelConfig;
 use polarquant::quant::kivi::{self, KiviQk, KiviSpec};
 use polarquant::quant::polar::{self, PolarEncoded, PolarSpec};
@@ -31,6 +37,7 @@ use polarquant::quant::{QkLut, SeqScoreJob};
 use polarquant::util::bench::{bench_fn, black_box, BenchOpts};
 use polarquant::util::json::{self, num, obj, Value};
 use polarquant::util::rng::Rng;
+use polarquant::util::stats::percentile;
 
 const D: usize = 128;
 const HQ: usize = 4; // query heads per kv head (32/8)
@@ -407,6 +414,99 @@ fn tier_section(quick: bool) -> Vec<Value> {
     rows
 }
 
+/// Streaming probe: client-visible time-to-first-output and inter-token
+/// latency, one-shot API vs streaming API over the SAME engine and
+/// request mix.  One-shot clients hear nothing until the completion
+/// lands, so their "TTFT" is the full request latency; streaming clients
+/// see the first token the step it decodes — the latency win this
+/// section tracks per commit, next to the ITL p50 the engine sustains.
+fn streaming_run(stream: bool, batch: usize, prompt_len: usize, gen_len: usize) -> Value {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 32;
+    opts.policy.max_running = 64;
+    opts.policy.prefill_per_step = 2;
+    opts.admission.max_queue = 256;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 9, 6.0, opts);
+    let mut rng = Rng::new(23);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..batch {
+        let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(128) as u32).collect();
+        let req = Request::greedy(i as u64, prompt, gen_len);
+        if stream {
+            rxs.push(eng.submit_streaming(req));
+        } else {
+            eng.submit(req).unwrap();
+        }
+    }
+    let mut first_out: Vec<f64> = Vec::with_capacity(batch);
+    let mut last_tok: Vec<Option<f64>> = vec![None; batch];
+    let mut client_itl: Vec<f64> = Vec::new();
+    while !eng.idle() {
+        let done = eng.step().unwrap();
+        let now = t0.elapsed().as_secs_f64();
+        if stream {
+            for (i, rx) in rxs.iter().enumerate() {
+                while let Ok(ev) = rx.try_recv() {
+                    if matches!(ev, Event::Token { .. }) {
+                        match last_tok[i] {
+                            None => first_out.push(now),
+                            Some(prev) => client_itl.push(now - prev),
+                        }
+                        last_tok[i] = Some(now);
+                    }
+                }
+            }
+        } else {
+            for _ in &done {
+                first_out.push(now); // one-shot: first output IS the reply
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let tok_s = eng.metrics.decode_tokens as f64 / wall;
+    let ttfo_p50 = percentile(&first_out, 50.0) * 1e3;
+    let engine_itl_p50 = eng.metrics.itl.p(50.0) * 1e3;
+    let label = if stream { "streaming" } else { "one-shot " };
+    let mut fields = vec![
+        ("mode", json::s(if stream { "streaming" } else { "one_shot" })),
+        ("batch", num(batch as f64)),
+        ("prompt_len", num(prompt_len as f64)),
+        ("gen_len", num(gen_len as f64)),
+        ("first_output_p50_ms", num(ttfo_p50)),
+        ("engine_ttft_p50_ms", num(eng.metrics.ttft.p(50.0) * 1e3)),
+        ("engine_itl_p50_ms", num(engine_itl_p50)),
+        ("decode_tok_s", num(tok_s)),
+        ("wall_s", num(wall)),
+    ];
+    if stream {
+        fields.push(("client_itl_p50_ms", num(percentile(&client_itl, 50.0) * 1e3)));
+        println!(
+            "{label}: first output p50 {ttfo_p50:>8.3} ms, client itl p50 {:>7.3} ms, \
+             engine itl p50 {engine_itl_p50:>7.3} ms, {tok_s:>9.1} tok/s",
+            percentile(&client_itl, 50.0) * 1e3,
+        );
+    } else {
+        println!(
+            "{label}: first output p50 {ttfo_p50:>8.3} ms (— full reply), \
+             engine itl p50 {engine_itl_p50:>7.3} ms, {tok_s:>9.1} tok/s",
+        );
+    }
+    obj(fields)
+}
+
+fn streaming_section(quick: bool) -> Vec<Value> {
+    let (batch, prompt_len, gen_len) = if quick { (8, 64, 16) } else { (16, 256, 48) };
+    println!("# streaming: client-visible TTFT + inter-token latency vs one-shot");
+    println!("# {batch} requests, prompt {prompt_len}, gen {gen_len}, chunked prefill 32\n");
+    let rows = vec![
+        streaming_run(false, batch, prompt_len, gen_len),
+        streaming_run(true, batch, prompt_len, gen_len),
+    ];
+    println!();
+    rows
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -459,6 +559,7 @@ fn main() {
     let chunked_rows = chunked_section(quick, chunk);
     let prefix_rows = prefix_section(quick);
     let tier_rows = tier_section(quick);
+    let streaming_rows = streaming_section(quick);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -478,6 +579,7 @@ fn main() {
         ("chunked_prefill", Value::Arr(chunked_rows)),
         ("prefix_reuse", Value::Arr(prefix_rows)),
         ("tier", Value::Arr(tier_rows)),
+        ("streaming", Value::Arr(streaming_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

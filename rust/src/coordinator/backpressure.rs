@@ -27,6 +27,12 @@ pub enum AdmitDecision {
     MemoryPressure,
     /// a prompt with no tokens can never produce logits to sample from
     EmptyPrompt,
+    /// the session already has a turn in flight — turns are serialized
+    /// because they mutate one shared KV chain
+    SessionBusy,
+    /// the request asked for options this engine cannot honor (e.g. a
+    /// per-request SnapKV override on a chunked or PJRT engine)
+    UnsupportedOptions,
 }
 
 impl AdmitDecision {
@@ -38,6 +44,8 @@ impl AdmitDecision {
             AdmitDecision::QueueFull => "queue_full",
             AdmitDecision::MemoryPressure => "memory_pressure",
             AdmitDecision::EmptyPrompt => "empty_prompt",
+            AdmitDecision::SessionBusy => "session_busy",
+            AdmitDecision::UnsupportedOptions => "unsupported_options",
         }
     }
 }

@@ -24,6 +24,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -32,25 +33,24 @@ use super::backpressure::{AdmissionPolicy, AdmitDecision};
 use super::batcher::{pages_needed, plan_decode_batches, plan_decode_shards, plan_prefill_chunks};
 use super::metrics::Metrics;
 use super::pool::{DecodePool, DecodeTask, StepResult};
-use super::request::{Request, RequestId, RequestState, Tracked};
+use super::request::{
+    Completion, Event, FinishReason, Request, RequestId, RequestState, Tracked, TurnInfo,
+};
 use super::scheduler::{pick_preemption_victim, SchedulerPolicy};
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
-use crate::kvcache::{CacheManager, PagePool, TierConfig};
+use crate::kvcache::{CacheManager, PagePool, SharedSeq, TierConfig};
+use crate::model::sampling::token_rng;
 use crate::model::{Model, ModelConfig, Weights};
 use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
-use crate::util::rng::Rng;
+
+// the per-request options (SnapKV override included) live with Request
+pub use super::request::SnapKvOpts;
 
 /// Compute backend: Rust-native model or PJRT-executed AOT graphs.
 pub enum Backend {
     Native(Box<Model>),
     Pjrt(Box<PjrtRuntime>),
-}
-
-#[derive(Clone, Copy, Debug)]
-pub struct SnapKvOpts {
-    pub budget: usize,
-    pub window: usize,
 }
 
 /// Disk-tier configuration (`--tier-dir`, `--tier-bytes`, `--snapshot`).
@@ -77,7 +77,6 @@ pub struct EngineOpts {
     /// SnapKV prompt compression (native backend only)
     pub snapkv: Option<SnapKvOpts>,
     pub cache_budget_bytes: usize,
-    pub seed: u64,
     /// Decode threads for the native backend: > 1 fans each decode
     /// iteration over a fixed worker pool (0 and 1 both mean inline).
     pub decode_workers: usize,
@@ -118,7 +117,6 @@ impl Default for EngineOpts {
             value_bits: None,
             snapkv: None,
             cache_budget_bytes: usize::MAX,
-            seed: 0,
             decode_workers: 0,
             prefill_chunk: 0,
             prefill_quantize_eagerly: false,
@@ -128,37 +126,18 @@ impl Default for EngineOpts {
     }
 }
 
-#[derive(Clone, Debug)]
-pub struct Completion {
-    pub id: RequestId,
-    pub prompt_len: usize,
-    pub tokens: Vec<u32>,
-    pub ttft_s: Option<f64>,
-    pub total_s: Option<f64>,
-    /// true if the sequence outgrew every AOT bucket and was truncated
-    pub truncated: bool,
-    /// true if admission rejected the request outright (never ran);
-    /// distinct from `truncated`, which means it RAN but was cut short
-    pub rejected: bool,
-    /// why admission rejected it (see [`AdmitDecision::reason`])
-    pub reason: Option<&'static str>,
-}
-
-impl Completion {
-    /// The reply a rejected request gets: no tokens, no timings, and an
-    /// explicit reason so clients can tell backpressure from truncation.
-    pub fn rejected(id: RequestId, prompt_len: usize, why: AdmitDecision) -> Self {
-        Completion {
-            id,
-            prompt_len,
-            tokens: Vec::new(),
-            ttft_s: None,
-            total_s: None,
-            truncated: false,
-            rejected: true,
-            reason: Some(why.reason()),
-        }
-    }
+/// One conversation's engine-side state: the token history each turn's
+/// prompt is rebuilt from, the live KV chain (kept between turns so the
+/// next turn prefills only its new tokens), and the in-flight turn.
+#[derive(Debug, Default)]
+struct Session {
+    /// full conversation so far: every turn's tokens ++ its generation
+    tokens: Vec<u32>,
+    /// the conversation's cache, held across turns (chunked engines;
+    /// whole-prompt engines re-prefill each turn and keep this `None`)
+    cache: Option<SharedSeq>,
+    /// turns are serialized per session: at most one in flight
+    active: Option<RequestId>,
 }
 
 pub struct Engine {
@@ -173,7 +152,11 @@ pub struct Engine {
     /// id -> cache id (same value; kept for clarity)
     pub metrics: Metrics,
     opts: EngineOpts,
-    rng: Rng,
+    /// streaming subscribers: request id -> event sink (dropped receivers
+    /// are tolerated — events just fall on the floor)
+    subs: HashMap<RequestId, Sender<Event>>,
+    /// multi-turn conversations keyed by session id
+    sessions: HashMap<u64, Session>,
     /// fixed thread pool for native decode (None = inline decode)
     pool: Option<DecodePool>,
     /// recycled gather buffer for pool results
@@ -204,7 +187,7 @@ impl Engine {
         // inside the graph instead, so it never uses one
         let pool = match &backend {
             Backend::Native(model) if opts.decode_workers > 1 => {
-                Some(DecodePool::new(model, opts.decode_workers, opts.seed))
+                Some(DecodePool::new(model, opts.decode_workers))
             }
             _ => None,
         };
@@ -217,7 +200,8 @@ impl Engine {
             prefill_order: VecDeque::new(),
             metrics: Metrics::new(),
             opts,
-            rng: Rng::new(opts.seed),
+            subs: HashMap::new(),
+            sessions: HashMap::new(),
             pool,
             step_results: Vec::new(),
             tier: None,
@@ -352,12 +336,10 @@ impl Engine {
         self.cache.report()
     }
 
-    /// Submit a request; rejects under backpressure (or an empty prompt).
+    /// Submit a request; rejects under backpressure (or an empty prompt,
+    /// or options this engine cannot honor).
     pub fn submit(&mut self, req: Request) -> std::result::Result<(), AdmitDecision> {
-        let expected = req.prompt.len() + req.max_new_tokens;
-        let decision =
-            self.opts.admission.admit(self.queue.len(), &self.cache, req.prompt.len(), expected);
-        match decision {
+        match self.admit_decision(&req, 0) {
             AdmitDecision::Admit => {
                 self.metrics.requests_submitted += 1;
                 self.queue.push_back(Tracked::new(req));
@@ -368,6 +350,270 @@ impl Engine {
                 Err(other)
             }
         }
+    }
+
+    /// Would this request be admitted right now?  Checks option
+    /// compatibility (per-request SnapKV needs a whole-prompt native
+    /// engine) before the queue/memory policy.  `resident_tokens` is the
+    /// prompt prefix ALREADY paid for in the pool's physical counters (a
+    /// session turn's live chain) — charging it again would reject long
+    /// conversations for memory their history no longer needs.
+    fn admit_decision(&self, req: &Request, resident_tokens: usize) -> AdmitDecision {
+        if let Some(sk) = req.gen.snapkv {
+            let capable = matches!(self.backend, Backend::Native(_)) && !self.chunked_prefill();
+            if !capable || sk.budget == 0 || sk.window == 0 || sk.window > sk.budget {
+                return AdmitDecision::UnsupportedOptions;
+            }
+        }
+        let expected =
+            req.prompt.len().saturating_sub(resident_tokens) + req.gen.max_new_tokens;
+        self.opts.admission.admit(self.queue.len(), &self.cache, req.prompt.len(), expected)
+    }
+
+    // ------------------------------------------------------- streaming
+
+    /// Send `ev` to the request's subscriber, if any.  A dropped receiver
+    /// (client went away) is not an error — generation continues and the
+    /// remaining events fall on the floor.
+    fn emit(subs: &HashMap<RequestId, Sender<Event>>, id: RequestId, ev: Event) {
+        if let Some(tx) = subs.get(&id) {
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Sample the request's next token.  The full-softmax logprob (two
+    /// extra O(vocab) passes) is only computed when a subscriber will
+    /// actually see the token event AND the request asked for logprobs.
+    fn sample_token(
+        subs: &HashMap<RequestId, Sender<Event>>,
+        tr: &Tracked,
+        logits: &[f32],
+    ) -> (u32, f32) {
+        let mut rng = token_rng(tr.req.gen.seed, tr.generated.len());
+        let sampler = tr.req.gen.sampler();
+        if tr.req.gen.logprobs && subs.contains_key(&tr.req.id) {
+            sampler.sample_with_logprob(logits, &mut rng)
+        } else {
+            (sampler.sample(logits, &mut rng), 0.0)
+        }
+    }
+
+    /// Append a freshly sampled token and do every piece of per-token
+    /// bookkeeping in ONE place: the inter-token-latency sample, the
+    /// decode counter, and the streaming `Token` event.  (The caller
+    /// still owns first-token extras: `first_token_at` + the TTFT hist.)
+    fn record_token(
+        metrics: &mut Metrics,
+        subs: &HashMap<RequestId, Sender<Event>>,
+        tr: &mut Tracked,
+        token: u32,
+        logprob: f32,
+    ) {
+        tr.generated.push(token);
+        let index = tr.generated.len() - 1;
+        let now = Instant::now();
+        if let Some(prev) = tr.last_token_at {
+            metrics.itl.record_secs(now.duration_since(prev).as_secs_f64());
+        }
+        tr.last_token_at = Some(now);
+        metrics.decode_tokens += 1;
+        Self::emit(subs, tr.req.id, Event::Token { id: tr.req.id, token, logprob, index });
+    }
+
+    /// Submit with a live event stream: `Admitted` on admission, a
+    /// `PrefillProgress` per granted chunk, a `Token` the step each token
+    /// is sampled (with its logprob), then the terminal `Done` — or a
+    /// single `Rejected` if admission refuses.  Default [`GenOptions`]
+    /// keep the streamed rollout bit-identical to the one-shot `submit`
+    /// path: same engine, same math, the events are just visibility.
+    ///
+    /// [`GenOptions`]: super::request::GenOptions
+    pub fn submit_streaming(&mut self, req: Request) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        let _ = self.submit_with_events(req, tx);
+        rx
+    }
+
+    /// [`Engine::submit_streaming`] with a caller-provided sink (the
+    /// server wires the connection's channel straight in).
+    pub fn submit_with_events(
+        &mut self,
+        req: Request,
+        events: Sender<Event>,
+    ) -> std::result::Result<(), AdmitDecision> {
+        let id = req.id;
+        match self.submit(req) {
+            Ok(()) => {
+                let _ = events.send(Event::Admitted { id });
+                self.subs.insert(id, events);
+                Ok(())
+            }
+            Err(why) => {
+                let _ = events.send(Event::Rejected { id, reason: why.reason() });
+                Err(why)
+            }
+        }
+    }
+
+    /// Cancel a queued or running request: its cache (pages and fp tails)
+    /// is released immediately, `Done` with `FinishReason::Cancelled`
+    /// (carrying the tokens generated so far) goes to any subscriber, and
+    /// the completion is returned.  `None` if the id is not live.  A
+    /// cancelled session turn keeps the conversation resumable: tokens
+    /// fed so far become history and the partially-extended chain stays
+    /// attached to the session.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
+        if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
+            let mut tr = self.queue.remove(pos).expect("position from iter");
+            // a queued turn never ran: history is unchanged, and the
+            // chain it took at submit goes straight back to the session
+            if let Some(turn) = tr.turn {
+                if let Some(sess) = self.sessions.get_mut(&turn.session) {
+                    sess.active = None;
+                    if let Some(chain) = tr.resume.take() {
+                        sess.cache = Some(chain);
+                    }
+                }
+            }
+            return Some(self.finish_cancelled(tr));
+        }
+        let mut tr = self.running.remove(&id)?;
+        self.prefill_order.retain(|&x| x != id);
+        tr.state = RequestState::Finished;
+        self.stash_session(&tr);
+        self.cache.release(id);
+        Some(self.finish_cancelled(tr))
+    }
+
+    fn finish_cancelled(&mut self, mut tr: Tracked) -> Completion {
+        tr.finished_at = Some(Instant::now());
+        self.metrics.requests_cancelled += 1;
+        let c = Completion {
+            id: tr.req.id,
+            prompt_len: tr.req.prompt.len(),
+            tokens: tr.generated.clone(),
+            ttft_s: tr.ttft(),
+            total_s: tr.total_latency(),
+            truncated: false,
+            rejected: false,
+            reason: None,
+            finish_reason: FinishReason::Cancelled,
+        };
+        if let Some(tx) = self.subs.remove(&tr.req.id) {
+            let _ = tx.send(Event::Done(c.clone()));
+        }
+        c
+    }
+
+    // -------------------------------------------------------- sessions
+
+    /// Open (or ensure) a conversation keyed `sid`.  Turns submitted via
+    /// [`Engine::submit_turn`] share one KV chain; `end_session` frees it.
+    pub fn open_session(&mut self, sid: u64) {
+        self.sessions.entry(sid).or_default();
+    }
+
+    pub fn has_session(&self, sid: u64) -> bool {
+        self.sessions.contains_key(&sid)
+    }
+
+    /// Tokens the session's live chain holds (tests/observability).
+    pub fn session_cached_tokens(&self, sid: u64) -> Option<usize> {
+        self.sessions.get(&sid)?.cache.as_ref().map(|c| c.lock().unwrap().len())
+    }
+
+    /// Close a conversation: cancels its in-flight turn (if any) and
+    /// drops the session's KV chain — its pages return to the pool as
+    /// soon as the last handle drops.  Returns false for an unknown sid.
+    pub fn end_session(&mut self, sid: u64) -> bool {
+        let Some(sess) = self.sessions.remove(&sid) else { return false };
+        if let Some(active) = sess.active {
+            // the session is already gone, so cancel() takes the plain
+            // (non-stashing) path and the chain drops with `sess`
+            self.cancel(active);
+        }
+        true
+    }
+
+    /// Submit the next turn of conversation `sid`.  `req.prompt` carries
+    /// ONLY the turn's new tokens; the engine prepends the session
+    /// history, and — on chunked engines — re-attaches the conversation's
+    /// live chain so prefill runs only over the new tokens (plus the one
+    /// still-unfed token of the previous turn).  Events flow to `events`
+    /// exactly as for [`Engine::submit_with_events`]; the `Done`
+    /// completion's tokens are THIS turn's generation.
+    pub fn submit_turn(
+        &mut self,
+        sid: u64,
+        req: Request,
+        events: Sender<Event>,
+    ) -> std::result::Result<(), AdmitDecision> {
+        let resumable = self.chunked_prefill();
+        let id = req.id;
+        // read session state WITHOUT creating an entry: a rejected turn
+        // must not plant a zombie session the engine never cleans up
+        let (history, resident, busy) = match self.sessions.get(&sid) {
+            Some(sess) => (
+                sess.tokens.clone(),
+                // the resumed chain's tokens are already counted in the
+                // pool's physical bytes; admission charges only the
+                // turn's NEW footprint
+                if resumable {
+                    sess.cache.as_ref().map(|h| h.lock().unwrap().len()).unwrap_or(0)
+                } else {
+                    0
+                },
+                sess.active.is_some(),
+            ),
+            None => (Vec::new(), 0, false),
+        };
+        if busy {
+            self.metrics.requests_rejected += 1;
+            let _ = events
+                .send(Event::Rejected { id, reason: AdmitDecision::SessionBusy.reason() });
+            return Err(AdmitDecision::SessionBusy);
+        }
+        let new_tokens = req.prompt.len();
+        let mut prompt = history;
+        prompt.extend_from_slice(&req.prompt);
+        let full = Request { id, session: Some(sid), prompt, gen: req.gen };
+        let decision = self.admit_decision(&full, resident);
+        if decision != AdmitDecision::Admit {
+            self.metrics.requests_rejected += 1;
+            let _ = events.send(Event::Rejected { id, reason: decision.reason() });
+            return Err(decision);
+        }
+        self.metrics.requests_submitted += 1;
+        self.metrics.session_turns += 1;
+        let mut tr = Tracked::new(full);
+        // TAKE the chain (don't clone): while the turn is in flight the
+        // Tracked owns the only session-side handle, so a preemption's
+        // cache.reset actually returns the old chain's pages to the pool
+        // instead of leaving them pinned by the Session
+        let sess = self.sessions.entry(sid).or_default();
+        tr.resume = if resumable { sess.cache.take() } else { None };
+        sess.active = Some(id);
+        tr.turn = Some(TurnInfo { session: sid, new_tokens });
+        let _ = events.send(Event::Admitted { id });
+        self.subs.insert(id, events);
+        self.queue.push_back(tr);
+        Ok(())
+    }
+
+    /// A finished (or cancelled mid-flight) session turn hands its state
+    /// back to the session: history becomes prompt ++ generated, and — on
+    /// chunked engines, which can resume — the live chain stays attached
+    /// so the NEXT turn prefills only its own tokens.  Must run BEFORE
+    /// the request's cache handle is released.
+    fn stash_session(&mut self, tr: &Tracked) {
+        let resumable = self.chunked_prefill();
+        let Some(turn) = tr.turn else { return };
+        let handle = if resumable { self.cache.get(tr.req.id) } else { None };
+        let Some(sess) = self.sessions.get_mut(&turn.session) else { return };
+        sess.active = None;
+        sess.tokens = tr.req.prompt.clone();
+        sess.tokens.extend_from_slice(&tr.generated);
+        sess.cache = handle;
     }
 
     /// True when this engine runs the chunked-prefill continuous loop
@@ -396,10 +642,30 @@ impl Engine {
                 .record_secs(tr.arrived.elapsed().as_secs_f64());
             if chunked {
                 tr.state = RequestState::Prefilling;
-                self.cache.create(tr.req.id);
-                if self.prefix_caching() {
-                    self.adopt_prefix(&mut tr);
+                if let Some(handle) = tr.resume.take() {
+                    // session turn: the conversation's live chain IS this
+                    // request's cache; prefill resumes after its tokens
+                    let held = handle.lock().unwrap().len();
+                    self.cache.insert(tr.req.id, handle);
+                    tr.prefill_pos = held;
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_tokens_reused += held as u64;
+                    self.metrics.session_tokens_reused += held as u64;
+                } else {
+                    self.cache.create(tr.req.id);
+                    if self.prefix_caching() {
+                        self.adopt_prefix(&mut tr);
+                    }
                 }
+                Self::emit(
+                    &self.subs,
+                    tr.req.id,
+                    Event::PrefillProgress {
+                        id: tr.req.id,
+                        done: tr.prefill_pos,
+                        total: tr.req.prompt.len(),
+                    },
+                );
                 self.prefill_order.push_back(tr.req.id);
             } else {
                 self.prefill_one(&mut tr)?;
@@ -546,6 +812,11 @@ impl Engine {
             tr.prefill_pos += take;
             self.metrics.prefill_tokens += take as u64;
             self.metrics.prefill_chunks += 1;
+            Self::emit(
+                &self.subs,
+                id,
+                Event::PrefillProgress { id, done: tr.prefill_pos, total: tr.req.prompt.len() },
+            );
             if tr.prefill_remaining() == 0 {
                 if !eager {
                     // quantize full groups now, in append order — the same
@@ -564,10 +835,9 @@ impl Engine {
                 }
                 let tr = self.running.get_mut(&id).unwrap();
                 if tr.generated.is_empty() {
-                    let tok = tr.req.sampler.sample(&logits, &mut self.rng);
-                    tr.generated.push(tok);
-                    tr.first_token_at = Some(Instant::now());
-                    self.metrics.decode_tokens += 1;
+                    let (tok, lp) = Self::sample_token(&self.subs, tr, &logits);
+                    Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+                    tr.first_token_at = tr.last_token_at;
                     self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
                 }
                 // else: preemption recovery — tokens already exist; the
@@ -651,9 +921,12 @@ impl Engine {
         let prompt = tr.req.prompt.clone();
         self.metrics.prefill_tokens += prompt.len() as u64;
 
+        // per-request SnapKV override beats the engine default; admission
+        // already guaranteed this engine can honor it
+        let snapkv = tr.req.gen.snapkv.or(self.opts.snapkv);
         let logits = match &mut self.backend {
             Backend::Native(model) => {
-                if let Some(sk) = self.opts.snapkv {
+                if let Some(sk) = snapkv {
                     let (logits, k, v, imp) =
                         model.prefill_kv_importance(&prompt, sk.window);
                     let keep = snapkv_select(&imp, sk.budget, sk.window);
@@ -724,10 +997,14 @@ impl Engine {
 
         // first generated token comes from the prefill logits
         tr.prefill_pos = prompt.len();
-        let tok = tr.req.sampler.sample(&logits, &mut self.rng);
-        tr.generated.push(tok);
-        tr.first_token_at = Some(Instant::now());
-        self.metrics.decode_tokens += 1;
+        Self::emit(
+            &self.subs,
+            id,
+            Event::PrefillProgress { id, done: prompt.len(), total: prompt.len() },
+        );
+        let (tok, lp) = Self::sample_token(&self.subs, tr, &logits);
+        Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+        tr.first_token_at = tr.last_token_at;
         self.metrics.ttft.record_secs(tr.arrived.elapsed().as_secs_f64());
         tr.state = RequestState::Decoding;
         Ok(())
@@ -791,7 +1068,12 @@ impl Engine {
                                     id,
                                     cache,
                                     last_token,
-                                    sampler: tr.req.sampler,
+                                    sampler: tr.req.gen.sampler(),
+                                    // derived per token, so the sample is
+                                    // shard-assignment-independent
+                                    rng: token_rng(tr.req.gen.seed, tr.generated.len()),
+                                    want_logprob: tr.req.gen.logprobs
+                                        && self.subs.contains_key(&id),
                                     replay,
                                 },
                             );
@@ -805,8 +1087,7 @@ impl Engine {
                             continue; // cache rebuilt; token already known
                         }
                         let tr = self.running.get_mut(&r.id).unwrap();
-                        tr.generated.push(r.token);
-                        self.metrics.decode_tokens += 1;
+                        Self::record_token(&mut self.metrics, &self.subs, tr, r.token, r.logprob);
                     }
                     self.step_results = results;
                 } else {
@@ -820,9 +1101,8 @@ impl Engine {
                             continue; // cache rebuilt; token already known
                         }
                         let tr = self.running.get_mut(&id).unwrap();
-                        let tok = tr.req.sampler.sample(&logits, &mut self.rng);
-                        tr.generated.push(tok);
-                        self.metrics.decode_tokens += 1;
+                        let (tok, lp) = Self::sample_token(&self.subs, tr, &logits);
+                        Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
                     }
                 }
                 decoded = seqs.len();
@@ -883,9 +1163,8 @@ impl Engine {
                         self.cache.get(id).unwrap().lock().unwrap().append_step(&new_k, &new_v);
                         let logits = &out.logits[lane * v..(lane + 1) * v];
                         let tr = self.running.get_mut(&id).unwrap();
-                        let tok = tr.req.sampler.sample(logits, &mut self.rng);
-                        tr.generated.push(tok);
-                        self.metrics.decode_tokens += 1;
+                        let (tok, lp) = Self::sample_token(&self.subs, tr, logits);
+                        Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
                     }
                     decoded += b.ids.len();
                 }
@@ -914,8 +1193,15 @@ impl Engine {
                 self.metrics
                     .e2e
                     .record_secs(tr.arrived.elapsed().as_secs_f64());
+                // session turns hand their chain back BEFORE release
+                self.stash_session(&tr);
                 self.cache.release(id);
-                done.push(Completion {
+                let finish_reason = if is_trunc {
+                    FinishReason::Length
+                } else {
+                    tr.done_reason().unwrap_or(FinishReason::Length)
+                };
+                let c = Completion {
                     id,
                     prompt_len: tr.req.prompt.len(),
                     tokens: tr.generated.clone(),
@@ -924,7 +1210,12 @@ impl Engine {
                     truncated: is_trunc,
                     rejected: false,
                     reason: None,
-                });
+                    finish_reason,
+                };
+                if let Some(tx) = self.subs.remove(&id) {
+                    let _ = tx.send(Event::Done(c.clone()));
+                }
+                done.push(c);
             }
         }
         Ok(())
@@ -1252,6 +1543,268 @@ mod tests {
         let done = eng.run_to_completion().unwrap();
         assert_eq!(done[0].tokens.len(), 20);
         assert_eq!(eng.metrics.preemptions, 0, "a lone decoder never preempts itself");
+    }
+
+    #[test]
+    fn streaming_events_mirror_the_one_shot_rollout() {
+        // Same engine config, same prompt: the streamed Token events must
+        // spell out exactly the tokens the one-shot path returns, in
+        // order, ending in a Done carrying the same completion.
+        let prompt = vec![1u32, 2, 3, 4, 5];
+        let one_shot = {
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 11, 4.0, EngineOpts::default());
+            eng.submit(Request::greedy(1, prompt.clone(), 6)).unwrap();
+            eng.run_to_completion().unwrap()[0].tokens.clone()
+        };
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 11, 4.0, EngineOpts::default());
+        let rx = eng.submit_streaming(Request::greedy(1, prompt.clone(), 6));
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1, "streaming requests still complete via step()");
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert!(matches!(events[0], Event::Admitted { id: 1 }));
+        let mut streamed = Vec::new();
+        let mut finished = None;
+        for ev in &events {
+            match ev {
+                Event::Token { token, index, logprob, .. } => {
+                    assert_eq!(*index, streamed.len(), "token events arrive in order");
+                    assert!(logprob.is_finite() && *logprob <= 0.0, "logprob {logprob}");
+                    streamed.push(*token);
+                }
+                Event::Done(c) => finished = Some(c.clone()),
+                _ => {}
+            }
+        }
+        assert_eq!(streamed, one_shot, "streamed tokens == one-shot greedy rollout");
+        let c = finished.expect("terminal Done event");
+        assert_eq!(c.tokens, one_shot);
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert!(matches!(events.last(), Some(Event::Done(_))), "Done is the last event");
+    }
+
+    #[test]
+    fn rejected_streaming_submission_gets_a_rejected_event() {
+        let mut opts = EngineOpts::default();
+        opts.admission.max_queue = 0;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 12, 4.0, opts);
+        let rx = eng.submit_streaming(Request::greedy(1, vec![1, 2], 4));
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], Event::Rejected { id: 1, reason: "queue_full" }));
+    }
+
+    #[test]
+    fn stop_tokens_finish_with_reason_stop() {
+        // run greedily once to learn the rollout, then stop on the first
+        // token that has no earlier duplicate (so the stop can only fire
+        // there) and check the reason + truncation point
+        let prompt = vec![3u32, 1, 4, 1, 5];
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 13, 4.0, EngineOpts::default());
+        eng.submit(Request::greedy(1, prompt.clone(), 8)).unwrap();
+        let free = eng.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(free.len(), 8);
+        let j = (1..free.len())
+            .find(|&j| !free[..j].contains(&free[j]))
+            .expect("rollout is a single repeated token; no valid stop probe");
+        let stop = free[j];
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 13, 4.0, EngineOpts::default());
+        let mut req = Request::greedy(2, prompt, 8);
+        req.gen.stop_tokens = vec![stop];
+        eng.submit(req).unwrap();
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].finish_reason, FinishReason::Stop);
+        assert_eq!(done[0].tokens, free[..=j].to_vec(), "stop token is included");
+    }
+
+    #[test]
+    fn cancel_frees_pages_mid_prefill_and_mid_decode() {
+        // The cancellation leak check at engine level: counters must
+        // return exactly to baseline (prefix cache off -> baseline 0).
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 14, 4.0, opts);
+        let long: Vec<u32> = (0..40).map(|i| (i % 64) as u32).collect();
+
+        // mid-prefill: one step grants a single 8-token chunk of 40
+        let rx = eng.submit_streaming(Request::greedy(1, long.clone(), 16));
+        eng.step().unwrap();
+        assert_eq!(eng.progress(1).unwrap().0, RequestState::Prefilling);
+        assert!(eng.cache_report().physical_bytes > 0, "prefill left bytes behind");
+        let c = eng.cancel(1).expect("live request");
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert!(eng.idle());
+        let r = eng.cache_report();
+        assert_eq!(r.physical_bytes, 0, "cancel mid-prefill must free every byte");
+        assert_eq!(eng.page_pool().pages_in_use(), 0);
+        let events: Vec<Event> = rx.try_iter().collect();
+        let cancelled_done = matches!(
+            events.last(),
+            Some(Event::Done(c)) if c.finish_reason == FinishReason::Cancelled
+        );
+        assert!(cancelled_done, "stream must end in Done(cancelled)");
+
+        // mid-decode: let it sample a few tokens first
+        eng.submit(Request::greedy(2, long, 16)).unwrap();
+        eng.step().unwrap();
+        while eng.progress(2).map(|(_, n)| n < 3).expect("request 2 is live") {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.progress(2).unwrap().0, RequestState::Decoding);
+        let c = eng.cancel(2).expect("live request");
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert_eq!(c.tokens.len(), 3, "partial generation is returned");
+        assert!(eng.idle());
+        assert_eq!(eng.cache_report().physical_bytes, 0, "mid-decode cancel leaks");
+        assert_eq!(eng.page_pool().pages_in_use(), 0);
+        assert_eq!(eng.metrics.requests_cancelled, 2);
+        // cancelling a finished/unknown id is a no-op
+        assert!(eng.cancel(2).is_none());
+        assert!(eng.cancel(99).is_none());
+    }
+
+    #[test]
+    fn session_turns_resume_the_kv_chain() {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 15, 4.0, opts);
+        eng.open_session(7);
+        let t1: Vec<u32> = (0..16).map(|i| (i * 3 % 64) as u32).collect();
+        let (tx, rx1) = std::sync::mpsc::channel();
+        eng.submit_turn(7, Request::greedy(1, t1.clone(), 16), tx).unwrap();
+        let d1 = eng.run_to_completion().unwrap();
+        assert_eq!(d1.len(), 1);
+        let gen1 = d1[0].tokens.clone();
+        drop(rx1);
+        let prefill_t1 = eng.metrics.prefill_tokens;
+        assert_eq!(prefill_t1, 16, "turn 1 prefills its whole prompt");
+        // the chain stays alive between turns: prompt + all-but-last token
+        assert_eq!(
+            eng.session_cached_tokens(7).unwrap(),
+            16 + gen1.len() - 1,
+            "history chain held across turns"
+        );
+        // turn 2: only the new tokens (plus the one unfed token) prefill
+        let (tx, _rx2) = std::sync::mpsc::channel();
+        eng.submit_turn(7, Request::greedy(2, vec![9, 8, 7], 16), tx).unwrap();
+        let d2 = eng.run_to_completion().unwrap();
+        assert_eq!(d2.len(), 1);
+        assert!(!d2[0].tokens.is_empty());
+        let prefill_t2 = eng.metrics.prefill_tokens - prefill_t1;
+        assert_eq!(prefill_t2, 3 + 1, "turn 2 prefills new tokens + the unfed one");
+        assert!(eng.metrics.session_tokens_reused > 0);
+        assert!(eng.metrics.prefix_tokens_reused > 0, "session reuse counts as prefix reuse");
+        assert_eq!(eng.metrics.session_turns, 2);
+        // ending the session releases the chain: pool back to baseline
+        assert!(eng.end_session(7));
+        assert_eq!(eng.page_pool().pages_in_use(), 0, "end_session frees the chain");
+        assert_eq!(eng.cache_report().physical_bytes, 0);
+        assert!(!eng.end_session(7), "double close is a no-op");
+    }
+
+    #[test]
+    fn session_turns_are_not_charged_for_resident_history() {
+        // Admission must charge a turn only for its NEW footprint: the
+        // resumed chain is already in the pool's physical counters, and
+        // double-charging it would reject every turn of a long
+        // conversation under a finite budget.  Budget is calibrated
+        // between "resident + incremental" (must admit) and "resident +
+        // full-prompt estimate" (the old double-count, which rejected).
+        let cfg = tiny_cfg();
+        let t1: Vec<u32> = (0..16).map(|i| (i * 3 % 64) as u32).collect();
+        let chain_bytes = {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 8;
+            let mut eng = Engine::native_synthetic(cfg.clone(), 19, 4.0, opts);
+            let (tx, _rx) = std::sync::mpsc::channel();
+            eng.submit_turn(9, Request::greedy(1, t1.clone(), 16), tx).unwrap();
+            eng.run_to_completion().unwrap();
+            eng.cache_report().physical_bytes
+        };
+        let mgr = CacheManager::new(cfg.cache_config(None), usize::MAX);
+        let hist = 16 + 16; // turn-1 prompt + generation
+        let est_incremental = mgr.estimate_bytes(3 + 1 + 8); // new + unfed + gen
+        let est_full = mgr.estimate_bytes(hist + 3 + 8); // the double-count
+        assert!(est_incremental < est_full);
+        let budget = chain_bytes + (est_incremental + est_full) / 2;
+
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.cache_budget_bytes = budget;
+        let mut eng = Engine::native_synthetic(cfg, 19, 4.0, opts);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        eng.submit_turn(9, Request::greedy(1, t1, 16), tx).unwrap();
+        eng.run_to_completion().unwrap();
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let r = eng.submit_turn(9, Request::greedy(2, vec![1, 2, 3], 8), tx);
+        assert_eq!(r, Ok(()), "resident history must not be double-charged at admission");
+        eng.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn session_rollouts_are_deterministic_across_engines() {
+        // The same 3-turn conversation on two fresh engines produces
+        // identical generations (greedy, chunked resume path).
+        let run = || {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 8;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 16, 4.0, opts);
+            let turns: Vec<Vec<u32>> = vec![
+                (0..12).map(|i| (i * 5 % 64) as u32).collect(),
+                vec![1, 2, 3],
+                vec![60, 61],
+            ];
+            let mut outs = Vec::new();
+            for (i, t) in turns.iter().enumerate() {
+                let (tx, _rx) = std::sync::mpsc::channel();
+                eng.submit_turn(5, Request::greedy(i as u64 + 1, t.clone(), 6), tx).unwrap();
+                outs.push(eng.run_to_completion().unwrap()[0].tokens.clone());
+            }
+            outs
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn concurrent_turns_on_one_session_are_rejected() {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 17, 4.0, opts);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        eng.submit_turn(3, Request::greedy(1, vec![1, 2, 3], 4), tx).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r = eng.submit_turn(3, Request::greedy(2, vec![4], 4), tx);
+        assert_eq!(r, Err(AdmitDecision::SessionBusy));
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert!(matches!(events[0], Event::Rejected { reason: "session_busy", .. }));
+        eng.run_to_completion().unwrap();
+        // first turn done: the session accepts the next turn again
+        let (tx, _rx) = std::sync::mpsc::channel();
+        eng.submit_turn(3, Request::greedy(3, vec![4], 4), tx).unwrap();
+        eng.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn per_request_snapkv_override_is_validated() {
+        // chunked engines can't honor a SnapKV override
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 18, 4.0, opts);
+        let mut req = Request::greedy(1, (0..30).map(|i| i as u32).collect(), 4);
+        req.gen.snapkv = Some(SnapKvOpts { budget: 16, window: 4 });
+        assert_eq!(eng.submit(req), Err(AdmitDecision::UnsupportedOptions));
+        // whole-prompt engines honor it per request
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 18, 4.0, EngineOpts::default());
+        let mut req = Request::greedy(1, (0..30).map(|i| i as u32).collect(), 4);
+        req.gen.snapkv = Some(SnapKvOpts { budget: 16, window: 4 });
+        eng.submit(req).unwrap();
+        eng.step().unwrap();
+        assert_eq!(eng.cache_report().tokens, 16 + 1, "budget + first decode step");
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.snapkv_tokens_dropped, 30 - 16);
+        // a bad window is rejected, not asserted deep in the model
+        let mut req = Request::greedy(2, vec![1, 2, 3], 4);
+        req.gen.snapkv = Some(SnapKvOpts { budget: 4, window: 9 });
+        assert_eq!(eng.submit(req), Err(AdmitDecision::UnsupportedOptions));
     }
 
     #[test]

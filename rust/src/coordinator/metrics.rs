@@ -11,6 +11,14 @@ pub struct Metrics {
     pub requests_submitted: u64,
     pub requests_finished: u64,
     pub requests_rejected: u64,
+    /// requests cancelled while queued or running (`Engine::cancel`)
+    pub requests_cancelled: u64,
+    /// session turns admitted (`Engine::submit_turn`)
+    pub session_turns: u64,
+    /// prompt tokens skipped because a session turn resumed the
+    /// conversation's live KV chain (also counted in
+    /// `prefix_tokens_reused`, which CI asserts on)
+    pub session_tokens_reused: u64,
     pub prefill_tokens: u64,
     /// prefill chunks executed (chunked-prefill engines only)
     pub prefill_chunks: u64,
@@ -21,6 +29,10 @@ pub struct Metrics {
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
     pub ttft: LatencyHist,
+    /// inter-token latency: gap between consecutive token EMISSIONS of
+    /// one request (measurable because the streaming engine emits tokens
+    /// as they decode, not only at completion)
+    pub itl: LatencyHist,
     pub per_token: LatencyHist,
     pub e2e: LatencyHist,
     pub queue_delay: LatencyHist,
@@ -66,12 +78,16 @@ impl Metrics {
             requests_submitted: 0,
             requests_finished: 0,
             requests_rejected: 0,
+            requests_cancelled: 0,
+            session_turns: 0,
+            session_tokens_reused: 0,
             prefill_tokens: 0,
             prefill_chunks: 0,
             decode_tokens: 0,
             decode_steps: 0,
             decode_batch_sum: 0,
             ttft: LatencyHist::new(),
+            itl: LatencyHist::new(),
             per_token: LatencyHist::new(),
             e2e: LatencyHist::new(),
             queue_delay: LatencyHist::new(),
@@ -111,7 +127,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "reqs {}/{} (rej {}), prefill {} tok, decode {} tok @ {:.1} tok/s, \
-             mean batch {:.2}, ttft p50 {:.1}ms p95 {:.1}ms, tok p50 {:.2}ms",
+             mean batch {:.2}, ttft p50/p95/p99 {:.1}/{:.1}/{:.1}ms, \
+             itl p50/p95/p99 {:.2}/{:.2}/{:.2}ms, tok p50 {:.2}ms",
             self.requests_finished,
             self.requests_submitted,
             self.requests_rejected,
@@ -121,8 +138,21 @@ impl Metrics {
             self.mean_batch(),
             self.ttft.p(50.0) * 1e3,
             self.ttft.p(95.0) * 1e3,
+            self.ttft.p(99.0) * 1e3,
+            self.itl.p(50.0) * 1e3,
+            self.itl.p(95.0) * 1e3,
+            self.itl.p(99.0) * 1e3,
             self.per_token.p(50.0) * 1e3,
         );
+        if self.requests_cancelled > 0 {
+            s.push_str(&format!(", cancelled {}", self.requests_cancelled));
+        }
+        if self.session_turns > 0 {
+            s.push_str(&format!(
+                ", session turns {} ({} tok resumed)",
+                self.session_turns, self.session_tokens_reused,
+            ));
+        }
         if self.prefill_chunks > 0 {
             s.push_str(&format!(
                 ", {} chunks, decode stall p95 {:.2}ms",
@@ -191,6 +221,21 @@ mod tests {
         assert!(s.contains("preempt 1"), "{s}");
         assert!(s.contains("prefix hits 5 (640 tok reused)"), "{s}");
         assert!(!s.contains("tier hits"), "tier line quiet when unused: {s}");
+    }
+
+    #[test]
+    fn summary_surfaces_streaming_counters() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("cancelled"), "quiet when unused");
+        assert!(!m.summary().contains("session turns"), "quiet when unused");
+        m.requests_cancelled = 2;
+        m.session_turns = 3;
+        m.session_tokens_reused = 40;
+        m.itl.record_secs(0.001);
+        let s = m.summary();
+        assert!(s.contains("cancelled 2"), "{s}");
+        assert!(s.contains("session turns 3 (40 tok resumed)"), "{s}");
+        assert!(s.contains("itl p50/p95/p99"), "{s}");
     }
 
     #[test]

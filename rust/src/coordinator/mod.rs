@@ -1,6 +1,8 @@
 //! L3 coordinator: the serving system around the quantized cache.
 //!
-//! * [`request`] — request/response types + lifecycle state machine
+//! * [`request`] — request/response types + lifecycle state machine:
+//!   per-request [`GenOptions`], the streaming [`Event`] frames, and the
+//!   typed [`FinishReason`] every completion carries
 //! * [`backpressure`] — admission control against queue depth and the
 //!   cache manager's memory budget, with typed rejection reasons
 //! * [`batcher`] — dynamic batching into the AOT shape buckets + the
@@ -23,6 +25,8 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Backend, Completion, Engine, EngineOpts, TierOpts};
+pub use engine::{Backend, Engine, EngineOpts, TierOpts};
 pub use pool::{DecodePool, DecodeTask, StepResult};
-pub use request::{Request, RequestId, RequestState};
+pub use request::{
+    Completion, Event, FinishReason, GenOptions, Request, RequestId, RequestState, SnapKvOpts,
+};

@@ -15,11 +15,11 @@
 //!   scheduler assigns disjoint shards ([`super::batcher::plan_decode_shards`]),
 //!   so each per-sequence mutex is uncontended in the steady state.
 //!
-//! Determinism: greedy sampling is bit-identical to the inline path
-//! regardless of worker count (argmax needs no RNG).  Stochastic samplers
-//! draw from a per-worker stream seeded from (engine seed, worker index),
-//! so results depend on the shard assignment — acceptable for serving,
-//! avoided in tests by using greedy requests.
+//! Determinism: every task carries its request's PER-TOKEN derived RNG
+//! ([`crate::model::sampling::token_rng`] of the request seed and token
+//! index), so sampled rollouts — greedy and stochastic alike — are
+//! bit-identical to the inline path regardless of worker count or shard
+//! assignment.  Workers hold no RNG state of their own.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -35,6 +35,12 @@ pub struct DecodeTask {
     pub cache: SharedSeq,
     pub last_token: u32,
     pub sampler: Sampler,
+    /// per-token RNG for THIS sample, derived by the engine from the
+    /// request's seed and token index — worker-assignment-independent
+    pub rng: Rng,
+    /// compute the token's full-softmax logprob (the request has a
+    /// streaming subscriber); off = two fewer O(vocab) passes per step
+    pub want_logprob: bool,
     /// Preemption-recovery replay: the fed token is already known (it was
     /// generated before the sequence lost its pages), so the step only
     /// rebuilds cache state — the logits are discarded, nothing is
@@ -47,6 +53,8 @@ pub struct DecodeTask {
 pub struct StepResult {
     pub id: u64,
     pub token: u32,
+    /// full-softmax logprob of `token` (streaming `Event::Token` payload)
+    pub logprob: f32,
     /// true for replay steps: `token` is meaningless and must not be
     /// appended to the request's generation
     pub replay: bool,
@@ -75,14 +83,13 @@ pub struct DecodePool {
 impl DecodePool {
     /// Spawn `n` workers, each owning a fork of `model` (shared weights,
     /// private scratch).
-    pub fn new(model: &Model, n: usize, seed: u64) -> Self {
+    pub fn new(model: &Model, n: usize) -> Self {
         assert!(n > 0);
         let workers = (0..n)
-            .map(|w| {
+            .map(|_| {
                 let (tx, job_rx) = channel::<Msg>();
                 let (result_tx, rx) = channel();
                 let mut m = model.fork();
-                let mut rng = Rng::new(seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 let join = std::thread::spawn(move || loop {
                     match job_rx.recv() {
                         Ok(Msg::Step { mut tasks, mut results }) => {
@@ -92,12 +99,22 @@ impl DecodePool {
                                 // assigned this sequence for the step
                                 let mut cache = t.cache.lock().unwrap();
                                 let logits = m.decode_step(t.last_token, &mut cache);
-                                let token = if t.replay {
-                                    0 // state-rebuild only; logits discarded
+                                let (token, logprob) = if t.replay {
+                                    (0, 0.0) // state-rebuild; logits discarded
                                 } else {
-                                    t.sampler.sample(logits, &mut rng)
+                                    let mut rng = t.rng;
+                                    if t.want_logprob {
+                                        t.sampler.sample_with_logprob(logits, &mut rng)
+                                    } else {
+                                        (t.sampler.sample(logits, &mut rng), 0.0)
+                                    }
                                 };
-                                results.push(StepResult { id: t.id, token, replay: t.replay });
+                                results.push(StepResult {
+                                    id: t.id,
+                                    token,
+                                    logprob,
+                                    replay: t.replay,
+                                });
                             }
                             if result_tx.send((results, tasks)).is_err() {
                                 return;
@@ -209,7 +226,7 @@ mod tests {
             caches.push(Arc::new(Mutex::new(c)));
         }
 
-        let mut pool = DecodePool::new(&model, 2, 0);
+        let mut pool = DecodePool::new(&model, 2);
         for (i, c) in caches.iter().enumerate() {
             pool.submit(
                 i,
@@ -218,6 +235,8 @@ mod tests {
                     cache: c.clone(),
                     last_token: 3,
                     sampler: Sampler::Greedy,
+                    rng: Rng::new(0),
+                    want_logprob: false,
                     replay: false,
                 },
             );
@@ -241,7 +260,7 @@ mod tests {
         let mut model = Model::new(cfg.clone(), Weights::synthetic(&cfg, 12, 4.0));
         let cache: SharedSeq = Arc::new(Mutex::new(SequenceCache::new(cfg.cache_config(None))));
         model.prefill(&[1, 2, 3], &mut cache.lock().unwrap());
-        let mut pool = DecodePool::new(&model, 1, 0);
+        let mut pool = DecodePool::new(&model, 1);
         let mut out = Vec::new();
         for step in 0..4 {
             pool.submit(
@@ -251,6 +270,8 @@ mod tests {
                     cache: cache.clone(),
                     last_token: 2,
                     sampler: Sampler::Greedy,
+                    rng: Rng::new(0),
+                    want_logprob: false,
                     replay: false,
                 },
             );

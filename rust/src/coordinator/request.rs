@@ -1,10 +1,108 @@
-//! Request lifecycle: Queued -> Prefilling -> Decoding -> Finished.
+//! Request lifecycle: Queued -> Prefilling -> Decoding -> Finished — plus
+//! the streaming contract around it: per-request [`GenOptions`], the
+//! [`Event`] stream a submission can subscribe to, and the typed
+//! [`FinishReason`] every [`Completion`] carries.
 
 use std::time::Instant;
 
+use super::backpressure::AdmitDecision;
+use crate::kvcache::SharedSeq;
 use crate::model::sampling::Sampler;
 
 pub type RequestId = u64;
+
+/// SnapKV prompt compression knobs (engine default or per-request
+/// override — native whole-prompt-prefill engines only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapKvOpts {
+    pub budget: usize,
+    pub window: usize,
+}
+
+/// Per-request generation options.  The default is greedy decoding — the
+/// exact computation `Request::greedy` always ran — so a v1 one-shot
+/// request and a default-options streaming request are bit-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenOptions {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy (argmax); > 0 samples from the tempered softmax
+    pub temperature: f32,
+    /// restrict sampling to the k most likely tokens (0 = full vocab)
+    pub top_k: usize,
+    /// nucleus sampling mass (>= 1.0 = off)
+    pub top_p: f32,
+    /// seeds the per-token RNG ([`crate::model::sampling::token_rng`]):
+    /// identical (options, prompt, seed) give bit-identical rollouts at
+    /// any decode-worker width
+    pub seed: u64,
+    /// generation stops when it emits any of these token ids (the stop
+    /// token is included in the output)
+    pub stop_tokens: Vec<u32>,
+    /// compute each token's full-softmax logprob for the `Token` events
+    /// (two extra O(vocab) passes per token; only paid when the request
+    /// also has a subscriber).  The server enables this for streamed
+    /// requests and leaves it off for one-shot ones, whose replies carry
+    /// no logprobs anyway.
+    pub logprobs: bool,
+    /// per-request SnapKV override (None = the engine's default)
+    pub snapkv: Option<SnapKvOpts>,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions {
+            max_new_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            logprobs: true,
+            snapkv: None,
+        }
+    }
+}
+
+impl GenOptions {
+    /// The sampler these options select.
+    pub fn sampler(&self) -> Sampler {
+        if self.temperature <= 0.0 {
+            Sampler::Greedy
+        } else {
+            Sampler::Stochastic {
+                temperature: self.temperature,
+                top_k: self.top_k,
+                top_p: self.top_p,
+            }
+        }
+    }
+}
+
+/// Why a request stopped producing tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// emitted a `GenOptions::stop_tokens` id
+    Stop,
+    /// ran out of `max_new_tokens` budget (or outgrew every AOT bucket —
+    /// see `Completion::truncated`)
+    Length,
+    /// cancelled via `Engine::cancel` while queued or running
+    Cancelled,
+    /// refused at admission; never ran (see `Completion::reason`)
+    Rejected,
+}
+
+impl FinishReason {
+    /// Stable wire-format label (the v2 protocol's `finish_reason`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestState {
@@ -18,26 +116,86 @@ pub enum RequestState {
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
-    /// optional session key for router affinity
+    /// optional session key for router affinity / engine KV reuse
     pub session: Option<u64>,
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    pub sampler: Sampler,
-    /// stop generation at this token id (e.g. an EOS id), if any
-    pub stop_token: Option<u32>,
+    pub gen: GenOptions,
 }
 
 impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, gen: GenOptions) -> Self {
+        Request { id, session: None, prompt, gen }
+    }
+
+    /// Greedy request with default options (the v1 one-shot shape).
     pub fn greedy(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Request {
+        Request::new(id, prompt, GenOptions { max_new_tokens, ..GenOptions::default() })
+    }
+}
+
+/// The terminal reply for one request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub ttft_s: Option<f64>,
+    pub total_s: Option<f64>,
+    /// true if the sequence outgrew every AOT bucket and was cut short
+    /// (`finish_reason` is `Length` in that case)
+    pub truncated: bool,
+    /// true if admission rejected the request outright (never ran);
+    /// distinct from `truncated`, which means it RAN but was cut short
+    pub rejected: bool,
+    /// why admission rejected it (see [`AdmitDecision::reason`])
+    pub reason: Option<&'static str>,
+    /// why generation stopped: `Stop` | `Length` | `Cancelled` | `Rejected`
+    pub finish_reason: FinishReason,
+}
+
+impl Completion {
+    /// The reply a rejected request gets: no tokens, no timings, and an
+    /// explicit reason so clients can tell backpressure from truncation.
+    pub fn rejected(id: RequestId, prompt_len: usize, why: AdmitDecision) -> Self {
+        Completion {
             id,
-            session: None,
-            prompt,
-            max_new_tokens,
-            sampler: Sampler::Greedy,
-            stop_token: None,
+            prompt_len,
+            tokens: Vec::new(),
+            ttft_s: None,
+            total_s: None,
+            truncated: false,
+            rejected: true,
+            reason: Some(why.reason()),
+            finish_reason: FinishReason::Rejected,
         }
     }
+}
+
+/// One frame of a streaming submission (`Engine::submit_streaming`).
+/// Terminal events are `Done` and `Rejected`; everything else is
+/// progress.  Token events carry the model's own (full-softmax) logprob.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// the request passed admission and is queued
+    Admitted { id: RequestId },
+    /// `done` of `total` prompt tokens are in the cache (chunked prefill
+    /// reports once per granted chunk; whole-prompt prefill once)
+    PrefillProgress { id: RequestId, done: usize, total: usize },
+    /// one generated token, emitted the step it was sampled
+    Token { id: RequestId, token: u32, logprob: f32, index: usize },
+    /// terminal: the request finished (any `FinishReason` but `Rejected`)
+    Done(Completion),
+    /// terminal: admission refused the request; no other event follows
+    Rejected { id: RequestId, reason: &'static str },
+}
+
+/// Which session a request is a turn of (engine-internal).
+#[derive(Clone, Copy, Debug)]
+pub struct TurnInfo {
+    pub session: u64,
+    /// tokens the client sent for THIS turn (the rest of `Request::prompt`
+    /// is replayed conversation history)
+    pub new_tokens: usize,
 }
 
 /// Book-keeping for a request inside the engine.
@@ -51,7 +209,15 @@ pub struct Tracked {
     pub generated: Vec<u32>,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
+    /// when the latest token was emitted (drives the inter-token-latency
+    /// histogram)
+    pub last_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
+    /// session-turn continuation: the conversation's live cache, adopted
+    /// at admission so prefill resumes after the tokens it already holds
+    pub resume: Option<SharedSeq>,
+    /// set when this request is a session turn
+    pub turn: Option<TurnInfo>,
 }
 
 impl Tracked {
@@ -63,7 +229,10 @@ impl Tracked {
             generated: Vec::new(),
             arrived: Instant::now(),
             first_token_at: None,
+            last_token_at: None,
             finished_at: None,
+            resume: None,
+            turn: None,
         }
     }
 
@@ -72,14 +241,22 @@ impl Tracked {
         self.req.prompt.len().saturating_sub(self.prefill_pos)
     }
 
+    /// Why generation is complete, if it is: a stop token beats the
+    /// budget when both hold on the same token.
+    pub fn done_reason(&self) -> Option<FinishReason> {
+        if let Some(last) = self.generated.last() {
+            if self.req.gen.stop_tokens.contains(last) {
+                return Some(FinishReason::Stop);
+            }
+        }
+        if self.generated.len() >= self.req.gen.max_new_tokens {
+            return Some(FinishReason::Length);
+        }
+        None
+    }
+
     pub fn done(&self) -> bool {
-        if self.generated.len() >= self.req.max_new_tokens {
-            return true;
-        }
-        if let (Some(stop), Some(&last)) = (self.req.stop_token, self.generated.last()) {
-            return last == stop;
-        }
-        false
+        self.done_reason().is_some()
     }
 
     pub fn ttft(&self) -> Option<f64> {
@@ -103,14 +280,44 @@ mod tests {
         assert!(!t.done());
         t.generated = vec![5, 6, 7];
         assert!(t.done());
+        assert_eq!(t.done_reason(), Some(FinishReason::Length));
     }
 
     #[test]
     fn done_on_stop_token() {
         let mut req = Request::greedy(1, vec![1], 100);
-        req.stop_token = Some(0);
+        req.gen.stop_tokens = vec![0, 9];
         let mut t = Tracked::new(req);
-        t.generated = vec![4, 0];
+        t.generated = vec![4, 9];
         assert!(t.done());
+        assert_eq!(t.done_reason(), Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn stop_beats_budget_on_the_same_token() {
+        let mut req = Request::greedy(1, vec![1], 2);
+        req.gen.stop_tokens = vec![7];
+        let mut t = Tracked::new(req);
+        t.generated = vec![3, 7];
+        assert_eq!(t.done_reason(), Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn default_options_are_greedy() {
+        let g = GenOptions::default();
+        assert_eq!(g.sampler(), Sampler::Greedy);
+        let r = Request::greedy(1, vec![1], 8);
+        assert_eq!(r.gen.max_new_tokens, 8);
+        assert_eq!(r.gen.sampler(), Sampler::Greedy);
+        let sampled = GenOptions { temperature: 0.7, top_k: 40, ..GenOptions::default() };
+        assert!(matches!(sampled.sampler(), Sampler::Stochastic { .. }));
+    }
+
+    #[test]
+    fn finish_reason_wire_labels_are_stable() {
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Rejected.as_str(), "rejected");
     }
 }

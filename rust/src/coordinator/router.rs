@@ -44,9 +44,20 @@ impl Router {
         w
     }
 
-    /// Mark a request finished on `worker`.
+    /// Mark a request finished on `worker`.  Every `route()` must be
+    /// paired with EXACTLY ONE `complete()` — the serve path calls it
+    /// from the single place each request terminates (the event
+    /// forwarder's terminal frame, or the one-shot reply write), so a
+    /// rejected, cancelled, or client-abandoned request still decrements
+    /// once and only once.
     pub fn complete(&mut self, worker: usize) {
         self.loads[worker] = self.loads[worker].saturating_sub(1);
+    }
+
+    /// The worker a session is stuck to, if any (the serve path uses
+    /// this to address session close frames without re-routing).
+    pub fn session_worker(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).copied()
     }
 
     /// Drop a session's affinity (conversation ended).
@@ -56,6 +67,11 @@ impl Router {
 
     pub fn load(&self, worker: usize) -> usize {
         self.loads[worker]
+    }
+
+    /// Outstanding requests across all workers (tests/observability).
+    pub fn total_load(&self) -> usize {
+        self.loads.iter().sum()
     }
 }
 
@@ -88,6 +104,52 @@ mod tests {
         r.complete(a);
         // worker a is now least-loaded again
         assert_eq!(r.route(None), a);
+    }
+
+    #[test]
+    fn load_accounting_is_exactly_once_per_request() {
+        // N routes + N completes must return every worker to zero load —
+        // no double decrement (saturating_sub would hide one) and no
+        // leaked increment, across sticky and anonymous requests alike.
+        let mut r = Router::new(3);
+        let mut placed = Vec::new();
+        for i in 0..12u64 {
+            let session = (i % 3 == 0).then_some(i / 3);
+            placed.push(r.route(session));
+        }
+        assert_eq!(r.total_load(), 12, "every route increments exactly once");
+        for &w in &placed {
+            r.complete(w);
+        }
+        assert_eq!(r.total_load(), 0, "every complete decrements exactly once");
+        for w in 0..3 {
+            assert_eq!(r.load(w), 0, "worker {w}");
+        }
+        // a stray double-complete must not underflow or skew future routing
+        r.complete(0);
+        assert_eq!(r.load(0), 0);
+    }
+
+    #[test]
+    fn sticky_sessions_count_load_on_their_worker() {
+        let mut r = Router::new(2);
+        let w = r.route(Some(42));
+        assert_eq!(r.session_worker(42), Some(w));
+        // 3 more turns on the same session: all on w, load 4
+        for _ in 0..3 {
+            assert_eq!(r.route(Some(42)), w);
+        }
+        assert_eq!(r.load(w), 4);
+        // anonymous traffic avoids the loaded worker
+        assert_eq!(r.route(None), 1 - w);
+        for _ in 0..4 {
+            r.complete(w);
+        }
+        assert_eq!(r.load(w), 0);
+        // stickiness survives completion until end_session
+        assert_eq!(r.session_worker(42), Some(w));
+        r.end_session(42);
+        assert_eq!(r.session_worker(42), None);
     }
 
     #[test]

@@ -156,6 +156,13 @@ impl CacheManager {
         Some(shared)
     }
 
+    /// Register an EXISTING shared cache under `id` (session-turn
+    /// continuation: the conversation's live chain becomes this request's
+    /// cache, so prefill resumes after the tokens it already holds).
+    pub fn insert(&mut self, id: u64, handle: SharedSeq) {
+        self.seqs.insert(id, handle);
+    }
+
     /// Shard-safe handle for an existing sequence.
     pub fn get(&self, id: u64) -> Option<SharedSeq> {
         self.seqs.get(&id).cloned()

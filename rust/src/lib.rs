@@ -28,9 +28,9 @@
 //! | [`kvcache::tier`] | disk tier under the pool: versioned page serde + checksums, append-only segment store, background demotion / on-demand promotion, persistent prefix-cache snapshots |
 //! | [`model`] | Rust-native twin of the L2 JAX model (config, shared weights, forward) |
 //! | [`runtime`] | PJRT client (feature `pjrt`, stubbed offline), artifact manifest, layout marshalling, shape-bucket executors |
-//! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, engine, metrics |
+//! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, streaming session engine (per-request `GenOptions`, token events, cancellation, multi-turn KV reuse), metrics |
 //! | [`coordinator::pool`] | batched thread-parallel LUT decode: fixed worker pool, thread-local `QkLut` scratch, balanced cache-length shards (`benches/decode_batch.rs` tracks it) |
-//! | [`server`] | JSON-lines TCP front-end + client |
+//! | [`server`] | JSON-lines TCP front-end + client (wire v1 one-shot + v2 streaming/cancel/session) |
 //! | [`workload`] | synthetic activation / request generators (outlier profiles) |
 //! | [`eval`] | fidelity metrics, task proxies, paper-table printers |
 //! | [`util`] | no-deps substrates: RNG, JSON codec, stats, bench harness |

@@ -6,10 +6,22 @@
 //! polarquant serve     --backend synthetic --workers 2 --decode-workers 4 --prefill-chunk 64 \
 //!                      --prefix-cache on --tier-dir /var/tmp/pq-tier --snapshot on
 //! polarquant generate  --artifacts artifacts/ --prompt 1,2,3 --max-tokens 16 --backend native
+//! polarquant generate  --backend synthetic --temperature 0.8 --top-k 40 --seed 7
 //! polarquant fidelity  --profile qwen-like --d 128 --tokens 512
 //! polarquant client    --addr 127.0.0.1:7733 --prompt 1,2,3 --max-tokens 8
+//! polarquant client    --addr 127.0.0.1:7733 --prompt 1,2,3 --stream on --cancel-after 4
+//! polarquant client    --addr 127.0.0.1:7733 --session-op open
+//! polarquant client    --addr 127.0.0.1:7733 --session 4294967296 --turn 4,5,6 --stream on
+//! polarquant client    --addr 127.0.0.1:7733 --session 4294967296 --session-op close
 //! polarquant client    --addr 127.0.0.1:7733 --admin shutdown
 //! ```
+//!
+//! `client --stream on` speaks wire protocol v2: one JSON line per
+//! streamed token, then the final reply line with a `finish_reason`
+//! (`stop` | `length` | `cancelled` | `rejected`).  Session turns send
+//! only the NEW tokens; the server replays history and reuses the
+//! session's KV chain, so turn 2 of a conversation prefills only its own
+//! tokens.
 //!
 //! Every subcommand takes `--help`.  The parser is strict: unknown
 //! flags, missing values, duplicate flags, and stray positional
@@ -39,11 +51,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use polarquant::coordinator::engine::SnapKvOpts;
-use polarquant::coordinator::{Engine, EngineOpts, Request, TierOpts};
+use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request, TierOpts};
 use polarquant::eval::{eval_codec, Table};
 use polarquant::quant::QuantSpec;
 use polarquant::runtime::Manifest;
-use polarquant::server::{serve, Client};
+use polarquant::server::{serve, Client, GenParams};
 use polarquant::util::json;
 use polarquant::workload::ActivationProfile;
 
@@ -99,12 +111,17 @@ const SERVE: CmdSpec = CmdSpec {
 
 const GENERATE: CmdSpec = CmdSpec {
     name: "generate",
-    about: "one-shot greedy generation through a local engine",
+    about: "one-shot generation through a local engine (greedy by default)",
     flags: &[
         flag("artifacts", "DIR", "artifacts", "artifact directory (pjrt/native backends)"),
         flag("backend", "NAME", "pjrt", "pjrt | native | synthetic"),
         flag("prompt", "T1,T2,..", "1,2,3", "comma-separated prompt token ids"),
         flag("max-tokens", "N", "16", "tokens to generate"),
+        flag("temperature", "T", "0", "sampling temperature (0 = greedy)"),
+        flag("top-k", "N", "0", "sample from the top-k tokens (0 = full vocab)"),
+        flag("top-p", "P", "1.0", "nucleus sampling mass (1.0 = off)"),
+        flag("seed", "N", "0", "per-request sampling seed (reproducible rollouts)"),
+        flag("stop", "T1,T2,..", "", "stop generation at any of these token ids"),
         flag("decode-workers", "N", "1", "decode threads (1 = inline)"),
         flag("prefill-chunk", "N", "0", "chunked prefill tokens per step (0 = off)"),
         flag("cache-pages", "N", "0", "page-pool capacity in group-pages (0 = unbounded)"),
@@ -130,12 +147,21 @@ const FIDELITY: CmdSpec = CmdSpec {
 
 const CLIENT: CmdSpec = CmdSpec {
     name: "client",
-    about: "one-shot JSON-lines client (generation or admin)",
+    about: "JSON-lines client: one-shot or streaming generation, sessions, admin",
     flags: &[
         flag("addr", "HOST:PORT", "127.0.0.1:7733", "server address"),
         flag("prompt", "T1,T2,..", "1,2,3", "comma-separated prompt token ids"),
         flag("max-tokens", "N", "16", "tokens to generate"),
-        flag("session", "N", "", "session id for router affinity"),
+        flag("temperature", "T", "0", "sampling temperature (0 = greedy)"),
+        flag("top-k", "N", "0", "sample from the top-k tokens (0 = full vocab)"),
+        flag("top-p", "P", "1.0", "nucleus sampling mass (1.0 = off)"),
+        flag("seed", "N", "0", "per-request sampling seed (reproducible rollouts)"),
+        flag("stop", "T1,T2,..", "", "stop generation at any of these token ids"),
+        flag("stream", "on|off", "off", "stream tokens as they decode (wire v2)"),
+        flag("cancel-after", "N", "0", "cancel mid-stream after N tokens (with --stream on)"),
+        flag("session", "N", "", "session id (router affinity; turns reuse its KV chain)"),
+        flag("turn", "T1,T2,..", "", "session-turn tokens, new tokens only (needs --session)"),
+        flag("session-op", "open|close", "", "open a new session / close --session N"),
         flag("admin", "CMD", "", "admin command instead of generating: metrics | shutdown"),
     ],
 };
@@ -207,6 +233,15 @@ impl Args {
             Some(v) => v
                 .parse()
                 .with_context(|| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key}: expected a number, got '{v}'")),
         }
     }
 
@@ -433,24 +468,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let prompt: Vec<u32> = args
-        .get("prompt", "1,2,3")
-        .split(',')
+/// Comma-separated token-id list (`--prompt` / `--turn` / `--stop`).
+fn parse_tokens(text: &str) -> Result<Vec<u32>> {
+    text.split(',')
         .filter(|s| !s.is_empty())
         .map(|s| s.trim().parse().context("bad token id"))
-        .collect::<Result<_>>()?;
-    let max_tokens = args.usize("max-tokens", 16)?;
+        .collect()
+}
+
+/// The sampling flags shared by `generate` and `client`.
+fn gen_options(args: &Args) -> Result<GenOptions> {
+    Ok(GenOptions {
+        max_new_tokens: args.usize("max-tokens", 16)?,
+        temperature: args.f64("temperature", 0.0)? as f32,
+        top_k: args.usize("top-k", 0)?,
+        top_p: args.f64("top-p", 1.0)? as f32,
+        seed: args.u64("seed", 0)?,
+        stop_tokens: parse_tokens(&args.get("stop", ""))?,
+        logprobs: false, // the CLI surfaces tokens, not logprobs
+        snapkv: None,
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = parse_tokens(&args.get("prompt", "1,2,3"))?;
+    let gen = gen_options(args)?;
     let mut engine = build_engine(args, 0)?;
-    engine.submit(Request::greedy(1, prompt, max_tokens)).ok();
+    engine
+        .submit(Request::new(1, prompt, gen))
+        .map_err(|why| anyhow::anyhow!("request rejected: {}", why.reason()))?;
     let done = engine.run_to_completion()?;
     let c = &done[0];
     println!("tokens: {:?}", c.tokens);
     println!(
-        "ttft {:.2}ms total {:.2}ms ({} tokens)",
+        "ttft {:.2}ms total {:.2}ms ({} tokens, finish_reason {})",
         c.ttft_s.unwrap_or(0.0) * 1e3,
         c.total_s.unwrap_or(0.0) * 1e3,
-        c.tokens.len()
+        c.tokens.len(),
+        c.finish_reason.as_str(),
     );
     println!("{}", engine.metrics.summary());
     if let Some((entries, bytes)) = engine.snapshot_tier()? {
@@ -463,38 +518,92 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7733");
     let mut client = Client::connect(&addr)?;
     match args.get("admin", "").as_str() {
-        "" => {
-            let prompt: Vec<u32> = args
-                .get("prompt", "1,2,3")
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(|s| s.trim().parse().context("bad token id"))
-                .collect::<Result<_>>()?;
-            let max_tokens = args.usize("max-tokens", 16)?;
-            let session = match args.get("session", "").as_str() {
-                "" => None,
-                s => Some(s.parse::<u64>().context("--session: expected an integer")?),
-            };
-            let r = client.generate(&prompt, max_tokens, session)?;
-            if r.rejected {
-                bail!("request rejected: {}", r.reason.as_deref().unwrap_or("unknown"));
-            }
-            println!(
-                "{{\"id\": {}, \"worker\": {}, \"tokens\": {:?}, \"ttft_ms\": {:.2}, \
-                 \"total_ms\": {:.2}, \"truncated\": {}}}",
-                r.id, r.worker, r.tokens, r.ttft_ms, r.total_ms, r.truncated
-            );
-        }
+        "" => {}
         "metrics" => {
             let v = client.metrics()?;
             println!("{}", json::write(&v));
+            return Ok(());
         }
         "shutdown" => {
             client.shutdown()?;
             println!("shutdown requested");
+            return Ok(());
         }
         other => bail!("unknown --admin command '{other}' (metrics | shutdown)"),
     }
+    let session = match args.get("session", "").as_str() {
+        "" => None,
+        s => Some(s.parse::<u64>().context("--session: expected an integer")?),
+    };
+    // session control frames
+    match args.get("session-op", "").as_str() {
+        "" => {}
+        "open" => {
+            let sid = client.open_session()?;
+            println!("{{\"session\": {sid}}}");
+            return Ok(());
+        }
+        "close" => {
+            let sid = session.context("--session-op close needs --session N")?;
+            client.close_session(sid)?;
+            println!("{{\"session\": {sid}, \"closed\": true}}");
+            return Ok(());
+        }
+        other => bail!("unknown --session-op '{other}' (open | close)"),
+    }
+    let gen = gen_options(args)?;
+    let params = GenParams {
+        max_tokens: gen.max_new_tokens,
+        temperature: gen.temperature as f64,
+        top_k: gen.top_k,
+        top_p: gen.top_p as f64,
+        seed: gen.seed,
+        stop: gen.stop_tokens.clone(),
+    };
+    let stream = args.on_off("stream", false)?;
+    let cancel_after = args.usize("cancel-after", 0)?;
+    if cancel_after > 0 && !stream {
+        bail!("--cancel-after needs --stream on (cancel rides the event stream)");
+    }
+    let turn = args.get("turn", "");
+    // the streamed-token callback: print each token as it lands and
+    // cancel once `--cancel-after` tokens have arrived
+    let mut seen = 0usize;
+    let on_token = |t: &polarquant::server::TokenEvent| {
+        if stream {
+            println!(
+                "{{\"token\": {}, \"index\": {}, \"logprob\": {:.4}}}",
+                t.token, t.index, t.logprob
+            );
+        }
+        seen += 1;
+        cancel_after == 0 || seen < cancel_after
+    };
+    let r = if !turn.is_empty() {
+        let sid = session.context("--turn needs --session N")?;
+        client.turn(sid, &parse_tokens(&turn)?, &params, on_token)?
+    } else {
+        let prompt = parse_tokens(&args.get("prompt", "1,2,3"))?;
+        let v2 = stream
+            || params.temperature > 0.0
+            || params.top_k > 0
+            || params.top_p < 1.0
+            || params.seed != 0
+            || !params.stop.is_empty();
+        if v2 {
+            client.generate_stream(&prompt, &params, session, on_token)?
+        } else {
+            client.generate(&prompt, params.max_tokens, session)?
+        }
+    };
+    if r.rejected {
+        bail!("request rejected: {}", r.reason.as_deref().unwrap_or("unknown"));
+    }
+    println!(
+        "{{\"id\": {}, \"worker\": {}, \"tokens\": {:?}, \"ttft_ms\": {:.2}, \
+         \"total_ms\": {:.2}, \"truncated\": {}, \"finish_reason\": \"{}\"}}",
+        r.id, r.worker, r.tokens, r.ttft_ms, r.total_ms, r.truncated, r.finish_reason
+    );
     Ok(())
 }
 

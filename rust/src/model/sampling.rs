@@ -1,24 +1,55 @@
-//! Token sampling: greedy, temperature, top-k.
+//! Token sampling: greedy and stochastic (temperature + top-k + top-p),
+//! with per-request reproducibility.
+//!
+//! Sampling is driven by a PER-TOKEN derived RNG ([`token_rng`]): the
+//! stream for token `i` of a request is a pure function of the request's
+//! `GenOptions::seed` and `i`, never of which decode worker ran the step
+//! or of any engine-global RNG state.  That makes sampled rollouts
+//! bit-identical across decode-pool widths, across preemption/replay
+//! recovery, and across engine restarts — the property the streaming API
+//! advertises and the proptests pin down.
 
 use crate::tensor::ops::argmax;
 use crate::util::rng::Rng;
+
+/// RNG for the `index`-th generated token of a request seeded `seed`.
+/// Derivation goes through SplitMix64 (inside [`Rng::new`]), so nearby
+/// (seed, index) pairs give uncorrelated streams.
+pub fn token_rng(seed: u64, index: usize) -> Rng {
+    Rng::new(seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Log-probability of `tok` under the full softmax of `logits`
+/// (temperature-independent: the model's own distribution, which is what
+/// the streaming `token` events report).
+pub fn logprob_at(logits: &[f32], tok: usize) -> f32 {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&l| (l - mx).exp()).sum();
+    logits[tok] - mx - lse.ln()
+}
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Sampler {
     Greedy,
     /// softmax(logits / temperature) restricted to the top-k entries
-    TopK { k: usize, temperature: f32 },
+    /// (`top_k == 0` = full vocab) and then to the smallest nucleus whose
+    /// probability mass reaches `top_p` (`top_p >= 1.0` = off)
+    Stochastic { temperature: f32, top_k: usize, top_p: f32 },
 }
 
 impl Sampler {
+    /// Sample one token.  No logprob is computed — this is the hot path
+    /// for requests nobody is streaming to (greedy = one argmax pass).
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         match *self {
             Sampler::Greedy => argmax(logits) as u32,
-            Sampler::TopK { k, temperature } => {
-                let k = k.max(1).min(logits.len());
+            Sampler::Stochastic { temperature, top_k, top_p } => {
+                let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
                 let mut idx: Vec<usize> = (0..logits.len()).collect();
+                // stable sort: ties keep index order, so the candidate set
+                // is deterministic for any logits
                 idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-                idx.truncate(k);
+                idx.truncate(k.max(1));
                 let t = temperature.max(1e-4);
                 let mx = logits[idx[0]];
                 let mut probs: Vec<f32> =
@@ -27,16 +58,46 @@ impl Sampler {
                 for p in probs.iter_mut() {
                     *p /= sum;
                 }
+                if top_p < 1.0 {
+                    // probs are sorted descending (idx is); keep the
+                    // smallest prefix reaching the nucleus mass
+                    let p_cap = top_p.max(0.0);
+                    let mut cum = 0.0f32;
+                    let mut keep = probs.len();
+                    for (j, &p) in probs.iter().enumerate() {
+                        cum += p;
+                        if cum >= p_cap {
+                            keep = j + 1;
+                            break;
+                        }
+                    }
+                    probs.truncate(keep);
+                    idx.truncate(keep);
+                    let s: f32 = probs.iter().sum();
+                    for p in probs.iter_mut() {
+                        *p /= s;
+                    }
+                }
                 let mut u = rng.uniform() as f32;
+                let mut chosen = idx[idx.len() - 1];
                 for (j, &p) in probs.iter().enumerate() {
                     if u < p {
-                        return idx[j] as u32;
+                        chosen = idx[j];
+                        break;
                     }
                     u -= p;
                 }
-                idx[k - 1] as u32
+                chosen as u32
             }
         }
+    }
+
+    /// Sample one token and return it with its full-softmax logprob
+    /// (two extra O(vocab) passes — only worth paying when a subscriber
+    /// will actually see the token event).
+    pub fn sample_with_logprob(&self, logits: &[f32], rng: &mut Rng) -> (u32, f32) {
+        let tok = self.sample(logits, rng);
+        (tok, logprob_at(logits, tok as usize))
     }
 }
 
@@ -54,7 +115,7 @@ mod tests {
     #[test]
     fn topk_stays_in_topk() {
         let mut rng = Rng::new(2);
-        let s = Sampler::TopK { k: 2, temperature: 1.0 };
+        let s = Sampler::Stochastic { temperature: 1.0, top_k: 2, top_p: 1.0 };
         let logits = [0.0, 5.0, 4.0, -10.0];
         for _ in 0..100 {
             let t = s.sample(&logits, &mut rng);
@@ -65,7 +126,7 @@ mod tests {
     #[test]
     fn low_temperature_approaches_greedy() {
         let mut rng = Rng::new(3);
-        let s = Sampler::TopK { k: 4, temperature: 1e-3 };
+        let s = Sampler::Stochastic { temperature: 1e-3, top_k: 4, top_p: 1.0 };
         let logits = [0.0, 5.0, 4.9, -1.0];
         let mut ones = 0;
         for _ in 0..200 {
@@ -74,5 +135,45 @@ mod tests {
             }
         }
         assert!(ones > 190, "{ones}");
+    }
+
+    #[test]
+    fn top_p_restricts_to_nucleus() {
+        let mut rng = Rng::new(4);
+        // p(1) ~ 0.73, p(2) ~ 0.27 at temp 1 within top-2; a 0.5 nucleus
+        // keeps only index 1
+        let s = Sampler::Stochastic { temperature: 1.0, top_k: 0, top_p: 0.5 };
+        let logits = [0.0, 5.0, 4.0, -10.0];
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn token_rng_is_a_pure_function_of_seed_and_index() {
+        for seed in [0u64, 7, 991] {
+            for idx in [0usize, 1, 63] {
+                let mut a = token_rng(seed, idx);
+                let mut b = token_rng(seed, idx);
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+        // different indices give different streams
+        let mut a = token_rng(5, 0);
+        let mut b = token_rng(5, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn logprob_is_log_softmax() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let z: f32 = logits.iter().map(|l| l.exp()).sum();
+        for (i, &l) in logits.iter().enumerate() {
+            let want = (l.exp() / z).ln();
+            assert!((logprob_at(&logits, i) - want).abs() < 1e-5);
+        }
+        // probabilities sum to 1
+        let total: f32 = (0..3).map(|i| logprob_at(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
     }
 }

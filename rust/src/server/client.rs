@@ -1,16 +1,83 @@
 //! Minimal blocking client for the JSON-lines protocol (examples + tests
-//! + the throughput bench's load generator).
+//! + the throughput bench's load generator + the CLI `client` command).
+//!
+//! Speaks both wire versions: [`Client::generate`] is the v1 one-shot
+//! request; [`Client::generate_stream`] / the session methods speak v2
+//! (streaming frames, mid-stream cancel, session open / turn / close).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, num, obj, Value};
 
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+}
+
+/// Per-request generation options on the wire (all default to the greedy
+/// v1 behavior; mirrors the engine's `GenOptions`).
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub top_p: f64,
+    pub seed: u64,
+    pub stop: Vec<u32>,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop: Vec::new(),
+        }
+    }
+}
+
+impl GenParams {
+    pub fn greedy(max_tokens: usize) -> Self {
+        GenParams { max_tokens, ..GenParams::default() }
+    }
+
+    /// The request-frame fields these options contribute (defaults are
+    /// omitted so v1 frames stay byte-identical to the old client's).
+    fn fields(&self, out: &mut Vec<(&'static str, Value)>) {
+        out.push(("max_tokens", num(self.max_tokens as f64)));
+        if self.temperature > 0.0 {
+            out.push(("temperature", num(self.temperature)));
+        }
+        if self.top_k > 0 {
+            out.push(("top_k", num(self.top_k as f64)));
+        }
+        if self.top_p < 1.0 {
+            out.push(("top_p", num(self.top_p)));
+        }
+        if self.seed != 0 {
+            // decimal string, not a JSON number: f64 rounds above 2^53,
+            // which would silently change the seed (and the rollout)
+            out.push(("seed", Value::Str(self.seed.to_string())));
+        }
+        if !self.stop.is_empty() {
+            out.push(("stop", Value::Arr(self.stop.iter().map(|&t| num(t as f64)).collect())));
+        }
+    }
+}
+
+/// One streamed token (the v2 `token` frame).
+#[derive(Clone, Copy, Debug)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub token: u32,
+    pub logprob: f64,
+    pub index: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -26,39 +93,14 @@ pub struct GenerateReply {
     /// `reason` — distinct from `truncated`, which ran but was cut short
     pub rejected: bool,
     pub reason: Option<String>,
+    /// why generation stopped: "stop" | "length" | "cancelled" |
+    /// "rejected" (empty on pre-streaming servers)
+    pub finish_reason: String,
 }
 
-impl Client {
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).context("connect")?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { stream, reader })
-    }
-
-    pub fn generate(
-        &mut self,
-        prompt: &[u32],
-        max_tokens: usize,
-        session: Option<u64>,
-    ) -> Result<GenerateReply> {
-        let mut fields = vec![
-            (
-                "prompt",
-                Value::Arr(prompt.iter().map(|&t| num(t as f64)).collect()),
-            ),
-            ("max_tokens", num(max_tokens as f64)),
-        ];
-        if let Some(s) = session {
-            fields.push(("session", num(s as f64)));
-        }
-        writeln!(self.stream, "{}", json::write(&obj(fields)))?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let v = json::parse(line.trim()).map_err(anyhow::Error::msg)?;
-        if let Some(err) = v.get("error") {
-            anyhow::bail!("server error: {:?}", err.as_str());
-        }
-        Ok(GenerateReply {
+impl GenerateReply {
+    fn from_value(v: &Value) -> Self {
+        GenerateReply {
             id: v.usize_or("id", 0) as u64,
             worker: v.usize_or("worker", 0),
             prompt_len: v.usize_or("prompt_len", 0),
@@ -72,23 +114,193 @@ impl Client {
             truncated: v.get("truncated").and_then(|b| b.as_bool()).unwrap_or(false),
             rejected: v.get("rejected").and_then(|b| b.as_bool()).unwrap_or(false),
             reason: v.get("reason").and_then(|r| r.as_str()).map(|s| s.to_string()),
-        })
+            finish_reason: v.str_or("finish_reason", ""),
+        }
     }
 
-    fn admin(&mut self, cmd: &str) -> Result<Value> {
-        writeln!(self.stream, "{}", json::write(&obj(vec![("admin", json::s(cmd))])))?;
+    /// The terminal shape of a v2 `rejected` frame.
+    fn rejected_frame(v: &Value) -> Self {
+        GenerateReply {
+            id: v.usize_or("id", 0) as u64,
+            worker: 0,
+            prompt_len: 0,
+            tokens: Vec::new(),
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            truncated: false,
+            rejected: true,
+            reason: v.get("reason").and_then(|r| r.as_str()).map(|s| s.to_string()),
+            finish_reason: "rejected".to_string(),
+        }
+    }
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    fn read_value(&mut self) -> Result<Value> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
         let v = json::parse(line.trim()).map_err(anyhow::Error::msg)?;
         if let Some(err) = v.get("error") {
-            anyhow::bail!("server error: {:?}", err.as_str());
+            bail!("server error: {:?}", err.as_str());
         }
         Ok(v)
     }
 
+    fn send(&mut self, v: &Value) -> Result<()> {
+        writeln!(self.stream, "{}", json::write(v))?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- v1
+
+    /// v1 one-shot generation (kept for compatibility; greedy only).
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_tokens: usize,
+        session: Option<u64>,
+    ) -> Result<GenerateReply> {
+        let mut fields = vec![(
+            "prompt",
+            Value::Arr(prompt.iter().map(|&t| num(t as f64)).collect()),
+        )];
+        GenParams::greedy(max_tokens).fields(&mut fields);
+        if let Some(s) = session {
+            fields.push(("session", num(s as f64)));
+        }
+        self.send(&obj(fields))?;
+        let v = self.read_value()?;
+        Ok(GenerateReply::from_value(&v))
+    }
+
+    // ------------------------------------------------------------- v2
+
+    /// v2 streaming generation: `on_token` runs for every streamed token
+    /// as it arrives; return `false` to cancel mid-stream (the reply then
+    /// carries `finish_reason == "cancelled"` and the tokens generated up
+    /// to the point the cancel landed).
+    pub fn generate_stream(
+        &mut self,
+        prompt: &[u32],
+        params: &GenParams,
+        session: Option<u64>,
+        on_token: impl FnMut(&TokenEvent) -> bool,
+    ) -> Result<GenerateReply> {
+        let mut fields = vec![
+            ("v", num(2.0)),
+            ("stream", Value::Bool(true)),
+            ("prompt", Value::Arr(prompt.iter().map(|&t| num(t as f64)).collect())),
+        ];
+        params.fields(&mut fields);
+        if let Some(s) = session {
+            fields.push(("session", num(s as f64)));
+        }
+        self.send(&obj(fields))?;
+        self.pump_stream(on_token)
+    }
+
+    /// Read one request's v2 frames until the terminal `done`/`rejected`.
+    fn pump_stream(
+        &mut self,
+        mut on_token: impl FnMut(&TokenEvent) -> bool,
+    ) -> Result<GenerateReply> {
+        let mut cancel_sent = false;
+        loop {
+            let v = self.read_value()?;
+            match v.str_or("event", "").as_str() {
+                "admitted" | "prefill" | "cancel" => {} // progress / ack
+                "token" => {
+                    let ev = TokenEvent {
+                        id: v.usize_or("id", 0) as u64,
+                        token: v.usize_or("token", 0) as u32,
+                        logprob: v.f64_or("logprob", 0.0),
+                        index: v.usize_or("index", 0),
+                    };
+                    if !on_token(&ev) && !cancel_sent {
+                        self.send(&obj(vec![("v", num(2.0)), ("cancel", num(ev.id as f64))]))?;
+                        cancel_sent = true;
+                    }
+                }
+                "done" => return Ok(GenerateReply::from_value(&v)),
+                "rejected" => return Ok(GenerateReply::rejected_frame(&v)),
+                other => bail!("unexpected v2 frame '{other}'"),
+            }
+        }
+    }
+
+    /// Ask the server for a fresh session id (v2 `open_session`).
+    pub fn open_session(&mut self) -> Result<u64> {
+        self.send(&obj(vec![("v", num(2.0)), ("open_session", Value::Bool(true))]))?;
+        let v = self.read_value()?;
+        if v.str_or("event", "") != "session" {
+            bail!("expected a session frame, got {v:?}");
+        }
+        Ok(v.usize_or("session", 0) as u64)
+    }
+
+    /// Submit the next turn of a session (tokens are the turn's NEW
+    /// tokens only; the server replays history and reuses the session's
+    /// KV chain).  Streams like [`Client::generate_stream`].
+    pub fn turn(
+        &mut self,
+        session: u64,
+        tokens: &[u32],
+        params: &GenParams,
+        on_token: impl FnMut(&TokenEvent) -> bool,
+    ) -> Result<GenerateReply> {
+        let mut fields = vec![
+            ("v", num(2.0)),
+            ("stream", Value::Bool(true)),
+            ("session", num(session as f64)),
+            ("turn", Value::Arr(tokens.iter().map(|&t| num(t as f64)).collect())),
+        ];
+        params.fields(&mut fields);
+        self.send(&obj(fields))?;
+        self.pump_stream(on_token)
+    }
+
+    /// Close a session: the server frees its engine-side KV chain and
+    /// drops its router affinity.
+    pub fn close_session(&mut self, session: u64) -> Result<()> {
+        self.send(&obj(vec![
+            ("v", num(2.0)),
+            ("session", num(session as f64)),
+            ("close", Value::Bool(true)),
+        ]))?;
+        let v = self.read_value()?;
+        if v.str_or("event", "") != "session_closed" {
+            bail!("expected session_closed, got {v:?}");
+        }
+        Ok(())
+    }
+
+    /// Fire a cancel for a request id started on THIS connection.
+    /// Fire-and-forget on the wire (no ack frame — it would race the
+    /// stream's terminal frame); the cancelled request's own stream
+    /// answers with `finish_reason: "cancelled"`.  Unknown or
+    /// already-finished ids are silently ignored by the server.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.send(&obj(vec![("v", num(2.0)), ("cancel", num(id as f64))]))
+    }
+
+    // ----------------------------------------------------------- admin
+
+    fn admin(&mut self, cmd: &str) -> Result<Value> {
+        self.send(&obj(vec![("admin", json::s(cmd))]))?;
+        self.read_value()
+    }
+
     /// Fleet counters: per-worker objects under `"workers"` plus summed
-    /// totals (`tier_hits`, `pages_demoted`, `prefix_hits`, ...) at the
-    /// top level.
+    /// totals (`tier_hits`, `prefix_tokens_reused`, `session_turns`, ...)
+    /// at the top level.
     pub fn metrics(&mut self) -> Result<Value> {
         self.admin("metrics")
     }

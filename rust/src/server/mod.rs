@@ -2,18 +2,45 @@
 //!
 //! The offline image carries no tokio, so the server is plain threads:
 //! one engine per worker thread (each owning its own model + cache), a
-//! session-affinity router, and one thread per connection.  Protocol:
+//! session-affinity router, one thread per connection, and one forwarder
+//! thread per in-flight v2 stream.  Two protocol versions share the
+//! framing — a frame with no `"v"` field is v1:
 //!
 //! ```text
+//! # v1 one-shot (unchanged; byte-compatible)
 //! -> {"prompt": [1,2,3], "max_tokens": 16, "session": 7}
-//! <- {"id": 0, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8,
-//!     "truncated": false, "rejected": false}
+//! <- {"id": 1, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8,
+//!     "truncated": false, "rejected": false, "finish_reason": "length"}
+//!
+//! # v2 streaming generation: one line per engine event
+//! -> {"v": 2, "stream": true, "prompt": [1,2,3], "max_tokens": 16,
+//!     "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
+//!     "stop": [0]}
+//! <- {"v": 2, "event": "admitted", "id": 1, "worker": 0}
+//! <- {"v": 2, "event": "prefill",  "id": 1, "done": 3, "total": 3}
+//! <- {"v": 2, "event": "token",    "id": 1, "token": 42,
+//!     "logprob": -1.7, "index": 0}
+//! <- {"v": 2, "event": "done",     "id": 1, "tokens": [...],
+//!     "finish_reason": "stop|length|cancelled|rejected", ...}
+//!
+//! # v2 cancel (any time; the stream answers with done/cancelled)
+//! -> {"v": 2, "cancel": 1}
+//!
+//! # v2 sessions: open / turn / close (multi-turn KV reuse)
+//! -> {"v": 2, "open_session": true}
+//! <- {"v": 2, "event": "session", "session": 4294967296, "ok": true}
+//! -> {"v": 2, "session": 4294967296, "turn": [4,5], "stream": true}
+//! -> {"v": 2, "session": 4294967296, "close": true}
 //! ```
 //!
-//! A request the engine refuses (backpressure, empty prompt) still gets a
-//! reply: `"rejected": true` plus a `"reason"` string
-//! (`queue_full` | `memory_pressure` | `empty_prompt`) — distinguishable
-//! from `"truncated"`, which means the request RAN but was cut short.
+//! See the README's "Wire protocol v2" section for the frame-by-frame
+//! spec and the version negotiation / compatibility rules.
+//!
+//! A request the engine refuses (backpressure, empty prompt, unsupported
+//! options, busy session) still gets a reply: `"rejected": true` plus a
+//! `"reason"` string (`queue_full` | `memory_pressure` | `empty_prompt` |
+//! `session_busy` | `unsupported_options`) — distinguishable from
+//! `"truncated"`, which means the request RAN but was cut short.
 //!
 //! Admin requests share the same JSON-lines framing:
 //!
@@ -31,5 +58,5 @@
 pub mod client;
 pub mod worker;
 
-pub use client::Client;
+pub use client::{Client, GenParams, GenerateReply, TokenEvent};
 pub use worker::{serve, EngineFactory, ServerHandle};

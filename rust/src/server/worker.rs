@@ -5,11 +5,23 @@
 //! each native engine an optional decode pool (`EngineOpts::decode_workers`)
 //! that fans every decode iteration over balanced cache-length shards.
 //! The factory decides the per-engine pool width; `serve` just reports it.
+//!
+//! Two wire protocols share the JSON-lines framing (see the module docs
+//! in [`super`] and the README's "Wire protocol v2" section):
+//!
+//! * **v1** (no `"v"` field): one-shot request -> one reply line.  Kept
+//!   byte-compatible; the engine runs the identical greedy computation.
+//! * **v2** (`"v": 2`): streaming generation (one line per engine
+//!   [`Event`]), mid-stream `{"cancel": id}`, and session open / turn /
+//!   close frames for multi-turn KV reuse.  Each streaming request gets a
+//!   forwarder thread pumping engine events to the (line-locked) socket,
+//!   so the connection loop keeps reading — that is what makes
+//!   cancellation reachable mid-stream.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -18,7 +30,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::router::Router;
-use crate::coordinator::{Completion, Engine, Request};
+use crate::coordinator::{Completion, Engine, Event, GenOptions, Request, RequestId};
 use crate::util::json::{self, num, obj, Value};
 
 /// Builds one engine per worker (engines are not Send-shareable across
@@ -26,7 +38,16 @@ use crate::util::json::{self, num, obj, Value};
 pub type EngineFactory = Arc<dyn Fn(usize) -> Engine + Send + Sync>;
 
 enum Job {
+    /// v1 one-shot: reply with the final completion only.
     Run { req: Request, reply: Sender<Completion> },
+    /// v2: the engine streams events straight into `events`.
+    Stream { req: Request, events: Sender<Event> },
+    /// v2 session turn (`req.prompt` = the turn's NEW tokens only).
+    Turn { sid: u64, req: Request, events: Sender<Event> },
+    /// v2 cancel; the in-flight request's stream gets Done(cancelled).
+    Cancel { id: RequestId },
+    /// v2 session close: frees the engine-side chain.
+    EndSession { sid: u64 },
     /// Admin introspection: the worker answers with its counters
     /// immediately, even mid-batch.
     Metrics { reply: Sender<Value> },
@@ -50,6 +71,20 @@ fn submit_job(engine: &mut Engine, job: Job, replies: &mut HashMap<u64, Sender<C
                 }
             }
         }
+        // the engine owns event delivery (incl. the Rejected event), so
+        // nothing to track here
+        Job::Stream { req, events } => {
+            let _ = engine.submit_with_events(req, events);
+        }
+        Job::Turn { sid, req, events } => {
+            let _ = engine.submit_turn(sid, req, events);
+        }
+        Job::Cancel { id } => {
+            engine.cancel(id);
+        }
+        Job::EndSession { sid } => {
+            engine.end_session(sid);
+        }
         Job::Metrics { reply } => {
             let _ = reply.send(metrics_value(engine));
         }
@@ -62,10 +97,16 @@ fn submit_job(engine: &mut Engine, job: Job, replies: &mut HashMap<u64, Sender<C
 fn metrics_value(engine: &Engine) -> Value {
     let m = &engine.metrics;
     let pool = engine.page_pool();
+    // percentiles are NaN before the first sample; 0 keeps the reply
+    // valid JSON (our writer would emit a bare NaN otherwise)
+    let ms = |secs: f64| num(if secs.is_finite() { secs * 1e3 } else { 0.0 });
     obj(vec![
         ("requests_submitted", num(m.requests_submitted as f64)),
         ("requests_finished", num(m.requests_finished as f64)),
         ("requests_rejected", num(m.requests_rejected as f64)),
+        ("requests_cancelled", num(m.requests_cancelled as f64)),
+        ("session_turns", num(m.session_turns as f64)),
+        ("session_tokens_reused", num(m.session_tokens_reused as f64)),
         ("prefill_tokens", num(m.prefill_tokens as f64)),
         ("decode_tokens", num(m.decode_tokens as f64)),
         ("prefix_hits", num(m.prefix_hits as f64)),
@@ -78,6 +119,13 @@ fn metrics_value(engine: &Engine) -> Value {
         ("pages_promoted", num(pool.pages_promoted() as f64)),
         ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
         ("snapkv_tokens_dropped", num(m.snapkv_tokens_dropped as f64)),
+        // per-request latency histograms (p50/p95/p99, milliseconds)
+        ("ttft_ms_p50", ms(m.ttft.p(50.0))),
+        ("ttft_ms_p95", ms(m.ttft.p(95.0))),
+        ("ttft_ms_p99", ms(m.ttft.p(99.0))),
+        ("itl_ms_p50", ms(m.itl.p(50.0))),
+        ("itl_ms_p95", ms(m.itl.p(95.0))),
+        ("itl_ms_p99", ms(m.itl.p(99.0))),
         ("summary", json::s(&m.summary())),
     ])
 }
@@ -224,7 +272,10 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
         }));
     }
     let router = Arc::new(Mutex::new(Router::new(n_workers)));
-    let next_id = Arc::new(Mutex::new(0u64));
+    let next_id = Arc::new(AtomicU64::new(0));
+    // server-allocated session ids start high so they never collide with
+    // client-chosen v1 affinity keys in the router's sticky map
+    let next_session = Arc::new(AtomicU64::new(1 << 32));
 
     let sd = shutdown.clone();
     let listener_thread = std::thread::spawn(move || {
@@ -236,9 +287,10 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             let senders = senders.clone();
             let router = router.clone();
             let next_id = next_id.clone();
+            let next_session = next_session.clone();
             let sd = sd.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &senders, &router, &next_id, &sd);
+                let _ = handle_conn(stream, &senders, &router, &next_id, &next_session, &sd);
             });
         }
     });
@@ -274,6 +326,9 @@ fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Va
             const TOTALS: &[&str] = &[
                 "requests_finished",
                 "requests_rejected",
+                "requests_cancelled",
+                "session_turns",
+                "session_tokens_reused",
                 "prefill_tokens",
                 "decode_tokens",
                 "prefix_hits",
@@ -306,15 +361,188 @@ fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Va
     }
 }
 
+/// Line-atomic shared writer: streaming forwarder threads and the
+/// connection loop interleave whole frames, never partial lines.
+type SharedStream = Arc<Mutex<TcpStream>>;
+
+fn write_line(out: &SharedStream, v: &Value) -> std::io::Result<()> {
+    let mut s = out.lock().unwrap();
+    writeln!(s, "{}", json::write(v))
+}
+
+fn error_frame(msg: &str) -> Value {
+    obj(vec![("error", json::s(msg))])
+}
+
+/// Token-id array field (`"prompt"` / `"turn"` / `"stop"`).
+fn tokens_field(v: &Value, key: &str) -> Option<Vec<u32>> {
+    v.get(key)
+        .and_then(|p| p.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u32).collect())
+}
+
+/// `"seed"` accepts a decimal string (full u64 range) or a JSON number.
+/// Numbers ride an f64 and round above 2^53 — silently running a
+/// DIFFERENT seed than the client asked for would break the
+/// bit-identical-rollout contract, so anything ambiguous is an error,
+/// not a guess (matching the strict-parser convention elsewhere).
+fn seed_field(v: &Value) -> Result<u64, String> {
+    const F64_EXACT: f64 = (1u64 << 53) as f64;
+    match v.get("seed") {
+        None => Ok(0),
+        Some(Value::Str(s)) => {
+            s.parse().map_err(|_| format!("seed '{s}' is not a decimal u64"))
+        }
+        Some(n) => match n.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= F64_EXACT => Ok(f as u64),
+            _ => Err(
+                "seed must be a non-negative integer <= 2^53; send a decimal STRING \
+                 for the full u64 range"
+                    .to_string(),
+            ),
+        },
+    }
+}
+
+/// Per-request generation options from a v1/v2 request frame; every
+/// field defaults to the greedy v1 behavior.  `Err` carries a message
+/// for the wire's error frame.
+fn gen_options(v: &Value) -> Result<GenOptions, String> {
+    Ok(GenOptions {
+        max_new_tokens: v.usize_or("max_tokens", 16),
+        temperature: v.f64_or("temperature", 0.0) as f32,
+        top_k: v.usize_or("top_k", 0),
+        top_p: v.f64_or("top_p", 1.0) as f32,
+        seed: seed_field(v)?,
+        stop_tokens: tokens_field(v, "stop").unwrap_or_default(),
+        // logprobs cost two O(vocab) passes per token: only streamed
+        // frames (or an explicit "logprobs": true) pay for them — the
+        // one-shot reply carries no logprobs anyway
+        logprobs: v.get("logprobs").and_then(|b| b.as_bool()).unwrap_or(false),
+        snapkv: match v.usize_or("snapkv_budget", 0) {
+            0 => None,
+            budget => Some(crate::coordinator::SnapKvOpts {
+                budget,
+                window: v.usize_or("snapkv_window", 8),
+            }),
+        },
+    })
+}
+
+/// The completion fields shared by the v1 reply and the v2 `done` frame.
+fn completion_fields(c: &Completion, worker: usize) -> Vec<(&'static str, Value)> {
+    let tokens = Value::Arr(c.tokens.iter().map(|&t| num(t as f64)).collect());
+    let mut fields = vec![
+        ("id", num(c.id as f64)),
+        ("worker", num(worker as f64)),
+        ("prompt_len", num(c.prompt_len as f64)),
+        ("tokens", tokens),
+        ("ttft_ms", num(c.ttft_s.unwrap_or(0.0) * 1e3)),
+        ("total_ms", num(c.total_s.unwrap_or(0.0) * 1e3)),
+        ("truncated", Value::Bool(c.truncated)),
+        ("rejected", Value::Bool(c.rejected)),
+        ("finish_reason", json::s(c.finish_reason.as_str())),
+    ];
+    if let Some(reason) = c.reason {
+        fields.push(("reason", json::s(reason)));
+    }
+    fields
+}
+
+/// One engine [`Event`] as a v2 frame.
+fn event_frame(ev: &Event, worker: usize) -> Value {
+    let base = |event: &str| vec![("v", num(2.0)), ("event", json::s(event))];
+    match ev {
+        Event::Admitted { id } => {
+            let mut f = base("admitted");
+            f.push(("id", num(*id as f64)));
+            f.push(("worker", num(worker as f64)));
+            obj(f)
+        }
+        Event::PrefillProgress { id, done, total } => {
+            let mut f = base("prefill");
+            f.push(("id", num(*id as f64)));
+            f.push(("done", num(*done as f64)));
+            f.push(("total", num(*total as f64)));
+            obj(f)
+        }
+        Event::Token { id, token, logprob, index } => {
+            let mut f = base("token");
+            f.push(("id", num(*id as f64)));
+            f.push(("token", num(*token as f64)));
+            f.push(("logprob", num(*logprob as f64)));
+            f.push(("index", num(*index as f64)));
+            obj(f)
+        }
+        Event::Done(c) => {
+            let mut f = base("done");
+            f.extend(completion_fields(c, worker));
+            obj(f)
+        }
+        Event::Rejected { id, reason } => {
+            let mut f = base("rejected");
+            f.push(("id", num(*id as f64)));
+            f.push(("reason", json::s(reason)));
+            obj(f)
+        }
+    }
+}
+
+/// The connection's live request registry (id -> worker), shared with
+/// the stream forwarders so finished requests stop being cancellable and
+/// the map cannot grow without bound on a long-lived connection.
+type ConnRequests = Arc<Mutex<HashMap<u64, usize>>>;
+
+/// Pump one request's engine events to the socket until the terminal
+/// frame (`done` / `rejected`), a dead socket, or a dead worker — then
+/// decrement the router load EXACTLY ONCE and drop the id from the
+/// connection's registry.  With `stream` off only the terminal frame is
+/// written (the v2 non-streaming shape).
+fn pump_events(
+    id: u64,
+    rx: Receiver<Event>,
+    out: SharedStream,
+    router: Arc<Mutex<Router>>,
+    requests: ConnRequests,
+    worker: usize,
+    stream: bool,
+) {
+    let mut terminated = false;
+    while let Ok(ev) = rx.recv() {
+        let terminal = matches!(ev, Event::Done(_) | Event::Rejected { .. });
+        // a failed write = client went away mid-stream: stop forwarding;
+        // the engine finishes the request and its events fall on the floor
+        if (stream || terminal) && write_line(&out, &event_frame(&ev, worker)).is_err() {
+            terminated = true; // nobody is reading; don't write more
+            break;
+        }
+        if terminal {
+            terminated = true;
+            break;
+        }
+    }
+    if !terminated {
+        // the worker died (engine step error) before finishing this
+        // request: tell the client instead of leaving it blocked on read
+        let _ = write_line(&out, &error_frame("worker terminated before the request finished"));
+    }
+    requests.lock().unwrap().remove(&id);
+    router.lock().unwrap().complete(worker);
+}
+
 fn handle_conn(
     stream: TcpStream,
     senders: &[Sender<Job>],
     router: &Arc<Mutex<Router>>,
-    next_id: &Arc<Mutex<u64>>,
+    next_id: &Arc<AtomicU64>,
+    next_session: &Arc<AtomicU64>,
     shutdown: &AtomicBool,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
+    let out: SharedStream = Arc::new(Mutex::new(stream));
+    // live requests started on THIS connection: id -> worker (cancel
+    // routing); forwarders prune their id at the terminal frame
+    let my_requests: ConnRequests = Arc::new(Mutex::new(HashMap::new()));
     let mut line = String::new();
     loop {
         line.clear();
@@ -328,55 +556,173 @@ fn handle_conn(
         let v = match json::parse(trimmed) {
             Ok(v) => v,
             Err(e) => {
-                writeln!(stream, "{}", json::write(&obj(vec![("error", json::s(&e.0))])))?;
+                write_line(&out, &error_frame(&e.0))?;
                 continue;
             }
         };
         if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
             let reply = handle_admin(cmd, senders, shutdown);
-            writeln!(stream, "{}", json::write(&reply))?;
+            write_line(&out, &reply)?;
             continue;
         }
-        let prompt: Vec<u32> = v
-            .get("prompt")
-            .and_then(|p| p.as_arr())
-            .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u32).collect())
-            .unwrap_or_default();
-        let max_tokens = v.usize_or("max_tokens", 16);
-        let session = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64);
-
-        let id = {
-            let mut n = next_id.lock().unwrap();
-            *n += 1;
-            *n
-        };
-        let worker = router.lock().unwrap().route(session);
-        let mut req = Request::greedy(id, prompt, max_tokens);
-        req.session = session;
-        let (tx, rx) = channel();
-        senders[worker]
-            .send(Job::Run { req, reply: tx })
-            .map_err(|_| anyhow::anyhow!("worker {} gone", worker))?;
-        let completion = rx.recv().context("worker dropped reply")?;
-        router.lock().unwrap().complete(worker);
-
-        let tokens = Value::Arr(
-            completion.tokens.iter().map(|&t| num(t as f64)).collect(),
-        );
-        let mut fields = vec![
-            ("id", num(id as f64)),
-            ("worker", num(worker as f64)),
-            ("prompt_len", num(completion.prompt_len as f64)),
-            ("tokens", tokens),
-            ("ttft_ms", num(completion.ttft_s.unwrap_or(0.0) * 1e3)),
-            ("total_ms", num(completion.total_s.unwrap_or(0.0) * 1e3)),
-            ("truncated", Value::Bool(completion.truncated)),
-            ("rejected", Value::Bool(completion.rejected)),
-        ];
-        if let Some(reason) = completion.reason {
-            fields.push(("reason", json::s(reason)));
+        match v.usize_or("v", 1) {
+            1 => handle_v1(&v, &out, senders, router, next_id)?,
+            2 => handle_v2(&v, &out, senders, router, next_id, next_session, &my_requests)?,
+            other => write_line(&out, &error_frame(&format!(
+                "unsupported protocol version {other} (this server speaks v1 and v2)"
+            )))?,
         }
-        let reply = obj(fields);
-        writeln!(stream, "{}", json::write(&reply))?;
     }
+}
+
+/// The v1 one-shot path, byte-compatible with the pre-streaming protocol
+/// (plus the additive `finish_reason` field).
+fn handle_v1(
+    v: &Value,
+    out: &SharedStream,
+    senders: &[Sender<Job>],
+    router: &Arc<Mutex<Router>>,
+    next_id: &Arc<AtomicU64>,
+) -> Result<()> {
+    let prompt = tokens_field(v, "prompt").unwrap_or_default();
+    let session = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64);
+    let gen = match gen_options(v) {
+        Ok(g) => g,
+        Err(e) => {
+            write_line(out, &error_frame(&e))?;
+            return Ok(());
+        }
+    };
+
+    let id = next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let worker = router.lock().unwrap().route(session);
+    let mut req = Request::new(id, prompt, gen);
+    req.session = session;
+    let (tx, rx) = channel();
+    // complete() must run exactly once per route() even when the worker
+    // is gone — collect the result first, decrement, then propagate
+    let completion = senders[worker]
+        .send(Job::Run { req, reply: tx })
+        .map_err(|_| anyhow::anyhow!("worker {} gone", worker))
+        .and_then(|()| rx.recv().context("worker dropped reply"));
+    router.lock().unwrap().complete(worker);
+    let completion = completion?;
+    write_line(out, &obj(completion_fields(&completion, worker)))?;
+    Ok(())
+}
+
+/// v2 frames: `open_session` / `close` / `cancel` control frames answer
+/// inline; `prompt` / `turn` submissions stream through `pump_events`.
+#[allow(clippy::too_many_arguments)]
+fn handle_v2(
+    v: &Value,
+    out: &SharedStream,
+    senders: &[Sender<Job>],
+    router: &Arc<Mutex<Router>>,
+    next_id: &Arc<AtomicU64>,
+    next_session: &Arc<AtomicU64>,
+    my_requests: &ConnRequests,
+) -> Result<()> {
+    // -- session open ---------------------------------------------------
+    if v.get("open_session").and_then(|b| b.as_bool()).unwrap_or(false) {
+        let sid = next_session.fetch_add(1, Ordering::Relaxed);
+        write_line(out, &obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("session")),
+            ("session", num(sid as f64)),
+            ("ok", Value::Bool(true)),
+        ]))?;
+        return Ok(());
+    }
+    // -- cancel ---------------------------------------------------------
+    if let Some(id) = v.get("cancel").and_then(|c| c.as_usize()) {
+        let id = id as u64;
+        // fire-and-forget BY DESIGN: an inline ack frame would race the
+        // request's own forwarder for the stream mutex (an ack landing
+        // after `done` desyncs every later reply on the connection).
+        // The observable answer is the cancelled request's terminal
+        // frame; unknown/already-finished ids are silently ignored.
+        if let Some(&worker) = my_requests.lock().unwrap().get(&id) {
+            let _ = senders[worker].send(Job::Cancel { id });
+        }
+        return Ok(());
+    }
+    let session = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64);
+    // -- session close --------------------------------------------------
+    if v.get("close").and_then(|b| b.as_bool()).unwrap_or(false) {
+        let Some(sid) = session else {
+            write_line(out, &error_frame("close needs a session id"))?;
+            return Ok(());
+        };
+        // idempotent: a session with no routed turn has no engine-side
+        // state to free, so there is nothing to address
+        let worker = router.lock().unwrap().session_worker(sid);
+        if let Some(w) = worker {
+            let _ = senders[w].send(Job::EndSession { sid });
+        }
+        router.lock().unwrap().end_session(sid);
+        write_line(out, &obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("session_closed")),
+            ("session", num(sid as f64)),
+            ("ok", Value::Bool(true)),
+        ]))?;
+        return Ok(());
+    }
+    // -- generate / turn ------------------------------------------------
+    let turn = tokens_field(v, "turn");
+    let prompt = tokens_field(v, "prompt");
+    if turn.is_some() && session.is_none() {
+        write_line(out, &error_frame("turn needs a session id"))?;
+        return Ok(());
+    }
+    if turn.is_none() && prompt.is_none() {
+        write_line(out, &error_frame(
+            "expected one of prompt, turn, cancel, open_session, close",
+        ))?;
+        return Ok(());
+    }
+    let mut gen = match gen_options(v) {
+        Ok(g) => g,
+        Err(e) => {
+            write_line(out, &error_frame(&e))?;
+            return Ok(());
+        }
+    };
+    let stream = v.get("stream").and_then(|b| b.as_bool()).unwrap_or(false);
+    gen.logprobs |= stream;
+    let id = next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let worker = router.lock().unwrap().route(session);
+    my_requests.lock().unwrap().insert(id, worker);
+    let (tx, rx) = channel::<Event>();
+    let job = match turn {
+        Some(tokens) => {
+            let mut req = Request::new(id, tokens, gen);
+            req.session = session;
+            Job::Turn { sid: session.expect("checked above"), req, events: tx }
+        }
+        None => {
+            let mut req = Request::new(id, prompt.expect("checked above"), gen);
+            req.session = session;
+            Job::Stream { req, events: tx }
+        }
+    };
+    if senders[worker].send(job).is_err() {
+        my_requests.lock().unwrap().remove(&id);
+        router.lock().unwrap().complete(worker);
+        write_line(out, &error_frame(&format!("worker {worker} gone")))?;
+        return Ok(());
+    }
+    if stream {
+        // forwarder thread: the connection loop keeps reading, so a
+        // {"cancel": id} frame can land mid-stream
+        let out = out.clone();
+        let router = router.clone();
+        let requests = my_requests.clone();
+        std::thread::spawn(move || pump_events(id, rx, out, router, requests, worker, true));
+    } else {
+        // one-shot v2: block until the terminal frame
+        pump_events(id, rx, out.clone(), router.clone(), my_requests.clone(), worker, false);
+    }
+    Ok(())
 }

@@ -7,8 +7,14 @@ use std::sync::Arc;
 use polarquant::coordinator::engine::{Backend, SnapKvOpts};
 use polarquant::coordinator::{Engine, EngineOpts, Request};
 use polarquant::model::ModelConfig;
-use polarquant::server::{serve, Client};
+use polarquant::server::{serve, Client, GenParams};
+use polarquant::util::json::Value;
 use polarquant::workload::{PromptKind, RequestGen};
+
+/// Fleet-total counter from an `{"admin":"metrics"}` reply.
+fn metric(v: &Value, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64()).unwrap_or(f64::NAN)
+}
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -274,6 +280,183 @@ fn preemption_under_prefix_caching_recovers_through_cached_pages() {
         assert!(!c.rejected, "pool pressure must preempt, not reject");
     }
     assert!(eng.metrics.prefix_hits >= 2, "both sharers attach to cached prompt pages");
+}
+
+#[test]
+fn streaming_greedy_is_bit_identical_to_v1_one_shot_over_tcp() {
+    // The tentpole acceptance check: the SAME prompt through the v1
+    // one-shot path and the v2 streaming path (default GenOptions ==
+    // greedy) must produce identical tokens, with the streamed tokens
+    // arriving one event at a time and agreeing with the final reply.
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.decode_workers = 2;
+        Engine::native_synthetic(cfg.clone(), 800 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..20).map(|i| (i * 3 % 64) as u32).collect();
+
+    let one_shot = client.generate(&prompt, 10, None).unwrap();
+    assert!(!one_shot.rejected);
+    assert_eq!(one_shot.finish_reason, "length");
+
+    let mut streamed = Vec::new();
+    let reply = client
+        .generate_stream(&prompt, &GenParams::greedy(10), None, |t| {
+            assert_eq!(t.index, streamed.len(), "tokens stream in order");
+            assert!(t.logprob.is_finite() && t.logprob <= 0.0);
+            streamed.push(t.token);
+            true
+        })
+        .unwrap();
+    assert_eq!(streamed, one_shot.tokens, "streamed == one-shot greedy");
+    assert_eq!(reply.tokens, one_shot.tokens, "done frame agrees with the stream");
+    assert_eq!(reply.finish_reason, "length");
+    handle.stop();
+}
+
+#[test]
+fn mid_stream_cancel_frees_pages_over_tcp() {
+    // Cancellation end-to-end: cancel after 3 streamed tokens of a
+    // 2048-token budget (large enough that the engine cannot finish
+    // before the cancel frame lands); the reply must say "cancelled"
+    // with a partial generation, and the worker's page accounting must
+    // return exactly to baseline (no other traffic, prefix off -> zero).
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        Engine::native_synthetic(cfg.clone(), 900 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..24).map(|i| (i * 5 % 64) as u32).collect();
+    let mut seen = 0usize;
+    let reply = client
+        .generate_stream(&prompt, &GenParams::greedy(2048), None, |_| {
+            seen += 1;
+            seen < 3
+        })
+        .unwrap();
+    assert_eq!(reply.finish_reason, "cancelled");
+    assert!(!reply.tokens.is_empty(), "partial generation comes back");
+    assert!(
+        reply.tokens.len() < 2048,
+        "cancel must cut the stream short (got {})",
+        reply.tokens.len()
+    );
+    let m = client.metrics().unwrap();
+    assert_eq!(metric(&m, "requests_cancelled"), 1.0);
+    assert_eq!(metric(&m, "pages_in_use"), 0.0, "cancel leaked pages");
+    handle.stop();
+}
+
+#[test]
+fn finish_reasons_thread_through_the_wire() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        Engine::native_synthetic(cfg.clone(), 1000 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt = vec![7u32, 8, 9, 10];
+    // length: runs out of budget
+    let free = client.generate_stream(&prompt, &GenParams::greedy(6), None, |_| true).unwrap();
+    assert_eq!(free.finish_reason, "length");
+    assert_eq!(free.tokens.len(), 6);
+    // stop: stop on the rollout's 2nd token (greedy == deterministic)
+    let stop = free.tokens[1];
+    if !free.tokens[..1].contains(&stop) {
+        let mut p = GenParams::greedy(6);
+        p.stop = vec![stop];
+        let stopped = client.generate_stream(&prompt, &p, None, |_| true).unwrap();
+        assert_eq!(stopped.finish_reason, "stop");
+        assert_eq!(stopped.tokens, free.tokens[..2].to_vec(), "stop token included");
+    }
+    // rejected: empty prompt
+    let rej = client.generate_stream(&[], &GenParams::greedy(4), None, |_| true).unwrap();
+    assert!(rej.rejected);
+    assert_eq!(rej.finish_reason, "rejected");
+    assert_eq!(rej.reason.as_deref(), Some("empty_prompt"));
+    // v1 replies carry the reason too (additive field)
+    let v1 = client.generate(&prompt, 3, None).unwrap();
+    assert_eq!(v1.finish_reason, "length");
+    handle.stop();
+}
+
+#[test]
+fn sampled_requests_are_reproducible_over_the_wire() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.decode_workers = 2;
+        Engine::native_synthetic(cfg.clone(), 1100 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 7 % 64) as u32).collect();
+    let mut params = GenParams::greedy(8);
+    params.temperature = 0.9;
+    params.top_k = 16;
+    params.top_p = 0.95;
+    params.seed = 1234;
+    let a = client.generate_stream(&prompt, &params, None, |_| true).unwrap();
+    let b = client.generate_stream(&prompt, &params, None, |_| true).unwrap();
+    assert_eq!(a.tokens, b.tokens, "same GenOptions{{seed}} -> bit-identical rollout");
+    params.seed = 4321;
+    let c = client.generate_stream(&prompt, &params, None, |_| true).unwrap();
+    assert_eq!(c.tokens.len(), 8);
+    handle.stop();
+}
+
+#[test]
+fn three_turn_session_reuses_kv_and_close_frees_it() {
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        Engine::native_synthetic(cfg.clone(), 1200 + w as u64, 4.0, opts)
+    });
+    let handle = serve(factory, "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let sid = client.open_session().unwrap();
+    assert!(sid > 0);
+    let turns: Vec<Vec<u32>> =
+        vec![(0..16).map(|i| (i * 3 % 64) as u32).collect(), vec![1, 2, 3], vec![60, 61]];
+    let mut workers = Vec::new();
+    for (i, t) in turns.iter().enumerate() {
+        let reply = client.turn(sid, t, &GenParams::greedy(6), |_| true).unwrap();
+        assert!(!reply.rejected, "turn {i} rejected: {:?}", reply.reason);
+        assert_eq!(reply.tokens.len(), 6, "turn {i}");
+        workers.push(reply.worker);
+    }
+    assert!(workers.windows(2).all(|w| w[0] == w[1]), "turns must stick to one worker");
+    let m = client.metrics().unwrap();
+    assert_eq!(metric(&m, "session_turns"), 3.0);
+    assert!(
+        metric(&m, "prefix_tokens_reused") > 0.0,
+        "turn 2+ must reuse the conversation's KV chain"
+    );
+    assert!(metric(&m, "pages_in_use") > 0.0, "the session chain holds pages while open");
+    client.close_session(sid).unwrap();
+    // the close is async on the worker; poll briefly for the free
+    let mut freed = false;
+    for _ in 0..50 {
+        let m = client.metrics().unwrap();
+        if metric(&m, "pages_in_use") == 0.0 {
+            freed = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert!(freed, "closing the session must return the pool to baseline");
+    handle.stop();
 }
 
 #[test]

@@ -3,13 +3,15 @@
 //! cases; failures print the seed so they replay deterministically.
 
 use polarquant::coordinator::router::Router;
+use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request};
 use polarquant::kvcache::eviction::snapkv_select;
 use polarquant::kvcache::stream::GroupValues;
 use polarquant::kvcache::tier::serde::{decode_page, encode_page};
 use polarquant::kvcache::{CacheConfig, Page, SequenceCache};
+use polarquant::model::ModelConfig;
 use polarquant::quant::pack::PackedCodes;
-use polarquant::quant::value;
 use polarquant::quant::polar::{self, PolarSpec};
+use polarquant::quant::value;
 use polarquant::quant::{dequantize, qparams, quantize, QkLut, QuantSpec, SeqScoreJob};
 use polarquant::tensor::ops::dot;
 use polarquant::util::rng::Rng;
@@ -409,6 +411,97 @@ fn prop_router_conservation() {
                 assert_eq!(r.load(w), outstanding[w], "seed {seed}");
             }
         }
+    }
+}
+
+fn prop_engine_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.vocab = 64;
+    cfg.d_model = 32;
+    cfg.n_heads = 4;
+    cfg.n_kv_heads = 2;
+    cfg.head_dim = 16;
+    cfg.ffn = 48;
+    cfg.group = 8;
+    cfg.resid = 16;
+    cfg
+}
+
+#[test]
+fn prop_seeded_sampling_is_bit_identical_across_decode_widths() {
+    // The streaming API's reproducibility contract: identical
+    // GenOptions{seed} sampled rollouts are bit-identical no matter how
+    // many decode workers the engine fans over (the per-token RNG is a
+    // pure function of (request seed, token index), never of shard
+    // assignment).  Exact-mode chunking keeps the logits identical too.
+    for case in 0..10u64 {
+        let mut rng = Rng::new(8000 + case);
+        let n_reqs = rng.range(1, 4);
+        let reqs: Vec<Request> = (0..n_reqs)
+            .map(|i| {
+                let plen = rng.range(3, 30);
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(64) as u32).collect();
+                let gen = GenOptions {
+                    max_new_tokens: rng.range(4, 12),
+                    temperature: rng.uniform_in(0.3, 1.5),
+                    top_k: if rng.chance(0.5) { rng.range(2, 32) } else { 0 },
+                    top_p: if rng.chance(0.5) { rng.uniform_in(0.7, 1.0) } else { 1.0 },
+                    seed: rng.next_u64(),
+                    stop_tokens: Vec::new(),
+                    logprobs: false,
+                    snapkv: None,
+                };
+                Request::new(i as u64 + 1, prompt, gen)
+            })
+            .collect();
+        let chunk = rng.range(1, 3) * 8;
+        let run = |workers: usize| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = chunk; // exact mode: logits width-invariant
+            opts.decode_workers = workers;
+            let mut eng = Engine::native_synthetic(prop_engine_cfg(), 300 + case, 4.0, opts);
+            for r in &reqs {
+                eng.submit(r.clone()).unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        let inline = run(1);
+        assert_eq!(inline, run(3), "case {case}: width 3 diverged");
+        assert_eq!(inline, run(8), "case {case}: width 8 diverged");
+    }
+}
+
+#[test]
+fn prop_cancel_at_any_point_returns_pool_to_baseline() {
+    // Cancel a request after a random number of engine steps — mid
+    // queue, mid prefill, or mid decode — and the page pool plus the
+    // byte counters must land exactly back at zero every time.
+    for case in 0..20u64 {
+        let mut rng = Rng::new(8600 + case);
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        let mut eng = Engine::native_synthetic(prop_engine_cfg(), 400 + case, 4.0, opts);
+        let plen = rng.range(4, 40);
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(64) as u32).collect();
+        eng.submit(Request::greedy(1, prompt, 16)).unwrap();
+        for _ in 0..rng.range(0, 12) {
+            if eng.idle() {
+                break;
+            }
+            eng.step().unwrap();
+        }
+        if !eng.idle() {
+            let c = eng.cancel(1).expect("request is live");
+            assert!(!c.rejected, "case {case}");
+        }
+        assert!(eng.idle(), "case {case}");
+        let r = eng.cache_report();
+        assert_eq!(r.physical_bytes, 0, "case {case}: leaked bytes");
+        assert_eq!(eng.page_pool().pages_in_use(), 0, "case {case}: leaked pages");
+        assert_eq!(r.tokens, 0, "case {case}: leaked sequences");
     }
 }
 
