@@ -41,6 +41,7 @@ use crate::kvcache::eviction::{gather_rows, snapkv_select};
 use crate::kvcache::{CacheManager, PagePool, SharedSeq, TierConfig};
 use crate::model::sampling::token_rng;
 use crate::model::{Model, ModelConfig, Weights};
+use crate::quant::{select_kernel, KernelKind};
 use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
 
@@ -107,6 +108,11 @@ pub struct EngineOpts {
     /// cold prefills run the identical computation — greedy decode is
     /// bit-identical with the flag on or off.
     pub prefix_cache: bool,
+    /// Score-kernel backend for the native LUT QK path (`--kernel`).
+    /// Availability of an explicit `Simd` choice is validated at the CLI
+    /// boundary ([`crate::quant::select_kernel`]); `Auto` never fails.
+    /// A pure performance knob: every kernel is bit-identical.
+    pub kernel: KernelKind,
 }
 
 impl Default for EngineOpts {
@@ -122,6 +128,7 @@ impl Default for EngineOpts {
             prefill_quantize_eagerly: false,
             cache_pages: 0,
             prefix_cache: false,
+            kernel: KernelKind::Auto,
         }
     }
 }
@@ -169,7 +176,19 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(backend: Backend, cfg: ModelConfig, opts: EngineOpts) -> Self {
+        let mut backend = backend;
         let mut opts = opts;
+        if let Backend::Native(model) = &mut backend {
+            // resolve --kernel ONCE, before the decode pool forks workers,
+            // so every worker's LUT inherits the same backend.  An
+            // explicit `simd` on unsupported hardware/builds is rejected
+            // at the CLI boundary; library callers constructing EngineOpts
+            // directly get the same strictness here.
+            model.set_kernel(
+                select_kernel(opts.kernel)
+                    .expect("kernel availability is validated at the CLI boundary"),
+            );
+        }
         if opts.prefix_cache && opts.prefill_chunk > 0 {
             // Prefix sharing hands out QUANTIZED pages, so a prompt that
             // attaches to them must score the rest of its prefill exactly
@@ -261,6 +280,16 @@ impl Engine {
     /// Decode parallelism of the native backend (1 = inline).
     pub fn decode_pool_width(&self) -> usize {
         self.pool.as_ref().map(|p| p.width()).unwrap_or(1)
+    }
+
+    /// The score kernel actually running QK lookups ("scalar" / "simd";
+    /// "pjrt-graph" when scoring happens inside the AOT graphs instead).
+    /// Server startup log + admin `metrics` reply.
+    pub fn kernel_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Native(m) => m.kernel_name(),
+            Backend::Pjrt(_) => "pjrt-graph",
+        }
     }
 
     /// Chunked-prefill grant size in effect (0 = whole-prompt prefill).

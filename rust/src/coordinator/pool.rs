@@ -10,7 +10,11 @@
 //! * **Thread-local scratch.**  Each worker owns a [`Model::fork`] — the
 //!   weights are shared behind one `Arc`, the `QkLut`, score and
 //!   activation buffers are private — so the LUT hot loop never shares a
-//!   cache line between workers.
+//!   cache line between workers.  The fork also carries the engine's
+//!   resolved [`crate::quant::ScoreKernel`] (`--kernel`), so every
+//!   worker scores through the same scalar/SIMD backend as the inline
+//!   path — kernels are bit-identical, so worker count remains
+//!   invisible in the output.
 //! * **Shard-safe cache access.**  Tasks carry [`SharedSeq`] handles.  The
 //!   scheduler assigns disjoint shards ([`super::batcher::plan_decode_shards`]),
 //!   so each per-sequence mutex is uncontended in the steady state.
@@ -280,5 +284,18 @@ mod tests {
             assert_eq!(out.len(), 1, "step {step}");
         }
         assert_eq!(cache.lock().unwrap().len(), 3 + 4);
+    }
+
+    #[test]
+    fn forked_workers_inherit_the_engine_kernel() {
+        use crate::quant::{select_kernel, KernelKind};
+        let cfg = tiny_cfg();
+        let mut model = Model::new(cfg.clone(), Weights::synthetic(&cfg, 13, 4.0));
+        model.set_kernel(select_kernel(KernelKind::Scalar).unwrap());
+        assert_eq!(model.kernel_name(), "scalar");
+        assert_eq!(model.fork().kernel_name(), "scalar", "fork preserves the kernel");
+        // the auto default also survives forking
+        let auto = Model::new(cfg.clone(), Weights::synthetic(&cfg, 13, 4.0));
+        assert_eq!(auto.fork().kernel_name(), auto.kernel_name());
     }
 }

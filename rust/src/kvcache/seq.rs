@@ -406,19 +406,20 @@ impl SequenceCache {
                 let st = self.stream(layer, head);
                 let base = layer * h + head;
                 for (gi, (grp, _)) in st.groups().enumerate() {
-                    // codes
+                    // codes: in-memory planes are channel-major (pack v2);
+                    // DenseCache keeps its external token-major contract
                     grp.theta_codes.unpack_into(&mut codes_scratch);
                     for n in 0..grp.tokens {
                         for j in 0..d2 {
                             out.theta_code[((base * s_cap) + gi * g + n) * d2 + j] =
-                                codes_scratch[n * d2 + j] as i32;
+                                codes_scratch[j * grp.tokens + n] as i32;
                         }
                     }
                     grp.rho_codes.unpack_into(&mut codes_scratch);
                     for n in 0..grp.tokens {
                         for j in 0..d2 {
                             out.rho_code[((base * s_cap) + gi * g + n) * d2 + j] =
-                                codes_scratch[n * d2 + j] as i32;
+                                codes_scratch[j * grp.tokens + n] as i32;
                         }
                     }
                     // params

@@ -15,10 +15,22 @@
 //! u64 fnv1a-64 checksum over every preceding byte
 //! ```
 //!
-//! A packed code stream is `u8 bits, u32 n, ceil(n*bits/8) bytes` — the
-//! exact at-rest bitstream from [`crate::quant::pack::PackedCodes`], so
+//! A packed code stream is `u8 bits, u32 n, <packed bytes>` — the exact
+//! at-rest bytes from [`crate::quant::pack::PackedCodes`], so
 //! encode→decode is bit-for-bit: dequantization of a promoted page is the
 //! same arithmetic on the same codes and the same param bit patterns.
+//! The byte count is a function of the record version:
+//!
+//! * **v2 (current)** — pack layout v2 lane bytes
+//!   ([`crate::quant::pack::lane_nbytes`]); key code planes are
+//!   channel-major, matching the in-memory [`PolarGroup`] layout.
+//! * **v1 (legacy, read-only)** — the tight `ceil(n*bits/8)` bitstream
+//!   written before the pack-layout bump, with key codes token-major.
+//!   On decode the codes are unpacked bit-exactly, key planes transposed
+//!   to channel-major, and everything repacked into v2 lanes — so a
+//!   promoted v1 page is indistinguishable from one encoded today, and
+//!   its next demotion rewrites it as v2.
+//!
 //! The fused `combined` plane (see [`PolarGroup::combined`]) is NOT
 //! stored: it is a pure function of the rho/theta planes and is rebuilt
 //! at decode, byte-identical to what `encode_group` would have produced.
@@ -33,11 +45,15 @@ use anyhow::{bail, ensure, Result};
 use crate::kvcache::pool::Page;
 use crate::kvcache::stream::GroupValues;
 use crate::quant::int_n::IntEncoded;
-use crate::quant::pack::PackedCodes;
+use crate::quant::pack::{lane_nbytes, PackedCodes};
 use crate::quant::polar::PolarGroup;
 
 pub const PAGE_MAGIC: u32 = 0x5051_5047; // "PQPG"
-pub const PAGE_VERSION: u16 = 1;
+/// v2: pack-layout-v2 lane bytes, channel-major key planes.  v1 records
+/// (tight bitstream, token-major keys) remain readable — see module doc.
+pub const PAGE_VERSION: u16 = 2;
+/// Oldest record version [`decode_page`] still reads.
+pub const PAGE_VERSION_MIN: u16 = 1;
 
 /// FNV-1a 64 — the same cheap deterministic hash family the prefix index
 /// chains with; here it guards against torn/corrupt segment records.
@@ -164,12 +180,19 @@ impl<'a> Cur<'a> {
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn packed(&mut self) -> Result<PackedCodes> {
+    /// One packed code stream at the record's version: v2 lane bytes or
+    /// the legacy v1 tight bitstream.
+    fn packed(&mut self, version: u16) -> Result<PackedCodes> {
         let bits = self.u8()? as u32;
         ensure!((1..=8).contains(&bits), "packed stream: bad bit width {bits}");
         let n = self.u32()? as usize;
-        let raw = self.take((n * bits as usize).div_ceil(8))?;
-        PackedCodes::from_raw(bits, n, raw.to_vec()).map_err(anyhow::Error::msg)
+        if version == 1 {
+            let raw = self.take((n * bits as usize).div_ceil(8))?;
+            PackedCodes::from_raw_v1(bits, n, raw.to_vec()).map_err(anyhow::Error::msg)
+        } else {
+            let raw = self.take(lane_nbytes(bits, n))?;
+            PackedCodes::from_raw(bits, n, raw.to_vec()).map_err(anyhow::Error::msg)
+        }
     }
 
     pub(crate) fn done(&self) -> bool {
@@ -190,9 +213,25 @@ fn rebuild_combined(rc: &PackedCodes, tc: &PackedCodes) -> Option<PackedCodes> {
     }
 }
 
+/// Unpack a legacy token-major key-code plane and repack it as a
+/// channel-major v2 lane plane — code values are untouched, so the
+/// migrated group is bit-identical to one encoded by the current writer
+/// from the same data.
+fn migrate_v1_key_plane(p: &PackedCodes, tokens: usize, d2: usize) -> PackedCodes {
+    let old = p.unpack(); // token-major: old[n * d2 + j]
+    let mut cm = vec![0u8; old.len()];
+    for n in 0..tokens {
+        for j in 0..d2 {
+            cm[j * tokens + n] = old[n * d2 + j];
+        }
+    }
+    PackedCodes::from_codes(&cm, p.bits)
+}
+
 /// Parse and verify one record.  Any corruption — bad magic, unknown
 /// version, failed checksum, inconsistent lengths, trailing bytes —
-/// returns `Err`.
+/// returns `Err`.  Version-1 records are migrated to the in-memory v2
+/// layout on the fly (see module doc).
 pub fn decode_page(buf: &[u8]) -> Result<Page> {
     ensure!(buf.len() >= 4 + 2 + 2 + 4 + 4 + 8, "tier record too short ({} bytes)", buf.len());
     let (body, tail) = buf.split_at(buf.len() - 8);
@@ -203,7 +242,10 @@ pub fn decode_page(buf: &[u8]) -> Result<Page> {
     let magic = c.u32()?;
     ensure!(magic == PAGE_MAGIC, "tier record bad magic {magic:#x}");
     let version = c.u16()?;
-    ensure!(version == PAGE_VERSION, "tier record version {version} (reader is v{PAGE_VERSION})");
+    ensure!(
+        (PAGE_VERSION_MIN..=PAGE_VERSION).contains(&version),
+        "tier record version {version} (reader handles v{PAGE_VERSION_MIN}..=v{PAGE_VERSION})"
+    );
     let _flags = c.u16()?;
     let tokens = c.u32()? as usize;
     let n_streams = c.u32()? as usize;
@@ -218,12 +260,19 @@ pub fn decode_page(buf: &[u8]) -> Result<Page> {
         let rho_s = c.f32s(d2)?;
         let theta_z = c.f32s(d2)?;
         let theta_s = c.f32s(d2)?;
-        let rho_codes = c.packed()?;
-        let theta_codes = c.packed()?;
+        let mut rho_codes = c.packed(version)?;
+        let mut theta_codes = c.packed(version)?;
         ensure!(
             rho_codes.n == tokens * d2 && theta_codes.n == tokens * d2,
             "tier record: code count disagrees with geometry"
         );
+        if version == 1 {
+            // pre-bump key planes are token-major bitstreams; everything
+            // downstream (the SIMD kernel above all) assumes channel-major
+            // v2 lanes
+            rho_codes = migrate_v1_key_plane(&rho_codes, tokens, d2);
+            theta_codes = migrate_v1_key_plane(&theta_codes, tokens, d2);
+        }
         let combined = rebuild_combined(&rho_codes, &theta_codes);
         keys.push(PolarGroup {
             rho_codes,
@@ -246,7 +295,12 @@ pub fn decode_page(buf: &[u8]) -> Result<Page> {
                 ensure!(vt == tokens, "tier record: value token count disagrees");
                 let z = c.f32s(vt)?;
                 let s = c.f32s(vt)?;
-                let codes = c.packed()?;
+                let mut codes = c.packed(version)?;
+                if version == 1 {
+                    // value codes keep their logical order; only the
+                    // physical packing moves to v2 lanes
+                    codes = PackedCodes::from_codes(&codes.unpack(), codes.bits);
+                }
                 let bits = codes.bits;
                 ensure!(codes.n % vt == 0, "tier record: value code count not token-aligned");
                 vals.push(GroupValues::Quant(IntEncoded { codes, z, s, bits }));
@@ -256,6 +310,58 @@ pub fn decode_page(buf: &[u8]) -> Result<Page> {
     }
     ensure!(c.done(), "tier record: {} trailing bytes", body.len() - c.p);
     Ok(Page::new(keys, vals, tokens))
+}
+
+/// Replicates the PRE-BUMP (PAGE_VERSION 1) writer byte-for-byte: tight
+/// little-endian bitstreams, key code planes token-major.  Test-only —
+/// production code never writes v1 — but kept faithful so the migration
+/// tests (here and in `super::store`) exercise real legacy segment
+/// bytes.
+#[cfg(test)]
+pub(crate) fn encode_page_v1(page: &Page) -> Vec<u8> {
+    let to_v1_token_major = |p: &PackedCodes, tokens: usize, d2: usize| {
+        let cm = p.unpack(); // in-memory layout is channel-major
+        let mut tm = vec![0u8; cm.len()];
+        for n in 0..tokens {
+            for j in 0..d2 {
+                tm[n * d2 + j] = cm[j * tokens + n];
+            }
+        }
+        PackedCodes::from_codes_v1(&tm, p.bits)
+    };
+    let mut buf = Vec::new();
+    put_u32(&mut buf, PAGE_MAGIC);
+    put_u16(&mut buf, 1);
+    put_u16(&mut buf, 0);
+    put_u32(&mut buf, page.tokens as u32);
+    put_u32(&mut buf, page.keys.len() as u32);
+    for (g, v) in page.keys.iter().zip(&page.vals) {
+        let d2 = g.rho_z.len();
+        put_u32(&mut buf, d2 as u32);
+        put_f32s(&mut buf, &g.rho_z);
+        put_f32s(&mut buf, &g.rho_s);
+        put_f32s(&mut buf, &g.theta_z);
+        put_f32s(&mut buf, &g.theta_s);
+        put_packed(&mut buf, &to_v1_token_major(&g.rho_codes, g.tokens, d2));
+        put_packed(&mut buf, &to_v1_token_major(&g.theta_codes, g.tokens, d2));
+        match v {
+            GroupValues::Fp(x) => {
+                buf.push(0);
+                put_u32(&mut buf, x.len() as u32);
+                put_f32s(&mut buf, x);
+            }
+            GroupValues::Quant(e) => {
+                buf.push(1);
+                put_u32(&mut buf, e.z.len() as u32);
+                put_f32s(&mut buf, &e.z);
+                put_f32s(&mut buf, &e.s);
+                put_packed(&mut buf, &PackedCodes::from_codes_v1(&e.codes.unpack(), e.bits));
+            }
+        }
+    }
+    let sum = fnv1a(&buf);
+    put_u64(&mut buf, sum);
+    buf
 }
 
 #[cfg(test)]
@@ -344,5 +450,32 @@ mod tests {
         enc[body_len..].copy_from_slice(&sum.to_le_bytes());
         let err = decode_page(&enc).unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // ...and so is a version below the supported floor
+        enc[4] = 0;
+        let sum = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode_page(&enc).is_err());
+    }
+
+    #[test]
+    fn v1_records_migrate_bit_exactly() {
+        // Pages demoted by pre-refactor builds must promote into EXACTLY
+        // the page the current encoder would produce: same code values in
+        // the new channel-major lanes, same fused plane, same params —
+        // so scoring against a migrated page is bit-identical.
+        for (seed, r, t, vbits) in [(31u64, 4u32, 4u32, Some(4)), (32, 5, 5, None), (33, 3, 2, Some(2))] {
+            let p = page(seed, r, t, 8, 16, 3, vbits);
+            let legacy = encode_page_v1(&p);
+            assert_ne!(legacy, encode_page(&p), "v1 bytes differ from v2 on disk");
+            let dec = decode_page(&legacy).expect("v1 record must decode");
+            for (a, b) in p.keys.iter().zip(&dec.keys) {
+                assert_eq!(a.rho_codes, b.rho_codes, "migrated rho plane");
+                assert_eq!(a.theta_codes, b.theta_codes, "migrated theta plane");
+                assert_eq!(a.combined, b.combined, "fused plane rebuilt identically");
+            }
+            // re-demoting the promoted page writes the CURRENT format,
+            // byte-identical to encoding the original page
+            assert_eq!(encode_page(&dec), encode_page(&p));
+        }
     }
 }

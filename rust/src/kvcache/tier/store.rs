@@ -212,4 +212,34 @@ mod tests {
         assert!(store.get(bogus).is_err());
         fs::remove_dir_all(&dir).unwrap();
     }
+
+    #[test]
+    fn pre_bump_v1_segment_records_promote_bit_exactly() {
+        // A tier directory left behind by a pre-pack-layout-bump build:
+        // seg-000000.bin holds a PAGE_VERSION-1 record.  Opening the
+        // store over it and promoting through a TierRef — exactly what a
+        // restored snapshot index does — must yield the page the current
+        // encoder would produce, and new writes must land in a fresh
+        // segment, leaving the legacy file untouched.
+        let dir = tmp("v1-migrate");
+        fs::create_dir_all(&dir).unwrap();
+        let p = page(21);
+        let legacy = serde::encode_page_v1(&p);
+        fs::write(seg_path(&dir, 0), &legacy).unwrap();
+
+        let store = SegmentStore::open(&dir, 1 << 20).unwrap();
+        let r = TierRef { seg: 0, off: 0, len: legacy.len() as u32 };
+        let got = store.get(r).unwrap();
+        assert_eq!(
+            serde::encode_page(&got),
+            serde::encode_page(&p),
+            "promoted v1 page must be bit-identical to a freshly encoded one"
+        );
+        // re-demote: the rewrite is v2, in a new segment
+        let r1 = store.put(&got).unwrap();
+        assert!(r1.seg > 0, "reopen continues past the legacy segment");
+        assert_eq!(fs::read(seg_path(&dir, 0)).unwrap(), legacy, "legacy segment immutable");
+        assert_eq!(serde::encode_page(&store.get(r1).unwrap()), serde::encode_page(&p));
+        fs::remove_dir_all(&dir).unwrap();
+    }
 }

@@ -39,7 +39,10 @@
 //! restarts (written on `{"admin":"shutdown"}`, restored at boot).
 //! `--snapkv-budget N --snapkv-window W` (native/synthetic, whole-prompt
 //! prefill only) compresses each prompt to its N most-attended tokens
-//! before quantization (paper Table 8).
+//! before quantization (paper Table 8).  `--kernel auto|scalar|simd`
+//! picks the QK score kernel (`quant::lut::ScoreKernel`); kernels are
+//! bit-identical, so it is purely a performance knob — an explicit
+//! `simd` is rejected up front when the build or CPU can't run it.
 //!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
@@ -53,7 +56,7 @@ use anyhow::{bail, Context, Result};
 use polarquant::coordinator::engine::SnapKvOpts;
 use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request, TierOpts};
 use polarquant::eval::{eval_codec, Table};
-use polarquant::quant::QuantSpec;
+use polarquant::quant::{select_kernel, KernelKind, QuantSpec};
 use polarquant::runtime::Manifest;
 use polarquant::server::{serve, Client, GenParams};
 use polarquant::util::json;
@@ -97,6 +100,7 @@ const SERVE: CmdSpec = CmdSpec {
         flag("addr", "HOST:PORT", "127.0.0.1:7733", "listen address"),
         flag("workers", "N", "1", "engine worker threads"),
         flag("backend", "NAME", "pjrt", "pjrt | native | synthetic"),
+        flag("kernel", "NAME", "auto", "QK score kernel: auto | scalar | simd"),
         flag("decode-workers", "N", "1", "decode threads per engine (1 = inline)"),
         flag("prefill-chunk", "N", "0", "chunked prefill tokens per step (0 = off)"),
         flag("cache-pages", "N", "0", "page-pool capacity in group-pages (0 = unbounded)"),
@@ -122,6 +126,7 @@ const GENERATE: CmdSpec = CmdSpec {
         flag("top-p", "P", "1.0", "nucleus sampling mass (1.0 = off)"),
         flag("seed", "N", "0", "per-request sampling seed (reproducible rollouts)"),
         flag("stop", "T1,T2,..", "", "stop generation at any of these token ids"),
+        flag("kernel", "NAME", "auto", "QK score kernel: auto | scalar | simd"),
         flag("decode-workers", "N", "1", "decode threads (1 = inline)"),
         flag("prefill-chunk", "N", "0", "chunked prefill tokens per step (0 = off)"),
         flag("cache-pages", "N", "0", "page-pool capacity in group-pages (0 = unbounded)"),
@@ -359,6 +364,11 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
     opts.cache_pages = args.usize("cache-pages", 0)?;
     // prefix caching: share quantized prefix pages across requests
     opts.prefix_cache = args.on_off("prefix-cache", false)?;
+    // QK score kernel; availability of an explicit `simd` is checked HERE
+    // so a bad flag is a clean CLI error, not a worker-thread panic
+    opts.kernel = KernelKind::parse(&args.get("kernel", "auto"))
+        .map_err(|e| anyhow::anyhow!("--kernel: {e}"))?;
+    select_kernel(opts.kernel).map_err(|e| anyhow::anyhow!("--kernel: {e}"))?;
     let backend = args.get("backend", "pjrt");
     if !matches!(backend.as_str(), "pjrt" | "native" | "synthetic") {
         bail!("unknown backend '{backend}' (pjrt|native|synthetic)");
@@ -741,5 +751,34 @@ mod tests {
         let spec = spec_of(&parts).unwrap();
         assert!(spec.tier.is_some());
         assert!(spec.opts.prefix_cache);
+    }
+
+    #[test]
+    fn kernel_flag_is_validated_strictly() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // default and explicit valid names parse
+        assert_eq!(spec_of(&["--backend", "synthetic"]).unwrap().opts.kernel, KernelKind::Auto);
+        let parts = ["--backend", "synthetic", "--kernel", "scalar"];
+        assert_eq!(spec_of(&parts).unwrap().opts.kernel, KernelKind::Scalar);
+        // garbage is a clean CLI error naming the valid choices
+        let parts = ["--backend", "synthetic", "--kernel", "gpu"];
+        let err = spec_of(&parts).err().expect("bad kernel name must be rejected");
+        assert!(format!("{err:#}").contains("auto|scalar|simd"), "{err:#}");
+        // an explicit simd must be validated against this build/CPU up
+        // front — accepted only when the vectorized path can really run
+        let parts = ["--backend", "synthetic", "--kernel", "simd"];
+        match spec_of(&parts) {
+            Ok(spec) => {
+                assert!(polarquant::quant::simd_available());
+                assert_eq!(spec.opts.kernel, KernelKind::Simd);
+            }
+            Err(e) => {
+                assert!(!polarquant::quant::simd_available());
+                assert!(format!("{e:#}").contains("simd"), "{e:#}");
+            }
+        }
+        // generate shares the flag
+        let a = parse_ok(&["--kernel", "scalar"], &GENERATE);
+        assert_eq!(a.get("kernel", "auto"), "scalar");
     }
 }

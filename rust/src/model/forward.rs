@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use crate::kvcache::stream::GroupValues;
 use crate::kvcache::SequenceCache;
-use crate::quant::lut::QkLut;
+use crate::quant::lut::{default_kernel, QkLut, ScoreKernel};
 use crate::quant::value;
 use crate::tensor::ops::*;
 
@@ -29,6 +29,10 @@ pub struct Model {
     /// decode-pool worker; only the scratch below is per-thread
     pub weights: Arc<Weights>,
     freqs: Vec<f32>,
+    /// the score-kernel backend every LUT built by this model uses
+    /// ([`crate::quant::lut::select_kernel`]); [`Model::fork`] propagates
+    /// it, so decode-pool workers inherit the engine's `--kernel` choice
+    kernel: &'static dyn ScoreKernel,
     // decode-step scratch (allocation-free steady state)
     lut: QkLut,
     scores: Vec<Vec<f32>>,
@@ -51,11 +55,23 @@ impl Model {
 
     /// Build a model over already-shared weights (decode-pool workers).
     pub fn from_shared(cfg: ModelConfig, weights: Arc<Weights>) -> Self {
+        Model::from_shared_with_kernel(cfg, weights, default_kernel())
+    }
+
+    /// [`Model::from_shared`] with an explicit [`ScoreKernel`] — the
+    /// engine resolves `--kernel` once and builds/forks models through
+    /// this so every LUT in the process agrees.
+    pub fn from_shared_with_kernel(
+        cfg: ModelConfig,
+        weights: Arc<Weights>,
+        kernel: &'static dyn ScoreKernel,
+    ) -> Self {
         let dh = cfg.head_dim;
         let hq = cfg.q_per_kv();
         Model {
             freqs: rope_freqs(dh, cfg.rope_base),
-            lut: QkLut::new(cfg.polar_spec(), dh, hq),
+            kernel,
+            lut: QkLut::with_kernel(cfg.polar_spec(), dh, hq, kernel),
             scores: vec![Vec::new(); hq],
             attn_out: vec![0.0; cfg.n_heads * dh],
             x: vec![0.0; cfg.d_model],
@@ -75,8 +91,22 @@ impl Model {
     /// A new model sharing these weights with FRESH scratch (LUT, score
     /// and activation buffers) — what each decode-pool worker thread owns.
     /// Cost: a handful of small allocations; the weights are never copied.
+    /// The score kernel carries over, so workers match their engine.
     pub fn fork(&self) -> Model {
-        Model::from_shared(self.cfg.clone(), self.weights.clone())
+        Model::from_shared_with_kernel(self.cfg.clone(), self.weights.clone(), self.kernel)
+    }
+
+    /// Swap the score kernel (and rebind the decode LUT to it).  Called
+    /// by the engine BEFORE the decode pool forks its workers.
+    pub fn set_kernel(&mut self, kernel: &'static dyn ScoreKernel) {
+        self.kernel = kernel;
+        self.lut.set_kernel(kernel);
+    }
+
+    /// Name of the active score kernel ("scalar" / "simd") — surfaced in
+    /// the server startup log and the admin `metrics` reply.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     /// Full-precision causal prefill; appends post-RoPE K/V to `cache` and
@@ -307,8 +337,8 @@ impl Model {
         // quantized group is unpacked and its basis built once per
         // (layer, kv-head) — not once per chunk row.  Only needed when
         // the cache already holds quantized groups (eager mode).
-        let mut chunk_lut =
-            (cache.quantized_len() > 0).then(|| QkLut::new(cfg.polar_spec(), dh, c * hq));
+        let mut chunk_lut = (cache.quantized_len() > 0)
+            .then(|| QkLut::with_kernel(cfg.polar_spec(), dh, c * hq, self.kernel));
         let mut scores: Vec<Vec<f32>> = vec![Vec::new(); c * hq];
 
         for layer in 0..cfg.n_layers {

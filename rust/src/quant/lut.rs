@@ -18,8 +18,274 @@
 //! is shared across all query heads attached to a kv head
 //! ([`QkLut::scores_multi`]), which is how the paper's Triton kernel
 //! amortizes LUT construction across the head group.
+//!
+//! # Kernels
+//!
+//! The gather+accumulate inner loop is behind the [`ScoreKernel`] trait:
+//! [`ScalarKernel`] is the portable baseline, [`SimdKernel`] is an AVX2
+//! gather kernel compiled under `--features simd` (x86_64 only, runtime
+//! `avx2` detection, scalar fallback otherwise — offline CI builds
+//! without the feature).  Both operate on the staged channel-major lanes
+//! from pack layout v2: codes as `[d2 × tokens]` u8 planes, rho
+//! dequantized into matching f32 lanes.  The SIMD kernel vectorizes
+//! ACROSS TOKENS — eight accumulators, each summing its token's partial
+//! products in the same ascending-`j` order as the scalar kernel, with
+//! mul-then-add (never FMA-contracted) — so the two kernels are
+//! **bit-identical**, fused and general paths alike.  Every public entry
+//! point (`scores`, `scores_multi`, `scores_groups`, `scores_batch`) is
+//! a thin shim over the same staged walk + kernel dispatch.
 
 use super::polar::{PolarEncoded, PolarGroup, PolarSpec};
+
+/// Which score kernel to use (`--kernel`, [`select_kernel`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// the SIMD kernel when compiled in (`--features simd`) and the CPU
+    /// supports AVX2, else scalar
+    #[default]
+    Auto,
+    Scalar,
+    Simd,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(KernelKind::Auto),
+            "scalar" => Ok(KernelKind::Scalar),
+            "simd" => Ok(KernelKind::Simd),
+            _ => Err(format!("unknown kernel '{s}' (expected auto|scalar|simd)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+/// The gather+accumulate inner loop of the LUT score path.
+///
+/// Implementations accumulate one staged group into `out` (len ==
+/// `tokens`, already holding the running sums — zeros for a fresh group):
+///
+/// ```text
+/// out[n] += Σ_j rho[j·tokens + n] · lut[j·levels + (codes[j·tokens + n] & t_mask)]
+/// ```
+///
+/// `codes` and `rho` are channel-major planes (`[d2 × tokens]`); `lut` is
+/// one head's table (`[d2 × levels]`).  The mask strips the rho bits off
+/// fused `(rho << t_bits) | theta` codes and is a no-op on plain theta
+/// codes, so one signature serves both staging paths.
+///
+/// CONTRACT: every implementation must perform, per token, the exact
+/// same f32 operation sequence (ascending `j`, mul then add) — kernels
+/// are interchangeable bit-for-bit, which is what lets `--kernel` be a
+/// pure performance knob with no effect on greedy decode output.
+pub trait ScoreKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate(
+        &self,
+        lut: &[f32],
+        levels: usize,
+        t_mask: u8,
+        d2: usize,
+        tokens: usize,
+        codes: &[u8],
+        rho: &[f32],
+        out: &mut [f32],
+    );
+}
+
+/// Portable baseline: lane-at-a-time over channel planes.  The `j`-outer
+/// loop order keeps the code/rho access contiguous; each token's partial
+/// sums still land in ascending-`j` order (the bit-exactness contract).
+pub struct ScalarKernel;
+
+impl ScoreKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn accumulate(
+        &self,
+        lut: &[f32],
+        levels: usize,
+        t_mask: u8,
+        d2: usize,
+        tokens: usize,
+        codes: &[u8],
+        rho: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert!(out.len() == tokens && codes.len() >= d2 * tokens);
+        for j in 0..d2 {
+            let lut_j = &lut[j * levels..(j + 1) * levels];
+            let lane_c = &codes[j * tokens..(j + 1) * tokens];
+            let lane_r = &rho[j * tokens..(j + 1) * tokens];
+            for n in 0..tokens {
+                out[n] += lane_r[n] * lut_j[(lane_c[n] & t_mask) as usize];
+            }
+        }
+    }
+}
+
+/// AVX2 gather kernel: eight tokens per iteration, `vpgatherdps` against
+/// the per-channel LUT rows.  Requires `--features simd`; without it (or
+/// off x86_64, or on a CPU without AVX2) it falls back to the scalar
+/// kernel, so a `SimdKernel` handle is always safe to call.
+pub struct SimdKernel;
+
+impl ScoreKernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn accumulate(
+        &self,
+        lut: &[f32],
+        levels: usize,
+        t_mask: u8,
+        d2: usize,
+        tokens: usize,
+        codes: &[u8],
+        rho: &[f32],
+        out: &mut [f32],
+    ) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if is_x86_feature_detected!("avx2") {
+            debug_assert!(out.len() == tokens && codes.len() >= d2 * tokens);
+            // SAFETY: avx2 verified above; slice bounds checked by the
+            // debug assert and re-derived inside from the same lengths
+            unsafe { avx2::accumulate(lut, levels, t_mask, d2, tokens, codes, rho, out) };
+            return;
+        }
+        ScalarKernel.accumulate(lut, levels, t_mask, d2, tokens, codes, rho, out)
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Eight tokens per vector: lane `i` accumulates token `n0+i`'s score
+    /// in ascending-`j` order with mul-then-add — the same per-token f32
+    /// sequence as [`super::ScalarKernel`], hence bit-identical output.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub unsafe fn accumulate(
+        lut: &[f32],
+        levels: usize,
+        t_mask: u8,
+        d2: usize,
+        tokens: usize,
+        codes: &[u8],
+        rho: &[f32],
+        out: &mut [f32],
+    ) {
+        let mask = _mm256_set1_epi32(t_mask as i32);
+        let mut n0 = 0usize;
+        while n0 + 8 <= tokens {
+            let mut acc = _mm256_loadu_ps(out.as_ptr().add(n0));
+            for j in 0..d2 {
+                let lane = j * tokens + n0;
+                // 8 code bytes -> 8 i32 gather indices into this
+                // channel's LUT row
+                let c8 = _mm_loadl_epi64(codes.as_ptr().add(lane) as *const __m128i);
+                let idx = _mm256_and_si256(_mm256_cvtepu8_epi32(c8), mask);
+                let vals = _mm256_i32gather_ps::<4>(lut.as_ptr().add(j * levels), idx);
+                let r8 = _mm256_loadu_ps(rho.as_ptr().add(lane));
+                // mul + add, NOT fma: matches scalar rounding exactly
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(r8, vals));
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(n0), acc);
+            n0 += 8;
+        }
+        // ragged tail: same ascending-j per-token sequence, scalar
+        for j in 0..d2 {
+            for n in n0..tokens {
+                out[n] += rho[j * tokens + n]
+                    * lut[j * levels + (codes[j * tokens + n] & t_mask) as usize];
+            }
+        }
+    }
+}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+static SIMD: SimdKernel = SimdKernel;
+
+/// True when the SIMD kernel would actually run vectorized: compiled with
+/// `--features simd` on x86_64 AND the CPU reports AVX2.
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Resolve a [`KernelKind`] to a kernel.  `Simd` errors when the
+/// vectorized path cannot run (strict `--kernel simd` semantics); `Auto`
+/// silently falls back to scalar.
+pub fn select_kernel(kind: KernelKind) -> Result<&'static dyn ScoreKernel, String> {
+    match kind {
+        KernelKind::Scalar => Ok(&SCALAR),
+        KernelKind::Simd => {
+            if simd_available() {
+                Ok(&SIMD)
+            } else if cfg!(feature = "simd") {
+                Err("kernel 'simd': CPU has no AVX2 support".into())
+            } else {
+                Err("kernel 'simd': binary built without the `simd` feature \
+                     (rebuild with `cargo build --release --features simd`)"
+                    .into())
+            }
+        }
+        KernelKind::Auto => {
+            Ok(if simd_available() { &SIMD as &dyn ScoreKernel } else { &SCALAR })
+        }
+    }
+}
+
+/// The `Auto` kernel — never fails.
+pub fn default_kernel() -> &'static dyn ScoreKernel {
+    select_kernel(KernelKind::Auto).expect("auto kernel selection is infallible")
+}
+
+/// Touch the next group's code plane and params while the current one is
+/// scored.  Groups on the decode path come one per `Arc<Page>`, so the
+/// walk is a pointer chase across the heap — without the prefetch every
+/// group boundary stalls on a cold line.  Only the head of the plane is
+/// prefetched; the hardware prefetcher streams the rest once the lane
+/// walk starts.
+#[inline]
+fn prefetch_group(g: &PolarGroup) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let bytes = g.combined.as_ref().unwrap_or(&g.theta_codes).as_bytes();
+        let mut off = 0usize;
+        while off < bytes.len().min(512) {
+            // SAFETY: in-bounds pointer; prefetch has no memory effects
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(bytes.as_ptr().add(off) as *const i8) };
+            off += 64;
+        }
+        unsafe {
+            _mm_prefetch::<_MM_HINT_T0>(g.rho_z.as_ptr() as *const i8);
+            _mm_prefetch::<_MM_HINT_T0>(g.theta_z.as_ptr() as *const i8);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = g;
+}
 
 /// Scratch + result buffers for repeated LUT QK calls (allocation-free at
 /// steady state — see EXPERIMENTS.md §Perf).
@@ -30,15 +296,27 @@ pub struct QkLut {
     basis: Vec<f32>,
     /// per-head tables: [heads * d2 * levels]
     lut: Vec<f32>,
-    /// unpacked codes for the current group
+    /// unpacked code planes for the current group (channel-major)
     rho_scratch: Vec<u8>,
     theta_scratch: Vec<u8>,
-    /// dequantized rho values
+    /// dequantized rho lanes (channel-major)
     rho_deq: Vec<f32>,
+    /// the gather+accumulate backend (kernels are stateless statics)
+    kernel: &'static dyn ScoreKernel,
 }
 
 impl QkLut {
     pub fn new(spec: PolarSpec, d: usize, max_heads: usize) -> Self {
+        QkLut::with_kernel(spec, d, max_heads, default_kernel())
+    }
+
+    /// Build with an explicit [`ScoreKernel`] (see [`select_kernel`]).
+    pub fn with_kernel(
+        spec: PolarSpec,
+        d: usize,
+        max_heads: usize,
+        kernel: &'static dyn ScoreKernel,
+    ) -> Self {
         let d2 = d / 2;
         let levels = 1usize << spec.t_bits;
         QkLut {
@@ -49,11 +327,20 @@ impl QkLut {
             rho_scratch: vec![0; spec.group * d2],
             theta_scratch: vec![0; spec.group * d2],
             rho_deq: vec![0.0; spec.group * d2],
+            kernel,
         }
     }
 
     pub fn spec(&self) -> &PolarSpec {
         &self.spec
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    pub fn set_kernel(&mut self, kernel: &'static dyn ScoreKernel) {
+        self.kernel = kernel;
     }
 
     /// Build the shared cos/sin basis for one group (trig happens ONCE per
@@ -89,15 +376,41 @@ impl QkLut {
         }
     }
 
-    /// Unpack codes + dequantize rho for one group.
+    /// Stage one group for the kernel: unpack its code plane(s) into the
+    /// channel-major byte scratch and dequantize rho into the f32 lanes
+    /// shared by every head.  Fused groups (r+t <= 8) pay ONE unpack —
+    /// the combined bytes serve directly as (masked) theta gather indices
+    /// while rho is split off arithmetically; general groups (r+t > 8)
+    /// unpack the two planes separately.  Either way the kernel sees the
+    /// same staged shape.
     fn stage_group(&mut self, g: &PolarGroup) {
-        g.rho_codes.unpack_into(&mut self.rho_scratch);
-        g.theta_codes.unpack_into(&mut self.theta_scratch);
-        for n in 0..g.tokens {
+        let plane = g.tokens * self.d2;
+        if self.theta_scratch.len() < plane {
+            self.theta_scratch.resize(plane, 0);
+            self.rho_scratch.resize(plane, 0);
+            self.rho_deq.resize(plane, 0.0);
+        }
+        let t_bits = self.spec.t_bits;
+        if let Some(combined) = &g.combined {
+            combined.unpack_into(&mut self.theta_scratch);
             for j in 0..self.d2 {
-                let idx = n * self.d2 + j;
-                self.rho_deq[idx] =
-                    (self.rho_scratch[idx] as f32 + 0.5) * g.rho_s[j] + g.rho_z[j];
+                let (z, s) = (g.rho_z[j], g.rho_s[j]);
+                let lane = j * g.tokens;
+                for n in 0..g.tokens {
+                    let rc = (self.theta_scratch[lane + n] >> t_bits) as f32;
+                    self.rho_deq[lane + n] = (rc + 0.5) * s + z;
+                }
+            }
+        } else {
+            g.theta_codes.unpack_into(&mut self.theta_scratch);
+            g.rho_codes.unpack_into(&mut self.rho_scratch);
+            for j in 0..self.d2 {
+                let (z, s) = (g.rho_z[j], g.rho_s[j]);
+                let lane = j * g.tokens;
+                for n in 0..g.tokens {
+                    self.rho_deq[lane + n] =
+                        (self.rho_scratch[lane + n] as f32 + 0.5) * s + z;
+                }
             }
         }
     }
@@ -105,85 +418,63 @@ impl QkLut {
     /// Scores for MULTIPLE query heads sharing one kv stream (GQA).
     ///
     /// `out[h]` receives `enc.tokens()` scores for query `qs[h]`.
+    /// Thin shim over [`QkLut::scores_groups`].
     pub fn scores_multi(&mut self, qs: &[&[f32]], enc: &PolarEncoded, out: &mut [Vec<f32>]) {
         self.scores_groups(qs, &enc.groups, out);
     }
 
-    /// Core kernel over borrowed groups — generic over any in-order group
-    /// source, so the paged kvcache's per-stream view
+    /// Core staged walk over borrowed groups — generic over any in-order
+    /// group source, so the paged kvcache's per-stream view
     /// ([`crate::kvcache::StreamView::key_groups`], one group per shared
     /// page) feeds it directly, with no contiguous `Vec<PolarGroup>` (and
     /// no `PolarEncoded` clone) materialized on the decode hot path.
     /// Plain slices still work (`&[PolarGroup]` iterates by reference).
     ///
-    /// Fast path (r+t <= 8): the group's combined (rho<<t | theta) codes
-    /// are unpacked ONCE into a byte scratch; rho is dequantized into a
-    /// staging row shared by all heads; the per-head loop is a pure
-    /// gather+fma over that row.  See EXPERIMENTS.md §Perf for the
-    /// before/after.
+    /// Per group: build the basis + per-head LUTs, stage the code planes
+    /// once (shared by all heads), then hand each head's table to the
+    /// selected [`ScoreKernel`].  While a group is being scored the NEXT
+    /// group's code plane is software-prefetched — the paged walk is a
+    /// pointer chase across `Arc<Page>`s otherwise.
     pub fn scores_groups<'g, I>(&mut self, qs: &[&[f32]], groups: I, out: &mut [Vec<f32>])
     where
         I: IntoIterator<Item = &'g PolarGroup>,
     {
         assert_eq!(qs.len(), out.len());
-        assert!(qs.len() * self.d2 * (1 << self.spec.t_bits) <= self.lut.len());
+        let levels = 1usize << self.spec.t_bits;
+        assert!(qs.len() * self.d2 * levels <= self.lut.len());
         for o in out.iter_mut() {
             o.clear();
         }
-        let levels = 1usize << self.spec.t_bits;
         let t_mask = (levels - 1) as u8;
-        let t_bits = self.spec.t_bits;
-        for g in groups {
+        let kernel = self.kernel;
+        let mut it = groups.into_iter().peekable();
+        while let Some(g) = it.next() {
+            if let Some(next) = it.peek() {
+                prefetch_group(next);
+            }
             self.build_basis(g);
             self.build_luts(qs);
-            if let Some(combined) = &g.combined {
-                // fused path: one unpack, split codes inline, stage rho
-                combined.unpack_into(&mut self.theta_scratch);
-                for n in 0..g.tokens {
-                    let row = n * self.d2;
-                    for j in 0..self.d2 {
-                        let b = self.theta_scratch[row + j];
-                        let rc = (b >> t_bits) as f32;
-                        self.rho_deq[row + j] = (rc + 0.5) * g.rho_s[j] + g.rho_z[j];
-                    }
-                }
-                for (h, o) in out.iter_mut().enumerate() {
-                    let lut = &self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
-                    for n in 0..g.tokens {
-                        let row = n * self.d2;
-                        let codes = &self.theta_scratch[row..row + self.d2];
-                        let rho = &self.rho_deq[row..row + self.d2];
-                        // iterator-fused gather+fma: chunks_exact lets the
-                        // compiler hoist bounds checks out of the loop
-                        let mut acc = 0.0f32;
-                        for ((lut_j, &code), &rho_j) in
-                            lut.chunks_exact(levels).zip(codes).zip(rho)
-                        {
-                            acc += rho_j * lut_j[(code & t_mask) as usize];
-                        }
-                        o.push(acc);
-                    }
-                }
-            } else {
-                // general path (r+t > 8): separate unpacks
-                self.stage_group(g);
-                for (h, o) in out.iter_mut().enumerate() {
-                    let lut = &self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
-                    for n in 0..g.tokens {
-                        let row = n * self.d2;
-                        let mut acc = 0.0f32;
-                        for j in 0..self.d2 {
-                            let code = self.theta_scratch[row + j] as usize;
-                            acc += self.rho_deq[row + j] * lut[j * levels + code];
-                        }
-                        o.push(acc);
-                    }
-                }
+            self.stage_group(g);
+            let plane = g.tokens * self.d2;
+            for (h, o) in out.iter_mut().enumerate() {
+                let lut = &self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
+                let base = o.len();
+                o.resize(base + g.tokens, 0.0);
+                kernel.accumulate(
+                    lut,
+                    levels,
+                    t_mask,
+                    self.d2,
+                    g.tokens,
+                    &self.theta_scratch[..plane],
+                    &self.rho_deq[..plane],
+                    &mut o[base..],
+                );
             }
         }
     }
 
-    /// Single-head convenience wrapper.
+    /// Single-head convenience wrapper (shim over the kernel walk).
     pub fn scores(&mut self, q: &[f32], enc: &PolarEncoded, out: &mut Vec<f32>) {
         let mut tmp = [std::mem::take(out)];
         self.scores_multi(&[q], enc, &mut tmp);
@@ -200,8 +491,8 @@ impl QkLut {
     /// sequences with zero allocation at steady state.  The
     /// `decode_batch` bench and the batch-equivalence proptests drive
     /// this wrapper; [`crate::coordinator::pool::DecodePool`] workers
-    /// reach the same inner [`QkLut::scores_groups`] kernel through
-    /// `Model::decode_step`, one sequence at a time.
+    /// reach the same staged kernel walk through `Model::decode_step`,
+    /// one sequence at a time.
     pub fn scores_batch(&mut self, jobs: &[SeqScoreJob<'_>], out: &mut [Vec<Vec<f32>>]) {
         assert_eq!(jobs.len(), out.len());
         for (job, o) in jobs.iter().zip(out.iter_mut()) {
@@ -306,6 +597,52 @@ mod tests {
             let mut single = Vec::new();
             lut.scores(q, &enc, &mut single);
             assert_eq!(multi[h], single, "head {h}");
+        }
+    }
+
+    #[test]
+    fn kernel_selection_surface() {
+        assert_eq!(KernelKind::parse("auto"), Ok(KernelKind::Auto));
+        assert_eq!(KernelKind::parse("scalar"), Ok(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("simd"), Ok(KernelKind::Simd));
+        assert!(KernelKind::parse("gpu").is_err());
+        assert_eq!(select_kernel(KernelKind::Scalar).unwrap().name(), "scalar");
+        // strict semantics: explicit simd errors when it cannot vectorize
+        match select_kernel(KernelKind::Simd) {
+            Ok(k) => {
+                assert!(simd_available());
+                assert_eq!(k.name(), "simd");
+            }
+            Err(e) => {
+                assert!(!simd_available());
+                assert!(e.contains("simd"), "{e}");
+            }
+        }
+        // auto never fails and reports the kernel it picked
+        let auto = select_kernel(KernelKind::Auto).unwrap();
+        assert_eq!(auto.name(), if simd_available() { "simd" } else { "scalar" });
+    }
+
+    #[test]
+    fn scalar_and_selected_kernels_agree_bitwise() {
+        // unit-level smoke of the ScoreKernel contract (the cross-kernel
+        // proptest in tests/proptests.rs covers random shapes): whatever
+        // Auto resolves to must match the scalar kernel bit-for-bit on
+        // both the fused and the general staging path.
+        let mut rng = Rng::new(77);
+        let d = 32;
+        for (r, t) in [(4u32, 4u32), (5, 5)] {
+            let spec = PolarSpec::new(r, t, 16);
+            let enc = polar::encode(&rng.normal_vec(3 * 16 * d), d, &spec);
+            let q = rng.normal_vec(d);
+            let mut scalar_lut =
+                QkLut::with_kernel(spec, d, 1, select_kernel(KernelKind::Scalar).unwrap());
+            let mut auto_lut = QkLut::new(spec, d, 1);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            scalar_lut.scores(&q, &enc, &mut a);
+            auto_lut.scores(&q, &enc, &mut b);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "r{r} t{t}");
         }
     }
 }

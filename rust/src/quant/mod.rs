@@ -24,7 +24,10 @@ pub mod spec;
 pub mod value;
 pub mod zipcache;
 
-pub use lut::{QkLut, SeqScoreJob};
+pub use lut::{
+    select_kernel, simd_available, KernelKind, QkLut, ScalarKernel, ScoreKernel, SeqScoreJob,
+    SimdKernel,
+};
 pub use polar::{PolarEncoded, PolarGroup, PolarSpec};
 pub use spec::{KeyCodec, QuantSpec};
 

@@ -1,21 +1,74 @@
-//! Bit-packing for 1..=8-bit codes.
+//! Code packing for 1..=8-bit codes — layout v2 ("lane" layout).
 //!
-//! Codes are stored little-endian within a contiguous bitstream; this is
-//! the at-rest representation in the KV-cache pages (the memory-accounting
-//! numbers in Table 4 are physical, not analytic).  The hot QK path
-//! unpacks one token-group at a time into a scratch `u8` buffer — the
-//! unpack cost is part of what the Fig-3 benches measure.
+//! **v2 (current, the only writer).**  Codes live in fixed-width,
+//! byte-aligned lanes: one nibble per code for widths 1..=4, one whole
+//! byte for widths 5..=8.  A code never straddles a byte boundary, so
+//! random access is a constant shift+mask and a bulk unpack is a memcpy
+//! (byte lanes) or a tight nibble loop — which is what lets the SIMD
+//! score kernel in [`crate::quant::lut`] turn a staged lane directly
+//! into gather indices.  The paper's headline r4/t4 config pays zero
+//! padding (4-bit planes fill nibbles exactly; the fused 8-bit plane
+//! fills bytes exactly); odd widths trade a little padding for the
+//! aligned access.
+//!
+//! **v1 (legacy, decode-only).**  The tight little-endian bitstream this
+//! module packed before the layout bump.  Tier segments written by older
+//! builds embed it verbatim (`kvcache::tier::serde` PAGE_VERSION 1), so
+//! the v1 decoder is kept: `get`/`unpack` decode it bit-exactly, and the
+//! tier codec converts promoted v1 records to v2 lanes on read.
+
+/// Physical layout of a packed buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeLayout {
+    /// tight little-endian bitstream — legacy tier records (decode-only)
+    V1Bitstream,
+    /// byte-aligned lanes: nibble per code (bits <= 4), byte per code
+    /// (bits 5..=8)
+    V2Lanes,
+}
 
 /// Packed code buffer: `n` codes of `bits` bits each.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedCodes {
     pub bits: u32,
     pub n: usize,
+    layout: CodeLayout,
     data: Vec<u8>,
 }
 
+/// Bytes `n` codes of `bits` bits occupy in the v2 lane layout.
+pub fn lane_nbytes(bits: u32, n: usize) -> usize {
+    if bits <= 4 {
+        n.div_ceil(2)
+    } else {
+        n
+    }
+}
+
 impl PackedCodes {
+    /// Pack into the v2 lane layout (the only writer).
     pub fn from_codes(codes: &[u8], bits: u32) -> Self {
+        assert!((1..=8).contains(&bits));
+        let mask = ((1u16 << bits) - 1) as u8;
+        let data = if bits <= 4 {
+            let mut data = vec![0u8; codes.len().div_ceil(2)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert_eq!(c & !mask, 0, "code {c} exceeds {bits} bits");
+                data[i >> 1] |= (c & mask) << ((i & 1) * 4);
+            }
+            data
+        } else {
+            for &c in codes {
+                debug_assert_eq!(c & !mask, 0, "code {c} exceeds {bits} bits");
+            }
+            codes.to_vec()
+        };
+        PackedCodes { bits, n: codes.len(), layout: CodeLayout::V2Lanes, data }
+    }
+
+    /// Pack into the legacy v1 bitstream (test fixtures for pre-bump tier
+    /// records; production code never writes v1).
+    pub fn from_codes_v1(codes: &[u8], bits: u32) -> Self {
         assert!((1..=8).contains(&bits));
         let total_bits = codes.len() * bits as usize;
         let mut data = vec![0u8; total_bits.div_ceil(8)];
@@ -31,29 +84,45 @@ impl PackedCodes {
                 data[byte + 1] |= (v >> (8 - off)) as u8;
             }
         }
-        PackedCodes { bits, n: codes.len(), data }
+        PackedCodes { bits, n: codes.len(), layout: CodeLayout::V1Bitstream, data }
     }
 
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.n);
-        let bits = self.bits as usize;
-        let bit = i * bits;
-        let byte = bit / 8;
-        let off = bit % 8;
-        let lo = self.data[byte] as u16;
-        let hi = if byte + 1 < self.data.len() {
-            self.data[byte + 1] as u16
-        } else {
-            0
-        };
-        let v = (lo | (hi << 8)) >> off;
-        (v as u8) & (((1u16 << bits) - 1) as u8)
+        match self.layout {
+            CodeLayout::V2Lanes => {
+                if self.bits <= 4 {
+                    let mask = ((1u16 << self.bits) - 1) as u8;
+                    (self.data[i >> 1] >> ((i & 1) * 4)) & mask
+                } else {
+                    self.data[i]
+                }
+            }
+            CodeLayout::V1Bitstream => {
+                let bits = self.bits as usize;
+                let bit = i * bits;
+                let byte = bit / 8;
+                let off = bit % 8;
+                let lo = self.data[byte] as u16;
+                let hi = if byte + 1 < self.data.len() {
+                    self.data[byte + 1] as u16
+                } else {
+                    0
+                };
+                let v = (lo | (hi << 8)) >> off;
+                (v as u8) & (((1u16 << bits) - 1) as u8)
+            }
+        }
     }
 
     /// Unpack all codes into `out` (len >= n).
     pub fn unpack_into(&self, out: &mut [u8]) {
         assert!(out.len() >= self.n);
+        if self.layout == CodeLayout::V2Lanes && self.bits > 4 {
+            out[..self.n].copy_from_slice(&self.data);
+            return;
+        }
         for i in 0..self.n {
             out[i] = self.get(i);
         }
@@ -70,28 +139,69 @@ impl PackedCodes {
         self.data.len()
     }
 
-    /// The raw little-endian bitstream — the at-rest form the tiered page
-    /// store serializes verbatim (`kvcache::tier::serde`).
+    pub fn layout(&self) -> CodeLayout {
+        self.layout
+    }
+
+    /// The raw lane bytes — the at-rest form the tiered page store
+    /// serializes verbatim (`kvcache::tier::serde`, PAGE_VERSION 2).
     pub fn as_bytes(&self) -> &[u8] {
         &self.data
     }
 
-    /// Rebuild a packed buffer from its serialized parts.  The byte
-    /// length must be exactly what `n` codes of `bits` bits occupy —
-    /// anything else means a corrupt or truncated record, and the caller
-    /// (the tier codec) must treat it as such, never panic.
+    /// Rebuild a v2 packed buffer from its serialized parts.  The byte
+    /// length must be exactly what `n` codes of `bits` bits occupy in
+    /// the lane layout — anything else means a corrupt or truncated
+    /// record, and the caller (the tier codec) must treat it as such,
+    /// never panic.
     pub fn from_raw(bits: u32, n: usize, data: Vec<u8>) -> Result<Self, String> {
         if !(1..=8).contains(&bits) {
             return Err(format!("packed codes: bits {bits} out of range 1..=8"));
         }
-        let want = (n * bits as usize).div_ceil(8);
+        let want = lane_nbytes(bits, n);
         if data.len() != want {
             return Err(format!(
                 "packed codes: {} bytes for {n} codes of {bits} bits (want {want})",
                 data.len()
             ));
         }
-        Ok(PackedCodes { bits, n, data })
+        // nibble lanes: an odd count leaves the final high nibble unused;
+        // reject set bits there so records stay canonical (re-encode of a
+        // decoded page is byte-identical)
+        if bits <= 4 {
+            if n % 2 == 1 {
+                if let Some(&last) = data.last() {
+                    if last >> 4 != 0 {
+                        return Err("packed codes: set bits in unused trailing nibble".into());
+                    }
+                }
+            }
+            if bits < 4 {
+                let lane = ((1u16 << bits) - 1) as u8;
+                let mask = !(lane | (lane << 4));
+                if data.iter().any(|&b| b & mask != 0) {
+                    return Err(format!("packed codes: set bits beyond width {bits}"));
+                }
+            }
+        }
+        Ok(PackedCodes { bits, n, layout: CodeLayout::V2Lanes, data })
+    }
+
+    /// Rebuild a LEGACY v1 bitstream from its serialized parts (tier
+    /// records with PAGE_VERSION 1).  Length must match the tight
+    /// bitstream size.
+    pub fn from_raw_v1(bits: u32, n: usize, data: Vec<u8>) -> Result<Self, String> {
+        if !(1..=8).contains(&bits) {
+            return Err(format!("packed codes: bits {bits} out of range 1..=8"));
+        }
+        let want = (n * bits as usize).div_ceil(8);
+        if data.len() != want {
+            return Err(format!(
+                "packed codes (v1): {} bytes for {n} codes of {bits} bits (want {want})",
+                data.len()
+            ));
+        }
+        Ok(PackedCodes { bits, n, layout: CodeLayout::V1Bitstream, data })
     }
 }
 
@@ -100,14 +210,16 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    fn random_codes(rng: &mut Rng, n: usize, bits: u32) -> Vec<u8> {
+        (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect()
+    }
+
     #[test]
     fn roundtrip_all_bit_widths() {
         let mut rng = Rng::new(9);
         for bits in 1..=8u32 {
-            let n = 257; // deliberately not byte-aligned
-            let codes: Vec<u8> = (0..n)
-                .map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8)
-                .collect();
+            let n = 257; // deliberately odd: exercises the trailing nibble
+            let codes = random_codes(&mut rng, n, bits);
             let p = PackedCodes::from_codes(&codes, bits);
             assert_eq!(p.unpack(), codes, "bits={bits}");
             // random access agrees
@@ -119,10 +231,39 @@ mod tests {
     }
 
     #[test]
-    fn packing_is_tight() {
+    fn v1_bitstream_still_decodes() {
+        // the legacy layout (tier records written pre-bump) must keep
+        // decoding bit-exactly, including cross-byte straddles
+        let mut rng = Rng::new(10);
+        for bits in 1..=8u32 {
+            let n = 129;
+            let codes = random_codes(&mut rng, n, bits);
+            let v1 = PackedCodes::from_codes_v1(&codes, bits);
+            assert_eq!(v1.layout(), CodeLayout::V1Bitstream);
+            assert_eq!(v1.nbytes(), (n * bits as usize).div_ceil(8), "v1 is tight");
+            assert_eq!(v1.unpack(), codes, "bits={bits}");
+            for _ in 0..50 {
+                let i = rng.below(n);
+                assert_eq!(v1.get(i), codes[i], "bits={bits} i={i}");
+            }
+            // both layouts agree code-for-code
+            let v2 = PackedCodes::from_codes(&codes, bits);
+            assert_eq!(v1.unpack(), v2.unpack());
+        }
+    }
+
+    #[test]
+    fn lanes_are_byte_aligned() {
+        // sub-nibble widths round up to a nibble, 5..8 to a byte: the
+        // price of never straddling a byte boundary
         let codes = vec![7u8; 100];
-        let p = PackedCodes::from_codes(&codes, 3);
-        assert_eq!(p.nbytes(), (100 * 3 + 7) / 8);
+        assert_eq!(PackedCodes::from_codes(&codes, 3).nbytes(), 50);
+        assert_eq!(PackedCodes::from_codes(&codes, 4).nbytes(), 50);
+        let codes = vec![17u8; 100];
+        assert_eq!(PackedCodes::from_codes(&codes, 5).nbytes(), 100);
+        assert_eq!(PackedCodes::from_codes(&codes, 8).nbytes(), 100);
+        // odd count: the final high nibble is padding
+        assert_eq!(PackedCodes::from_codes(&[1, 2, 3], 4).nbytes(), 2);
     }
 
     #[test]
@@ -133,16 +274,27 @@ mod tests {
         assert_eq!(rebuilt, p);
         assert_eq!(rebuilt.unpack(), codes);
         // wrong length / wrong bit width are rejected, not mis-decoded
-        assert!(PackedCodes::from_raw(3, p.n + 1, p.as_bytes().to_vec()).is_err());
+        assert!(PackedCodes::from_raw(3, p.n + 2, p.as_bytes().to_vec()).is_err());
         assert!(PackedCodes::from_raw(0, p.n, p.as_bytes().to_vec()).is_err());
         assert!(PackedCodes::from_raw(9, p.n, p.as_bytes().to_vec()).is_err());
+        // non-canonical padding bits are rejected too
+        let mut noisy = p.as_bytes().to_vec();
+        *noisy.last_mut().unwrap() |= 0xf0; // 37 codes -> high nibble unused
+        assert!(PackedCodes::from_raw(3, p.n, noisy).is_err());
+        // and the v1 reader validates against the TIGHT length
+        let v1 = PackedCodes::from_codes_v1(&codes, 3);
+        assert_eq!(
+            PackedCodes::from_raw_v1(3, v1.n, v1.as_bytes().to_vec()).unwrap().unpack(),
+            codes
+        );
+        assert!(PackedCodes::from_raw_v1(3, v1.n + 1, v1.as_bytes().to_vec()).is_err());
     }
 
     #[test]
-    fn cross_byte_boundary() {
-        // 5-bit codes straddle byte boundaries constantly
+    fn byte_lane_bulk_unpack_is_identity() {
         let codes: Vec<u8> = (0..64).map(|i| (i % 32) as u8).collect();
         let p = PackedCodes::from_codes(&codes, 5);
+        assert_eq!(p.as_bytes(), &codes[..], "5..8-bit lanes store codes verbatim");
         assert_eq!(p.unpack(), codes);
     }
 }

@@ -33,8 +33,13 @@ impl PolarSpec {
 
 /// One encoded token-group of one key stream (d/2 channel pairs).
 ///
-/// Layout: codes are token-major (`token * d2 + j`) to match the access
-/// pattern of the QK loop; params are per channel pair.
+/// Layout (pack v2): codes are CHANNEL-MAJOR planes (`j * tokens + n`) —
+/// each channel pair's codes for the whole group form one contiguous,
+/// byte-aligned lane, which is what the SIMD score kernel gathers from
+/// and what lets rho dequantization broadcast one `(z, s)` pair down a
+/// lane.  Params are per channel pair.  (Tier records written before the
+/// layout bump stored token-major; `kvcache::tier::serde` transposes
+/// them on promote.)
 #[derive(Clone, Debug)]
 pub struct PolarGroup {
     pub rho_codes: PackedCodes,
@@ -86,7 +91,8 @@ pub fn encode_group(k: &[f32], d: usize, spec: &PolarSpec) -> PolarGroup {
     assert!(d % 2 == 0);
     let d2 = d / 2;
 
-    // polar transform, token-major scratch
+    // polar transform straight into channel-major planes: lane j holds
+    // the whole group's values for channel pair j
     let mut rho = vec![0.0f32; tokens * d2];
     let mut theta = vec![0.0f32; tokens * d2];
     for n in 0..tokens {
@@ -94,8 +100,8 @@ pub fn encode_group(k: &[f32], d: usize, spec: &PolarSpec) -> PolarGroup {
         for j in 0..d2 {
             let x = row[2 * j];
             let y = row[2 * j + 1];
-            rho[n * d2 + j] = (x * x + y * y).sqrt();
-            theta[n * d2 + j] = y.atan2(x) + std::f32::consts::PI;
+            rho[j * tokens + n] = (x * x + y * y).sqrt();
+            theta[j * tokens + n] = y.atan2(x) + std::f32::consts::PI;
         }
     }
 
@@ -107,8 +113,8 @@ pub fn encode_group(k: &[f32], d: usize, spec: &PolarSpec) -> PolarGroup {
         let (mut rmin, mut rmax) = (f32::INFINITY, f32::NEG_INFINITY);
         let (mut tmin, mut tmax) = (f32::INFINITY, f32::NEG_INFINITY);
         for n in 0..tokens {
-            let r = rho[n * d2 + j];
-            let t = theta[n * d2 + j];
+            let r = rho[j * tokens + n];
+            let t = theta[j * tokens + n];
             rmin = rmin.min(r);
             rmax = rmax.max(r);
             tmin = tmin.min(t);
@@ -124,10 +130,11 @@ pub fn encode_group(k: &[f32], d: usize, spec: &PolarSpec) -> PolarGroup {
 
     let mut rc = vec![0u8; tokens * d2];
     let mut tc = vec![0u8; tokens * d2];
-    for n in 0..tokens {
-        for j in 0..d2 {
-            rc[n * d2 + j] = quantize(rho[n * d2 + j], rho_z[j], rho_s[j], spec.r_bits);
-            tc[n * d2 + j] = quantize(theta[n * d2 + j], theta_z[j], theta_s[j], spec.t_bits);
+    for j in 0..d2 {
+        for n in 0..tokens {
+            let i = j * tokens + n;
+            rc[i] = quantize(rho[i], rho_z[j], rho_s[j], spec.r_bits);
+            tc[i] = quantize(theta[i], theta_z[j], theta_s[j], spec.t_bits);
         }
     }
 
@@ -173,9 +180,10 @@ pub fn decode_group_into(g: &PolarGroup, d: usize, out: &mut Vec<f32>) {
     let tc = g.theta_codes.unpack();
     for n in 0..g.tokens {
         for j in 0..d2 {
-            let rho = (rc[n * d2 + j] as f32 + 0.5) * g.rho_s[j] + g.rho_z[j];
+            let i = j * g.tokens + n; // channel-major planes
+            let rho = (rc[i] as f32 + 0.5) * g.rho_s[j] + g.rho_z[j];
             // -pi undoes the atan2(+pi) storage shift
-            let th = (tc[n * d2 + j] as f32 + 0.5) * g.theta_s[j] + g.theta_z[j]
+            let th = (tc[i] as f32 + 0.5) * g.theta_s[j] + g.theta_z[j]
                 - std::f32::consts::PI;
             out.push(rho * th.cos());
             out.push(rho * th.sin());

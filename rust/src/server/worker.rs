@@ -126,6 +126,10 @@ fn metrics_value(engine: &Engine) -> Value {
         ("itl_ms_p50", ms(m.itl.p(50.0))),
         ("itl_ms_p95", ms(m.itl.p(95.0))),
         ("itl_ms_p99", ms(m.itl.p(99.0))),
+        // the QK score kernel actually running ("scalar" / "simd" /
+        // "pjrt-graph") — non-numeric, so the client's cross-worker
+        // aggregation skips it
+        ("kernel", json::s(engine.kernel_name())),
         ("summary", json::s(&m.summary())),
     ])
 }
@@ -227,6 +231,7 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
         let sd = shutdown.clone();
         workers.push(std::thread::spawn(move || {
             let mut engine = factory(w);
+            eprintln!("[server] engine {w}: QK score kernel '{}'", engine.kernel_name());
             if engine.decode_pool_width() > 1 {
                 eprintln!(
                     "[server] engine {w}: decode pool width {}",

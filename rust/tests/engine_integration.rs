@@ -499,6 +499,52 @@ fn snapkv_over_the_wire_reports_tokens_dropped() {
 }
 
 #[test]
+fn kernel_choice_is_reported_and_bit_invisible() {
+    use polarquant::quant::KernelKind;
+    // same weights, same prompts, different --kernel: the rollouts must
+    // be token-identical (kernels are bit-exact), and the admin metrics
+    // must name the kernel each worker runs.
+    let cfg = toy_cfg();
+    let serve_with = |kernel: KernelKind| -> (Vec<Vec<u32>>, String) {
+        let cfg = cfg.clone();
+        let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+            let mut opts = EngineOpts::default();
+            opts.kernel = kernel;
+            opts.decode_workers = 2; // pool forks must inherit the kernel
+            Engine::native_synthetic(cfg.clone(), 1100 + w as u64, 4.0, opts)
+        });
+        let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        let mut outs = Vec::new();
+        for t in 0..3u32 {
+            let prompt: Vec<u32> = (0..20).map(|i| (i * 7 + t as usize) as u32 % 64).collect();
+            let reply = client.generate(&prompt, 8, None).unwrap();
+            assert!(!reply.rejected);
+            outs.push(reply.tokens);
+        }
+        let m = client.metrics().unwrap();
+        let name = m
+            .get("workers")
+            .and_then(|w| w.as_arr())
+            .and_then(|ws| ws.first())
+            .and_then(|w| w.get("kernel"))
+            .and_then(|k| k.as_str())
+            .expect("metrics reply carries the worker's kernel name")
+            .to_string();
+        handle.stop();
+        (outs, name)
+    };
+    let (scalar_outs, scalar_name) = serve_with(KernelKind::Scalar);
+    assert_eq!(scalar_name, "scalar");
+    let (auto_outs, auto_name) = serve_with(KernelKind::Auto);
+    assert!(auto_name == "scalar" || auto_name == "simd", "{auto_name}");
+    assert_eq!(
+        scalar_outs, auto_outs,
+        "kernel choice must never change a token (scalar vs {auto_name})"
+    );
+}
+
+#[test]
 fn engine_rejects_snapkv_on_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let mut opts = EngineOpts::default();

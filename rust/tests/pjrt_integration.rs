@@ -158,14 +158,16 @@ fn encode_graph_matches_rust_encoder() {
             let rc = grp.rho_codes.unpack();
             let tc = grp.theta_codes.unpack();
             let d2 = dh / 2;
+            // graph outputs stay token-major (the external contract);
+            // the Rust encoder's planes are channel-major (pack v2)
             for tok in 0..spec.group {
                 for j in 0..d2 {
                     let flat = (ni * t + gi * spec.group + tok) * d2 + j;
                     assert_eq!(
-                        outs[0][flat] as u8, rc[tok * d2 + j],
+                        outs[0][flat] as u8, rc[j * spec.group + tok],
                         "rho code mismatch n{ni} g{gi} tok{tok} j{j}"
                     );
-                    assert_eq!(outs[1][flat] as u8, tc[tok * d2 + j], "theta code mismatch");
+                    assert_eq!(outs[1][flat] as u8, tc[j * spec.group + tok], "theta code mismatch");
                 }
             }
             for j in 0..d2 {
