@@ -30,10 +30,16 @@
 //! Streaming section: client-visible time-to-first-output and
 //! inter-token latency, one-shot vs streaming API over the same request
 //! mix — the latency visibility the streaming session API adds.
+//!
+//! Multi-tenant section: a well-behaved tenant's ITL while a flooding
+//! tenant saturates the engine — solo baseline vs FCFS vs `--sched wfq`
+//! (weight 4:1).  The acceptance bar (well-behaved p99 ITL under flood
+//! within 25% of its solo baseline under WFQ) is recorded per run as
+//! `wfq_within_25pct`.
 
 use std::time::Instant;
 
-use polarquant::coordinator::{Engine, EngineOpts, Event, Request, TierOpts};
+use polarquant::coordinator::{Engine, EngineOpts, Event, Request, SchedMode, TenancyOpts, TierOpts};
 use polarquant::model::ModelConfig;
 use polarquant::quant::kivi::{self, KiviQk, KiviSpec};
 use polarquant::quant::polar::{self, PolarEncoded, PolarSpec};
@@ -609,6 +615,83 @@ fn streaming_section(quick: bool) -> Vec<Value> {
     rows
 }
 
+/// Mixed-tenant flood probe: the well-behaved "calm" tenant's ITL while
+/// the "flood" tenant saturates the engine with long prompts.  Returns
+/// (calm p50 ms, calm p99 ms, flood completions) so the section can
+/// compare solo / fcfs / wfq on identical calm traffic.
+fn tenant_run(
+    sched: SchedMode,
+    flooders: usize,
+    flood_prompt: usize,
+    calm_reqs: usize,
+) -> (f64, f64, u64) {
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 32;
+    opts.sched = sched;
+    opts.policy.max_running = 8;
+    opts.policy.prefill_per_step = 2;
+    opts.admission.max_queue = 256;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 27, 6.0, opts);
+    if sched == SchedMode::Wfq {
+        let mut t = TenancyOpts::default();
+        t.weights.insert("calm".to_string(), 4);
+        t.weights.insert("flood".to_string(), 1);
+        eng.set_tenancy(&t);
+    }
+    let mut rng = Rng::new(31);
+    // the flood arrives first: under FCFS the calm tenant queues behind
+    // every flooder; under WFQ the stride scheduler lets it through
+    for i in 0..flooders {
+        let prompt: Vec<u32> = (0..flood_prompt).map(|_| rng.below(128) as u32).collect();
+        let mut r = Request::greedy(i as u64, prompt, 32);
+        r.tenant = "flood".to_string();
+        eng.submit(r).unwrap();
+    }
+    for i in 0..calm_reqs {
+        let prompt: Vec<u32> = (0..32).map(|_| rng.below(128) as u32).collect();
+        let mut r = Request::greedy(1000 + i as u64, prompt, 32);
+        r.tenant = "calm".to_string();
+        eng.submit(r).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let calm = &eng.metrics.tenants["calm"];
+    (calm.itl.p(50.0) * 1e3, calm.itl.p(99.0) * 1e3, eng.metrics.tenants.get("flood").map_or(0, |t| t.finished))
+}
+
+fn multi_tenant_section(quick: bool) -> Vec<Value> {
+    let (flooders, flood_prompt, calm_reqs) = if quick { (8, 128, 4) } else { (16, 512, 8) };
+    println!("# multi-tenant: calm tenant's ITL under a {flooders}-request flood");
+    println!("# solo baseline vs fcfs vs wfq (calm weight 4, flood weight 1)\n");
+    let (solo_p50, solo_p99, _) = tenant_run(SchedMode::Fcfs, 0, flood_prompt, calm_reqs);
+    let (fcfs_p50, fcfs_p99, fcfs_fin) = tenant_run(SchedMode::Fcfs, flooders, flood_prompt, calm_reqs);
+    let (wfq_p50, wfq_p99, wfq_fin) = tenant_run(SchedMode::Wfq, flooders, flood_prompt, calm_reqs);
+    // the PR's acceptance bar: fair scheduling holds the well-behaved
+    // tenant's tail latency near its uncontended baseline under flood
+    let within = wfq_p99 <= solo_p99 * 1.25;
+    println!("    solo: calm itl p50 {solo_p50:>8.3} ms  p99 {solo_p99:>8.3} ms");
+    println!("    fcfs: calm itl p50 {fcfs_p50:>8.3} ms  p99 {fcfs_p99:>8.3} ms");
+    println!(
+        "     wfq: calm itl p50 {wfq_p50:>8.3} ms  p99 {wfq_p99:>8.3} ms   [{}]",
+        if within { "within 25% of solo" } else { "FAIL: > 1.25x solo p99" }
+    );
+    println!("    (flood still completes: fcfs {fcfs_fin}, wfq {wfq_fin})\n");
+    vec![obj(vec![
+        ("flooders", num(flooders as f64)),
+        ("flood_prompt", num(flood_prompt as f64)),
+        ("calm_reqs", num(calm_reqs as f64)),
+        ("calm_weight", num(4.0)),
+        ("solo_itl_p50_ms", num(solo_p50)),
+        ("solo_itl_p99_ms", num(solo_p99)),
+        ("fcfs_itl_p50_ms", num(fcfs_p50)),
+        ("fcfs_itl_p99_ms", num(fcfs_p99)),
+        ("wfq_itl_p50_ms", num(wfq_p50)),
+        ("wfq_itl_p99_ms", num(wfq_p99)),
+        ("flood_finished_fcfs", num(fcfs_fin as f64)),
+        ("flood_finished_wfq", num(wfq_fin as f64)),
+        ("wfq_within_25pct", Value::Bool(within)),
+    ])]
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -663,6 +746,7 @@ fn main() {
     let prefix_rows = prefix_section(quick);
     let tier_rows = tier_section(quick);
     let streaming_rows = streaming_section(quick);
+    let tenant_rows = multi_tenant_section(quick);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -684,6 +768,7 @@ fn main() {
         ("prefix_reuse", Value::Arr(prefix_rows)),
         ("tier", Value::Arr(tier_rows)),
         ("streaming", Value::Arr(streaming_rows)),
+        ("multi_tenant", Value::Arr(tenant_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

@@ -1,6 +1,13 @@
-//! Admission control: bound the waiting queue and respect the cache
-//! manager's memory budget so the engine degrades by *rejecting* rather
-//! than thrashing.
+//! Admission control: bound the waiting queue, respect the cache
+//! manager's memory budget, and rate-limit individual tenants so the
+//! engine degrades by *rejecting* rather than thrashing.
+//!
+//! Every way a request can be refused — here, in the engine's session
+//! logic, or by the per-tenant token buckets — is one variant of
+//! [`RejectReason`], and its [`RejectReason::as_str`] label is the single
+//! spelling used by the engine, the completion JSON, and the metrics.
+
+use std::collections::HashMap;
 
 use crate::kvcache::CacheManager;
 
@@ -20,9 +27,12 @@ impl Default for AdmissionPolicy {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum AdmitDecision {
-    Admit,
+/// Why a request was refused.  One enum, one wire label per variant —
+/// the engine's `submit*` errors, `Completion::reason`, the v2
+/// `rejected` event, and the per-tenant throttle all speak this type, so
+/// a new rejection cause can never become an ad-hoc fourth string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RejectReason {
     QueueFull,
     MemoryPressure,
     /// a prompt with no tokens can never produce logits to sample from
@@ -33,19 +43,38 @@ pub enum AdmitDecision {
     /// the request asked for options this engine cannot honor (e.g. a
     /// per-request SnapKV override on a chunked or PJRT engine)
     UnsupportedOptions,
+    /// the tenant's token bucket is empty (`--tenant-rate`); retry later
+    TenantThrottled,
+}
+
+impl RejectReason {
+    /// Stable wire-format label for the rejection protocol (the server's
+    /// `reason` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::MemoryPressure => "memory_pressure",
+            RejectReason::EmptyPrompt => "empty_prompt",
+            RejectReason::SessionBusy => "session_busy",
+            RejectReason::UnsupportedOptions => "unsupported_options",
+            RejectReason::TenantThrottled => "tenant_throttled",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Admit,
+    Reject(RejectReason),
 }
 
 impl AdmitDecision {
-    /// Stable wire-format label for the rejection protocol (the server's
-    /// `reason` field).
+    /// Stable wire-format label (kept for logging; rejection paths carry
+    /// the typed [`RejectReason`] itself).
     pub fn reason(&self) -> &'static str {
         match self {
             AdmitDecision::Admit => "admit",
-            AdmitDecision::QueueFull => "queue_full",
-            AdmitDecision::MemoryPressure => "memory_pressure",
-            AdmitDecision::EmptyPrompt => "empty_prompt",
-            AdmitDecision::SessionBusy => "session_busy",
-            AdmitDecision::UnsupportedOptions => "unsupported_options",
+            AdmitDecision::Reject(r) => r.as_str(),
         }
     }
 }
@@ -60,15 +89,59 @@ impl AdmissionPolicy {
         expected_tokens: usize,
     ) -> AdmitDecision {
         if prompt_tokens == 0 {
-            return AdmitDecision::EmptyPrompt;
+            return AdmitDecision::Reject(RejectReason::EmptyPrompt);
         }
         if queued >= self.max_queue {
-            return AdmitDecision::QueueFull;
+            return AdmitDecision::Reject(RejectReason::QueueFull);
         }
         if !cache.admits(expected_tokens) {
-            return AdmitDecision::MemoryPressure;
+            return AdmitDecision::Reject(RejectReason::MemoryPressure);
         }
         AdmitDecision::Admit
+    }
+}
+
+/// Per-tenant token-bucket admission (`--tenant-rate R --tenant-burst B`):
+/// each tenant's bucket refills at `rate` requests/s up to `burst`, and a
+/// submission costs one token.  Buckets are lazily created full, so a
+/// tenant's first `burst` requests always pass.  Time is caller-supplied
+/// (seconds from any fixed origin) so the refill arithmetic is exactly
+/// testable without sleeping.
+#[derive(Debug)]
+pub struct TenantBuckets {
+    rate: f64,
+    burst: f64,
+    /// tenant -> (tokens available, last refill time in seconds)
+    buckets: HashMap<String, (f64, f64)>,
+}
+
+impl TenantBuckets {
+    pub fn new(rate: f64, burst: f64) -> Self {
+        TenantBuckets { rate: rate.max(0.0), burst: burst.max(1.0), buckets: HashMap::new() }
+    }
+
+    /// Spend one token from `tenant`'s bucket at time `now_s`.  Returns
+    /// false when the bucket is empty — the caller rejects the request
+    /// with [`RejectReason::TenantThrottled`].
+    pub fn try_admit(&mut self, tenant: &str, now_s: f64) -> bool {
+        let burst = self.burst;
+        let rate = self.rate;
+        let b = match self.buckets.get_mut(tenant) {
+            Some(b) => b,
+            None => {
+                self.buckets.insert(tenant.to_string(), (burst, now_s));
+                self.buckets.get_mut(tenant).unwrap()
+            }
+        };
+        let dt = (now_s - b.1).max(0.0);
+        b.0 = (b.0 + dt * rate).min(burst);
+        b.1 = now_s;
+        if b.0 >= 1.0 {
+            b.0 -= 1.0;
+            true
+        } else {
+            false
+        }
     }
 }
 
@@ -96,23 +169,54 @@ mod tests {
         let p = AdmissionPolicy { max_queue: 2 };
         let c = cache(usize::MAX);
         assert_eq!(p.admit(1, &c, 4, 10), AdmitDecision::Admit);
-        assert_eq!(p.admit(2, &c, 4, 10), AdmitDecision::QueueFull);
+        assert_eq!(p.admit(2, &c, 4, 10), AdmitDecision::Reject(RejectReason::QueueFull));
     }
 
     #[test]
     fn memory_limit() {
         let p = AdmissionPolicy::default();
         let c = cache(16); // tiny budget
-        assert_eq!(p.admit(0, &c, 4, 4096), AdmitDecision::MemoryPressure);
+        assert_eq!(p.admit(0, &c, 4, 4096), AdmitDecision::Reject(RejectReason::MemoryPressure));
     }
 
     #[test]
-    fn empty_prompt_is_rejected_with_a_reason() {
+    fn reject_reason_wire_labels_are_stable() {
         let p = AdmissionPolicy::default();
         let c = cache(usize::MAX);
-        assert_eq!(p.admit(0, &c, 0, 16), AdmitDecision::EmptyPrompt);
-        assert_eq!(AdmitDecision::EmptyPrompt.reason(), "empty_prompt");
-        assert_eq!(AdmitDecision::QueueFull.reason(), "queue_full");
-        assert_eq!(AdmitDecision::MemoryPressure.reason(), "memory_pressure");
+        assert_eq!(p.admit(0, &c, 0, 16), AdmitDecision::Reject(RejectReason::EmptyPrompt));
+        assert_eq!(RejectReason::EmptyPrompt.as_str(), "empty_prompt");
+        assert_eq!(RejectReason::QueueFull.as_str(), "queue_full");
+        assert_eq!(RejectReason::MemoryPressure.as_str(), "memory_pressure");
+        assert_eq!(RejectReason::SessionBusy.as_str(), "session_busy");
+        assert_eq!(RejectReason::UnsupportedOptions.as_str(), "unsupported_options");
+        assert_eq!(RejectReason::TenantThrottled.as_str(), "tenant_throttled");
+        assert_eq!(AdmitDecision::Reject(RejectReason::QueueFull).reason(), "queue_full");
+        assert_eq!(AdmitDecision::Admit.reason(), "admit");
+    }
+
+    #[test]
+    fn token_bucket_throttles_and_refills() {
+        let mut b = TenantBuckets::new(1.0, 2.0); // 1 req/s, burst 2
+        // the first `burst` requests pass, the next is throttled
+        assert!(b.try_admit("a", 0.0));
+        assert!(b.try_admit("a", 0.0));
+        assert!(!b.try_admit("a", 0.0));
+        // refill is proportional to elapsed time...
+        assert!(b.try_admit("a", 1.0));
+        assert!(!b.try_admit("a", 1.0));
+        // ...and caps at burst no matter how long the tenant was idle
+        assert!(b.try_admit("a", 1000.0));
+        assert!(b.try_admit("a", 1000.0));
+        assert!(!b.try_admit("a", 1000.0));
+        // buckets are per tenant — one tenant's flood never drains another's
+        assert!(b.try_admit("b", 1000.0));
+    }
+
+    #[test]
+    fn token_bucket_ignores_clock_skew() {
+        let mut b = TenantBuckets::new(10.0, 1.0);
+        assert!(b.try_admit("a", 5.0));
+        // a non-monotone clock must not refill (negative dt clamps to 0)
+        assert!(!b.try_admit("a", 4.0));
     }
 }

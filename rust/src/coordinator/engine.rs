@@ -25,20 +25,22 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::backpressure::{AdmissionPolicy, AdmitDecision};
+use super::backpressure::{AdmissionPolicy, AdmitDecision, RejectReason, TenantBuckets};
 use super::batcher::{pages_needed, plan_decode_batches, plan_decode_shards, plan_prefill_chunks};
 use super::metrics::Metrics;
 use super::pool::{DecodePool, DecodeTask, StepResult};
 use super::request::{
     Completion, Event, FinishReason, Request, RequestId, RequestState, Tracked, TurnInfo,
 };
-use super::scheduler::{pick_preemption_victim, SchedulerPolicy};
+use super::scheduler::{pick_preemption_victim, SchedMode, SchedulerPolicy, WfqState};
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
-use crate::kvcache::{CacheManager, PagePool, SharedSeq, TierConfig};
+use crate::kvcache::tier::session::{decode_session, encode_session};
+use crate::kvcache::{CacheManager, PagePool, SequenceCache, SharedSeq, TierConfig, TierRef};
 use crate::model::sampling::token_rng;
 use crate::model::{Model, ModelConfig, Weights};
 use crate::quant::{select_kernel, KernelKind};
@@ -113,6 +115,10 @@ pub struct EngineOpts {
     /// boundary ([`crate::quant::select_kernel`]); `Auto` never fails.
     /// A pure performance knob: every kernel is bit-identical.
     pub kernel: KernelKind,
+    /// Queued-request / prefill-grant ordering (`--sched`).  `Fcfs` (the
+    /// default) is bit-identical to pre-WFQ builds; `Wfq` orders by
+    /// per-tenant pass value so one tenant's flood cannot starve another.
+    pub sched: SchedMode,
 }
 
 impl Default for EngineOpts {
@@ -129,14 +135,34 @@ impl Default for EngineOpts {
             cache_pages: 0,
             prefix_cache: false,
             kernel: KernelKind::Auto,
+            sched: SchedMode::Fcfs,
         }
     }
+}
+
+/// Multi-tenant policy knobs (`--tenant-weight`, `--tenant-rate`,
+/// `--tenant-burst`, `--tenant-pages`, `--session-ttl`).  Applied AFTER
+/// construction via [`Engine::set_tenancy`] so [`EngineOpts`] stays
+/// `Copy`; the all-default value changes nothing.
+#[derive(Clone, Debug, Default)]
+pub struct TenancyOpts {
+    /// per-tenant WFQ weights (`name=N`); unlisted tenants weigh 1
+    pub weights: HashMap<String, u32>,
+    /// token-bucket refill in requests/s (0 = no rate limit)
+    pub rate: f64,
+    /// token-bucket burst capacity in requests
+    pub burst: f64,
+    /// prefix-cache pages below which a tenant's entries are never
+    /// reclaimed to serve ANOTHER tenant's demand (0 = no reservation)
+    pub reserve_pages: usize,
+    /// demote an idle session's KV chain to the disk tier after this long
+    pub session_ttl: Option<Duration>,
 }
 
 /// One conversation's engine-side state: the token history each turn's
 /// prompt is rebuilt from, the live KV chain (kept between turns so the
 /// next turn prefills only its new tokens), and the in-flight turn.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Session {
     /// full conversation so far: every turn's tokens ++ its generation
     tokens: Vec<u32>,
@@ -145,6 +171,23 @@ struct Session {
     cache: Option<SharedSeq>,
     /// turns are serialized per session: at most one in flight
     active: Option<RequestId>,
+    /// when this session last saw a turn start or finish (the TTL clock)
+    last_active: Instant,
+    /// where the chain lives while reaped to the disk tier
+    /// (`--session-ttl`); the next turn promotes it back
+    tiered: Option<TierRef>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session {
+            tokens: Vec::new(),
+            cache: None,
+            active: None,
+            last_active: Instant::now(),
+            tiered: None,
+        }
+    }
 }
 
 pub struct Engine {
@@ -172,6 +215,12 @@ pub struct Engine {
     tier: Option<TierOpts>,
     /// prefix entries restored from a snapshot at attach time
     tier_restored: usize,
+    /// weighted-fair queueing state (Some iff `opts.sched == Wfq`)
+    wfq: Option<WfqState>,
+    /// per-tenant token buckets (`--tenant-rate`; None = no rate limit)
+    tenant_buckets: Option<TenantBuckets>,
+    /// idle sessions older than this demote their chain to the disk tier
+    session_ttl: Option<Duration>,
 }
 
 impl Engine {
@@ -225,7 +274,38 @@ impl Engine {
             step_results: Vec::new(),
             tier: None,
             tier_restored: 0,
+            wfq: match opts.sched {
+                SchedMode::Wfq => Some(WfqState::new(HashMap::new())),
+                SchedMode::Fcfs => None,
+            },
+            tenant_buckets: None,
+            session_ttl: None,
         }
+    }
+
+    /// Apply the multi-tenant policy knobs.  Weights only matter under
+    /// `--sched wfq`; a zero rate disables the token buckets; a `None`
+    /// TTL disables session reaping.
+    pub fn set_tenancy(&mut self, t: &TenancyOpts) {
+        if self.wfq.is_some() && !t.weights.is_empty() {
+            self.wfq = Some(WfqState::new(t.weights.clone()));
+        }
+        self.tenant_buckets =
+            (t.rate > 0.0).then(|| TenantBuckets::new(t.rate, t.burst.max(1.0)));
+        self.session_ttl = t.session_ttl;
+        if t.reserve_pages > 0 {
+            self.cache.pool().set_tenant_reserve(t.reserve_pages);
+        }
+    }
+
+    /// The queued-request ordering in effect (server startup log).
+    pub fn sched_mode(&self) -> SchedMode {
+        self.opts.sched
+    }
+
+    /// The idle-session TTL in effect, if any (server startup log).
+    pub fn session_ttl(&self) -> Option<Duration> {
+        self.session_ttl
     }
 
     /// Attach the disk tier to this engine's page pool (requires prefix
@@ -366,18 +446,39 @@ impl Engine {
     }
 
     /// Submit a request; rejects under backpressure (or an empty prompt,
-    /// or options this engine cannot honor).
-    pub fn submit(&mut self, req: Request) -> std::result::Result<(), AdmitDecision> {
-        match self.admit_decision(&req, 0) {
-            AdmitDecision::Admit => {
-                self.metrics.requests_submitted += 1;
-                self.queue.push_back(Tracked::new(req));
-                Ok(())
-            }
-            other => {
-                self.metrics.requests_rejected += 1;
-                Err(other)
-            }
+    /// options this engine cannot honor, or an empty tenant bucket).
+    pub fn submit(&mut self, req: Request) -> std::result::Result<(), RejectReason> {
+        if let AdmitDecision::Reject(why) = self.admit_decision(&req, 0) {
+            return Err(self.reject(&req.tenant, why));
+        }
+        if !self.bucket_admits(&req.tenant) {
+            return Err(self.reject(&req.tenant, RejectReason::TenantThrottled));
+        }
+        self.metrics.requests_submitted += 1;
+        self.metrics.tenant(&req.tenant).admitted += 1;
+        self.queue.push_back(Tracked::new(req));
+        Ok(())
+    }
+
+    /// Count a rejection (global + per-tenant) and hand the reason back,
+    /// so rejection paths read `return Err(self.reject(tenant, why))`.
+    fn reject(&mut self, tenant: &str, why: RejectReason) -> RejectReason {
+        self.metrics.requests_rejected += 1;
+        if why == RejectReason::TenantThrottled {
+            self.metrics.tenant_throttled += 1;
+            self.metrics.tenant(tenant).throttled += 1;
+        }
+        why
+    }
+
+    /// Spend one token from the tenant's bucket; vacuously true when no
+    /// rate limit is configured.  The clock is the engine's own uptime,
+    /// so refill arithmetic never sees wall-clock jumps.
+    fn bucket_admits(&mut self, tenant: &str) -> bool {
+        let now_s = self.metrics.started.elapsed().as_secs_f64();
+        match self.tenant_buckets.as_mut() {
+            Some(b) => b.try_admit(tenant, now_s),
+            None => true,
         }
     }
 
@@ -391,7 +492,7 @@ impl Engine {
         if let Some(sk) = req.gen.snapkv {
             let capable = matches!(self.backend, Backend::Native(_)) && !self.chunked_prefill();
             if !capable || sk.budget == 0 || sk.window == 0 || sk.window > sk.budget {
-                return AdmitDecision::UnsupportedOptions;
+                return AdmitDecision::Reject(RejectReason::UnsupportedOptions);
             }
         }
         let expected =
@@ -442,10 +543,13 @@ impl Engine {
         let index = tr.generated.len() - 1;
         let now = Instant::now();
         if let Some(prev) = tr.last_token_at {
-            metrics.itl.record_secs(now.duration_since(prev).as_secs_f64());
+            let dt = now.duration_since(prev).as_secs_f64();
+            metrics.itl.record_secs(dt);
+            metrics.tenant(&tr.req.tenant).itl.record_secs(dt);
         }
         tr.last_token_at = Some(now);
         metrics.decode_tokens += 1;
+        metrics.tenant(&tr.req.tenant).decode_tokens += 1;
         Self::emit(subs, tr.req.id, Event::Token { id: tr.req.id, token, logprob, index });
     }
 
@@ -469,7 +573,7 @@ impl Engine {
         &mut self,
         req: Request,
         events: Sender<Event>,
-    ) -> std::result::Result<(), AdmitDecision> {
+    ) -> std::result::Result<(), RejectReason> {
         let id = req.id;
         match self.submit(req) {
             Ok(()) => {
@@ -478,7 +582,7 @@ impl Engine {
                 Ok(())
             }
             Err(why) => {
-                let _ = events.send(Event::Rejected { id, reason: why.reason() });
+                let _ = events.send(Event::Rejected { id, reason: why });
                 Err(why)
             }
         }
@@ -499,6 +603,7 @@ impl Engine {
             if let Some(turn) = tr.turn {
                 if let Some(sess) = self.sessions.get_mut(&turn.session) {
                     sess.active = None;
+                    sess.last_active = Instant::now();
                     if let Some(chain) = tr.resume.take() {
                         sess.cache = Some(chain);
                     }
@@ -576,8 +681,14 @@ impl Engine {
         sid: u64,
         req: Request,
         events: Sender<Event>,
-    ) -> std::result::Result<(), AdmitDecision> {
+    ) -> std::result::Result<(), RejectReason> {
         let resumable = self.chunked_prefill();
+        if resumable {
+            // a reaped session's chain comes back from the disk tier
+            // BEFORE the resident-token read below, so admission charges
+            // the warm-started turn exactly like an unreaped one
+            self.promote_session(sid);
+        }
         let id = req.id;
         // read session state WITHOUT creating an entry: a rejected turn
         // must not plant a zombie session the engine never cleans up
@@ -597,22 +708,26 @@ impl Engine {
             None => (Vec::new(), 0, false),
         };
         if busy {
-            self.metrics.requests_rejected += 1;
-            let _ = events
-                .send(Event::Rejected { id, reason: AdmitDecision::SessionBusy.reason() });
-            return Err(AdmitDecision::SessionBusy);
+            let why = self.reject(&req.tenant, RejectReason::SessionBusy);
+            let _ = events.send(Event::Rejected { id, reason: why });
+            return Err(why);
         }
         let new_tokens = req.prompt.len();
         let mut prompt = history;
         prompt.extend_from_slice(&req.prompt);
-        let full = Request { id, session: Some(sid), prompt, gen: req.gen };
-        let decision = self.admit_decision(&full, resident);
-        if decision != AdmitDecision::Admit {
-            self.metrics.requests_rejected += 1;
-            let _ = events.send(Event::Rejected { id, reason: decision.reason() });
-            return Err(decision);
+        let full = Request { id, session: Some(sid), tenant: req.tenant, prompt, gen: req.gen };
+        if let AdmitDecision::Reject(why) = self.admit_decision(&full, resident) {
+            let why = self.reject(&full.tenant, why);
+            let _ = events.send(Event::Rejected { id, reason: why });
+            return Err(why);
+        }
+        if !self.bucket_admits(&full.tenant) {
+            let why = self.reject(&full.tenant, RejectReason::TenantThrottled);
+            let _ = events.send(Event::Rejected { id, reason: why });
+            return Err(why);
         }
         self.metrics.requests_submitted += 1;
+        self.metrics.tenant(&full.tenant).admitted += 1;
         self.metrics.session_turns += 1;
         let mut tr = Tracked::new(full);
         // TAKE the chain (don't clone): while the turn is in flight the
@@ -622,6 +737,7 @@ impl Engine {
         let sess = self.sessions.entry(sid).or_default();
         tr.resume = if resumable { sess.cache.take() } else { None };
         sess.active = Some(id);
+        sess.last_active = Instant::now();
         tr.turn = Some(TurnInfo { session: sid, new_tokens });
         let _ = events.send(Event::Admitted { id });
         self.subs.insert(id, events);
@@ -640,9 +756,81 @@ impl Engine {
         let handle = if resumable { self.cache.get(tr.req.id) } else { None };
         let Some(sess) = self.sessions.get_mut(&turn.session) else { return };
         sess.active = None;
+        sess.last_active = Instant::now();
         sess.tokens = tr.req.prompt.clone();
         sess.tokens.extend_from_slice(&tr.generated);
         sess.cache = handle;
+    }
+
+    /// Demote every idle session's KV chain to the disk tier once it has
+    /// been untouched for `--session-ttl` (no-op without a TTL or a
+    /// tier).  The chain is serialized PRIVATELY — a session's pages are
+    /// cut at the conversation's own chunk boundaries, so they must never
+    /// enter the shared prefix index — and the session keeps a `TierRef`,
+    /// so the next turn warm-starts from disk instead of re-prefilling
+    /// the whole history.  Returns the number of sessions reaped.
+    pub fn reap_idle_sessions(&mut self) -> usize {
+        let Some(ttl) = self.session_ttl else { return 0 };
+        if self.tier.is_none() {
+            return 0;
+        }
+        let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
+        let sids: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| {
+                s.active.is_none() && s.cache.is_some() && s.last_active.elapsed() >= ttl
+            })
+            .map(|(&sid, _)| sid)
+            .collect();
+        let mut reaped = 0;
+        for sid in sids {
+            let Some(chain) = self.sessions.get_mut(&sid).and_then(|s| s.cache.take()) else {
+                continue;
+            };
+            let blob = encode_session(&chain.lock().unwrap(), tag);
+            match self.cache.pool().session_spill(&blob) {
+                Ok(r) => {
+                    self.sessions.get_mut(&sid).unwrap().tiered = Some(r);
+                    self.metrics.sessions_reaped += 1;
+                    reaped += 1;
+                    // `chain` drops here: the pages go back to the pool
+                }
+                Err(_) => {
+                    // disk error: keep the chain resident rather than
+                    // silently forgetting the conversation's KV state
+                    self.sessions.get_mut(&sid).unwrap().cache = Some(chain);
+                }
+            }
+        }
+        reaped
+    }
+
+    /// Bring a reaped session's chain back from the disk tier (no-op for
+    /// live, unknown, or never-reaped sessions).  A blob that fails the
+    /// checksum or config fingerprint is dropped: the turn falls back to
+    /// a cold re-prefill of the history, which is correct, just slower.
+    fn promote_session(&mut self, sid: u64) {
+        let Some(sess) = self.sessions.get_mut(&sid) else { return };
+        if sess.cache.is_some() || sess.active.is_some() || sess.tiered.is_none() {
+            return;
+        }
+        let r = sess.tiered.take().expect("checked above");
+        let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
+        let Ok(bytes) = self.cache.pool().session_fetch(r) else { return };
+        let Ok(blob) = decode_session(&bytes, tag) else { return };
+        // make room, best-effort: a shortfall means a transient overshoot
+        // (same stance as the lone decoder), not a refused warm start
+        let _ = self.cache.pool().try_free(blob.pages.len());
+        let pool = self.cache.pool().clone();
+        let pages = blob.pages.into_iter().map(|p| pool.adopt(p)).collect();
+        let mut seq = SequenceCache::new_pooled(self.cache.config().clone(), pool);
+        seq.adopt_pages(pages);
+        seq.restore_tail(blob.tails, blob.next_pos);
+        let sess = self.sessions.get_mut(&sid).expect("session checked above");
+        sess.cache = Some(Arc::new(Mutex::new(seq)));
+        sess.last_active = Instant::now();
+        self.metrics.sessions_restored += 1;
     }
 
     /// True when this engine runs the chunked-prefill continuous loop
@@ -656,6 +844,9 @@ impl Engine {
 
     /// One scheduler iteration; returns completions.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        if self.session_ttl.is_some() {
+            self.reap_idle_sessions();
+        }
         let chunked = self.chunked_prefill();
         let plan = if chunked {
             let prefilling = self.prefill_order.len();
@@ -664,6 +855,11 @@ impl Engine {
         } else {
             self.opts.policy.plan(self.queue.len(), self.running.len())
         };
+        if let Some(wfq) = self.wfq.as_mut() {
+            // admission order = pass order: the least-served tenant's
+            // request moves to the front of the wait queue
+            wfq.reorder(self.queue.make_contiguous(), |t| t.req.tenant.as_str());
+        }
         for _ in 0..plan.admit {
             let Some(mut tr) = self.queue.pop_front() else { break };
             self.metrics
@@ -787,11 +983,17 @@ impl Engine {
         let group = self.cfg.group;
         let stalled = self.running.values().any(|t| t.state == RequestState::Decoding);
         let t0 = Instant::now();
-        let remaining: Vec<(RequestId, usize)> = self
+        let mut remaining: Vec<(RequestId, usize)> = self
             .prefill_order
             .iter()
             .map(|&id| (id, self.running[&id].prefill_remaining()))
             .collect();
+        if let Some(wfq) = self.wfq.as_mut() {
+            // chunk grants follow pass order too, so a tenant mid-flood
+            // yields the prefill budget to less-served tenants
+            let running = &self.running;
+            wfq.reorder(&mut remaining, |&(id, _)| running[&id].req.tenant.as_str());
+        }
         // prefix mode demands ALIGNED grants: every sequence's chunk
         // boundaries must sit at fixed multiples of `chunk` regardless of
         // concurrent prefill traffic, or the eagerly quantized pages it
@@ -841,6 +1043,9 @@ impl Engine {
             tr.prefill_pos += take;
             self.metrics.prefill_tokens += take as u64;
             self.metrics.prefill_chunks += 1;
+            if let Some(wfq) = self.wfq.as_mut() {
+                wfq.charge(&tr.req.tenant, take);
+            }
             Self::emit(
                 &self.subs,
                 id,
@@ -860,7 +1065,11 @@ impl Engine {
                     // register: the token slice bound stops at the prompt.
                     let cache = shared.lock().unwrap();
                     let tr = &self.running[&id];
-                    self.cache.pool().register_prefix(&cache.pages, &tr.req.prompt);
+                    self.cache.pool().register_prefix_for(
+                        &cache.pages,
+                        &tr.req.prompt,
+                        &tr.req.tenant,
+                    );
                 }
                 let tr = self.running.get_mut(&id).unwrap();
                 if tr.generated.is_empty() {
@@ -949,6 +1158,9 @@ impl Engine {
         let id = tr.req.id;
         let prompt = tr.req.prompt.clone();
         self.metrics.prefill_tokens += prompt.len() as u64;
+        if let Some(wfq) = self.wfq.as_mut() {
+            wfq.charge(&tr.req.tenant, prompt.len());
+        }
 
         // per-request SnapKV override beats the engine default; admission
         // already guaranteed this engine can honor it
@@ -1117,6 +1329,9 @@ impl Engine {
                         }
                         let tr = self.running.get_mut(&r.id).unwrap();
                         Self::record_token(&mut self.metrics, &self.subs, tr, r.token, r.logprob);
+                        if let Some(wfq) = self.wfq.as_mut() {
+                            wfq.charge(&tr.req.tenant, 1);
+                        }
                     }
                     self.step_results = results;
                 } else {
@@ -1132,6 +1347,9 @@ impl Engine {
                         let tr = self.running.get_mut(&id).unwrap();
                         let (tok, lp) = Self::sample_token(&self.subs, tr, &logits);
                         Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+                        if let Some(wfq) = self.wfq.as_mut() {
+                            wfq.charge(&tr.req.tenant, 1);
+                        }
                     }
                 }
                 decoded = seqs.len();
@@ -1194,6 +1412,9 @@ impl Engine {
                         let tr = self.running.get_mut(&id).unwrap();
                         let (tok, lp) = Self::sample_token(&self.subs, tr, logits);
                         Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+                        if let Some(wfq) = self.wfq.as_mut() {
+                            wfq.charge(&tr.req.tenant, 1);
+                        }
                     }
                     decoded += b.ids.len();
                 }
@@ -1219,6 +1440,7 @@ impl Engine {
                 tr.state = RequestState::Finished;
                 tr.finished_at = Some(Instant::now());
                 self.metrics.requests_finished += 1;
+                self.metrics.tenant(&tr.req.tenant).finished += 1;
                 self.metrics
                     .e2e
                     .record_secs(tr.arrived.elapsed().as_secs_f64());
@@ -1333,7 +1555,7 @@ mod tests {
         let mut eng = Engine::native_synthetic(tiny_cfg(), 3, 4.0, opts);
         eng.submit(Request::greedy(1, vec![1], 4)).unwrap();
         let r = eng.submit(Request::greedy(2, vec![1], 4));
-        assert_eq!(r, Err(AdmitDecision::QueueFull));
+        assert_eq!(r, Err(RejectReason::QueueFull));
         assert_eq!(eng.metrics.requests_rejected, 1);
     }
 
@@ -1463,16 +1685,16 @@ mod tests {
     fn empty_prompt_is_rejected_not_run() {
         let mut eng = Engine::native_synthetic(tiny_cfg(), 3, 4.0, EngineOpts::default());
         let r = eng.submit(Request::greedy(1, vec![], 4));
-        assert_eq!(r, Err(AdmitDecision::EmptyPrompt));
+        assert_eq!(r, Err(RejectReason::EmptyPrompt));
         assert_eq!(eng.metrics.requests_rejected, 1);
         assert!(eng.idle(), "rejected request must not enter the queue");
     }
 
     #[test]
     fn rejected_completion_is_distinguishable_from_truncation() {
-        let c = Completion::rejected(9, 5, AdmitDecision::QueueFull);
+        let c = Completion::rejected(9, 5, RejectReason::QueueFull);
         assert!(c.rejected && !c.truncated);
-        assert_eq!(c.reason, Some("queue_full"));
+        assert_eq!(c.reason, Some(RejectReason::QueueFull));
         assert_eq!(c.prompt_len, 5);
         assert!(c.tokens.is_empty());
     }
@@ -1619,7 +1841,7 @@ mod tests {
         let rx = eng.submit_streaming(Request::greedy(1, vec![1, 2], 4));
         let events: Vec<Event> = rx.try_iter().collect();
         assert_eq!(events.len(), 1);
-        assert!(matches!(events[0], Event::Rejected { id: 1, reason: "queue_full" }));
+        assert!(matches!(events[0], Event::Rejected { id: 1, reason: RejectReason::QueueFull }));
     }
 
     #[test]
@@ -1802,9 +2024,9 @@ mod tests {
         eng.submit_turn(3, Request::greedy(1, vec![1, 2, 3], 4), tx).unwrap();
         let (tx, rx) = std::sync::mpsc::channel();
         let r = eng.submit_turn(3, Request::greedy(2, vec![4], 4), tx);
-        assert_eq!(r, Err(AdmitDecision::SessionBusy));
+        assert_eq!(r, Err(RejectReason::SessionBusy));
         let events: Vec<Event> = rx.try_iter().collect();
-        assert!(matches!(events[0], Event::Rejected { reason: "session_busy", .. }));
+        assert!(matches!(events[0], Event::Rejected { reason: RejectReason::SessionBusy, .. }));
         eng.run_to_completion().unwrap();
         // first turn done: the session accepts the next turn again
         let (tx, _rx) = std::sync::mpsc::channel();
@@ -1820,7 +2042,7 @@ mod tests {
         let mut eng = Engine::native_synthetic(tiny_cfg(), 18, 4.0, opts);
         let mut req = Request::greedy(1, (0..30).map(|i| i as u32).collect(), 4);
         req.gen.snapkv = Some(SnapKvOpts { budget: 16, window: 4 });
-        assert_eq!(eng.submit(req), Err(AdmitDecision::UnsupportedOptions));
+        assert_eq!(eng.submit(req), Err(RejectReason::UnsupportedOptions));
         // whole-prompt engines honor it per request
         let mut eng = Engine::native_synthetic(tiny_cfg(), 18, 4.0, EngineOpts::default());
         let mut req = Request::greedy(1, (0..30).map(|i| i as u32).collect(), 4);
@@ -1833,7 +2055,7 @@ mod tests {
         // a bad window is rejected, not asserted deep in the model
         let mut req = Request::greedy(2, vec![1, 2, 3], 4);
         req.gen.snapkv = Some(SnapKvOpts { budget: 4, window: 9 });
-        assert_eq!(eng.submit(req), Err(AdmitDecision::UnsupportedOptions));
+        assert_eq!(eng.submit(req), Err(RejectReason::UnsupportedOptions));
     }
 
     #[test]
@@ -1845,5 +2067,132 @@ mod tests {
             .unwrap();
         let done = eng.run_to_completion().unwrap();
         assert_eq!(done[0].tokens.len(), 8);
+    }
+
+    #[test]
+    fn tenant_rate_limit_throttles_past_the_burst() {
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 21, 4.0, EngineOpts::default());
+        let mut tenancy = TenancyOpts::default();
+        // negligible refill: within this test only the burst matters
+        tenancy.rate = 1e-6;
+        tenancy.burst = 2.0;
+        eng.set_tenancy(&tenancy);
+        let mut req = |id: u64, tenant: &str| {
+            let mut r = Request::greedy(id, vec![1, 2, 3], 4);
+            r.tenant = tenant.to_string();
+            r
+        };
+        assert_eq!(eng.submit(req(1, "flood")), Ok(()));
+        assert_eq!(eng.submit(req(2, "flood")), Ok(()));
+        assert_eq!(eng.submit(req(3, "flood")), Err(RejectReason::TenantThrottled));
+        assert_eq!(eng.submit(req(4, "flood")), Err(RejectReason::TenantThrottled));
+        // buckets are per tenant: another tenant still gets its burst
+        assert_eq!(eng.submit(req(5, "calm")), Ok(()));
+        assert_eq!(eng.metrics.tenant_throttled, 2);
+        assert_eq!(eng.metrics.requests_rejected, 2);
+        assert_eq!(eng.metrics.tenants["flood"].admitted, 2);
+        assert_eq!(eng.metrics.tenants["flood"].throttled, 2);
+        assert_eq!(eng.metrics.tenants["calm"].admitted, 1);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 3, "admitted requests still complete");
+        assert_eq!(eng.metrics.tenants["flood"].finished, 2);
+        let s = eng.metrics.summary();
+        assert!(s.contains("tenant flood"), "throttled tenants surface in the summary: {s}");
+    }
+
+    #[test]
+    fn wfq_single_tenant_rollouts_match_fcfs_bit_identically() {
+        // with every request on one tenant, WFQ ordering is a stable
+        // no-op: outputs must equal the FCFS engine's exactly, chunked or
+        // not
+        let run = |sched: SchedMode, chunk: usize| {
+            let mut opts = EngineOpts::default();
+            opts.sched = sched;
+            opts.prefill_chunk = chunk;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 23, 4.0, opts);
+            let prompts: Vec<Vec<u32>> = vec![
+                vec![1, 2, 3],
+                (0..17).map(|i| (i * 5 % 60) as u32).collect(),
+                (0..30).map(|i| (i * 3 % 64) as u32).collect(),
+            ];
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(Request::greedy(i as u64, p.clone(), 8)).unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        for chunk in [0usize, 8] {
+            assert_eq!(
+                run(SchedMode::Fcfs, chunk),
+                run(SchedMode::Wfq, chunk),
+                "chunk={chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_session_reaps_to_tier_and_warm_restarts_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("polarquant-engine-ttl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = || {
+            let mut o = EngineOpts::default();
+            o.prefill_chunk = 8;
+            o.prefix_cache = true; // attach_tier requires it
+            o
+        };
+        let t1: Vec<u32> = (0..19).map(|i| (i * 3 % 64) as u32).collect();
+        let t2: Vec<u32> = vec![9, 8, 7];
+
+        // baseline: same conversation, never reaped
+        let (base1, base2, base_prefill2) = {
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 25, 4.0, opts());
+            let (tx, _rx) = std::sync::mpsc::channel();
+            eng.submit_turn(7, Request::greedy(1, t1.clone(), 12), tx).unwrap();
+            let g1 = eng.run_to_completion().unwrap()[0].tokens.clone();
+            let p1 = eng.metrics.prefill_tokens;
+            let (tx, _rx) = std::sync::mpsc::channel();
+            eng.submit_turn(7, Request::greedy(2, t2.clone(), 12), tx).unwrap();
+            let g2 = eng.run_to_completion().unwrap()[0].tokens.clone();
+            (g1, g2, eng.metrics.prefill_tokens - p1)
+        };
+
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 25, 4.0, opts());
+        eng.attach_tier(&TierOpts { dir: dir.clone(), max_bytes: u64::MAX, snapshot: false })
+            .unwrap();
+        let mut tenancy = TenancyOpts::default();
+        tenancy.session_ttl = Some(Duration::from_secs(0));
+        eng.set_tenancy(&tenancy);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        eng.submit_turn(7, Request::greedy(1, t1.clone(), 12), tx).unwrap();
+        let g1 = eng.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(g1, base1);
+        let p1 = eng.metrics.prefill_tokens;
+        // TTL 0: the idle session's chain demotes on the next sweep
+        assert_eq!(eng.reap_idle_sessions(), 1);
+        assert_eq!(eng.metrics.sessions_reaped, 1);
+        assert!(
+            eng.session_cached_tokens(7).is_none(),
+            "reaped chain must leave RAM"
+        );
+        assert!(eng.page_pool().bytes_on_disk() > 0);
+        // a second sweep finds nothing
+        assert_eq!(eng.reap_idle_sessions(), 0);
+        // the next turn promotes the chain and continues bit-identically,
+        // prefilling ONLY the new tokens (+ the one unfed token) — warm
+        // start, not a cold re-prefill of the history
+        let (tx, _rx) = std::sync::mpsc::channel();
+        eng.submit_turn(7, Request::greedy(2, t2.clone(), 12), tx).unwrap();
+        let g2 = eng.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(g2, base2, "restored chain must decode bit-identically");
+        assert_eq!(eng.metrics.sessions_restored, 1);
+        assert_eq!(
+            eng.metrics.prefill_tokens - p1,
+            base_prefill2,
+            "warm start prefills the same incremental tokens as never-reaped"
+        );
+        assert_eq!(eng.metrics.summary().contains("sessions reaped 1 (restored 1)"), true);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

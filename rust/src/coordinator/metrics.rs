@@ -1,9 +1,27 @@
 //! Serving metrics: the numbers behind Table 4 (throughput, latency,
-//! memory) and the engine's own health counters.
+//! memory) and the engine's own health counters — plus the per-tenant
+//! breakdown multi-tenant deployments read from the admin protocol.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::LatencyHist;
+
+/// One tenant's slice of the serving counters.  Created lazily on the
+/// tenant's first request; the map is ordered so `summary()` and the
+/// admin reply list tenants deterministically.
+#[derive(Debug, Default)]
+pub struct TenantStats {
+    pub admitted: u64,
+    /// rejected with `tenant_throttled` (a subset of the engine-wide
+    /// `requests_rejected`)
+    pub throttled: u64,
+    pub finished: u64,
+    pub decode_tokens: u64,
+    /// inter-token latency, per tenant — the number the WFQ acceptance
+    /// bench compares against a solo baseline
+    pub itl: LatencyHist,
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -63,6 +81,14 @@ pub struct Metrics {
     pub bytes_on_disk: u64,
     /// prompt tokens dropped by SnapKV compression before quantization
     pub snapkv_tokens_dropped: u64,
+    /// requests rejected because a tenant's token bucket ran dry
+    pub tenant_throttled: u64,
+    /// idle session chains demoted to the disk tier (`--session-ttl`)
+    pub sessions_reaped: u64,
+    /// reaped session chains promoted back on the next turn
+    pub sessions_restored: u64,
+    /// per-tenant breakdown (empty until a request names a tenant)
+    pub tenants: BTreeMap<String, TenantStats>,
 }
 
 impl Default for Metrics {
@@ -102,7 +128,19 @@ impl Metrics {
             pages_promoted: 0,
             bytes_on_disk: 0,
             snapkv_tokens_dropped: 0,
+            tenant_throttled: 0,
+            sessions_reaped: 0,
+            sessions_restored: 0,
+            tenants: BTreeMap::new(),
         }
+    }
+
+    /// The tenant's stats bucket, created on first touch.
+    pub fn tenant(&mut self, name: &str) -> &mut TenantStats {
+        if !self.tenants.contains_key(name) {
+            self.tenants.insert(name.to_string(), TenantStats::default());
+        }
+        self.tenants.get_mut(name).expect("inserted above")
     }
 
     /// Generated tokens per second since start.
@@ -185,6 +223,29 @@ impl Metrics {
         if self.snapkv_tokens_dropped > 0 {
             s.push_str(&format!(", snapkv dropped {} tok", self.snapkv_tokens_dropped));
         }
+        if self.sessions_reaped > 0 || self.sessions_restored > 0 {
+            s.push_str(&format!(
+                ", sessions reaped {} (restored {})",
+                self.sessions_reaped, self.sessions_restored,
+            ));
+        }
+        // the per-tenant breakdown only appears once a SECOND tenant (or
+        // a throttle) shows up: a single default tenant would repeat the
+        // engine-wide numbers
+        if self.tenants.len() > 1 || self.tenant_throttled > 0 {
+            for (name, t) in &self.tenants {
+                s.push_str(&format!(
+                    "\n  tenant {name}: adm {} fin {} thr {} tok {} itl p50/p99 \
+                     {:.2}/{:.2}ms",
+                    t.admitted,
+                    t.finished,
+                    t.throttled,
+                    t.decode_tokens,
+                    t.itl.p(50.0) * 1e3,
+                    t.itl.p(99.0) * 1e3,
+                ));
+            }
+        }
         s
     }
 }
@@ -249,5 +310,36 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("tier hits 4 (demoted 9, promoted 6, 12345 B on disk)"), "{s}");
         assert!(s.contains("snapkv dropped 77 tok"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_tenant_counters() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("tenant "), "quiet when unused");
+        m.tenant("default").admitted = 3;
+        assert!(
+            !m.summary().contains("tenant "),
+            "a lone tenant repeats the engine-wide numbers: stay quiet"
+        );
+        m.tenant("flood").admitted = 7;
+        m.tenant("flood").throttled = 5;
+        m.tenant_throttled = 5;
+        m.sessions_reaped = 2;
+        m.sessions_restored = 1;
+        let s = m.summary();
+        assert!(s.contains("tenant default: adm 3"), "{s}");
+        assert!(s.contains("tenant flood: adm 7 fin 0 thr 5"), "{s}");
+        assert!(s.contains("sessions reaped 2 (restored 1)"), "{s}");
+    }
+
+    #[test]
+    fn tenant_accessor_is_lazy_and_ordered() {
+        let mut m = Metrics::new();
+        m.tenant("b").finished = 1;
+        m.tenant("a").finished = 2;
+        m.tenant("b").finished += 1;
+        let names: Vec<&str> = m.tenants.keys().map(|s| s.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"], "deterministic listing order");
+        assert_eq!(m.tenants["b"].finished, 2);
     }
 }

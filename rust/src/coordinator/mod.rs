@@ -25,8 +25,10 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Backend, Engine, EngineOpts, TierOpts};
+pub use backpressure::{RejectReason, TenantBuckets};
+pub use engine::{Backend, Engine, EngineOpts, TenancyOpts, TierOpts};
 pub use pool::{DecodePool, DecodeTask, StepResult};
 pub use request::{
     Completion, Event, FinishReason, GenOptions, Request, RequestId, RequestState, SnapKvOpts,
 };
+pub use scheduler::{SchedMode, WfqState};

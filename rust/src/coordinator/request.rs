@@ -5,7 +5,7 @@
 
 use std::time::Instant;
 
-use super::backpressure::AdmitDecision;
+use super::backpressure::RejectReason;
 use crate::kvcache::SharedSeq;
 use crate::model::sampling::Sampler;
 
@@ -113,18 +113,27 @@ pub enum RequestState {
     Rejected,
 }
 
+/// The tenant every request without an explicit `tenant` frame field
+/// belongs to — including every v1 request, so single-tenant deployments
+/// see no behavior change.
+pub const DEFAULT_TENANT: &str = "default";
+
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
     /// optional session key for router affinity / engine KV reuse
     pub session: Option<u64>,
+    /// tenant identity (wire v2 `tenant` field; absent -> "default") —
+    /// drives weighted-fair scheduling, token-bucket admission, and
+    /// per-tenant page quotas
+    pub tenant: String,
     pub prompt: Vec<u32>,
     pub gen: GenOptions,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<u32>, gen: GenOptions) -> Self {
-        Request { id, session: None, prompt, gen }
+        Request { id, session: None, tenant: DEFAULT_TENANT.to_string(), prompt, gen }
     }
 
     /// Greedy request with default options (the v1 one-shot shape).
@@ -147,8 +156,9 @@ pub struct Completion {
     /// true if admission rejected the request outright (never ran);
     /// distinct from `truncated`, which means it RAN but was cut short
     pub rejected: bool,
-    /// why admission rejected it (see [`AdmitDecision::reason`])
-    pub reason: Option<&'static str>,
+    /// why admission rejected it (its wire label is
+    /// [`RejectReason::as_str`])
+    pub reason: Option<RejectReason>,
     /// why generation stopped: `Stop` | `Length` | `Cancelled` | `Rejected`
     pub finish_reason: FinishReason,
 }
@@ -156,7 +166,7 @@ pub struct Completion {
 impl Completion {
     /// The reply a rejected request gets: no tokens, no timings, and an
     /// explicit reason so clients can tell backpressure from truncation.
-    pub fn rejected(id: RequestId, prompt_len: usize, why: AdmitDecision) -> Self {
+    pub fn rejected(id: RequestId, prompt_len: usize, why: RejectReason) -> Self {
         Completion {
             id,
             prompt_len,
@@ -165,7 +175,7 @@ impl Completion {
             total_s: None,
             truncated: false,
             rejected: true,
-            reason: Some(why.reason()),
+            reason: Some(why),
             finish_reason: FinishReason::Rejected,
         }
     }
@@ -186,7 +196,7 @@ pub enum Event {
     /// terminal: the request finished (any `FinishReason` but `Rejected`)
     Done(Completion),
     /// terminal: admission refused the request; no other event follows
-    Rejected { id: RequestId, reason: &'static str },
+    Rejected { id: RequestId, reason: RejectReason },
 }
 
 /// Which session a request is a turn of (engine-internal).

@@ -1,10 +1,21 @@
-//! Prefill/decode interleaving policy.
+//! Prefill/decode interleaving policy + the pluggable admission ordering.
 //!
 //! vLLM-style "decode-priority with prefill admission": each engine step
 //! first admits up to `prefill_per_step` queued requests (prefill is the
 //! long pole; bounding it caps decode stall), then runs one decode
 //! iteration over every running sequence.  The policy is a pure function
 //! of queue state so it is unit-testable without an engine.
+//!
+//! WHICH queued request is admitted (and whose prefill chunks are granted
+//! first) is a separate, pluggable concern: [`SchedMode::Fcfs`] keeps the
+//! historical arrival order bit-identical, and [`SchedMode::Wfq`] orders
+//! by per-tenant virtual finish time ([`WfqState`], stride scheduling) so
+//! one tenant's flood cannot starve another — every backlogged tenant's
+//! pass value is finite while the flooder's grows with every token of
+//! service it receives, so the well-behaved tenant reaches the front of
+//! the order within a bounded number of steps.
+
+use std::collections::HashMap;
 
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerPolicy {
@@ -52,6 +63,112 @@ impl SchedulerPolicy {
         // and decode it in the same iteration — the engine refines this
         // against actual request states after the chunk phase
         StepPlan { admit, decode: decoding > 0 || prefilling > 0 || admit > 0 }
+    }
+}
+
+/// Which ordering the engine applies over queued requests and prefill
+/// chunk grants.  `Fcfs` (the default) is the historical behavior and is
+/// bit-identical to pre-WFQ builds; `Wfq` orders by tenant pass value.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedMode {
+    #[default]
+    Fcfs,
+    Wfq,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "fcfs" => Ok(SchedMode::Fcfs),
+            "wfq" => Ok(SchedMode::Wfq),
+            other => Err(format!("unknown scheduler '{other}' (fcfs|wfq)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedMode::Fcfs => "fcfs",
+            SchedMode::Wfq => "wfq",
+        }
+    }
+}
+
+/// Pass-value resolution: tokens are charged as `tokens * SCALE / weight`
+/// so integer division loses at most 1/SCALE of a token per charge.
+pub const WFQ_SCALE: u64 = 1 << 16;
+
+/// Stride-scheduling state for weighted-fair queueing over tenants.
+///
+/// Each tenant carries a monotone *pass* value; serving `t` tokens to a
+/// tenant of weight `w` advances its pass by `t * SCALE / w`, so at equal
+/// backlog a weight-2 tenant receives twice the tokens of a weight-1
+/// tenant.  Ordering queued work by `(pass, arrival)` is all the engine
+/// does — the state itself never blocks anyone, which is what makes the
+/// policy starvation-free: a backlogged tenant's pass is frozen while
+/// everyone ahead of it keeps advancing.
+///
+/// A tenant that was idle has its pass clamped up to the scheduler's
+/// virtual time (the pass of the last tenant served) on re-arrival, so
+/// idling never banks credit for a later burst.
+#[derive(Debug, Default)]
+pub struct WfqState {
+    weights: HashMap<String, u32>,
+    pass: HashMap<String, u64>,
+    /// virtual time: the pass value of the most recently served tenant
+    vt: u64,
+}
+
+impl WfqState {
+    pub fn new(weights: HashMap<String, u32>) -> Self {
+        WfqState { weights, pass: HashMap::new(), vt: 0 }
+    }
+
+    /// A tenant's weight (default 1; a configured 0 is treated as 1).
+    pub fn weight(&self, tenant: &str) -> u32 {
+        self.weights.get(tenant).copied().unwrap_or(1).max(1)
+    }
+
+    /// The tenant's current pass value, clamped up to virtual time
+    /// (re-arriving idle tenants start "now", not in the past).
+    pub fn pass_of(&mut self, tenant: &str) -> u64 {
+        let vt = self.vt;
+        let p = self.pass.entry(tenant.to_string()).or_insert(vt);
+        if *p < vt {
+            *p = vt;
+        }
+        *p
+    }
+
+    /// Charge `tokens` of service to a tenant and advance virtual time
+    /// to its (pre-charge) pass — it was just served, so "now" is at
+    /// least its place in line.
+    pub fn charge(&mut self, tenant: &str, tokens: usize) {
+        let w = self.weight(tenant) as u64;
+        let p = self.pass_of(tenant);
+        self.vt = self.vt.max(p);
+        let stride = (tokens as u64).saturating_mul(WFQ_SCALE) / w;
+        self.pass.insert(tenant.to_string(), p.saturating_add(stride));
+    }
+
+    /// Stable-reorder `items` by their tenant's pass value.  Stability
+    /// keeps same-tenant (and same-pass) items in FCFS order, so the
+    /// ordering degrades to exactly FCFS when every item shares one
+    /// tenant.
+    pub fn reorder<T>(&mut self, items: &mut [T], tenant_of: impl Fn(&T) -> &str) {
+        if items.len() < 2 {
+            return;
+        }
+        let keys: Vec<u64> = items.iter().map(|it| self.pass_of(tenant_of(it))).collect();
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| (keys[i], i));
+        // apply the permutation by cycle-walking (no T: Clone required)
+        for i in 0..order.len() {
+            while order[i] != i {
+                let j = order[i];
+                items.swap(i, j);
+                order.swap(i, j);
+            }
+        }
     }
 }
 
@@ -113,5 +230,62 @@ mod tests {
         // running cap still applies
         let tight = SchedulerPolicy { prefill_per_step: 4, max_running: 4 };
         assert_eq!(tight.plan_chunked(9, 1, 3).admit, 0);
+    }
+
+    #[test]
+    fn sched_mode_parses_strictly() {
+        assert_eq!(SchedMode::parse("fcfs").unwrap(), SchedMode::Fcfs);
+        assert_eq!(SchedMode::parse("wfq").unwrap(), SchedMode::Wfq);
+        assert!(SchedMode::parse("priority").is_err());
+        assert_eq!(SchedMode::default(), SchedMode::Fcfs);
+        assert_eq!(SchedMode::Wfq.as_str(), "wfq");
+    }
+
+    #[test]
+    fn wfq_single_tenant_is_fcfs() {
+        let mut w = WfqState::new(HashMap::new());
+        let mut items = vec![(1, "default"), (2, "default"), (3, "default")];
+        w.reorder(&mut items, |it| it.1);
+        assert_eq!(items.iter().map(|i| i.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wfq_charged_tenant_yields_the_front() {
+        let mut w = WfqState::new(HashMap::new());
+        // "noisy" has already consumed service; "quiet" has not
+        w.charge("noisy", 100);
+        let mut items = vec![(1, "noisy"), (2, "noisy"), (3, "quiet")];
+        w.reorder(&mut items, |it| it.1);
+        assert_eq!(items[0], (3, "quiet"));
+        // same-tenant relative order is preserved
+        assert_eq!(items[1], (1, "noisy"));
+        assert_eq!(items[2], (2, "noisy"));
+    }
+
+    #[test]
+    fn wfq_weights_scale_service_share() {
+        let mut w = WfqState::new(HashMap::from([("heavy".to_string(), 2u32)]));
+        // after equal token charges, the weight-2 tenant has the smaller
+        // pass -> it sorts first and receives ~2x the service over time
+        w.charge("heavy", 64);
+        w.charge("light", 64);
+        let mut items = vec![(1, "light"), (2, "heavy")];
+        w.reorder(&mut items, |it| it.1);
+        assert_eq!(items[0], (2, "heavy"));
+    }
+
+    #[test]
+    fn wfq_idle_tenant_banks_no_credit() {
+        let mut w = WfqState::new(HashMap::new());
+        // a busy tenant advances virtual time far ahead
+        for _ in 0..50 {
+            w.charge("busy", 64);
+        }
+        let busy_pass = w.pass_of("busy");
+        // a tenant arriving NOW starts at virtual time, not at 0 — its
+        // first scheduling advantage is one charge, not fifty
+        let fresh = w.pass_of("fresh");
+        assert!(busy_pass >= fresh);
+        assert!(fresh + 64 * WFQ_SCALE >= busy_pass, "fresh {fresh} busy {busy_pass}");
     }
 }

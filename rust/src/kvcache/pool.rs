@@ -35,7 +35,7 @@ use anyhow::{bail, Context, Result};
 use super::stream::GroupValues;
 use super::tier::{
     read_snapshot, spawn_writer, write_snapshot, DemoteJob, SegmentStore, SnapshotEntry,
-    TierBackend, TierConfig, TierCounters,
+    TierBackend, TierConfig, TierCounters, TierRef,
 };
 use crate::quant::polar::PolarGroup;
 
@@ -128,7 +128,15 @@ pub(crate) struct PrefixEntry {
     pub(crate) slot: Slot,
     /// LRU clock value of the last hit/registration
     pub(crate) tick: u64,
+    /// tenant whose request first registered this chain entry — the
+    /// owner for the per-tenant resident-page reserve
+    pub(crate) tenant: String,
 }
+
+/// Tenant name entries registered before multi-tenancy (or by paths with
+/// no tenant in scope — snapshot restores, anonymous v1 requests) fall
+/// back to.
+pub(crate) const DEFAULT_TENANT: &str = "default";
 
 const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
 
@@ -150,6 +158,24 @@ pub(crate) struct PrefixIndex {
     pub(crate) clock: u64,
     /// attached disk tier (None = PR-3 behavior: reclaim drops pages)
     pub(crate) tier: Option<TierBackend>,
+    /// per-tenant resident-page floor: reclaim and displacement skip a
+    /// tenant's entries once its resident count is at or below this, so
+    /// one tenant's flood cannot strip another's last cached pages
+    /// (0 = PR-3 behavior: every refcount-zero page is fair game)
+    pub(crate) tenant_reserve: usize,
+}
+
+impl PrefixIndex {
+    /// Resident (+ queued: still in RAM) indexed pages per tenant.
+    fn resident_by_tenant(&self) -> HashMap<String, usize> {
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for e in self.entries.values() {
+            if matches!(e.slot, Slot::Resident(..) | Slot::Queued(_)) {
+                *counts.entry(e.tenant.clone()).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
 }
 
 /// Hard ceiling on prefix-index entries when the pool itself is
@@ -194,6 +220,7 @@ impl PagePool {
                 entries: HashMap::new(),
                 clock: 0,
                 tier: None,
+                tenant_reserve: 0,
             })),
             counters: Arc::new(PoolCounters::default()),
             tier_stats: Arc::new(TierCounters::default()),
@@ -269,13 +296,22 @@ impl PagePool {
         while self.free_pages() < need {
             // LRU resident entry whose page no sequence holds (the index
             // owns the only Arc); Queued entries are already on their way
-            // out, Tiered ones hold no RAM
+            // out, Tiered ones hold no RAM.  With a tenant reserve set,
+            // entries of tenants at/below their resident floor are off
+            // limits — the shortfall then falls through to preemption
+            // rather than cross-tenant cache theft.
+            let reserve = idx.tenant_reserve;
+            let counts =
+                if reserve > 0 { idx.resident_by_tenant() } else { HashMap::new() };
             let victim = idx
                 .entries
                 .iter()
                 .filter(
                     |(_, e)| matches!(&e.slot, Slot::Resident(p, _) if Arc::strong_count(p) == 1),
                 )
+                .filter(|(_, e)| {
+                    reserve == 0 || counts.get(&e.tenant).copied().unwrap_or(0) > reserve
+                })
                 .min_by_key(|(_, e)| e.tick)
                 .map(|(&h, _)| h);
             match victim {
@@ -435,6 +471,12 @@ impl PagePool {
     /// boundary is request-private).  Idempotent: existing entries are
     /// left untouched, so repeated registration as chunks land is cheap.
     pub fn register_prefix(&self, pages: &[Arc<Page>], tokens: &[u32]) {
+        self.register_prefix_for(pages, tokens, DEFAULT_TENANT);
+    }
+
+    /// [`PagePool::register_prefix`] with an explicit owning tenant —
+    /// the name the per-tenant reserve accounts these entries to.
+    pub fn register_prefix_for(&self, pages: &[Arc<Page>], tokens: &[u32], tenant: &str) {
         let mut guard = self.index.lock().unwrap();
         let idx = &mut *guard;
         // with a tier attached, the index may legitimately outgrow the
@@ -475,13 +517,23 @@ impl PagePool {
             };
             if !exists {
                 // bound the index: past the cap, a new entry must displace
-                // the LRU removable one, or it simply isn't cached
+                // the LRU removable one, or it simply isn't cached.  The
+                // tenant reserve shields OTHER tenants' resident floors
+                // here too (Tiered entries hold no RAM and stay fair game)
                 if idx.entries.len() >= cap {
+                    let reserve = idx.tenant_reserve;
+                    let counts =
+                        if reserve > 0 { idx.resident_by_tenant() } else { HashMap::new() };
                     let lru = idx
                         .entries
                         .iter()
                         .filter(|(_, e)| match &e.slot {
-                            Slot::Resident(p, _) => Arc::strong_count(p) == 1,
+                            Slot::Resident(p, _) => {
+                                Arc::strong_count(p) == 1
+                                    && (reserve == 0
+                                        || e.tenant == tenant
+                                        || counts.get(&e.tenant).copied().unwrap_or(0) > reserve)
+                            }
                             Slot::Queued(_) => false, // writer owns it
                             Slot::Tiered(_) => true,  // forgetting a ref is free
                         })
@@ -504,12 +556,25 @@ impl PagePool {
                         toks: toks.to_vec(),
                         slot: Slot::Resident(page.clone(), None),
                         tick,
+                        tenant: tenant.to_string(),
                     },
                 );
             }
             parent = h;
             pos += page.tokens;
         }
+    }
+
+    /// Set the per-tenant resident-page floor (see
+    /// [`PrefixIndex::tenant_reserve`]); 0 disables the protection.
+    pub fn set_tenant_reserve(&self, pages: usize) {
+        self.index.lock().unwrap().tenant_reserve = pages;
+    }
+
+    /// Resident (+ queued) prefix-cache pages per owning tenant
+    /// (metrics/observability).
+    pub fn tenant_pages(&self) -> HashMap<String, usize> {
+        self.index.lock().unwrap().resident_by_tenant()
     }
 
     /// Prefix-index entries currently held (tests/observability).
@@ -590,7 +655,13 @@ impl PagePool {
             let h = chain_hash(e.parent, &e.toks);
             idx.entries.insert(
                 h,
-                PrefixEntry { parent: e.parent, toks: e.toks, slot: Slot::Tiered(e.tref), tick },
+                PrefixEntry {
+                    parent: e.parent,
+                    toks: e.toks,
+                    slot: Slot::Tiered(e.tref),
+                    tick,
+                    tenant: DEFAULT_TENANT.to_string(),
+                },
             );
         }
         idx.tier = Some(TierBackend {
@@ -623,6 +694,32 @@ impl PagePool {
 
     pub fn bytes_on_disk(&self) -> u64 {
         self.tier_stats.bytes_on_disk.load(Ordering::Relaxed)
+    }
+
+    /// Append one opaque session blob (`kvcache::tier::session`) to the
+    /// tier's segment store — the idle-session TTL reaper's write path.
+    /// Fails when no tier is attached; the engine then simply keeps the
+    /// session resident.
+    pub fn session_spill(&self, bytes: &[u8]) -> Result<TierRef> {
+        let store = {
+            let idx = self.index.lock().unwrap();
+            let Some(t) = &idx.tier else { bail!("no tier attached") };
+            t.store.clone()
+        };
+        let r = store.put_bytes(bytes)?;
+        self.tier_stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
+        Ok(r)
+    }
+
+    /// Read back a session blob written by [`PagePool::session_spill`].
+    /// The caller verifies content (`tier::session::decode_session`).
+    pub fn session_fetch(&self, r: TierRef) -> Result<Vec<u8>> {
+        let store = {
+            let idx = self.index.lock().unwrap();
+            let Some(t) = &idx.tier else { bail!("no tier attached") };
+            t.store.clone()
+        };
+        store.get_bytes(r)
     }
 
     /// Synchronously demote every refcount-zero resident prefix entry
@@ -838,6 +935,67 @@ mod tests {
     }
 
     #[test]
+    fn tenant_reserve_shields_a_tenants_last_pages_from_reclaim() {
+        let pool = PagePool::new(4);
+        pool.set_tenant_reserve(1);
+        let toks_a: Vec<u32> = (0..4).collect();
+        let toks_b: Vec<u32> = (100..104).collect();
+        let toks_c: Vec<u32> = (200..204).collect();
+        let pa = pool.adopt(page(1));
+        pool.register_prefix_for(std::slice::from_ref(&pa), &toks_a, "small");
+        drop(pa);
+        let pb = pool.adopt(page(2));
+        pool.register_prefix_for(std::slice::from_ref(&pb), &toks_b, "flood");
+        drop(pb);
+        let pc = pool.adopt(page(3));
+        pool.register_prefix_for(std::slice::from_ref(&pc), &toks_c, "flood");
+        drop(pc);
+        let _held = pool.adopt(page(4));
+        assert_eq!(pool.free_pages(), 0);
+        // flood is past its floor (2 resident) — its LRU entry is the
+        // only eligible victim; small's lone page is protected
+        assert!(pool.try_free(1));
+        assert!(pool.lookup_prefix(&toks_b, 4, usize::MAX).is_empty(), "flood LRU evicted");
+        assert_eq!(pool.lookup_prefix(&toks_a, 4, usize::MAX).len(), 1, "small survives");
+        assert_eq!(pool.lookup_prefix(&toks_c, 4, usize::MAX).len(), 1);
+        let counts = pool.tenant_pages();
+        assert_eq!(counts.get("small"), Some(&1));
+        assert_eq!(counts.get("flood"), Some(&1));
+        // now every tenant sits at the floor: asking past the one free
+        // page must refuse rather than strip a protected tenant (the
+        // engine preempts instead)
+        assert!(!pool.try_free(2));
+        // without the reserve the same state reclaims fine
+        pool.set_tenant_reserve(0);
+        assert!(pool.try_free(2));
+    }
+
+    #[test]
+    fn tenant_reserve_guards_displacement_but_not_own_entries() {
+        // index at cap: a new registration may displace the registrant's
+        // OWN floor entries, never another tenant's
+        let pool = PagePool::new(2);
+        pool.set_tenant_reserve(1);
+        let toks_a: Vec<u32> = (0..4).collect();
+        let toks_b: Vec<u32> = (100..104).collect();
+        let toks_b2: Vec<u32> = (200..204).collect();
+        let pa = pool.adopt(page(10));
+        pool.register_prefix_for(std::slice::from_ref(&pa), &toks_a, "small");
+        drop(pa);
+        let pb = pool.adopt(page(11));
+        pool.register_prefix_for(std::slice::from_ref(&pb), &toks_b, "flood");
+        drop(pb);
+        assert_eq!(pool.indexed_pages(), 2);
+        let pb2 = pool.adopt(page(12));
+        pool.register_prefix_for(std::slice::from_ref(&pb2), &toks_b2, "flood");
+        drop(pb2);
+        assert_eq!(pool.indexed_pages(), 2, "index stays at cap");
+        assert_eq!(pool.lookup_prefix(&toks_a, 4, usize::MAX).len(), 1, "small protected");
+        assert!(pool.lookup_prefix(&toks_b, 4, usize::MAX).is_empty(), "flood displaced itself");
+        assert_eq!(pool.lookup_prefix(&toks_b2, 4, usize::MAX).len(), 1);
+    }
+
+    #[test]
     fn register_skips_pages_past_the_token_limit() {
         let pool = PagePool::new(usize::MAX);
         let pages: Vec<_> = (0..3).map(|i| pool.adopt(page(40 + i))).collect();
@@ -979,6 +1137,27 @@ mod tests {
         let hit = pool.lookup_prefix(&toks, 4, usize::MAX);
         assert_eq!(hit.len(), 2);
         assert!(pool.pages_in_use() <= 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn session_blobs_roundtrip_through_the_tier() {
+        let dir = tier_dir("session-blob");
+        let pool = PagePool::new(usize::MAX);
+        assert!(pool.session_spill(b"x").is_err(), "spill without a tier must fail");
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let blob: Vec<u8> = (0..777u32).map(|i| (i % 251) as u8).collect();
+        let r = pool.session_spill(&blob).unwrap();
+        assert!(pool.bytes_on_disk() >= blob.len() as u64);
+        assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        // blobs and demoted pages share segments without interference
+        let toks: Vec<u32> = (0..4).collect();
+        let p = pool.adopt(page(33));
+        pool.register_prefix(std::slice::from_ref(&p), &toks);
+        drop(p);
+        assert_eq!(pool.demote_all(), 1);
+        assert_eq!(pool.lookup_prefix(&toks, 4, usize::MAX).len(), 1);
+        assert_eq!(pool.session_fetch(r).unwrap(), blob);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -218,6 +218,31 @@ impl SequenceCache {
         self.sync_accounting();
     }
 
+    /// Restore the per-stream fp residual tails + position cursor of a
+    /// session chain promoted from the disk tier.  Runs after
+    /// [`SequenceCache::adopt_pages`] on a fresh cache — pages first,
+    /// then tails — rebuilding exactly the state the chain was reaped
+    /// with, so the next turn's prefill is bit-identical to resuming an
+    /// unreaped chain.
+    pub fn restore_tail(&mut self, tails: Vec<(Vec<f32>, Vec<f32>)>, next_pos: usize) {
+        assert_eq!(tails.len(), self.streams.len(), "one tail per stream");
+        assert_eq!(self.resid_len(), 0, "tails restore onto empty residuals");
+        let d = self.cfg.head_dim;
+        for (st, (k, v)) in self.streams.iter_mut().zip(tails) {
+            assert_eq!(k.len(), v.len());
+            assert_eq!(k.len() % d, 0, "tail rows must be d-aligned");
+            st.resid_k = k;
+            st.resid_v = v;
+        }
+        assert_eq!(
+            self.quantized_tokens + self.resid_len(),
+            next_pos,
+            "cursor must cover exactly the restored pages + tails"
+        );
+        self.next_pos = next_pos;
+        self.sync_accounting();
+    }
+
     /// Copy-on-write fork for n-way sampling from one prompt: finalized
     /// pages are SHARED (refcount bump, no bytes copied); only the fp
     /// residual tails are deep-copied.  Either side cutting new pages

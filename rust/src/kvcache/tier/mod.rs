@@ -11,7 +11,11 @@
 //!   decode is bit-exact, corruption is an `Err`, never a panic).
 //! * [`store`] — the append-only segment file store:
 //!   `put(page) -> TierRef`, `get(TierRef) -> Page`, segments immutable
-//!   once written so persisted refs survive restarts.
+//!   once written so persisted refs survive restarts.  Opaque records
+//!   (`put_bytes`/`get_bytes`) share the same segments.
+//! * [`session`] — the whole-chain codec behind idle-session TTL
+//!   reaping: a session's pages + fp tails + cursor as one checksummed
+//!   blob, restored bit-exactly on the tenant's next turn.
 //! * [`tier`] — the policy plumbing: bounded demotion queue + background
 //!   writer (reclaim never blocks on disk), shared counters, and the
 //!   snapshot codec that persists the prefix index for warm starts.
@@ -25,6 +29,7 @@
 //! warm-starts with its prefix cache populated.
 
 pub mod serde;
+pub mod session;
 pub mod store;
 #[allow(clippy::module_inception)]
 pub mod tier;

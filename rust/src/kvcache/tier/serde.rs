@@ -68,19 +68,22 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 
 // ------------------------------------------------------------- writing
 
-fn put_u16(buf: &mut Vec<u8>, v: u16) {
+// the little-endian writers are shared with the session-chain codec in
+// `super::session` (same record style: body + fnv1a trailer)
+
+pub(crate) fn put_u16(buf: &mut Vec<u8>, v: u16) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
@@ -175,7 +178,7 @@ impl<'a> Cur<'a> {
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }

@@ -1,0 +1,221 @@
+//! Checksummed binary codec for a WHOLE session chain — the unit the
+//! idle-session TTL reaper demotes to the disk tier.
+//!
+//! A reaped chain must come back bit-identical: its pages depend on the
+//! exact chunk boundaries the session's turns happened to produce, so it
+//! can never enter the shared prefix index (which assumes canonical
+//! chunking).  Instead the entire chain — every quantized page plus the
+//! fp residual tails and the position cursor — is serialized privately
+//! as ONE opaque record:
+//!
+//! ```text
+//! u32 magic "PQSS"   u16 version   u16 flags (0)
+//! u64 config_tag     u64 next_pos
+//! u32 n_streams      u32 n_pages
+//! per page:   u32 rec_len, <rec_len bytes of a serde::encode_page record>
+//! u32 resid_rows     u32 d
+//! per stream: resid_rows * d f32 resid_k, then resid_rows * d f32 resid_v
+//! u64 fnv1a-64 checksum over every preceding byte
+//! ```
+//!
+//! Each embedded page record carries its own checksum; the outer fnv1a
+//! guards the envelope (tag, cursor, tails).  `config_tag` is the same
+//! engine-config fingerprint the snapshot index uses: a blob written
+//! under a different model/quantization config decodes to `Err`, and the
+//! caller degrades to a cold re-prefill — never a silently wrong cache.
+
+use anyhow::{ensure, Result};
+
+use super::serde::{self, Cur};
+use crate::kvcache::pool::Page;
+use crate::kvcache::seq::SequenceCache;
+
+pub const SESSION_MAGIC: u32 = 0x5051_5353; // "PQSS"
+pub const SESSION_VERSION: u16 = 1;
+
+/// A decoded session chain, ready to rebuild a [`SequenceCache`] via
+/// [`SequenceCache::adopt_pages`] + [`SequenceCache::restore_tail`].
+pub struct SessionBlob {
+    pub pages: Vec<Page>,
+    /// per stream: (resid_k, resid_v) fp tails
+    pub tails: Vec<(Vec<f32>, Vec<f32>)>,
+    pub next_pos: usize,
+}
+
+/// Serialize one session chain into a self-contained checksummed record.
+pub fn encode_session(seq: &SequenceCache, config_tag: u64) -> Vec<u8> {
+    let d = seq.cfg.head_dim;
+    let mut buf = Vec::with_capacity(256 + seq.nbytes());
+    serde::put_u32(&mut buf, SESSION_MAGIC);
+    serde::put_u16(&mut buf, SESSION_VERSION);
+    serde::put_u16(&mut buf, 0); // flags, reserved
+    serde::put_u64(&mut buf, config_tag);
+    serde::put_u64(&mut buf, seq.next_pos as u64);
+    serde::put_u32(&mut buf, seq.streams.len() as u32);
+    serde::put_u32(&mut buf, seq.pages.len() as u32);
+    for p in &seq.pages {
+        let rec = serde::encode_page(p);
+        serde::put_u32(&mut buf, rec.len() as u32);
+        buf.extend_from_slice(&rec);
+    }
+    let resid_rows = seq.resid_len();
+    serde::put_u32(&mut buf, resid_rows as u32);
+    serde::put_u32(&mut buf, d as u32);
+    for st in &seq.streams {
+        debug_assert_eq!(st.resid_k.len(), resid_rows * d);
+        serde::put_f32s(&mut buf, &st.resid_k);
+        serde::put_f32s(&mut buf, &st.resid_v);
+    }
+    let sum = serde::fnv1a(&buf);
+    serde::put_u64(&mut buf, sum);
+    buf
+}
+
+/// Parse and verify one session record.  Any corruption — bad magic,
+/// unknown version, foreign `config_tag`, failed checksum (outer or any
+/// embedded page's), inconsistent geometry, trailing bytes — returns
+/// `Err`; the caller treats the session as cold.
+pub fn decode_session(buf: &[u8], expected_tag: u64) -> Result<SessionBlob> {
+    ensure!(buf.len() >= 4 + 2 + 2 + 8 + 8 + 4 + 4 + 8, "session record too short ({} bytes)", buf.len());
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    ensure!(serde::fnv1a(body) == want, "session record checksum mismatch");
+
+    let mut c = Cur::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == SESSION_MAGIC, "session record bad magic {magic:#x}");
+    let version = c.u16()?;
+    ensure!(version == SESSION_VERSION, "session record version {version} (reader handles v{SESSION_VERSION})");
+    let _flags = c.u16()?;
+    let tag = c.u64()?;
+    ensure!(
+        tag == expected_tag,
+        "session record config tag {tag:#x} != engine {expected_tag:#x}"
+    );
+    let next_pos = c.u64()? as usize;
+    let n_streams = c.u32()? as usize;
+    let n_pages = c.u32()? as usize;
+    ensure!(n_streams > 0, "session record: zero streams");
+
+    let mut pages = Vec::with_capacity(n_pages.min(4096));
+    let mut paged_tokens = 0usize;
+    for _ in 0..n_pages {
+        let rec_len = c.u32()? as usize;
+        let page = serde::decode_page(c.take(rec_len)?)?;
+        ensure!(
+            page.keys.len() == n_streams,
+            "session record: page stream count {} != chain {}",
+            page.keys.len(),
+            n_streams
+        );
+        paged_tokens += page.tokens;
+        pages.push(page);
+    }
+
+    let resid_rows = c.u32()? as usize;
+    let d = c.u32()? as usize;
+    ensure!(d > 0, "session record: zero head dim");
+    let mut tails = Vec::with_capacity(n_streams);
+    for _ in 0..n_streams {
+        let k = c.f32s(resid_rows * d)?;
+        let v = c.f32s(resid_rows * d)?;
+        tails.push((k, v));
+    }
+    ensure!(c.done(), "session record: trailing bytes");
+    ensure!(
+        paged_tokens + resid_rows == next_pos,
+        "session record: cursor {next_pos} disagrees with {paged_tokens} paged + {resid_rows} tail tokens"
+    );
+    Ok(SessionBlob { pages, tails, next_pos })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::seq::{CacheConfig, SequenceCache};
+    use crate::quant::polar::PolarSpec;
+    use crate::util::rng::Rng;
+
+    fn chain(seed: u64, tokens: usize) -> SequenceCache {
+        let cfg = CacheConfig {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 8,
+            spec: PolarSpec::new(4, 4, 4),
+            value_bits: None,
+        };
+        let mut seq = SequenceCache::new(cfg.clone());
+        let mut rng = Rng::new(seed);
+        let w = cfg.streams() * cfg.head_dim;
+        for _ in 0..tokens {
+            let k = rng.normal_vec(w);
+            let v = rng.normal_vec(w);
+            seq.append_step(&k, &v);
+        }
+        seq
+    }
+
+    #[test]
+    fn roundtrip_rebuilds_the_exact_chain() {
+        // 11 tokens with group 4: 2 full groups paged (if page cuts ran)
+        // or residing in tails — either way the restored chain must be
+        // bit-identical stream by stream
+        for tokens in [3usize, 11, 16] {
+            let seq = chain(7, tokens);
+            let blob = encode_session(&seq, 0xfeed);
+            let dec = decode_session(&blob, 0xfeed).expect("decode");
+            assert_eq!(dec.next_pos, seq.next_pos);
+            assert_eq!(dec.pages.len(), seq.pages.len());
+            for (a, b) in seq.pages.iter().zip(&dec.pages) {
+                assert_eq!(serde::encode_page(a), serde::encode_page(b));
+            }
+            let mut back = SequenceCache::new(seq.cfg.clone());
+            back.adopt_pages(dec.pages.into_iter().map(std::sync::Arc::new).collect());
+            back.restore_tail(dec.tails, dec.next_pos);
+            assert_eq!(back.len(), seq.len());
+            assert_eq!(back.next_pos, seq.next_pos);
+            for (a, b) in seq.streams.iter().zip(&back.streams) {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a.resid_k), bits(&b.resid_k));
+                assert_eq!(bits(&a.resid_v), bits(&b.resid_v));
+            }
+            // and the restored chain re-encodes to the exact same blob
+            assert_eq!(encode_session(&back, 0xfeed), blob);
+        }
+    }
+
+    #[test]
+    fn foreign_config_tag_is_rejected() {
+        let seq = chain(9, 5);
+        let blob = encode_session(&seq, 1);
+        assert!(decode_session(&blob, 2).is_err(), "wrong tag must not decode");
+        assert!(decode_session(&blob, 1).is_ok());
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicking() {
+        let seq = chain(11, 13);
+        let blob = encode_session(&seq, 42);
+        for i in [0usize, 9, blob.len() / 2, blob.len() - 9, blob.len() - 1] {
+            let mut bad = blob.clone();
+            bad[i] ^= 0x41;
+            assert!(decode_session(&bad, 42).is_err(), "flip at {i} accepted");
+        }
+        for cut in [0usize, 17, blob.len() / 3, blob.len() - 1] {
+            assert!(decode_session(&blob[..cut], 42).is_err(), "truncation to {cut} accepted");
+        }
+        let mut long = blob.clone();
+        long.extend_from_slice(&[0u8; 4]);
+        assert!(decode_session(&long, 42).is_err());
+    }
+
+    #[test]
+    fn empty_chain_roundtrips() {
+        let seq = chain(1, 0);
+        let blob = encode_session(&seq, 5);
+        let dec = decode_session(&blob, 5).unwrap();
+        assert_eq!(dec.next_pos, 0);
+        assert!(dec.pages.is_empty());
+        assert!(dec.tails.iter().all(|(k, v)| k.is_empty() && v.is_empty()));
+    }
+}

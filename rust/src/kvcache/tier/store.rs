@@ -83,9 +83,8 @@ impl SegmentStore {
         self.bytes.load(Ordering::Relaxed)
     }
 
-    /// Serialize and append one page; returns where it landed.
-    pub fn put(&self, page: &Page) -> Result<TierRef> {
-        let rec = serde::encode_page(page);
+    /// Append one already-serialized record; returns where it landed.
+    fn append_record(&self, rec: &[u8]) -> Result<TierRef> {
         let mut w = self.w.lock().unwrap();
         if w.file.is_none() || (w.off > 0 && w.off + rec.len() as u64 > self.roll_bytes) {
             if w.file.is_some() {
@@ -100,24 +99,40 @@ impl SegmentStore {
             w.file = Some(file);
             w.off = 0;
         }
-        w.file.as_mut().unwrap().write_all(&rec).context("appending to segment")?;
+        w.file.as_mut().unwrap().write_all(rec).context("appending to segment")?;
         let tref = TierRef { seg: w.seg, off: w.off, len: rec.len() as u32 };
         w.off += rec.len() as u64;
         self.bytes.fetch_add(rec.len() as u64, Ordering::Relaxed);
         Ok(tref)
     }
 
-    /// Read back and decode one record.  Corruption (checksum, lengths,
-    /// short read) comes back as `Err` — the caller degrades to a cache
-    /// miss.
-    pub fn get(&self, r: TierRef) -> Result<Page> {
+    /// Serialize and append one page; returns where it landed.
+    pub fn put(&self, page: &Page) -> Result<TierRef> {
+        self.append_record(&serde::encode_page(page))
+    }
+
+    /// Append an opaque pre-serialized record (the session-blob path —
+    /// [`super::session`] owns that format, including its checksum).
+    pub fn put_bytes(&self, bytes: &[u8]) -> Result<TierRef> {
+        self.append_record(bytes)
+    }
+
+    /// Read back one record's raw bytes without decoding.
+    pub fn get_bytes(&self, r: TierRef) -> Result<Vec<u8>> {
         let path = seg_path(&self.dir, r.seg);
         let mut f =
             File::open(&path).with_context(|| format!("opening segment {}", path.display()))?;
         f.seek(SeekFrom::Start(r.off)).context("seeking record")?;
         let mut buf = vec![0u8; r.len as usize];
         f.read_exact(&mut buf).context("reading record")?;
-        serde::decode_page(&buf)
+        Ok(buf)
+    }
+
+    /// Read back and decode one record.  Corruption (checksum, lengths,
+    /// short read) comes back as `Err` — the caller degrades to a cache
+    /// miss.
+    pub fn get(&self, r: TierRef) -> Result<Page> {
+        serde::decode_page(&self.get_bytes(r)?)
     }
 
     /// Flush the active segment to stable storage (snapshot path).
@@ -191,6 +206,25 @@ mod tests {
         assert_eq!(serde::encode_page(&store.get(r0).unwrap()), serde::encode_page(&page(7)));
         assert_eq!(serde::encode_page(&store.get(r1).unwrap()), serde::encode_page(&page(8)));
         assert!(store.get(TierRef { seg: 999, off: 0, len: 4 }).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn opaque_records_interleave_with_pages() {
+        // session blobs (put_bytes) and pages (put) share segments; each
+        // comes back verbatim through its own read path
+        let dir = tmp("opaque");
+        let store = SegmentStore::open(&dir, 1 << 20).unwrap();
+        let blob: Vec<u8> = (0..513u32).map(|i| (i * 7) as u8).collect();
+        let rb = store.put_bytes(&blob).unwrap();
+        let rp = store.put(&page(11)).unwrap();
+        let rb2 = store.put_bytes(&[0xAB; 3]).unwrap();
+        assert_eq!(store.get_bytes(rb).unwrap(), blob);
+        assert_eq!(serde::encode_page(&store.get(rp).unwrap()), serde::encode_page(&page(11)));
+        assert_eq!(store.get_bytes(rb2).unwrap(), vec![0xAB; 3]);
+        // short read on a truncated ref still errors
+        let past = TierRef { seg: rb2.seg, off: rb2.off + 1, len: rb2.len };
+        assert!(store.get_bytes(past).is_err());
         fs::remove_dir_all(&dir).unwrap();
     }
 

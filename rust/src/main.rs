@@ -39,7 +39,20 @@
 //! restarts (written on `{"admin":"shutdown"}`, restored at boot).
 //! `--snapkv-budget N --snapkv-window W` (native/synthetic, whole-prompt
 //! prefill only) compresses each prompt to its N most-attended tokens
-//! before quantization (paper Table 8).  `--kernel auto|scalar|simd`
+//! before quantization (paper Table 8).
+//!
+//! Multi-tenant serving (`serve`): `--sched wfq --tenant-weight
+//! paid=4,free=1` orders the queue by deficit-weighted round robin
+//! across tenants instead of FCFS; `--tenant-rate R --tenant-burst B`
+//! token-buckets admission per tenant (rejections carry reason
+//! `tenant_throttled`); `--tenant-pages N` reserves a per-tenant floor
+//! of resident prefix-cache pages; `--session-ttl SECS` (with
+//! `--tier-dir`) demotes an idle session's KV chain to the disk tier
+//! and restores it bit-identically on the conversation's next turn.
+//! Requests name their tenant with the wire-v2 `tenant` field
+//! (`client --tenant NAME`); absent means the shared `default` tenant.
+//!
+//! `--kernel auto|scalar|simd`
 //! picks the QK score kernel (`quant::lut::ScoreKernel`); kernels are
 //! bit-identical, so it is purely a performance knob — an explicit
 //! `simd` is rejected up front when the build or CPU can't run it.
@@ -54,7 +67,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use polarquant::coordinator::engine::SnapKvOpts;
-use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request, TierOpts};
+use polarquant::coordinator::{
+    Engine, EngineOpts, GenOptions, Request, SchedMode, TenancyOpts, TierOpts,
+};
 use polarquant::eval::{eval_codec, Table};
 use polarquant::quant::{select_kernel, KernelKind, QuantSpec};
 use polarquant::runtime::Manifest;
@@ -110,6 +125,12 @@ const SERVE: CmdSpec = CmdSpec {
         flag("tier-dir", "DIR", "", "disk tier directory (requires --prefix-cache on)"),
         flag("tier-bytes", "N", "1073741824", "stop demoting past this many segment bytes"),
         flag("snapshot", "on|off", "on", "persist the prefix index at graceful shutdown"),
+        flag("sched", "NAME", "fcfs", "queued-request order: fcfs | wfq (weighted fair)"),
+        flag("tenant-weight", "N=W,..", "", "WFQ weights, e.g. paid=4,free=1 (needs --sched wfq)"),
+        flag("tenant-rate", "R", "0", "per-tenant admission bucket refill, requests/s (0 = off)"),
+        flag("tenant-burst", "B", "0", "admission bucket burst (needs --tenant-rate; 0 = rate)"),
+        flag("tenant-pages", "N", "0", "per-tenant resident prefix-page floor (needs --prefix-cache)"),
+        flag("session-ttl", "SECS", "0", "reap idle session chains to the tier (0 = off; needs --tier-dir)"),
     ],
 };
 
@@ -167,6 +188,7 @@ const CLIENT: CmdSpec = CmdSpec {
         flag("session", "N", "", "session id (router affinity; turns reuse its KV chain)"),
         flag("turn", "T1,T2,..", "", "session-turn tokens, new tokens only (needs --session)"),
         flag("session-op", "open|close", "", "open a new session / close --session N"),
+        flag("tenant", "NAME", "", "tenant identity for fair scheduling / quotas (wire v2)"),
         flag("admin", "CMD", "", "admin command instead of generating: metrics | shutdown"),
     ],
 };
@@ -351,6 +373,8 @@ struct EngineSpec {
     /// (base dir, max bytes, snapshot) — each worker tiers into its own
     /// subdirectory of the base
     tier: Option<(PathBuf, u64, bool)>,
+    /// multi-tenant policy knobs; the all-default value changes nothing
+    tenancy: TenancyOpts,
 }
 
 fn engine_spec(args: &Args) -> Result<EngineSpec> {
@@ -415,7 +439,62 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
             args.on_off("snapshot", true)?,
         ))
     };
-    Ok(EngineSpec { opts, backend, tier })
+    // queued-request ordering: fcfs (the default, bit-identical to
+    // pre-tenancy builds) or deficit-weighted round robin across tenants
+    opts.sched = match args.get("sched", "fcfs").as_str() {
+        "fcfs" => SchedMode::Fcfs,
+        "wfq" => SchedMode::Wfq,
+        other => bail!("--sched takes fcfs|wfq, got '{other}'"),
+    };
+    let mut tenancy = TenancyOpts::default();
+    let weights = args.get("tenant-weight", "");
+    if !weights.is_empty() {
+        if opts.sched != SchedMode::Wfq {
+            bail!("--tenant-weight needs --sched wfq (weights are meaningless under fcfs)");
+        }
+        for part in weights.split(',').filter(|s| !s.is_empty()) {
+            let Some((name, w)) = part.split_once('=') else {
+                bail!("--tenant-weight entries are name=N, got '{part}'");
+            };
+            let (name, w) = (name.trim(), w.trim());
+            let w: u32 = w
+                .parse()
+                .with_context(|| format!("--tenant-weight {name}: bad weight '{w}'"))?;
+            if w == 0 {
+                bail!("--tenant-weight {name}: weight must be >= 1");
+            }
+            if tenancy.weights.insert(name.to_string(), w).is_some() {
+                bail!("--tenant-weight: tenant '{name}' listed twice");
+            }
+        }
+    }
+    tenancy.rate = args.f64("tenant-rate", 0.0)?;
+    tenancy.burst = args.f64("tenant-burst", 0.0)?;
+    if tenancy.rate < 0.0 || tenancy.burst < 0.0 {
+        bail!("--tenant-rate / --tenant-burst must be non-negative");
+    }
+    if tenancy.burst > 0.0 && tenancy.rate == 0.0 {
+        bail!("--tenant-burst needs --tenant-rate > 0 (burst caps a bucket that must refill)");
+    }
+    if tenancy.rate > 0.0 && tenancy.burst == 0.0 {
+        // default burst: one second of refill, floored at a single request
+        tenancy.burst = tenancy.rate.max(1.0);
+    }
+    tenancy.reserve_pages = args.usize("tenant-pages", 0)?;
+    if tenancy.reserve_pages > 0 && !opts.prefix_cache {
+        bail!("--tenant-pages reserves prefix-cache pages: needs --prefix-cache on");
+    }
+    let ttl = args.f64("session-ttl", 0.0)?;
+    if ttl < 0.0 {
+        bail!("--session-ttl must be non-negative seconds");
+    }
+    if ttl > 0.0 {
+        if tier.is_none() {
+            bail!("--session-ttl reaps idle session chains to the disk tier: needs --tier-dir");
+        }
+        tenancy.session_ttl = Some(std::time::Duration::from_secs_f64(ttl));
+    }
+    Ok(EngineSpec { opts, backend, tier, tenancy })
 }
 
 fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
@@ -447,6 +526,8 @@ fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
             engine.page_pool().bytes_on_disk(),
         );
     }
+    // after attach_tier so a --session-ttl engine reaps into a live tier
+    engine.set_tenancy(&spec.tenancy);
     Ok(engine)
 }
 
@@ -506,7 +587,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let mut engine = build_engine(args, 0)?;
     engine
         .submit(Request::new(1, prompt, gen))
-        .map_err(|why| anyhow::anyhow!("request rejected: {}", why.reason()))?;
+        .map_err(|why| anyhow::anyhow!("request rejected: {}", why.as_str()))?;
     let done = engine.run_to_completion()?;
     let c = &done[0];
     println!("tokens: {:?}", c.tokens);
@@ -569,6 +650,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         top_p: gen.top_p as f64,
         seed: gen.seed,
         stop: gen.stop_tokens.clone(),
+        tenant: args.get("tenant", ""),
     };
     let stream = args.on_off("stream", false)?;
     let cancel_after = args.usize("cancel-after", 0)?;
@@ -599,7 +681,8 @@ fn cmd_client(args: &Args) -> Result<()> {
             || params.top_k > 0
             || params.top_p < 1.0
             || params.seed != 0
-            || !params.stop.is_empty();
+            || !params.stop.is_empty()
+            || !params.tenant.is_empty();
         if v2 {
             client.generate_stream(&prompt, &params, session, on_token)?
         } else {
@@ -751,6 +834,47 @@ mod tests {
         let spec = spec_of(&parts).unwrap();
         assert!(spec.tier.is_some());
         assert!(spec.opts.prefix_cache);
+    }
+
+    #[test]
+    fn tenancy_flags_validate_and_parse() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // weights need wfq; burst needs a rate; ttl needs the tier;
+        // page floors need the prefix cache
+        assert!(spec_of(&["--backend", "synthetic", "--tenant-weight", "a=2"]).is_err());
+        assert!(spec_of(&["--backend", "synthetic", "--tenant-burst", "4"]).is_err());
+        assert!(spec_of(&["--backend", "synthetic", "--session-ttl", "5"]).is_err());
+        assert!(spec_of(&["--backend", "synthetic", "--tenant-pages", "2"]).is_err());
+        // malformed weight entries are rejected, not guessed at
+        let base = ["--backend", "synthetic", "--sched", "wfq", "--tenant-weight"];
+        for bad in ["a", "a=0", "a=x", "a=1,a=2"] {
+            let parts: Vec<&str> = base.iter().copied().chain([bad]).collect();
+            assert!(spec_of(&parts).is_err(), "--tenant-weight {bad} must be rejected");
+        }
+        assert!(spec_of(&["--backend", "synthetic", "--sched", "lifo"]).is_err());
+        // a full valid combination lands in TenancyOpts
+        let parts = [
+            "--backend", "synthetic", "--prefill-chunk", "16", "--prefix-cache", "on",
+            "--tier-dir", "/tmp/x", "--sched", "wfq", "--tenant-weight", "paid=4,free=1",
+            "--tenant-rate", "10", "--tenant-pages", "2", "--session-ttl", "30",
+        ];
+        let spec = spec_of(&parts).unwrap();
+        assert_eq!(spec.opts.sched, SchedMode::Wfq);
+        assert_eq!(spec.tenancy.weights["paid"], 4);
+        assert_eq!(spec.tenancy.weights["free"], 1);
+        assert!((spec.tenancy.rate - 10.0).abs() < 1e-12);
+        assert!(
+            (spec.tenancy.burst - 10.0).abs() < 1e-12,
+            "burst defaults to one second of refill"
+        );
+        assert_eq!(spec.tenancy.reserve_pages, 2);
+        assert_eq!(spec.tenancy.session_ttl, Some(std::time::Duration::from_secs(30)));
+        // no tenant flags: fcfs, no buckets, no ttl — the legacy shape
+        let spec = spec_of(&["--backend", "synthetic"]).unwrap();
+        assert_eq!(spec.opts.sched, SchedMode::Fcfs);
+        assert!(spec.tenancy.weights.is_empty());
+        assert_eq!(spec.tenancy.rate, 0.0);
+        assert_eq!(spec.tenancy.session_ttl, None);
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub struct GenParams {
     pub top_p: f64,
     pub seed: u64,
     pub stop: Vec<u32>,
+    /// tenant identity for fair scheduling / quotas (v2 `tenant` field;
+    /// empty = omitted, the server's shared `default` tenant)
+    pub tenant: String,
 }
 
 impl Default for GenParams {
@@ -38,6 +41,7 @@ impl Default for GenParams {
             top_p: 1.0,
             seed: 0,
             stop: Vec::new(),
+            tenant: String::new(),
         }
     }
 }
@@ -67,6 +71,9 @@ impl GenParams {
         }
         if !self.stop.is_empty() {
             out.push(("stop", Value::Arr(self.stop.iter().map(|&t| num(t as f64)).collect())));
+        }
+        if !self.tenant.is_empty() {
+            out.push(("tenant", json::s(&self.tenant)));
         }
     }
 }

@@ -12,10 +12,11 @@
 //! <- {"id": 1, "tokens": [...], "ttft_ms": 1.2, "total_ms": 9.8,
 //!     "truncated": false, "rejected": false, "finish_reason": "length"}
 //!
-//! # v2 streaming generation: one line per engine event
+//! # v2 streaming generation: one line per engine event ("tenant" is
+//! # optional — absent means the shared "default" tenant)
 //! -> {"v": 2, "stream": true, "prompt": [1,2,3], "max_tokens": 16,
 //!     "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
-//!     "stop": [0]}
+//!     "stop": [0], "tenant": "paid"}
 //! <- {"v": 2, "event": "admitted", "id": 1, "worker": 0}
 //! <- {"v": 2, "event": "prefill",  "id": 1, "done": 3, "total": 3}
 //! <- {"v": 2, "event": "token",    "id": 1, "token": 42,
@@ -37,9 +38,11 @@
 //! spec and the version negotiation / compatibility rules.
 //!
 //! A request the engine refuses (backpressure, empty prompt, unsupported
-//! options, busy session) still gets a reply: `"rejected": true` plus a
-//! `"reason"` string (`queue_full` | `memory_pressure` | `empty_prompt` |
-//! `session_busy` | `unsupported_options`) — distinguishable from
+//! options, busy session, tenant over its rate limit) still gets a
+//! reply: `"rejected": true` plus a `"reason"` string — the
+//! [`crate::coordinator::RejectReason`] wire label (`queue_full` |
+//! `memory_pressure` | `empty_prompt` | `session_busy` |
+//! `unsupported_options` | `tenant_throttled`) — distinguishable from
 //! `"truncated"`, which means the request RAN but was cut short.
 //!
 //! Admin requests share the same JSON-lines framing:

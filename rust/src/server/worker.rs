@@ -30,7 +30,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::router::Router;
-use crate::coordinator::{Completion, Engine, Event, GenOptions, Request, RequestId};
+use crate::coordinator::{Completion, Engine, Event, GenOptions, Request, RequestId, SchedMode};
 use crate::util::json::{self, num, obj, Value};
 
 /// Builds one engine per worker (engines are not Send-shareable across
@@ -119,6 +119,9 @@ fn metrics_value(engine: &Engine) -> Value {
         ("pages_promoted", num(pool.pages_promoted() as f64)),
         ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
         ("snapkv_tokens_dropped", num(m.snapkv_tokens_dropped as f64)),
+        ("tenant_throttled", num(m.tenant_throttled as f64)),
+        ("sessions_reaped", num(m.sessions_reaped as f64)),
+        ("sessions_restored", num(m.sessions_restored as f64)),
         // per-request latency histograms (p50/p95/p99, milliseconds)
         ("ttft_ms_p50", ms(m.ttft.p(50.0))),
         ("ttft_ms_p95", ms(m.ttft.p(95.0))),
@@ -130,8 +133,32 @@ fn metrics_value(engine: &Engine) -> Value {
         // "pjrt-graph") — non-numeric, so the client's cross-worker
         // aggregation skips it
         ("kernel", json::s(engine.kernel_name())),
+        // per-tenant breakdown keyed by tenant name (non-numeric object,
+        // so the client's cross-worker aggregation skips it)
+        ("tenants", tenants_value(m)),
         ("summary", json::s(&m.summary())),
     ])
+}
+
+/// The per-tenant counters as `{name: {...}}`.  Tenant names are dynamic
+/// keys, so the object is built directly instead of through `obj`.
+fn tenants_value(m: &crate::coordinator::metrics::Metrics) -> Value {
+    let ms = |secs: f64| num(if secs.is_finite() { secs * 1e3 } else { 0.0 });
+    let mut map = std::collections::BTreeMap::new();
+    for (name, t) in &m.tenants {
+        map.insert(
+            name.clone(),
+            obj(vec![
+                ("admitted", num(t.admitted as f64)),
+                ("throttled", num(t.throttled as f64)),
+                ("finished", num(t.finished as f64)),
+                ("decode_tokens", num(t.decode_tokens as f64)),
+                ("itl_ms_p50", ms(t.itl.p(50.0))),
+                ("itl_ms_p99", ms(t.itl.p(99.0))),
+            ]),
+        );
+    }
+    Value::Obj(map)
 }
 
 fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
@@ -154,6 +181,10 @@ fn worker_loop(engine: &mut Engine, rx: Receiver<Job>, shutdown: &AtomicBool) {
             if shutdown.load(Ordering::Relaxed) {
                 return;
             }
+            // step() reaps while the engine is busy; an idle worker spins
+            // here without stepping, so the TTL sweep must run explicitly
+            // or sessions idling on an otherwise-quiet worker never reap
+            engine.reap_idle_sessions();
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(job) => submit_job(engine, job, &mut replies),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
@@ -254,6 +285,17 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             if engine.prefix_caching() {
                 eprintln!("[server] engine {w}: prefix caching ON (refcounted page sharing)");
             }
+            if engine.sched_mode() == SchedMode::Wfq {
+                eprintln!(
+                    "[server] engine {w}: weighted-fair tenant scheduling (deficit stride)"
+                );
+            }
+            if let Some(ttl) = engine.session_ttl() {
+                eprintln!(
+                    "[server] engine {w}: idle-session TTL {:.1}s (reap to disk tier)",
+                    ttl.as_secs_f64()
+                );
+            }
             if let Some(t) = engine.tier() {
                 eprintln!(
                     "[server] engine {w}: tiered page store at {} ({} prefix entries \
@@ -346,6 +388,9 @@ fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Va
                 "pages_promoted",
                 "bytes_on_disk",
                 "snapkv_tokens_dropped",
+                "tenant_throttled",
+                "sessions_reaped",
+                "sessions_restored",
             ];
             let mut fields: Vec<(&str, Value)> =
                 vec![("admin", json::s("metrics")), ("ok", Value::Bool(true))];
@@ -449,7 +494,7 @@ fn completion_fields(c: &Completion, worker: usize) -> Vec<(&'static str, Value)
         ("finish_reason", json::s(c.finish_reason.as_str())),
     ];
     if let Some(reason) = c.reason {
-        fields.push(("reason", json::s(reason)));
+        fields.push(("reason", json::s(reason.as_str())));
     }
     fields
 }
@@ -487,7 +532,7 @@ fn event_frame(ev: &Event, worker: usize) -> Value {
         Event::Rejected { id, reason } => {
             let mut f = base("rejected");
             f.push(("id", num(*id as f64)));
-            f.push(("reason", json::s(reason)));
+            f.push(("reason", json::s(reason.as_str())));
             obj(f)
         }
     }
@@ -696,6 +741,10 @@ fn handle_v2(
     };
     let stream = v.get("stream").and_then(|b| b.as_bool()).unwrap_or(false);
     gen.logprobs |= stream;
+    // optional tenant identity; absent / empty -> the default tenant
+    // (`Request::new` already carries it), so v1-shaped traffic and plain
+    // v2 clients need no change
+    let tenant = v.get("tenant").and_then(|t| t.as_str()).unwrap_or("");
     let id = next_id.fetch_add(1, Ordering::Relaxed) + 1;
     let worker = router.lock().unwrap().route(session);
     my_requests.lock().unwrap().insert(id, worker);
@@ -704,11 +753,17 @@ fn handle_v2(
         Some(tokens) => {
             let mut req = Request::new(id, tokens, gen);
             req.session = session;
+            if !tenant.is_empty() {
+                req.tenant = tenant.to_string();
+            }
             Job::Turn { sid: session.expect("checked above"), req, events: tx }
         }
         None => {
             let mut req = Request::new(id, prompt.expect("checked above"), gen);
             req.session = session;
+            if !tenant.is_empty() {
+                req.tenant = tenant.to_string();
+            }
             Job::Stream { req, events: tx }
         }
     };

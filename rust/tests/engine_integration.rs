@@ -5,7 +5,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use polarquant::coordinator::engine::{Backend, SnapKvOpts};
-use polarquant::coordinator::{Engine, EngineOpts, Request};
+use polarquant::coordinator::{Engine, EngineOpts, Request, SchedMode, TenancyOpts, TierOpts};
 use polarquant::model::ModelConfig;
 use polarquant::server::{serve, Client, GenParams};
 use polarquant::util::json::Value;
@@ -550,6 +550,127 @@ fn engine_rejects_snapkv_on_pjrt() {
     let mut opts = EngineOpts::default();
     opts.snapkv = Some(SnapKvOpts { budget: 8, window: 2 });
     assert!(Engine::pjrt_from_artifacts(&dir, opts).is_err());
+}
+
+#[test]
+fn tenant_throttling_and_per_tenant_metrics_over_the_wire() {
+    // A flooding tenant hits its admission bucket and gets typed
+    // `tenant_throttled` rejections; a second tenant still admits; the
+    // admin reply carries the fleet total AND the per-tenant breakdown.
+    let cfg = toy_cfg();
+    let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.sched = SchedMode::Wfq;
+        let mut eng = Engine::native_synthetic(cfg.clone(), 1300 + w as u64, 4.0, opts);
+        let mut ten = TenancyOpts::default();
+        ten.rate = 1e-9; // effectively no refill within the test
+        ten.burst = 2.0;
+        ten.weights =
+            [("flood".to_string(), 1u32), ("calm".to_string(), 4u32)].into_iter().collect();
+        eng.set_tenancy(&ten);
+        eng
+    });
+    let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 5 % 64) as u32).collect();
+    let mut flood = GenParams::greedy(4);
+    flood.tenant = "flood".to_string();
+    let mut rejected = 0;
+    for _ in 0..4 {
+        let r = client.generate_stream(&prompt, &flood, None, |_| true).unwrap();
+        if r.rejected {
+            assert_eq!(r.reason.as_deref(), Some("tenant_throttled"));
+            rejected += 1;
+        } else {
+            assert_eq!(r.tokens.len(), 4);
+        }
+    }
+    assert_eq!(rejected, 2, "burst 2 admits exactly two flood requests");
+    // throttling one tenant must not touch another's admission
+    let mut calm = GenParams::greedy(4);
+    calm.tenant = "calm".to_string();
+    let r = client.generate_stream(&prompt, &calm, None, |_| true).unwrap();
+    assert!(!r.rejected, "calm tenant throttled: {:?}", r.reason);
+    assert_eq!(r.tokens.len(), 4);
+    let m = client.metrics().unwrap();
+    assert_eq!(metric(&m, "tenant_throttled"), 2.0);
+    assert_eq!(metric(&m, "requests_rejected"), 2.0);
+    let w0 = m.get("workers").and_then(|w| w.as_arr()).and_then(|ws| ws.first()).unwrap();
+    let flood_stats =
+        w0.get("tenants").and_then(|t| t.get("flood")).expect("flood tenant listed");
+    assert_eq!(metric(flood_stats, "admitted"), 2.0);
+    assert_eq!(metric(flood_stats, "throttled"), 2.0);
+    assert_eq!(metric(flood_stats, "finished"), 2.0);
+    let calm_stats = w0.get("tenants").and_then(|t| t.get("calm")).expect("calm tenant listed");
+    assert_eq!(metric(calm_stats, "admitted"), 1.0);
+    assert_eq!(metric(calm_stats, "throttled"), 0.0);
+    handle.stop();
+}
+
+#[test]
+fn idle_session_ttl_reaps_and_warm_restarts_over_the_wire() {
+    // --session-ttl through the TCP front-end: after turn 1 the idle
+    // worker loop demotes the session chain to the disk tier; turn 2
+    // restores it and must produce exactly the tokens a no-TTL server
+    // produces (the reap is invisible except to the counters).
+    let base_dir =
+        std::env::temp_dir().join(format!("polarquant-wire-ttl-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let run = |tier: Option<PathBuf>| -> (Vec<u32>, Vec<u32>, f64) {
+        let cfg = toy_cfg();
+        let reap = tier.is_some();
+        let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 8;
+            opts.prefix_cache = true;
+            let mut eng = Engine::native_synthetic(cfg.clone(), 1400 + w as u64, 4.0, opts);
+            if let Some(d) = &tier {
+                eng.attach_tier(&TierOpts {
+                    dir: d.join(format!("w{w}")),
+                    max_bytes: u64::MAX,
+                    snapshot: false,
+                })
+                .unwrap();
+                let mut ten = TenancyOpts::default();
+                ten.session_ttl = Some(std::time::Duration::from_secs(0));
+                eng.set_tenancy(&ten);
+            }
+            eng
+        });
+        let handle = serve(factory, "127.0.0.1:0", 1).unwrap();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        let sid = client.open_session().unwrap();
+        let t1: Vec<u32> = (0..16).map(|i| (i * 3 % 64) as u32).collect();
+        let r1 = client.turn(sid, &t1, &GenParams::greedy(6), |_| true).unwrap();
+        assert!(!r1.rejected, "turn 1 rejected: {:?}", r1.reason);
+        if reap {
+            // ttl 0: the idle sweep lands within a few 20ms worker spins
+            let mut reaped = false;
+            for _ in 0..200 {
+                let m = client.metrics().unwrap();
+                if metric(&m, "sessions_reaped") >= 1.0 {
+                    reaped = true;
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            assert!(reaped, "idle session must reap to the tier");
+        }
+        let r2 = client.turn(sid, &[1, 2, 3], &GenParams::greedy(6), |_| true).unwrap();
+        assert!(!r2.rejected, "turn 2 rejected: {:?}", r2.reason);
+        let m = client.metrics().unwrap();
+        let restored = metric(&m, "sessions_restored");
+        handle.stop();
+        (r1.tokens, r2.tokens, restored)
+    };
+    let (base1, base2, base_restored) = run(None);
+    assert_eq!(base_restored, 0.0);
+    let (warm1, warm2, restored) = run(Some(base_dir.clone()));
+    assert_eq!(warm1, base1, "turn 1 is untouched by the TTL config");
+    assert_eq!(warm2, base2, "the restored chain must continue bit-identically");
+    assert_eq!(restored, 1.0, "turn 2 must come back through the tier");
+    let _ = std::fs::remove_dir_all(&base_dir);
 }
 
 #[test]

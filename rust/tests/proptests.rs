@@ -3,7 +3,7 @@
 //! cases; failures print the seed so they replay deterministically.
 
 use polarquant::coordinator::router::Router;
-use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request};
+use polarquant::coordinator::{Engine, EngineOpts, GenOptions, Request, SchedMode, TenancyOpts, TierOpts};
 use polarquant::kvcache::eviction::snapkv_select;
 use polarquant::kvcache::stream::GroupValues;
 use polarquant::kvcache::tier::serde::{decode_page, encode_page};
@@ -556,6 +556,155 @@ fn prop_kernels_bit_identical() {
                 other.name()
             );
         }
+    }
+}
+
+#[test]
+fn prop_wfq_never_starves_the_light_tenant() {
+    // The fairness property behind `--sched wfq`: a light tenant with
+    // weight >= 2 that submits AFTER a flood of heavy-tenant requests
+    // must never be served last.  The per-step prefill budget is a
+    // shared resource, so under FCFS the late arrival waits for every
+    // flood prompt; under WFQ the deficit-stride reorder grants it the
+    // weighted share and it overtakes the flood's tail.  Scheduling must
+    // reorder ONLY — every request's greedy rollout stays bit-identical
+    // across both modes (exact-mode chunking is batch-invariant).
+    for case in 0..12u64 {
+        let mut rng = Rng::new(9500 + case);
+        let n_flood = rng.range(3, 7);
+        let weight = rng.range(2, 6) as u32;
+        let gen_tokens = rng.range(4, 10);
+        // prompts long enough that prefill spans many steps (budget is
+        // prefill_chunk=8 tokens per step across all running requests)
+        let mk_prompt = |rng: &mut Rng| -> Vec<u32> {
+            (0..rng.range(16, 33)).map(|_| rng.below(64) as u32).collect()
+        };
+        let mut reqs = Vec::new();
+        for i in 0..n_flood {
+            let mut r = Request::greedy(i as u64 + 1, mk_prompt(&mut rng), gen_tokens);
+            r.tenant = "flood".to_string();
+            reqs.push(r);
+        }
+        let calm_id = n_flood as u64 + 1;
+        let mut calm = Request::greedy(calm_id, mk_prompt(&mut rng), gen_tokens);
+        calm.tenant = "calm".to_string();
+        reqs.push(calm);
+
+        let run = |mode: SchedMode| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 8;
+            opts.sched = mode;
+            let mut eng = Engine::native_synthetic(prop_engine_cfg(), 500 + case, 4.0, opts);
+            if mode == SchedMode::Wfq {
+                let mut t = TenancyOpts::default();
+                t.weights.insert("calm".to_string(), weight);
+                t.weights.insert("flood".to_string(), 1);
+                eng.set_tenancy(&t);
+            }
+            for r in &reqs {
+                eng.submit(r.clone()).unwrap();
+            }
+            // completion order = the order requests finished stepping
+            eng.run_to_completion().unwrap()
+        };
+        let fcfs = run(SchedMode::Fcfs);
+        let wfq = run(SchedMode::Wfq);
+
+        // content is scheduling-invariant
+        let by_id = |mut done: Vec<polarquant::coordinator::Completion>| {
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(
+            by_id(fcfs.clone()),
+            by_id(wfq.clone()),
+            "case {case}: wfq changed a rollout"
+        );
+
+        let pos = |done: &[polarquant::coordinator::Completion]| {
+            done.iter().position(|c| c.id == calm_id).unwrap()
+        };
+        let (p_fcfs, p_wfq) = (pos(&fcfs), pos(&wfq));
+        // FCFS sanity: the late arrival is served (near) last
+        assert!(
+            p_fcfs >= n_flood - 1,
+            "case {case}: fcfs served the late request at {p_fcfs} of {n_flood}"
+        );
+        // the property: WFQ never starves the weighted tenant to the back
+        assert!(
+            p_wfq < n_flood,
+            "case {case}: wfq starved calm (weight {weight}) to position {p_wfq}"
+        );
+        assert!(p_wfq < p_fcfs, "case {case}: wfq did not improve on fcfs ({p_wfq} vs {p_fcfs})");
+        // same-tenant requests stay FCFS among themselves under WFQ
+        let flood_order: Vec<u64> =
+            wfq.iter().map(|c| c.id).filter(|&id| id != calm_id).collect();
+        assert!(
+            flood_order.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: wfq reordered within the flood tenant: {flood_order:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_ttl_reap_is_invisible_to_session_turns() {
+    // The TTL-reaping contract: demoting an idle session chain to the
+    // disk tier and promoting it on the next turn must be invisible —
+    // every turn of a random multi-turn conversation decodes
+    // bit-identically to a never-reaped baseline engine, no matter where
+    // the reaps land.  (ttl=0 makes every inter-turn gap reap.)
+    for case in 0..8u64 {
+        let mut rng = Rng::new(9700 + case);
+        let n_turns = rng.range(2, 6);
+        let turns: Vec<(Vec<u32>, usize)> = (0..n_turns)
+            .map(|_| {
+                let toks: Vec<u32> =
+                    (0..rng.range(1, 20)).map(|_| rng.below(64) as u32).collect();
+                (toks, rng.range(3, 8))
+            })
+            .collect();
+        let opts = || {
+            let mut o = EngineOpts::default();
+            o.prefill_chunk = 8;
+            o.prefix_cache = true; // attach_tier requires it
+            o
+        };
+        let run_turns = |eng: &mut Engine, reap: bool| -> Vec<Vec<u32>> {
+            turns
+                .iter()
+                .enumerate()
+                .map(|(i, (toks, gen))| {
+                    let (tx, _rx) = std::sync::mpsc::channel();
+                    eng.submit_turn(11, Request::greedy(i as u64 + 1, toks.clone(), *gen), tx)
+                        .unwrap();
+                    let out = eng.run_to_completion().unwrap()[0].tokens.clone();
+                    if reap {
+                        assert_eq!(eng.reap_idle_sessions(), 1, "case {case} turn {i}");
+                    }
+                    out
+                })
+                .collect()
+        };
+
+        let mut base_eng = Engine::native_synthetic(prop_engine_cfg(), 600 + case, 4.0, opts());
+        let baseline = run_turns(&mut base_eng, false);
+
+        let dir = std::env::temp_dir()
+            .join(format!("polarquant-prop-ttl-{}-{case}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut eng = Engine::native_synthetic(prop_engine_cfg(), 600 + case, 4.0, opts());
+        eng.attach_tier(&TierOpts { dir: dir.clone(), max_bytes: u64::MAX, snapshot: false })
+            .unwrap();
+        let mut tenancy = TenancyOpts::default();
+        tenancy.session_ttl = Some(std::time::Duration::from_secs(0));
+        eng.set_tenancy(&tenancy);
+        let reaped = run_turns(&mut eng, true);
+
+        assert_eq!(reaped, baseline, "case {case}: a reap changed a turn's rollout");
+        assert_eq!(eng.metrics.sessions_reaped, n_turns as u64, "case {case}");
+        // turn 1 creates the chain; every later turn promotes it back
+        assert_eq!(eng.metrics.sessions_restored, n_turns as u64 - 1, "case {case}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 
