@@ -36,6 +36,12 @@
 //! (weight 4:1).  The acceptance bar (well-behaved p99 ITL under flood
 //! within 25% of its solo baseline under WFQ) is recorded per run as
 //! `wfq_within_25pct`.
+//!
+//! Speculative section: greedy decoding with self-drafted windows on the
+//! truncated code plane (`--speculate K`) vs the k=0 baseline — output
+//! asserted bit-identical, wins reported as decode-steps-per-token,
+//! accepted-run-length, and TTFT/ITL deltas at k in {2, 4} on both the
+//! halved default draft and the exact-width (always-accept) draft.
 
 use std::time::Instant;
 
@@ -692,6 +698,94 @@ fn multi_tenant_section(quick: bool) -> Vec<Value> {
     ])]
 }
 
+/// Speculative-decoding probe: the same greedy request mix decoded with
+/// `--speculate K` on a draft plane vs the k=0 baseline.  Output is
+/// bit-identical BY CONTRACT (asserted here before timing is trusted);
+/// the win shows up as decode-steps-per-token < 1.0 and the accepted-run
+/// -length, alongside the TTFT/ITL the fewer iterations buy.
+fn speculative_run(
+    speculate: usize,
+    draft: Option<(u32, u32)>,
+    batch: usize,
+    prompt_len: usize,
+    gen_len: usize,
+) -> (Vec<Vec<u32>>, Value) {
+    let mut opts = EngineOpts::default();
+    opts.policy.max_running = batch.max(32);
+    opts.policy.prefill_per_step = batch;
+    opts.admission.max_queue = batch.max(256);
+    opts.speculate = speculate;
+    opts.draft_bits = draft;
+    let mut eng = Engine::native_synthetic(engine_cfg(), 37, 6.0, opts);
+    let mut rng = Rng::new(41);
+    let t0 = Instant::now();
+    for i in 0..batch {
+        let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(128) as u32).collect();
+        eng.submit(Request::greedy(i as u64, prompt, gen_len)).unwrap();
+    }
+    let mut done = eng.run_to_completion().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|c| c.id);
+    let tokens: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+    let m = &eng.metrics;
+    let steps_per_token = m.decode_steps as f64 / m.decode_tokens as f64;
+    let label = match draft {
+        None if speculate == 0 => "off      ".to_string(),
+        None => format!("k={speculate} r2/t2"),
+        Some((r, t)) => format!("k={speculate} r{r}/t{t}"),
+    };
+    println!(
+        "{label:>9}: {:>6.3} steps/tok, run len {:>5.2}, accept {:>5.1}%, \
+         itl p50 {:>7.3} ms, {:>9.1} tok/s",
+        steps_per_token,
+        m.speculative_run_length(),
+        m.speculative_acceptance() * 100.0,
+        m.itl.p(50.0) * 1e3,
+        m.decode_tokens as f64 / wall,
+    );
+    let row = obj(vec![
+        ("speculate", num(speculate as f64)),
+        (
+            "draft_bits",
+            match draft {
+                Some((r, t)) => json::s(&format!("{r},{t}")),
+                None => json::s("halved"),
+            },
+        ),
+        ("batch", num(batch as f64)),
+        ("gen_len", num(gen_len as f64)),
+        ("decode_steps", num(m.decode_steps as f64)),
+        ("decode_tokens", num(m.decode_tokens as f64)),
+        ("decode_steps_per_token", num(steps_per_token)),
+        ("accepted_run_length", num(m.speculative_run_length())),
+        ("acceptance_rate", num(m.speculative_acceptance())),
+        ("speculative_rounds", num(m.speculative_rounds as f64)),
+        ("ttft_p50_ms", num(m.ttft.p(50.0) * 1e3)),
+        ("itl_p50_ms", num(m.itl.p(50.0) * 1e3)),
+        ("decode_tok_s", num(m.decode_tokens as f64 / wall)),
+        ("wall_s", num(wall)),
+    ]);
+    (tokens, row)
+}
+
+fn speculative_section(quick: bool) -> Vec<Value> {
+    let (batch, prompt_len, gen_len) = if quick { (4, 24, 16) } else { (8, 48, 48) };
+    println!("# speculative: self-drafted windows on the truncated code plane");
+    println!("# {batch} greedy requests, prompt {prompt_len}, gen {gen_len}; output bit-identical by contract\n");
+    // k=0 baseline, the halved default draft at k in {2,4}, and the
+    // exact-width draft (r4/t4 on this cfg) where every proposal verifies
+    // — the upper bound on what acceptance can buy
+    let (baseline, row0) = speculative_run(0, None, batch, prompt_len, gen_len);
+    let mut rows = vec![row0];
+    for (k, draft) in [(2, None), (4, None), (2, Some((4, 4))), (4, Some((4, 4)))] {
+        let (tokens, row) = speculative_run(k, draft, batch, prompt_len, gen_len);
+        assert_eq!(tokens, baseline, "speculation (k={k}, {draft:?}) changed a greedy rollout");
+        rows.push(row);
+    }
+    println!();
+    rows
+}
+
 fn engine_section(quick: bool) -> Vec<Value> {
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -747,6 +841,7 @@ fn main() {
     let tier_rows = tier_section(quick);
     let streaming_rows = streaming_section(quick);
     let tenant_rows = multi_tenant_section(quick);
+    let speculative_rows = speculative_section(quick);
 
     let report = obj(vec![
         ("bench", json::s("decode_batch")),
@@ -769,6 +864,7 @@ fn main() {
         ("tier", Value::Arr(tier_rows)),
         ("streaming", Value::Arr(streaming_rows)),
         ("multi_tenant", Value::Arr(tenant_rows)),
+        ("speculative", Value::Arr(speculative_rows)),
     ]);
     let path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_decode_batch.json".to_string());

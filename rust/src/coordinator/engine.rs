@@ -41,9 +41,9 @@ use super::scheduler::{pick_preemption_victim, SchedMode, SchedulerPolicy, WfqSt
 use crate::kvcache::eviction::{gather_rows, snapkv_select};
 use crate::kvcache::tier::session::{decode_session, encode_session};
 use crate::kvcache::{CacheManager, PagePool, SequenceCache, SharedSeq, TierConfig, TierRef};
-use crate::model::sampling::token_rng;
+use crate::model::sampling::{token_rng, Sampler};
 use crate::model::{Model, ModelConfig, Weights};
-use crate::quant::{select_kernel, KernelKind};
+use crate::quant::{select_kernel, DraftSpec, KernelKind};
 use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
 
@@ -119,6 +119,18 @@ pub struct EngineOpts {
     /// default) is bit-identical to pre-WFQ builds; `Wfq` orders by
     /// per-tenant pass value so one tenant's flood cannot starve another.
     pub sched: SchedMode,
+    /// Self-drafting speculative decoding (`--speculate K`, native
+    /// backend): each decode iteration of an eligible request (greedy
+    /// sampler, not replaying) proposes up to K tokens on the coarse
+    /// truncated-code draft plane and verifies them in one exact batched
+    /// LUT walk.  Greedy rollouts are bit-identical to `speculate = 0` —
+    /// speculation only changes how many tokens one iteration emits.
+    pub speculate: usize,
+    /// Draft-plane width (`--draft-bits R,T`); `None` = half the exact
+    /// plane's bits ([`DraftSpec::halved`]).  Ignored unless
+    /// `speculate > 0`.  Must truncate (not exceed) the exact plane;
+    /// validated at the CLI boundary.
+    pub draft_bits: Option<(u32, u32)>,
 }
 
 impl Default for EngineOpts {
@@ -136,6 +148,8 @@ impl Default for EngineOpts {
             prefix_cache: false,
             kernel: KernelKind::Auto,
             sched: SchedMode::Fcfs,
+            speculate: 0,
+            draft_bits: None,
         }
     }
 }
@@ -237,6 +251,18 @@ impl Engine {
                 select_kernel(opts.kernel)
                     .expect("kernel availability is validated at the CLI boundary"),
             );
+            if opts.speculate > 0 {
+                // resolve the draft plane ONCE, before the decode pool
+                // forks workers, so every worker carries the same draft
+                // LUT (Model::fork propagates it)
+                let draft = opts
+                    .draft_bits
+                    .map(|(r, t)| DraftSpec::new(r, t))
+                    .unwrap_or_else(|| DraftSpec::halved(&cfg.polar_spec()));
+                model
+                    .set_draft(draft)
+                    .expect("draft bits are validated at the CLI boundary");
+            }
         }
         if opts.prefix_cache && opts.prefill_chunk > 0 {
             // Prefix sharing hands out QUANTIZED pages, so a prompt that
@@ -360,6 +386,23 @@ impl Engine {
     /// Decode parallelism of the native backend (1 = inline).
     pub fn decode_pool_width(&self) -> usize {
         self.pool.as_ref().map(|p| p.width()).unwrap_or(1)
+    }
+
+    /// Speculative draft length in effect (0 = plain decode; server
+    /// startup log + admin `metrics` reply).
+    pub fn speculate_k(&self) -> usize {
+        match &self.backend {
+            Backend::Native(_) => self.opts.speculate,
+            Backend::Pjrt(_) => 0,
+        }
+    }
+
+    /// The draft plane speculation runs on, if configured.
+    pub fn draft_spec(&self) -> Option<DraftSpec> {
+        match &self.backend {
+            Backend::Native(m) => m.draft_spec(),
+            Backend::Pjrt(_) => None,
+        }
     }
 
     /// The score kernel actually running QK lookups ("scalar" / "simd";
@@ -919,6 +962,7 @@ impl Engine {
         self.metrics.pages_demoted = self.cache.pool().pages_demoted();
         self.metrics.pages_promoted = self.cache.pool().pages_promoted();
         self.metrics.bytes_on_disk = self.cache.pool().bytes_on_disk();
+        self.metrics.tier_session_bytes = self.cache.pool().session_bytes();
         Ok(done)
     }
 
@@ -1114,7 +1158,11 @@ impl Engine {
                 decoding.push((id, tr.arrived));
                 if let Some(c) = self.cache.get(id) {
                     let c = c.lock().unwrap();
-                    need += pages_needed(c.len() + 1, c.pages.len(), group);
+                    // a speculative burst appends up to `speculate + 1`
+                    // tokens in one iteration (its window never crosses a
+                    // group boundary, but it can land exactly ON one)
+                    let lookahead = 1 + self.opts.speculate;
+                    need += pages_needed(c.len() + lookahead, c.pages.len(), group);
                 }
             }
             if need == 0 || self.cache.pool().try_free(need) {
@@ -1303,19 +1351,32 @@ impl Engine {
                             let tr = &self.running[&id];
                             let cache = self.cache.get(id).context("cache missing")?;
                             let (last_token, replay) = feeds[&id];
+                            let sampler = tr.req.gen.sampler();
+                            // speculation is greedy-only (verification
+                            // compares argmax choices) and never runs
+                            // during preemption replay (those tokens are
+                            // already known)
+                            let speculate = if !replay && sampler == Sampler::Greedy {
+                                self.opts.speculate
+                            } else {
+                                0
+                            };
                             pool.submit(
                                 w,
                                 DecodeTask {
                                     id,
                                     cache,
                                     last_token,
-                                    sampler: tr.req.gen.sampler(),
+                                    sampler,
                                     // derived per token, so the sample is
                                     // shard-assignment-independent
                                     rng: token_rng(tr.req.gen.seed, tr.generated.len()),
                                     want_logprob: tr.req.gen.logprobs
                                         && self.subs.contains_key(&id),
                                     replay,
+                                    speculate,
+                                    max_emit: tr.req.gen.max_new_tokens - tr.generated.len(),
+                                    stops: tr.req.gen.stop_tokens.clone(),
                                 },
                             );
                         }
@@ -1327,10 +1388,17 @@ impl Engine {
                         if r.replay {
                             continue; // cache rebuilt; token already known
                         }
+                        if r.drafted > 0 {
+                            self.metrics.speculative_rounds += 1;
+                            self.metrics.speculative_drafted += r.drafted as u64;
+                            self.metrics.speculative_accepted += r.accepted as u64;
+                        }
                         let tr = self.running.get_mut(&r.id).unwrap();
-                        Self::record_token(&mut self.metrics, &self.subs, tr, r.token, r.logprob);
+                        for &(tok, lp) in &r.tokens {
+                            Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+                        }
                         if let Some(wfq) = self.wfq.as_mut() {
-                            wfq.charge(&tr.req.tenant, 1);
+                            wfq.charge(&tr.req.tenant, r.tokens.len());
                         }
                     }
                     self.step_results = results;
@@ -1338,6 +1406,42 @@ impl Engine {
                     for &(id, _) in &seqs {
                         let (feed, replay) = feeds[&id];
                         let shared = self.cache.get(id).context("cache missing")?;
+                        let tr = &self.running[&id];
+                        // same eligibility as the pooled path: greedy,
+                        // not replaying, draft plane configured
+                        if self.opts.speculate > 0
+                            && !replay
+                            && tr.req.gen.sampler() == Sampler::Greedy
+                            && model.draft_spec().is_some()
+                        {
+                            let max_emit = tr.req.gen.max_new_tokens - tr.generated.len();
+                            let stops = tr.req.gen.stop_tokens.clone();
+                            let want_lp = tr.req.gen.logprobs && self.subs.contains_key(&id);
+                            let out = {
+                                let mut cache = shared.lock().unwrap();
+                                model.speculative_decode(
+                                    feed,
+                                    &mut cache,
+                                    self.opts.speculate,
+                                    max_emit,
+                                    &stops,
+                                    want_lp,
+                                )
+                            };
+                            if out.drafted > 0 {
+                                self.metrics.speculative_rounds += 1;
+                                self.metrics.speculative_drafted += out.drafted as u64;
+                                self.metrics.speculative_accepted += out.accepted as u64;
+                            }
+                            let tr = self.running.get_mut(&id).unwrap();
+                            for &(tok, lp) in &out.tokens {
+                                Self::record_token(&mut self.metrics, &self.subs, tr, tok, lp);
+                            }
+                            if let Some(wfq) = self.wfq.as_mut() {
+                                wfq.charge(&tr.req.tenant, out.tokens.len());
+                            }
+                            continue;
+                        }
                         let mut cache = shared.lock().unwrap();
                         let logits = model.decode_step(feed, &mut cache).to_vec();
                         drop(cache);
@@ -2129,6 +2233,103 @@ mod tests {
                 "chunk={chunk}"
             );
         }
+    }
+
+    #[test]
+    fn speculative_rollouts_match_plain_greedy_bit_identically() {
+        // The tentpole invariant: --speculate K must not change a single
+        // greedy token, at any K, draft width, worker count, or prefill
+        // chunk size.  Speculation only changes how many tokens one
+        // decode iteration emits.
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3],
+            (0..17).map(|i| (i * 5 % 60) as u32).collect(),
+            (0..40).map(|i| (i * 3 % 64) as u32).collect(),
+        ];
+        let run = |speculate: usize, draft: Option<(u32, u32)>, workers: usize, chunk: usize| {
+            let mut opts = EngineOpts::default();
+            opts.speculate = speculate;
+            opts.draft_bits = draft;
+            opts.decode_workers = workers;
+            opts.prefill_chunk = chunk;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 33, 4.0, opts);
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(Request::greedy(i as u64, p.clone(), 12)).unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            let toks: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+            (toks, eng.metrics.speculative_rounds, eng.metrics.speculative_accepted)
+        };
+        let (base, rounds0, _) = run(0, None, 1, 0);
+        assert_eq!(rounds0, 0, "speculate=0 must never count a round");
+        for k in [2usize, 3] {
+            for draft in [None, Some((4, 4)), Some((1, 1))] {
+                for workers in [1usize, 4] {
+                    for chunk in [0usize, 8] {
+                        let (toks, rounds, accepted) = run(k, draft, workers, chunk);
+                        assert_eq!(
+                            base, toks,
+                            "k={k} draft={draft:?} workers={workers} chunk={chunk}"
+                        );
+                        assert!(rounds > 0, "eligible greedy requests must speculate");
+                        // with the draft EQUAL to the exact plane the
+                        // proposal pass replays exact decode, so every
+                        // draft verifies
+                        if draft == Some((4, 4)) {
+                            assert!(accepted > 0, "exact-width draft must accept");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_emits_more_tokens_than_decode_iterations() {
+        // decode-steps-per-token < 1 is the whole point: with a draft as
+        // wide as the exact plane every window verifies fully, so one
+        // iteration emits several tokens.
+        let mut opts = EngineOpts::default();
+        opts.speculate = 3;
+        opts.draft_bits = Some((4, 4));
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 34, 4.0, opts);
+        eng.submit(Request::greedy(1, (0..16).map(|i| i as u32).collect(), 16)).unwrap();
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 16);
+        let m = &eng.metrics;
+        assert!(
+            m.decode_steps < m.decode_tokens,
+            "steps {} tokens {}: speculation must amortize iterations",
+            m.decode_steps,
+            m.decode_tokens
+        );
+        assert_eq!(m.speculative_drafted, m.speculative_accepted);
+        let s = m.summary();
+        assert!(s.contains("speculative"), "summary must surface speculation: {s}");
+    }
+
+    #[test]
+    fn rejected_speculative_windows_unwind_to_pool_baseline() {
+        // A 1,1-bit draft mispredicts constantly; every rejected window's
+        // fork and unfed verification rows must fully unwind — after the
+        // requests retire the pool is back to exactly zero.
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 8;
+        opts.cache_pages = 64;
+        opts.speculate = 3;
+        opts.draft_bits = Some((1, 1));
+        let mut eng = Engine::native_synthetic(tiny_cfg(), 35, 4.0, opts);
+        for i in 0..3 {
+            eng.submit(Request::greedy(i, (0..10).map(|j| ((j + i as usize) % 64) as u32).collect(), 20))
+                .unwrap();
+        }
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.tokens.len() == 20));
+        assert!(eng.metrics.speculative_rounds > 0);
+        assert_eq!(eng.page_pool().pages_in_use(), 0, "speculation leaked pages");
+        assert_eq!(eng.cache_report().physical_bytes, 0, "speculation leaked resid bytes");
     }
 
     #[test]

@@ -87,6 +87,17 @@ pub struct Metrics {
     pub sessions_reaped: u64,
     /// reaped session chains promoted back on the next turn
     pub sessions_restored: u64,
+    /// segment bytes held by reaped session blobs — a slice of
+    /// `bytes_on_disk`, charged against `--tier-bytes`
+    /// (gauge, synced per step from the tier counters)
+    pub tier_session_bytes: u64,
+    /// decode iterations that ran a speculative window (`--speculate`;
+    /// fallback single-token iterations don't count)
+    pub speculative_rounds: u64,
+    /// draft tokens proposed across all speculative windows
+    pub speculative_drafted: u64,
+    /// draft tokens the exact verification pass accepted
+    pub speculative_accepted: u64,
     /// per-tenant breakdown (empty until a request names a tenant)
     pub tenants: BTreeMap<String, TenantStats>,
 }
@@ -131,6 +142,10 @@ impl Metrics {
             tenant_throttled: 0,
             sessions_reaped: 0,
             sessions_restored: 0,
+            tier_session_bytes: 0,
+            speculative_rounds: 0,
+            speculative_drafted: 0,
+            speculative_accepted: 0,
             tenants: BTreeMap::new(),
         }
     }
@@ -159,6 +174,25 @@ impl Metrics {
             0.0
         } else {
             self.decode_batch_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Fraction of proposed draft tokens the exact verification accepted.
+    pub fn speculative_acceptance(&self) -> f64 {
+        if self.speculative_drafted == 0 {
+            0.0
+        } else {
+            self.speculative_accepted as f64 / self.speculative_drafted as f64
+        }
+    }
+
+    /// Mean accepted-run length per speculative round (tokens one
+    /// verified window contributed beyond the plain decode step).
+    pub fn speculative_run_length(&self) -> f64 {
+        if self.speculative_rounds == 0 {
+            0.0
+        } else {
+            self.speculative_accepted as f64 / self.speculative_rounds as f64
         }
     }
 
@@ -227,6 +261,18 @@ impl Metrics {
             s.push_str(&format!(
                 ", sessions reaped {} (restored {})",
                 self.sessions_reaped, self.sessions_restored,
+            ));
+            if self.tier_session_bytes > 0 {
+                s.push_str(&format!(", {} session B on disk", self.tier_session_bytes));
+            }
+        }
+        if self.speculative_rounds > 0 {
+            s.push_str(&format!(
+                ", speculative {} rounds ({}/{} accepted, run len {:.2})",
+                self.speculative_rounds,
+                self.speculative_accepted,
+                self.speculative_drafted,
+                self.speculative_run_length(),
             ));
         }
         // the per-tenant breakdown only appears once a SECOND tenant (or
@@ -330,6 +376,31 @@ mod tests {
         assert!(s.contains("tenant default: adm 3"), "{s}");
         assert!(s.contains("tenant flood: adm 7 fin 0 thr 5"), "{s}");
         assert!(s.contains("sessions reaped 2 (restored 1)"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_speculative_counters() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("speculative"), "quiet when unused");
+        m.speculative_rounds = 4;
+        m.speculative_drafted = 12;
+        m.speculative_accepted = 9;
+        let s = m.summary();
+        assert!(s.contains("speculative 4 rounds (9/12 accepted, run len 2.25)"), "{s}");
+        assert!((m.speculative_acceptance() - 0.75).abs() < 1e-9);
+        assert!((m.speculative_run_length() - 2.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_surfaces_session_tier_bytes() {
+        let mut m = Metrics::new();
+        m.tier_session_bytes = 512;
+        assert!(
+            !m.summary().contains("session B"),
+            "session bytes only appear once a session actually reaped"
+        );
+        m.sessions_reaped = 1;
+        assert!(m.summary().contains("512 session B on disk"), "{}", m.summary());
     }
 
     #[test]

@@ -50,18 +50,34 @@ pub struct DecodeTask {
     /// rebuilds cache state — the logits are discarded, nothing is
     /// sampled, and no RNG is consumed.
     pub replay: bool,
+    /// Speculative draft length k (0 = plain decode).  The engine sets
+    /// this only when the request is eligible: greedy sampler, no replay,
+    /// draft plane configured on the model.
+    pub speculate: usize,
+    /// Remaining generation budget for this request — the speculative
+    /// window never emits past it (keeps stop/budget clamping identical
+    /// to sequential decode).
+    pub max_emit: usize,
+    /// Request stop tokens, for the in-window clamp.
+    pub stops: Vec<u32>,
 }
 
-/// One sampled token, keyed back to its request.
-#[derive(Clone, Copy, Debug)]
+/// One decode burst, keyed back to its request: a single sampled token on
+/// the plain path, up to `speculate + 1` on an accepted speculative window.
+#[derive(Clone, Debug)]
 pub struct StepResult {
     pub id: u64,
-    pub token: u32,
-    /// full-softmax logprob of `token` (streaming `Event::Token` payload)
-    pub logprob: f32,
-    /// true for replay steps: `token` is meaningless and must not be
+    /// `(token, logprob)` in emission order; logprob is the full-softmax
+    /// value when the task asked for it (streaming `Event::Token`
+    /// payload), else 0.0.  Always non-empty for non-replay steps.
+    pub tokens: Vec<(u32, f32)>,
+    /// true for replay steps: `tokens` is meaningless and must not be
     /// appended to the request's generation
     pub replay: bool,
+    /// draft tokens proposed this step (0 on the plain path)
+    pub drafted: u32,
+    /// draft tokens verification accepted (before stop/budget clamping)
+    pub accepted: u32,
 }
 
 enum Msg {
@@ -102,6 +118,28 @@ impl DecodePool {
                                 // uncontended: this worker is the only one
                                 // assigned this sequence for the step
                                 let mut cache = t.cache.lock().unwrap();
+                                if t.speculate > 0
+                                    && !t.replay
+                                    && t.sampler == Sampler::Greedy
+                                    && m.draft_spec().is_some()
+                                {
+                                    let out = m.speculative_decode(
+                                        t.last_token,
+                                        &mut cache,
+                                        t.speculate,
+                                        t.max_emit,
+                                        &t.stops,
+                                        t.want_logprob,
+                                    );
+                                    results.push(StepResult {
+                                        id: t.id,
+                                        tokens: out.tokens,
+                                        replay: false,
+                                        drafted: out.drafted,
+                                        accepted: out.accepted,
+                                    });
+                                    continue;
+                                }
                                 let logits = m.decode_step(t.last_token, &mut cache);
                                 let (token, logprob) = if t.replay {
                                     (0, 0.0) // state-rebuild; logits discarded
@@ -115,9 +153,10 @@ impl DecodePool {
                                 };
                                 results.push(StepResult {
                                     id: t.id,
-                                    token,
-                                    logprob,
+                                    tokens: vec![(token, logprob)],
                                     replay: t.replay,
+                                    drafted: 0,
+                                    accepted: 0,
                                 });
                             }
                             if result_tx.send((results, tasks)).is_err() {
@@ -167,8 +206,7 @@ impl DecodePool {
                 continue;
             }
             let (mut results, tasks) = w.rx.recv().expect("decode worker died");
-            out.extend(results.iter().copied());
-            results.clear();
+            out.extend(results.drain(..));
             w.spare_results = results;
             w.pending = tasks;
             w.inflight = false;
@@ -242,6 +280,9 @@ mod tests {
                     rng: Rng::new(0),
                     want_logprob: false,
                     replay: false,
+                    speculate: 0,
+                    max_emit: 1,
+                    stops: Vec::new(),
                 },
             );
         }
@@ -250,7 +291,7 @@ mod tests {
         assert_eq!(out.len(), 3);
         out.sort_by_key(|r| r.id);
         for (r, want) in out.iter().zip(&inline_tokens) {
-            assert_eq!(r.token, *want, "seq {}", r.id);
+            assert_eq!(r.tokens, vec![(*want, 0.0)], "seq {}", r.id);
         }
         // the step advanced every cache
         for (c, p) in caches.iter().zip(&prompts) {
@@ -277,6 +318,9 @@ mod tests {
                     rng: Rng::new(0),
                     want_logprob: false,
                     replay: false,
+                    speculate: 0,
+                    max_emit: 1,
+                    stops: Vec::new(),
                 },
             );
             out.clear();
@@ -284,6 +328,56 @@ mod tests {
             assert_eq!(out.len(), 1, "step {step}");
         }
         assert_eq!(cache.lock().unwrap().len(), 3 + 4);
+    }
+
+    #[test]
+    fn speculative_task_bursts_match_inline_sequential_decode() {
+        let cfg = tiny_cfg();
+        let w = Weights::synthetic(&cfg, 14, 4.0);
+        let mut model = Model::new(cfg.clone(), w);
+        // exact-width draft: acceptance is deterministic, so the burst
+        // shape is predictable; workers inherit the draft via fork()
+        model.set_draft(crate::quant::DraftSpec::new(4, 4)).unwrap();
+        let prompt: Vec<u32> = (0..20).map(|i| (i % cfg.vocab) as u32).collect();
+
+        let mut c_ref = SequenceCache::new(cfg.cache_config(None));
+        model.prefill(&prompt, &mut c_ref);
+        let mut want = Vec::new();
+        let mut last = 3u32;
+        for _ in 0..4 {
+            let l = model.decode_step(last, &mut c_ref).to_vec();
+            last = crate::tensor::ops::argmax(&l) as u32;
+            want.push(last);
+        }
+
+        let mut c = SequenceCache::new(cfg.cache_config(None));
+        model.prefill(&prompt, &mut c);
+        let cache: SharedSeq = Arc::new(Mutex::new(c));
+        let mut pool = DecodePool::new(&model, 2);
+        pool.submit(
+            0,
+            DecodeTask {
+                id: 7,
+                cache: cache.clone(),
+                last_token: 3,
+                sampler: Sampler::Greedy,
+                rng: Rng::new(0),
+                want_logprob: false,
+                replay: false,
+                speculate: 3,
+                max_emit: 16,
+                stops: Vec::new(),
+            },
+        );
+        let mut out = Vec::new();
+        pool.flush(&mut out);
+        assert_eq!(out.len(), 1);
+        let r = &out[0];
+        assert_eq!(r.drafted, 3, "resid 4 in group 8 fits the full window");
+        assert_eq!(r.accepted, 3, "exact-width draft always verifies");
+        let got: Vec<u32> = r.tokens.iter().map(|(t, _)| *t).collect();
+        assert_eq!(got, want, "burst must equal inline sequential decode");
+        assert_eq!(cache.lock().unwrap().len(), 20 + 4);
     }
 
     #[test]

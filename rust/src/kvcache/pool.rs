@@ -696,30 +696,53 @@ impl PagePool {
         self.tier_stats.bytes_on_disk.load(Ordering::Relaxed)
     }
 
+    /// Segment bytes currently held by reaped session blobs — the slice
+    /// of [`PagePool::bytes_on_disk`] that belongs to sessions rather
+    /// than demoted prefix pages.
+    pub fn session_bytes(&self) -> u64 {
+        self.tier_stats.session_bytes.load(Ordering::Relaxed)
+    }
+
     /// Append one opaque session blob (`kvcache::tier::session`) to the
     /// tier's segment store — the idle-session TTL reaper's write path.
-    /// Fails when no tier is attached; the engine then simply keeps the
-    /// session resident.
+    /// Fails when no tier is attached or when the `--tier-bytes` budget
+    /// is already exhausted (session blobs share it with demoted prefix
+    /// pages); the engine then simply keeps the session resident.
     pub fn session_spill(&self, bytes: &[u8]) -> Result<TierRef> {
-        let store = {
+        let (store, max_bytes) = {
             let idx = self.index.lock().unwrap();
             let Some(t) = &idx.tier else { bail!("no tier attached") };
-            t.store.clone()
+            (t.store.clone(), t.max_bytes)
         };
+        if self.tier_stats.bytes_on_disk.load(Ordering::Relaxed) >= max_bytes {
+            bail!("tier byte budget exhausted ({max_bytes} B)");
+        }
         let r = store.put_bytes(bytes)?;
         self.tier_stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
+        self.tier_stats.session_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         Ok(r)
     }
 
     /// Read back a session blob written by [`PagePool::session_spill`].
     /// The caller verifies content (`tier::session::decode_session`).
+    /// The blob's bytes leave the session gauge: a fetched session is
+    /// live again and its tier copy is dead weight awaiting compaction.
     pub fn session_fetch(&self, r: TierRef) -> Result<Vec<u8>> {
         let store = {
             let idx = self.index.lock().unwrap();
             let Some(t) = &idx.tier else { bail!("no tier attached") };
             t.store.clone()
         };
-        store.get_bytes(r)
+        let blob = store.get_bytes(r)?;
+        let n = blob.len() as u64;
+        // saturating: a restart re-opens the store with the gauge at 0,
+        // so fetches of pre-restart blobs must not wrap
+        let _ = self.tier_stats.session_bytes.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| Some(cur.saturating_sub(n)),
+        );
+        Ok(blob)
     }
 
     /// Synchronously demote every refcount-zero resident prefix entry
@@ -1149,7 +1172,9 @@ mod tests {
         let blob: Vec<u8> = (0..777u32).map(|i| (i % 251) as u8).collect();
         let r = pool.session_spill(&blob).unwrap();
         assert!(pool.bytes_on_disk() >= blob.len() as u64);
+        assert_eq!(pool.session_bytes(), blob.len() as u64);
         assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        assert_eq!(pool.session_bytes(), 0, "a fetched session leaves the gauge");
         // blobs and demoted pages share segments without interference
         let toks: Vec<u32> = (0..4).collect();
         let p = pool.adopt(page(33));
@@ -1157,6 +1182,24 @@ mod tests {
         drop(p);
         assert_eq!(pool.demote_all(), 1);
         assert_eq!(pool.lookup_prefix(&toks, 4, usize::MAX).len(), 1);
+        assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        assert_eq!(pool.session_bytes(), 0, "gauge saturates instead of wrapping");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn session_spill_refuses_when_tier_budget_is_exhausted() {
+        let dir = tier_dir("session-budget");
+        let pool = PagePool::new(usize::MAX);
+        // budget of 1 byte: the first spill squeaks under (checked before
+        // the write, like demotion), the second finds the budget spent
+        pool.attach_tier(TierConfig::new(dir.clone(), 1, 1)).unwrap();
+        let blob = vec![7u8; 64];
+        let r = pool.session_spill(&blob).unwrap();
+        let err = pool.session_spill(&blob).unwrap_err();
+        assert!(err.to_string().contains("budget"), "unexpected error: {err:#}");
+        // the refusal leaves the stored blob and the gauge untouched
+        assert_eq!(pool.session_bytes(), blob.len() as u64);
         assert_eq!(pool.session_fetch(r).unwrap(), blob);
         std::fs::remove_dir_all(&dir).unwrap();
     }

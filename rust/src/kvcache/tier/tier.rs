@@ -68,6 +68,10 @@ pub struct TierCounters {
     /// demotions skipped because the writer queue was full (the page was
     /// plainly evicted instead)
     pub demote_overflow: AtomicU64,
+    /// segment bytes currently held by reaped session blobs (gauge: a
+    /// slice of `bytes_on_disk`; spills add, fetches subtract) — they
+    /// share the `--tier-bytes` budget with demoted prefix pages
+    pub session_bytes: AtomicU64,
 }
 
 /// One queued demotion: the prefix-index key plus the page to persist.

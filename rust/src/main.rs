@@ -57,6 +57,15 @@
 //! bit-identical, so it is purely a performance knob — an explicit
 //! `simd` is rejected up front when the build or CPU can't run it.
 //!
+//! `--speculate K` (native/synthetic, greedy requests only) turns on
+//! self-drafting speculative decoding: each decode step proposes up to K
+//! tokens by running attention on a coarse *draft* plane derived from
+//! the stored PolarQuant codes by bit truncation (no second cache), then
+//! verifies the whole window exactly in one batched LUT pass.  Output is
+//! bit-identical to `--speculate 0`; only the step count changes.
+//! `--draft-bits R,T` overrides the draft plane's radius/angle bits
+//! (default: half the exact plane's, floor 1).
+//!
 //! Table/figure regeneration lives in the `bench_tables` binary and
 //! `cargo bench` targets (see DESIGN.md §6).
 
@@ -71,7 +80,7 @@ use polarquant::coordinator::{
     Engine, EngineOpts, GenOptions, Request, SchedMode, TenancyOpts, TierOpts,
 };
 use polarquant::eval::{eval_codec, Table};
-use polarquant::quant::{select_kernel, KernelKind, QuantSpec};
+use polarquant::quant::{select_kernel, DraftSpec, KernelKind, QuantSpec};
 use polarquant::runtime::Manifest;
 use polarquant::server::{serve, Client, GenParams};
 use polarquant::util::json;
@@ -131,6 +140,8 @@ const SERVE: CmdSpec = CmdSpec {
         flag("tenant-burst", "B", "0", "admission bucket burst (needs --tenant-rate; 0 = rate)"),
         flag("tenant-pages", "N", "0", "per-tenant resident prefix-page floor (needs --prefix-cache)"),
         flag("session-ttl", "SECS", "0", "reap idle session chains to the tier (0 = off; needs --tier-dir)"),
+        flag("speculate", "K", "0", "draft K tokens/step on the coarse code plane (0 = off)"),
+        flag("draft-bits", "R,T", "", "draft plane bits (default: half the exact bits, floor 1)"),
     ],
 };
 
@@ -157,6 +168,8 @@ const GENERATE: CmdSpec = CmdSpec {
         flag("tier-dir", "DIR", "", "disk tier directory (requires --prefix-cache on)"),
         flag("tier-bytes", "N", "1073741824", "stop demoting past this many segment bytes"),
         flag("snapshot", "on|off", "on", "persist the prefix index at exit"),
+        flag("speculate", "K", "0", "draft K tokens/step on the coarse code plane (0 = off)"),
+        flag("draft-bits", "R,T", "", "draft plane bits (default: half the exact bits, floor 1)"),
     ],
 };
 
@@ -409,6 +422,21 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
         // engages (PagePool::adopt itself never fails)
         bail!("--cache-pages requires --prefill-chunk > 0 on the native/synthetic backend");
     }
+    // speculative decoding: K drafted tokens per decode step, verified
+    // exactly — the draft plane reuses the stored codes, so the flag
+    // never changes output, only the number of decode iterations
+    opts.speculate = args.usize("speculate", 0)?;
+    if opts.speculate > 0 && backend == "pjrt" {
+        bail!("--speculate requires the native or synthetic backend");
+    }
+    let draft_bits = args.get("draft-bits", "");
+    if !draft_bits.is_empty() {
+        if opts.speculate == 0 {
+            bail!("--draft-bits shapes the speculative draft plane: needs --speculate > 0");
+        }
+        let d = DraftSpec::parse(&draft_bits).map_err(|e| anyhow::anyhow!("--draft-bits: {e}"))?;
+        opts.draft_bits = Some((d.r_bits, d.t_bits));
+    }
     let snapkv_budget = args.usize("snapkv-budget", 0)?;
     if snapkv_budget > 0 {
         if backend == "pjrt" {
@@ -500,6 +528,18 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
 fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
     let spec = engine_spec(args)?;
     let dir = artifacts(args);
+    if let Some((r, t)) = spec.opts.draft_bits {
+        // a draft plane can only DROP bits the exact plane stored, and
+        // the exact plane lives in the model config — check here, where
+        // the target config is known, so the engine never sees bad bits
+        let exact = match spec.backend.as_str() {
+            "native" => Manifest::load(&dir)?.config.polar_spec(),
+            _ => polarquant::model::ModelConfig::tiny().polar_spec(),
+        };
+        DraftSpec::new(r, t)
+            .shifts(&exact)
+            .map_err(|e| anyhow::anyhow!("--draft-bits: {e}"))?;
+    }
     let mut engine = match spec.backend.as_str() {
         "pjrt" => Engine::pjrt_from_artifacts(&dir, spec.opts)?,
         "native" => Engine::native_from_artifacts(&dir, spec.opts)?,
@@ -875,6 +915,40 @@ mod tests {
         assert!(spec.tenancy.weights.is_empty());
         assert_eq!(spec.tenancy.rate, 0.0);
         assert_eq!(spec.tenancy.session_ttl, None);
+    }
+
+    #[test]
+    fn speculative_flags_validate_and_parse() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // off by default, and a bare --speculate parses on native/synthetic
+        let spec = spec_of(&["--backend", "synthetic"]).unwrap();
+        assert_eq!(spec.opts.speculate, 0);
+        assert_eq!(spec.opts.draft_bits, None);
+        let spec = spec_of(&["--backend", "synthetic", "--speculate", "3"]).unwrap();
+        assert_eq!(spec.opts.speculate, 3);
+        assert_eq!(spec.opts.draft_bits, None, "draft bits default to halved at engine build");
+        // pjrt cannot speculate (no LUT decode path to verify through)
+        assert!(spec_of(&["--speculate", "2"]).is_err());
+        // draft bits require speculation and the R,T shape with 1..=8 bits
+        assert!(spec_of(&["--backend", "synthetic", "--draft-bits", "2,2"]).is_err());
+        for bad in ["2", "0,2", "2,9", "a,b"] {
+            let parts = ["--backend", "synthetic", "--speculate", "2", "--draft-bits", bad];
+            assert!(spec_of(&parts).is_err(), "--draft-bits {bad} must be rejected");
+        }
+        let parts = ["--backend", "synthetic", "--speculate", "2", "--draft-bits", "2,3"];
+        assert_eq!(spec_of(&parts).unwrap().opts.draft_bits, Some((2, 3)));
+        // generate shares both flags
+        let a = parse_ok(&["--speculate", "4", "--draft-bits", "1,1"], &GENERATE);
+        assert_eq!(a.usize("speculate", 0).unwrap(), 4);
+        assert_eq!(a.get("draft-bits", ""), "1,1");
+        // build_engine rejects a draft wider than the exact plane with a
+        // clean CLI error (tiny()'s exact plane is r4/t4)
+        let a = parse_ok(
+            &["--backend", "synthetic", "--speculate", "2", "--draft-bits", "5,4"],
+            &GENERATE,
+        );
+        let err = build_engine(&a, 0).err().expect("draft wider than exact must fail");
+        assert!(format!("{err:#}").contains("exceed"), "{err:#}");
     }
 
     #[test]

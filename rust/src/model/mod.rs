@@ -14,5 +14,5 @@ pub mod sampling;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use forward::Model;
+pub use forward::{Model, SpecDecode};
 pub use weights::Weights;

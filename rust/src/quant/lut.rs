@@ -35,7 +35,7 @@
 //! point (`scores`, `scores_multi`, `scores_groups`, `scores_batch`) is
 //! a thin shim over the same staged walk + kernel dispatch.
 
-use super::polar::{PolarEncoded, PolarGroup, PolarSpec};
+use super::polar::{DraftSpec, PolarEncoded, PolarGroup, PolarSpec};
 
 /// Which score kernel to use (`--kernel`, [`select_kernel`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -291,6 +291,14 @@ fn prefetch_group(g: &PolarGroup) {
 /// steady state — see EXPERIMENTS.md §Perf).
 pub struct QkLut {
     spec: PolarSpec,
+    /// Right-shifts applied to the STORED codes at staging time
+    /// (`(0, 0)` = exact plane).  A nonzero shift makes this a DRAFT
+    /// scorer: codes are truncated per [`DraftSpec`] while staging, the
+    /// basis spans `2^(t_bits - t_shift)` merged angle cells, and rho
+    /// dequantizes with its scale widened by `2^r_shift` — the same pages
+    /// serve two precisions with no second quantization pass.
+    r_shift: u32,
+    t_shift: u32,
     d2: usize,
     /// cos/sin basis for the current group: [2 * d2 * levels]
     basis: Vec<f32>,
@@ -321,6 +329,8 @@ impl QkLut {
         let levels = 1usize << spec.t_bits;
         QkLut {
             spec,
+            r_shift: 0,
+            t_shift: 0,
             d2,
             basis: vec![0.0; 2 * d2 * levels],
             lut: vec![0.0; max_heads * d2 * levels],
@@ -331,8 +341,39 @@ impl QkLut {
         }
     }
 
+    /// Build a DRAFT scorer over the SAME stored groups the exact LUT
+    /// reads: codes are truncated (right-shifted) to `draft`'s bit widths
+    /// while staging, per the code-truncation math on [`DraftSpec`].
+    /// Scores are bit-identical to what a plain LUT would produce over a
+    /// cache re-quantized at the draft widths with the merged-cell params
+    /// (`s · 2^shift`, same zero) — see `draft_matches_truncated_requant`.
+    pub fn with_draft(
+        spec: PolarSpec,
+        draft: DraftSpec,
+        d: usize,
+        max_heads: usize,
+        kernel: &'static dyn ScoreKernel,
+    ) -> Result<Self, String> {
+        let (r_shift, t_shift) = draft.shifts(&spec)?;
+        let mut lut = QkLut::with_kernel(spec, d, max_heads, kernel);
+        lut.r_shift = r_shift;
+        lut.t_shift = t_shift;
+        Ok(lut)
+    }
+
     pub fn spec(&self) -> &PolarSpec {
         &self.spec
+    }
+
+    /// True when this scorer reads a truncated (draft) view of the codes.
+    pub fn is_draft(&self) -> bool {
+        self.r_shift != 0 || self.t_shift != 0
+    }
+
+    /// Effective angle levels: `2^(t_bits - t_shift)` (draft planes merge
+    /// `2^t_shift` exact cells per level).
+    fn levels(&self) -> usize {
+        1usize << (self.spec.t_bits - self.t_shift)
     }
 
     pub fn kernel_name(&self) -> &'static str {
@@ -346,9 +387,12 @@ impl QkLut {
     /// Build the shared cos/sin basis for one group (trig happens ONCE per
     /// group regardless of how many query heads score against it).
     fn build_basis(&mut self, g: &PolarGroup) {
-        let levels = 1usize << self.spec.t_bits;
+        let levels = self.levels();
+        // draft planes widen the angle step by the merged-cell factor
+        // (exact: t_shift == 0, step_scale == 1.0 and this is a no-op)
+        let step_scale = (1u32 << self.t_shift) as f32;
         for j in 0..self.d2 {
-            let (tz, ts) = (g.theta_z[j], g.theta_s[j]);
+            let (tz, ts) = (g.theta_z[j], g.theta_s[j] * step_scale);
             for c in 0..levels {
                 let th = (c as f32 + 0.5) * ts + tz - std::f32::consts::PI;
                 let (sin, cos) = th.sin_cos();
@@ -360,7 +404,7 @@ impl QkLut {
 
     /// Combine the basis with `heads` queries into per-head LUTs.
     fn build_luts(&mut self, qs: &[&[f32]]) {
-        let levels = 1usize << self.spec.t_bits;
+        let levels = self.levels();
         for (h, q) in qs.iter().enumerate() {
             debug_assert_eq!(q.len(), self.d2 * 2);
             let lut = &mut self.lut[h * self.d2 * levels..(h + 1) * self.d2 * levels];
@@ -391,6 +435,9 @@ impl QkLut {
             self.rho_deq.resize(plane, 0.0);
         }
         let t_bits = self.spec.t_bits;
+        if self.is_draft() {
+            return self.stage_group_draft(g);
+        }
         if let Some(combined) = &g.combined {
             combined.unpack_into(&mut self.theta_scratch);
             for j in 0..self.d2 {
@@ -410,6 +457,46 @@ impl QkLut {
                 for n in 0..g.tokens {
                     self.rho_deq[lane + n] =
                         (self.rho_scratch[lane + n] as f32 + 0.5) * s + z;
+                }
+            }
+        }
+    }
+
+    /// Draft staging: derive the truncated code plane from the stored
+    /// exact codes while unpacking.  Unlike the exact fused path (which
+    /// leaves fused bytes in the scratch and lets the kernel's `t_mask`
+    /// strip the rho bits), draft staging must REWRITE the staged theta
+    /// bytes — the shifted draft index can't be recovered by a mask alone
+    /// once rho bits sit above it — so the kernel sees pure codes
+    /// `< 2^(t_bits - t_shift)` on both layouts.  Rho dequantizes at the
+    /// merged-cell midpoint: `(c >> r_shift + 1/2) · (s · 2^r_shift) + z`.
+    fn stage_group_draft(&mut self, g: &PolarGroup) {
+        let t_bits = self.spec.t_bits;
+        let (r_shift, t_shift) = (self.r_shift, self.t_shift);
+        let t_mask_full = ((1u32 << t_bits) - 1) as u8;
+        let s_scale = (1u32 << r_shift) as f32;
+        if let Some(combined) = &g.combined {
+            combined.unpack_into(&mut self.theta_scratch);
+            for j in 0..self.d2 {
+                let (z, s) = (g.rho_z[j], g.rho_s[j] * s_scale);
+                let lane = j * g.tokens;
+                for n in 0..g.tokens {
+                    let byte = self.theta_scratch[lane + n];
+                    let rc = ((byte >> t_bits) >> r_shift) as f32;
+                    self.theta_scratch[lane + n] = (byte & t_mask_full) >> t_shift;
+                    self.rho_deq[lane + n] = (rc + 0.5) * s + z;
+                }
+            }
+        } else {
+            g.theta_codes.unpack_into(&mut self.theta_scratch);
+            g.rho_codes.unpack_into(&mut self.rho_scratch);
+            for j in 0..self.d2 {
+                let (z, s) = (g.rho_z[j], g.rho_s[j] * s_scale);
+                let lane = j * g.tokens;
+                for n in 0..g.tokens {
+                    self.theta_scratch[lane + n] >>= t_shift;
+                    let rc = (self.rho_scratch[lane + n] >> r_shift) as f32;
+                    self.rho_deq[lane + n] = (rc + 0.5) * s + z;
                 }
             }
         }
@@ -440,7 +527,7 @@ impl QkLut {
         I: IntoIterator<Item = &'g PolarGroup>,
     {
         assert_eq!(qs.len(), out.len());
-        let levels = 1usize << self.spec.t_bits;
+        let levels = self.levels();
         assert!(qs.len() * self.d2 * levels <= self.lut.len());
         for o in out.iter_mut() {
             o.clear();
@@ -472,6 +559,27 @@ impl QkLut {
                 );
             }
         }
+    }
+
+    /// Batched speculative VERIFICATION: score `k` proposed decode
+    /// positions against one kv stream's cached groups in a single staged
+    /// walk.
+    ///
+    /// `qs` holds every query row of every proposed position
+    /// (position-major: `qs[p * heads + h]`); each group's basis build and
+    /// code staging is paid ONCE for all k positions × all GQA heads — the
+    /// amortization the exact LUT already gives one position's head group,
+    /// stretched across the whole speculation window.  `out` follows
+    /// `qs`'s order.  Per-head accumulation never depends on the other
+    /// queries in the batch (`ScoreKernel` contract), so each position's
+    /// scores are bit-identical to scoring it alone — the property that
+    /// lets speculative greedy decode verify drafts against sequential
+    /// output token-for-token.
+    pub fn verify_batch<'g, I>(&mut self, qs: &[&[f32]], groups: I, out: &mut [Vec<f32>])
+    where
+        I: IntoIterator<Item = &'g PolarGroup>,
+    {
+        self.scores_groups(qs, groups, out);
     }
 
     /// Single-head convenience wrapper (shim over the kernel walk).
@@ -597,6 +705,103 @@ mod tests {
             let mut single = Vec::new();
             lut.scores(q, &enc, &mut single);
             assert_eq!(multi[h], single, "head {h}");
+        }
+    }
+
+    #[test]
+    fn draft_matches_truncated_requant() {
+        // A draft LUT over the EXACT stored plane must score bit-identically
+        // to a plain LUT over a cache whose codes were explicitly truncated
+        // (c >> shift) with merged-cell params (s * 2^shift, same zero) —
+        // the DraftSpec contract, on both the fused and the general layout.
+        use super::super::pack::PackedCodes;
+        use super::super::polar::DraftSpec;
+        let mut rng = Rng::new(31);
+        let d = 32;
+        for (r, t, dr, dt) in [(4u32, 4u32, 2u32, 2u32), (5, 5, 2, 3), (4, 4, 4, 4), (3, 6, 1, 2)]
+        {
+            let spec = PolarSpec::new(r, t, 16);
+            let draft = DraftSpec::new(dr, dt);
+            let (rs, ts) = draft.shifts(&spec).unwrap();
+            let k = rng.normal_vec(2 * 16 * d);
+            let enc = polar::encode(&k, d, &spec);
+
+            // explicit truncated re-encoding of every group
+            let coarse_spec = PolarSpec::new(dr, dt, 16);
+            let coarse_groups: Vec<PolarGroup> = enc
+                .groups
+                .iter()
+                .map(|g| {
+                    let rc: Vec<u8> =
+                        g.rho_codes.unpack().iter().map(|&c| c >> rs).collect();
+                    let tc: Vec<u8> =
+                        g.theta_codes.unpack().iter().map(|&c| c >> ts).collect();
+                    let combined = (dr + dt <= 8).then(|| {
+                        let mixed: Vec<u8> = rc
+                            .iter()
+                            .zip(&tc)
+                            .map(|(&r, &t)| (r << dt) | t)
+                            .collect();
+                        PackedCodes::from_codes(&mixed, dr + dt)
+                    });
+                    PolarGroup {
+                        rho_codes: PackedCodes::from_codes(&rc, dr),
+                        theta_codes: PackedCodes::from_codes(&tc, dt),
+                        combined,
+                        rho_z: g.rho_z.clone(),
+                        rho_s: g.rho_s.iter().map(|&s| s * (1u32 << rs) as f32).collect(),
+                        theta_z: g.theta_z.clone(),
+                        theta_s: g.theta_s.iter().map(|&s| s * (1u32 << ts) as f32).collect(),
+                        tokens: g.tokens,
+                    }
+                })
+                .collect();
+
+            let q = rng.normal_vec(d);
+            let mut draft_lut =
+                QkLut::with_draft(spec, draft, d, 1, default_kernel()).unwrap();
+            assert_eq!(draft_lut.is_draft(), rs != 0 || ts != 0);
+            let mut via_shift = vec![Vec::new()];
+            draft_lut.scores_groups(&[&q], &enc.groups, &mut via_shift);
+
+            let mut plain_lut = QkLut::new(coarse_spec, d, 1);
+            let mut via_requant = vec![Vec::new()];
+            plain_lut.scores_groups(&[&q], &coarse_groups[..], &mut via_requant);
+
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(&via_shift[0]),
+                bits(&via_requant[0]),
+                "r{r}t{t} -> r{dr}t{dt}"
+            );
+        }
+    }
+
+    #[test]
+    fn verify_batch_matches_per_position() {
+        // k positions' heads scored through one walk == each position
+        // scored alone, bit-for-bit (the speculative verification entry).
+        let mut rng = Rng::new(33);
+        let d = 32;
+        let hq = 2;
+        let positions = 3;
+        let spec = PolarSpec::new(4, 4, 16);
+        let enc = polar::encode(&rng.normal_vec(3 * 16 * d), d, &spec);
+        let qs: Vec<Vec<f32>> =
+            (0..positions * hq).map(|_| rng.normal_vec(d)).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+
+        let mut lut = QkLut::new(spec, d, positions * hq);
+        let mut batched = vec![Vec::new(); positions * hq];
+        lut.verify_batch(&qrefs, &enc.groups, &mut batched);
+
+        let mut solo_lut = QkLut::new(spec, d, hq);
+        for p in 0..positions {
+            let mut solo = vec![Vec::new(); hq];
+            solo_lut.scores_multi(&qrefs[p * hq..(p + 1) * hq], &enc, &mut solo);
+            for h in 0..hq {
+                assert_eq!(batched[p * hq + h], solo[h], "pos {p} head {h}");
+            }
         }
     }
 

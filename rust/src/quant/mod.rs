@@ -28,7 +28,7 @@ pub use lut::{
     select_kernel, simd_available, KernelKind, QkLut, ScalarKernel, ScoreKernel, SeqScoreJob,
     SimdKernel,
 };
-pub use polar::{PolarEncoded, PolarGroup, PolarSpec};
+pub use polar::{DraftSpec, PolarEncoded, PolarGroup, PolarSpec};
 pub use spec::{KeyCodec, QuantSpec};
 
 /// Asymmetric quantization params for one channel over one token group.

@@ -31,6 +31,72 @@ impl PolarSpec {
     }
 }
 
+/// A coarse *draft* plane derived from an exact [`PolarSpec`] by **code
+/// truncation**: the draft code for a sub-vector is the stored exact code
+/// with its low bits dropped (`c' = c >> shift`), and the draft dequant
+/// point is the midpoint of the merged cell —
+///
+/// ```text
+/// rho~'  = (c' + 1/2) · (s · 2^r_shift) + z      (same z, scale widened)
+/// theta' = (c' + 1/2) · (ts · 2^t_shift) + tz − π
+/// ```
+///
+/// so a draft plane is *derived*, never stored: pages keep only the exact
+/// codes, and the shifted view is materialized at LUT staging time
+/// ([`crate::quant::lut::QkLut::with_draft`]).  A draft pass therefore
+/// costs zero extra quantization work and zero extra cache bytes — the
+/// self-drafting property speculative decoding builds on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DraftSpec {
+    pub r_bits: u32,
+    pub t_bits: u32,
+}
+
+impl DraftSpec {
+    pub fn new(r_bits: u32, t_bits: u32) -> Self {
+        assert!((1..=8).contains(&r_bits) && (1..=8).contains(&t_bits));
+        DraftSpec { r_bits, t_bits }
+    }
+
+    /// Parse a `R,T` flag value (`--draft-bits 2,2`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (r, t) = s
+            .split_once(',')
+            .ok_or_else(|| format!("draft bits '{s}': expected R,T"))?;
+        let parse_bits = |v: &str, axis: &str| -> Result<u32, String> {
+            let b: u32 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("draft bits '{s}': bad {axis} '{v}'"))?;
+            if (1..=8).contains(&b) {
+                Ok(b)
+            } else {
+                Err(format!("draft bits '{s}': {axis} must be in 1..=8"))
+            }
+        };
+        Ok(DraftSpec { r_bits: parse_bits(r, "radius bits")?, t_bits: parse_bits(t, "angle bits")? })
+    }
+
+    /// Default draft for an exact plane: half the bits, floor 1 — coarse
+    /// enough for a cheap proxy, fine enough to keep score ordering.
+    pub fn halved(exact: &PolarSpec) -> Self {
+        DraftSpec::new((exact.r_bits / 2).max(1), (exact.t_bits / 2).max(1))
+    }
+
+    /// The right-shifts that turn exact codes into draft codes
+    /// (`(r_shift, t_shift)`).  Errors unless `draft <= exact` on both
+    /// axes — a draft plane can only drop bits the exact plane stored.
+    pub fn shifts(&self, exact: &PolarSpec) -> Result<(u32, u32), String> {
+        if self.r_bits > exact.r_bits || self.t_bits > exact.t_bits {
+            return Err(format!(
+                "draft bits r{}/t{} exceed the exact plane's r{}/t{}",
+                self.r_bits, self.t_bits, exact.r_bits, exact.t_bits
+            ));
+        }
+        Ok((exact.r_bits - self.r_bits, exact.t_bits - self.t_bits))
+    }
+}
+
 /// One encoded token-group of one key stream (d/2 channel pairs).
 ///
 /// Layout (pack v2): codes are CHANNEL-MAJOR planes (`j * tokens + n`) —
@@ -273,6 +339,22 @@ mod tests {
         assert!((spec.bits_per_element() - 4.25).abs() < 1e-9);
         let spec = PolarSpec::new(3, 3, 128);
         assert!((spec.bits_per_element() - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn draft_spec_shifts_and_validation() {
+        let exact = PolarSpec::new(4, 4, 16);
+        assert_eq!(DraftSpec::new(2, 3).shifts(&exact), Ok((2, 1)));
+        assert_eq!(DraftSpec::new(4, 4).shifts(&exact), Ok((0, 0)));
+        assert!(DraftSpec::new(5, 4).shifts(&exact).is_err());
+        assert!(DraftSpec::new(4, 5).shifts(&exact).is_err());
+        assert_eq!(DraftSpec::halved(&exact), DraftSpec::new(2, 2));
+        assert_eq!(DraftSpec::halved(&PolarSpec::new(1, 2, 16)), DraftSpec::new(1, 1));
+        assert_eq!(DraftSpec::parse("2,3"), Ok(DraftSpec::new(2, 3)));
+        assert_eq!(DraftSpec::parse(" 1 , 8 "), Ok(DraftSpec::new(1, 8)));
+        assert!(DraftSpec::parse("2").is_err());
+        assert!(DraftSpec::parse("0,3").is_err());
+        assert!(DraftSpec::parse("2,nine").is_err());
     }
 
     #[test]

@@ -44,6 +44,20 @@ impl QuantSpec {
         }
     }
 
+    /// The default self-drafting plane for speculative decoding: Polar
+    /// codecs expose a code-truncated coarse view ([`polar::DraftSpec`],
+    /// half the bits of the exact plane, floor 1) derived from the SAME
+    /// stored codes — no second quantization pass, no extra bytes.  Other
+    /// codecs store no truncatable code plane and return `None`.
+    pub fn default_draft(&self) -> Option<polar::DraftSpec> {
+        match self {
+            QuantSpec::Polar { r_bits, t_bits, group } => Some(polar::DraftSpec::halved(
+                &polar::PolarSpec::new(*r_bits, *t_bits, *group),
+            )),
+            _ => None,
+        }
+    }
+
     /// Average bits per key element including quantization constants
     /// (paper §B; d = head dim).
     pub fn bits_per_element(&self, d: usize) -> f64 {
@@ -207,6 +221,16 @@ mod tests {
         assert!(
             (QuantSpec::Qjl { bits_per_channel: 3 }.bits_per_element(d) - 3.125).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn default_draft_is_polar_only() {
+        let p = QuantSpec::Polar { r_bits: 4, t_bits: 4, group: 64 };
+        assert_eq!(p.default_draft(), Some(polar::DraftSpec::new(2, 2)));
+        let p = QuantSpec::Polar { r_bits: 1, t_bits: 3, group: 64 };
+        assert_eq!(p.default_draft(), Some(polar::DraftSpec::new(1, 1)));
+        assert_eq!(QuantSpec::Kivi { bits: 4, group: 64 }.default_draft(), None);
+        assert_eq!(QuantSpec::Fp16.default_draft(), None);
     }
 
     #[test]

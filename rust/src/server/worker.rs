@@ -118,10 +118,14 @@ fn metrics_value(engine: &Engine) -> Value {
         ("pages_demoted", num(pool.pages_demoted() as f64)),
         ("pages_promoted", num(pool.pages_promoted() as f64)),
         ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
+        ("tier_session_bytes", num(pool.session_bytes() as f64)),
         ("snapkv_tokens_dropped", num(m.snapkv_tokens_dropped as f64)),
         ("tenant_throttled", num(m.tenant_throttled as f64)),
         ("sessions_reaped", num(m.sessions_reaped as f64)),
         ("sessions_restored", num(m.sessions_restored as f64)),
+        ("speculative_rounds", num(m.speculative_rounds as f64)),
+        ("speculative_drafted", num(m.speculative_drafted as f64)),
+        ("speculative_accepted", num(m.speculative_accepted as f64)),
         // per-request latency histograms (p50/p95/p99, milliseconds)
         ("ttft_ms_p50", ms(m.ttft.p(50.0))),
         ("ttft_ms_p95", ms(m.ttft.p(95.0))),
@@ -285,6 +289,17 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             if engine.prefix_caching() {
                 eprintln!("[server] engine {w}: prefix caching ON (refcounted page sharing)");
             }
+            if engine.speculate_k() > 0 {
+                let bits = engine
+                    .draft_spec()
+                    .map(|d| format!("r{}/t{}", d.r_bits, d.t_bits))
+                    .unwrap_or_else(|| "unset".into());
+                eprintln!(
+                    "[server] engine {w}: speculative decoding, K={} on draft plane {bits} \
+                     (greedy requests only; output stays bit-identical)",
+                    engine.speculate_k()
+                );
+            }
             if engine.sched_mode() == SchedMode::Wfq {
                 eprintln!(
                     "[server] engine {w}: weighted-fair tenant scheduling (deficit stride)"
@@ -387,10 +402,14 @@ fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Va
                 "pages_demoted",
                 "pages_promoted",
                 "bytes_on_disk",
+                "tier_session_bytes",
                 "snapkv_tokens_dropped",
                 "tenant_throttled",
                 "sessions_reaped",
                 "sessions_restored",
+                "speculative_rounds",
+                "speculative_drafted",
+                "speculative_accepted",
             ];
             let mut fields: Vec<(&str, Value)> =
                 vec![("admin", json::s("metrics")), ("ok", Value::Bool(true))];

@@ -482,6 +482,68 @@ fn prop_seeded_sampling_is_bit_identical_across_decode_widths() {
 }
 
 #[test]
+fn prop_speculative_is_bit_identical() {
+    // The speculative-decoding contract: `--speculate K` NEVER changes a
+    // greedy rollout — the draft plane only proposes, the exact plane
+    // verifies, and any rejected tail unwinds.  Random prompt batches,
+    // draft planes (including the explicit exact-width plane, where every
+    // proposal verifies), window sizes, decode-worker widths, and
+    // prefill-chunk sizes must all reproduce the k=0 baseline
+    // bit-for-bit, and the pool must drain to zero after every run.
+    for case in 0..12u64 {
+        let mut rng = Rng::new(8300 + case);
+        let n_reqs = rng.range(1, 4);
+        let reqs: Vec<Request> = (0..n_reqs)
+            .map(|i| {
+                let plen = rng.range(3, 30);
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(64) as u32).collect();
+                let mut r = Request::greedy(i as u64 + 1, prompt, rng.range(4, 14));
+                // random stop tokens exercise the mid-window clamp; the
+                // first request stays stop-free so at least one rollout
+                // runs long enough for speculation to engage
+                if i > 0 && rng.chance(0.3) {
+                    r.gen.stop_tokens = vec![rng.below(64) as u32];
+                }
+                r
+            })
+            .collect();
+        let chunk = [0usize, 8, 16][rng.below(3)];
+        let run = |speculate: usize, draft: Option<(u32, u32)>, workers: usize| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = chunk;
+            opts.decode_workers = workers;
+            opts.speculate = speculate;
+            opts.draft_bits = draft;
+            let mut eng = Engine::native_synthetic(prop_engine_cfg(), 700 + case, 4.0, opts);
+            for r in &reqs {
+                eng.submit(r.clone()).unwrap();
+            }
+            let mut done = eng.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            let tokens: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+            assert_eq!(eng.page_pool().pages_in_use(), 0, "case {case}: leaked pages");
+            assert_eq!(eng.cache_report().physical_bytes, 0, "case {case}: leaked bytes");
+            (tokens, eng.metrics.speculative_rounds)
+        };
+        let (baseline, rounds0) = run(0, None, 1);
+        assert_eq!(rounds0, 0, "case {case}: k=0 must never speculate");
+        let k = rng.range(2, 6);
+        let draft = match rng.below(3) {
+            0 => None, // halved default
+            1 => Some((rng.range(1, 5) as u32, rng.range(1, 5) as u32)),
+            _ => Some((4, 4)), // exact-width: every draft must verify
+        };
+        let workers = [1usize, 3][rng.below(2)];
+        let (spec_tokens, rounds) = run(k, draft, workers);
+        assert_eq!(
+            spec_tokens, baseline,
+            "case {case}: k={k} draft={draft:?} w={workers} chunk={chunk} changed a rollout"
+        );
+        assert!(rounds > 0, "case {case}: speculation never engaged");
+    }
+}
+
+#[test]
 fn prop_cancel_at_any_point_returns_pool_to_baseline() {
     // Cancel a request after a random number of engine steps — mid
     // queue, mid prefill, or mid decode — and the page pool plus the
