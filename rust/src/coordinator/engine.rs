@@ -46,6 +46,7 @@ use crate::model::{Model, ModelConfig, Weights};
 use crate::quant::{select_kernel, DraftSpec, KernelKind};
 use crate::runtime::marshal::{batch_dense, split_prefill_kv};
 use crate::runtime::PjrtRuntime;
+use crate::trace::{TraceKind, TraceRecorder};
 
 // the per-request options (SnapKV override included) live with Request
 pub use super::request::SnapKvOpts;
@@ -131,6 +132,11 @@ pub struct EngineOpts {
     /// `speculate > 0`.  Must truncate (not exceed) the exact plane;
     /// validated at the CLI boundary.
     pub draft_bits: Option<(u32, u32)>,
+    /// Request-lifecycle tracing (`--trace on`): record typed span
+    /// events into a bounded per-engine ring ([`crate::trace`]).
+    /// Observation-only — rollouts are byte-identical either way — and
+    /// off by default, where its entire cost is one branch per site.
+    pub trace: bool,
 }
 
 impl Default for EngineOpts {
@@ -150,6 +156,7 @@ impl Default for EngineOpts {
             sched: SchedMode::Fcfs,
             speculate: 0,
             draft_bits: None,
+            trace: false,
         }
     }
 }
@@ -235,6 +242,8 @@ pub struct Engine {
     tenant_buckets: Option<TenantBuckets>,
     /// idle sessions older than this demote their chain to the disk tier
     session_ttl: Option<Duration>,
+    /// lifecycle span recorder (disabled no-op unless `EngineOpts::trace`)
+    trace: Arc<TraceRecorder>,
 }
 
 impl Engine {
@@ -275,8 +284,25 @@ impl Engine {
             opts.prefill_quantize_eagerly = true;
             opts.prefill_chunk = opts.prefill_chunk.div_ceil(cfg.group) * cfg.group;
         }
+        let trace = if opts.trace {
+            Arc::new(TraceRecorder::new(true, TraceRecorder::DEFAULT_CAPACITY))
+        } else {
+            TraceRecorder::disabled()
+        };
+        if opts.trace {
+            if let Backend::Native(model) = &mut backend {
+                // install the recorder BEFORE the decode pool forks
+                // workers, so every fork records into the same ring
+                model.set_trace(trace.clone());
+            }
+        }
         let cache = CacheManager::new(cfg.cache_config(opts.value_bits), opts.cache_budget_bytes)
             .with_page_capacity(opts.cache_pages);
+        if opts.trace {
+            // the page pool (and the tier writer it later spawns) hold a
+            // late-binding slot; fill it so promotions/demotions record
+            cache.pool().set_trace(trace.clone());
+        }
         // the pool shares the native model's weights; PJRT decode batches
         // inside the graph instead, so it never uses one
         let pool = match &backend {
@@ -306,7 +332,14 @@ impl Engine {
             },
             tenant_buckets: None,
             session_ttl: None,
+            trace,
         }
+    }
+
+    /// This engine's span recorder (the server drains it for the admin
+    /// `trace` command and the Chrome export; disabled = records nothing).
+    pub fn trace(&self) -> Arc<TraceRecorder> {
+        self.trace.clone()
     }
 
     /// Apply the multi-tenant policy knobs.  Weights only matter under
@@ -499,6 +532,7 @@ impl Engine {
         }
         self.metrics.requests_submitted += 1;
         self.metrics.tenant(&req.tenant).admitted += 1;
+        self.trace.record(req.id, TraceKind::Admitted);
         self.queue.push_back(Tracked::new(req));
         Ok(())
     }
@@ -665,6 +699,13 @@ impl Engine {
     fn finish_cancelled(&mut self, mut tr: Tracked) -> Completion {
         tr.finished_at = Some(Instant::now());
         self.metrics.requests_cancelled += 1;
+        self.trace.record(
+            tr.req.id,
+            TraceKind::Done {
+                finish_reason: FinishReason::Cancelled.as_str(),
+                tokens: tr.generated.len() as u32,
+            },
+        );
         let c = Completion {
             id: tr.req.id,
             prompt_len: tr.req.prompt.len(),
@@ -772,6 +813,7 @@ impl Engine {
         self.metrics.requests_submitted += 1;
         self.metrics.tenant(&full.tenant).admitted += 1;
         self.metrics.session_turns += 1;
+        self.trace.record(id, TraceKind::Admitted);
         let mut tr = Tracked::new(full);
         // TAKE the chain (don't clone): while the turn is in flight the
         // Tracked owns the only session-side handle, so a preemption's
@@ -836,6 +878,8 @@ impl Engine {
                 Ok(r) => {
                     self.sessions.get_mut(&sid).unwrap().tiered = Some(r);
                     self.metrics.sessions_reaped += 1;
+                    // background maintenance, not tied to a request (id 0)
+                    self.trace.record(0, TraceKind::SessionReap { session: sid });
                     reaped += 1;
                     // `chain` drops here: the pages go back to the pool
                 }
@@ -874,6 +918,7 @@ impl Engine {
         sess.cache = Some(Arc::new(Mutex::new(seq)));
         sess.last_active = Instant::now();
         self.metrics.sessions_restored += 1;
+        self.trace.record(0, TraceKind::SessionRestore { session: sid });
     }
 
     /// True when this engine runs the chunked-prefill continuous loop
@@ -1000,7 +1045,10 @@ impl Engine {
             return;
         }
         let group = self.cfg.group;
-        let mut pages = self.cache.pool().lookup_prefix(prompt, group, max_share);
+        // the traced variant attributes any tier promotion this lookup
+        // triggers to the adopting request
+        let mut pages =
+            self.cache.pool().lookup_prefix_traced(prompt, group, max_share, tr.req.id);
         // truncate the hit to a chunk boundary (see above)
         pages.truncate((pages.len() * group / chunk) * chunk / group);
         if pages.is_empty() {
@@ -1084,6 +1132,10 @@ impl Engine {
                 )
             };
             let tr = self.running.get_mut(&id).unwrap();
+            self.trace.record(
+                id,
+                TraceKind::PrefillChunk { start: tr.prefill_pos as u32, tokens: take as u32 },
+            );
             tr.prefill_pos += take;
             self.metrics.prefill_tokens += take as u64;
             self.metrics.prefill_chunks += 1;
@@ -1191,6 +1243,14 @@ impl Engine {
         debug_assert_eq!(tr.state, RequestState::Decoding);
         tr.state = RequestState::Prefilling;
         tr.prefill_pos = 0;
+        if self.trace.enabled() {
+            let pages = self
+                .cache
+                .get(id)
+                .map(|c| c.lock().unwrap().pages.len())
+                .unwrap_or(0);
+            self.trace.record(id, TraceKind::PagePreempt { pages: pages as u32 });
+        }
         self.cache.reset(id);
         if self.prefix_caching() {
             let mut tr = self.running.remove(&id).expect("victim is running");
@@ -1286,6 +1346,9 @@ impl Engine {
 
         // first generated token comes from the prefill logits
         tr.prefill_pos = prompt.len();
+        // whole-prompt prefill is one big chunk as far as the trace goes
+        self.trace
+            .record(id, TraceKind::PrefillChunk { start: 0, tokens: prompt.len() as u32 });
         Self::emit(
             &self.subs,
             id,
@@ -1417,17 +1480,33 @@ impl Engine {
                             let max_emit = tr.req.gen.max_new_tokens - tr.generated.len();
                             let stops = tr.req.gen.stop_tokens.clone();
                             let want_lp = tr.req.gen.logprobs && self.subs.contains_key(&id);
-                            let out = {
+                            let t0 = self.trace.enabled().then(Instant::now);
+                            if t0.is_some() {
+                                // the model records the speculative round
+                                // itself; key it to this request
+                                model.set_trace_request(id);
+                            }
+                            let (out, pos) = {
                                 let mut cache = shared.lock().unwrap();
-                                model.speculative_decode(
+                                let out = model.speculative_decode(
                                     feed,
                                     &mut cache,
                                     self.opts.speculate,
                                     max_emit,
                                     &stops,
                                     want_lp,
-                                )
+                                );
+                                (out, cache.len())
                             };
+                            if let Some(t0) = t0 {
+                                self.trace.record(
+                                    id,
+                                    TraceKind::DecodeStep {
+                                        pos: pos as u32,
+                                        us: t0.elapsed().as_micros() as u32,
+                                    },
+                                );
+                            }
                             if out.drafted > 0 {
                                 self.metrics.speculative_rounds += 1;
                                 self.metrics.speculative_drafted += out.drafted as u64;
@@ -1442,11 +1521,22 @@ impl Engine {
                             }
                             continue;
                         }
+                        let t0 = self.trace.enabled().then(Instant::now);
                         let mut cache = shared.lock().unwrap();
                         let logits = model.decode_step(feed, &mut cache).to_vec();
+                        let pos = cache.len();
                         drop(cache);
                         if replay {
                             continue; // cache rebuilt; token already known
+                        }
+                        if let Some(t0) = t0 {
+                            self.trace.record(
+                                id,
+                                TraceKind::DecodeStep {
+                                    pos: pos as u32,
+                                    us: t0.elapsed().as_micros() as u32,
+                                },
+                            );
                         }
                         let tr = self.running.get_mut(&id).unwrap();
                         let (tok, lp) = Self::sample_token(&self.subs, tr, &logits);
@@ -1494,6 +1584,9 @@ impl Engine {
                         ins.positions[lane] =
                             self.cache.get(id).unwrap().lock().unwrap().next_pos as i32;
                     }
+                    // one graph execution serves the whole batch; each
+                    // lane's span carries the shared batch duration
+                    let t0 = self.trace.enabled().then(Instant::now);
                     let out = rt.decode(&b.graph, &ins)?;
                     let (l, kv, dh, v) =
                         (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.vocab);
@@ -1512,6 +1605,16 @@ impl Engine {
                             }
                         }
                         self.cache.get(id).unwrap().lock().unwrap().append_step(&new_k, &new_v);
+                        if let Some(t0) = t0 {
+                            let pos = self.cache.get(id).unwrap().lock().unwrap().len();
+                            self.trace.record(
+                                id,
+                                TraceKind::DecodeStep {
+                                    pos: pos as u32,
+                                    us: t0.elapsed().as_micros() as u32,
+                                },
+                            );
+                        }
                         let logits = &out.logits[lane * v..(lane + 1) * v];
                         let tr = self.running.get_mut(&id).unwrap();
                         let (tok, lp) = Self::sample_token(&self.subs, tr, logits);
@@ -1556,6 +1659,13 @@ impl Engine {
                 } else {
                     tr.done_reason().unwrap_or(FinishReason::Length)
                 };
+                self.trace.record(
+                    id,
+                    TraceKind::Done {
+                        finish_reason: finish_reason.as_str(),
+                        tokens: tr.generated.len() as u32,
+                    },
+                );
                 let c = Completion {
                     id,
                     prompt_len: tr.req.prompt.len(),
@@ -1650,6 +1760,42 @@ mod tests {
             eng.run_to_completion().unwrap()[0].tokens.clone()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn traced_request_yields_ordered_lifecycle_and_identical_tokens() {
+        let run = |trace: bool| {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = 4;
+            opts.trace = trace;
+            let mut eng = Engine::native_synthetic(tiny_cfg(), 7, 4.0, opts);
+            let prompt: Vec<u32> = (0..10).map(|i| (i * 3 % 64) as u32).collect();
+            eng.submit(Request::greedy(21, prompt, 5)).unwrap();
+            let tokens = eng.run_to_completion().unwrap()[0].tokens.clone();
+            (tokens, eng.trace().drain())
+        };
+        let (plain, none) = run(false);
+        assert!(none.is_empty(), "--trace off records nothing");
+        let (traced, events) = run(true);
+        assert_eq!(plain, traced, "tracing is observation-only");
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq), "drain is seq-ordered");
+        let names: Vec<&str> =
+            events.iter().filter(|e| e.request == 21).map(|e| e.kind.name()).collect();
+        assert_eq!(names.first(), Some(&"admitted"));
+        assert_eq!(names.last(), Some(&"done"));
+        assert_eq!(
+            names.iter().filter(|n| **n == "prefill_chunk").count(),
+            3,
+            "10 prompt tokens in grants of 4"
+        );
+        assert_eq!(
+            names.iter().filter(|n| **n == "decode_step").count(),
+            4,
+            "first token comes from prefill; 4 decode iterations follow"
+        );
+        let idx = |n: &str| names.iter().position(|x| *x == n).unwrap();
+        assert!(idx("admitted") < idx("prefill_chunk"));
+        assert!(idx("prefill_chunk") < idx("decode_step"));
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::thread::JoinHandle;
 use crate::kvcache::SharedSeq;
 use crate::model::sampling::Sampler;
 use crate::model::Model;
+use crate::trace::TraceKind;
 use crate::util::rng::Rng;
 
 /// One sequence's slice of a decode step.
@@ -85,6 +86,18 @@ enum Msg {
     Shutdown,
 }
 
+/// Record one `decode_step` span (the pooled decode path).  `t0` is
+/// `Some` only when the worker's recorder is enabled, so a worker with
+/// tracing off never reads the clock.
+fn record_step(m: &Model, id: u64, pos: usize, t0: Option<std::time::Instant>) {
+    if let (Some(t0), Some(tr)) = (t0, m.trace()) {
+        tr.record(
+            id,
+            TraceKind::DecodeStep { pos: pos as u32, us: t0.elapsed().as_micros() as u32 },
+        );
+    }
+}
+
 struct Worker {
     tx: Sender<Msg>,
     rx: Receiver<(Vec<StepResult>, Vec<DecodeTask>)>,
@@ -110,6 +123,10 @@ impl DecodePool {
                 let (tx, job_rx) = channel::<Msg>();
                 let (result_tx, rx) = channel();
                 let mut m = model.fork();
+                // the fork carries the engine's recorder; a disabled (or
+                // absent) recorder keeps this loop allocation- and
+                // clock-free exactly as before
+                let traced = m.trace().is_some_and(|tr| tr.enabled());
                 let join = std::thread::spawn(move || loop {
                     match job_rx.recv() {
                         Ok(Msg::Step { mut tasks, mut results }) => {
@@ -118,6 +135,8 @@ impl DecodePool {
                                 // uncontended: this worker is the only one
                                 // assigned this sequence for the step
                                 let mut cache = t.cache.lock().unwrap();
+                                m.set_trace_request(t.id);
+                                let t0 = traced.then(std::time::Instant::now);
                                 if t.speculate > 0
                                     && !t.replay
                                     && t.sampler == Sampler::Greedy
@@ -131,6 +150,7 @@ impl DecodePool {
                                         &t.stops,
                                         t.want_logprob,
                                     );
+                                    record_step(&m, t.id, cache.len(), t0);
                                     results.push(StepResult {
                                         id: t.id,
                                         tokens: out.tokens,
@@ -151,6 +171,11 @@ impl DecodePool {
                                         (t.sampler.sample(logits, &mut rng), 0.0)
                                     }
                                 };
+                                if !t.replay {
+                                    // replay rebuilds state for a page-less
+                                    // sequence; it is not a lifecycle step
+                                    record_step(&m, t.id, cache.len(), t0);
+                                }
                                 results.push(StepResult {
                                     id: t.id,
                                     tokens: vec![(token, logprob)],
@@ -378,6 +403,53 @@ mod tests {
         let got: Vec<u32> = r.tokens.iter().map(|(t, _)| *t).collect();
         assert_eq!(got, want, "burst must equal inline sequential decode");
         assert_eq!(cache.lock().unwrap().len(), 20 + 4);
+    }
+
+    #[test]
+    fn pooled_workers_record_decode_and_speculative_spans() {
+        use crate::trace::{TraceKind, TraceRecorder};
+        let cfg = tiny_cfg();
+        let mut model = Model::new(cfg.clone(), Weights::synthetic(&cfg, 15, 4.0));
+        model.set_draft(crate::quant::DraftSpec::new(4, 4)).unwrap();
+        let rec = Arc::new(TraceRecorder::new(true, 256));
+        model.set_trace(rec.clone());
+        let mut c = SequenceCache::new(cfg.cache_config(None));
+        model.prefill(&[1, 2, 3, 4], &mut c);
+        let cache: SharedSeq = Arc::new(Mutex::new(c));
+        let mut pool = DecodePool::new(&model, 1);
+        for (speculate, id) in [(0usize, 21u64), (3, 22)] {
+            pool.submit(
+                0,
+                DecodeTask {
+                    id,
+                    cache: cache.clone(),
+                    last_token: 3,
+                    sampler: Sampler::Greedy,
+                    rng: Rng::new(0),
+                    want_logprob: false,
+                    replay: false,
+                    speculate,
+                    max_emit: 8,
+                    stops: Vec::new(),
+                },
+            );
+            let mut out = Vec::new();
+            pool.flush(&mut out);
+            assert_eq!(out.len(), 1);
+        }
+        let events = rec.drain();
+        let steps: Vec<u64> = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::DecodeStep { .. }))
+            .map(|e| e.request)
+            .collect();
+        assert_eq!(steps, vec![21, 22], "one decode_step span per task, keyed by request");
+        assert!(
+            events
+                .iter()
+                .any(|e| e.request == 22 && matches!(e.kind, TraceKind::SpeculativeRound { .. })),
+            "the speculative task records its round: {events:?}"
+        );
     }
 
     #[test]

@@ -38,6 +38,7 @@ use super::tier::{
     TierBackend, TierConfig, TierCounters, TierRef,
 };
 use crate::quant::polar::PolarGroup;
+use crate::trace::{trace_slot, TraceKind, TraceRecorder, TraceSlot};
 
 /// Roll segment files at this size (append-only; see `tier::store`).
 const SEGMENT_ROLL_BYTES: u64 = 64 << 20;
@@ -197,6 +198,11 @@ pub struct PagePool {
     /// tier counters/gauges, readable without the index lock (zeros
     /// until/unless a tier is attached)
     tier_stats: Arc<TierCounters>,
+    /// late-bound trace recorder ([`PagePool::set_trace`]); unfilled =
+    /// no events.  A slot rather than a direct field because the pool
+    /// (and possibly its tier writer) exist before `serve` decides
+    /// whether tracing is on.
+    trace: TraceSlot,
     /// physical page capacity; `usize::MAX` = unbounded
     capacity: usize,
 }
@@ -224,12 +230,28 @@ impl PagePool {
             })),
             counters: Arc::new(PoolCounters::default()),
             tier_stats: Arc::new(TierCounters::default()),
+            trace: trace_slot(),
             capacity,
         }
     }
 
     pub fn counters(&self) -> &Arc<PoolCounters> {
         &self.counters
+    }
+
+    /// Bind the engine's trace recorder (once; later binds are ignored).
+    /// Pool events — `page_promote` on tier hits, `page_demote` on
+    /// reclaim — flow into it; the already-running tier writer sees the
+    /// same slot.  Observation-only: never changes pool behavior.
+    pub fn set_trace(&self, rec: Arc<TraceRecorder>) {
+        let _ = self.trace.set(rec);
+    }
+
+    #[inline]
+    fn trace_record(&self, request: u64, kind: TraceKind) {
+        if let Some(tr) = self.trace.get() {
+            tr.record(request, kind);
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -338,6 +360,7 @@ impl PagePool {
             if let Some(r) = known {
                 idx.entries.get_mut(&h).unwrap().slot = Slot::Tiered(r);
                 self.tier_stats.pages_demoted.fetch_add(1, Ordering::Relaxed);
+                self.trace_record(0, TraceKind::PageDemote { pages: 1 });
                 return;
             }
             let under_budget =
@@ -386,6 +409,19 @@ impl PagePool {
     /// back to plain eviction when its queue fills, never blocking a
     /// decode step.
     pub fn lookup_prefix(&self, tokens: &[u32], group: usize, max_tokens: usize) -> Vec<Arc<Page>> {
+        self.lookup_prefix_traced(tokens, group, max_tokens, 0)
+    }
+
+    /// [`PagePool::lookup_prefix`] keyed to a request id: a promotion on
+    /// the walk records a `page_promote` trace span against `request`,
+    /// so tier latency shows up on the request that paid for it.
+    pub fn lookup_prefix_traced(
+        &self,
+        tokens: &[u32],
+        group: usize,
+        max_tokens: usize,
+        request: u64,
+    ) -> Vec<Arc<Page>> {
         let mut guard = self.index.lock().unwrap();
         let idx = &mut *guard;
         idx.clock += 1;
@@ -461,6 +497,7 @@ impl PagePool {
         if promoted > 0 {
             self.tier_stats.tier_hits.fetch_add(1, Ordering::Relaxed);
             self.tier_stats.pages_promoted.fetch_add(promoted, Ordering::Relaxed);
+            self.trace_record(request, TraceKind::PagePromote { pages: promoted as u32 });
         }
         pages
     }
@@ -642,6 +679,7 @@ impl PagePool {
             Arc::downgrade(&self.index),
             store.clone(),
             self.tier_stats.clone(),
+            self.trace.clone(),
             rx,
         );
         let mut idx = self.index.lock().unwrap();

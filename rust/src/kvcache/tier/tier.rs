@@ -101,6 +101,7 @@ pub(crate) fn spawn_writer(
     index: Weak<Mutex<PrefixIndex>>,
     store: Arc<SegmentStore>,
     stats: Arc<TierCounters>,
+    trace: crate::trace::TraceSlot,
     rx: Receiver<DemoteJob>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -128,6 +129,13 @@ pub(crate) fn spawn_writer(
                                 Ok(tref) => {
                                     e.slot = Slot::Tiered(tref);
                                     stats.pages_demoted.fetch_add(1, Ordering::Relaxed);
+                                    // background work: not tied to a request
+                                    if let Some(tr) = trace.get() {
+                                        tr.record(
+                                            0,
+                                            crate::trace::TraceKind::PageDemote { pages: 1 },
+                                        );
+                                    }
                                 }
                                 Err(ref err) => {
                                     // disk refused: keep the page resident

@@ -31,6 +31,7 @@
 //! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, streaming session engine (per-request `GenOptions`, token events, cancellation, multi-turn KV reuse), metrics |
 //! | [`coordinator::pool`] | batched thread-parallel LUT decode: fixed worker pool, thread-local `QkLut` scratch, balanced cache-length shards (`benches/decode_batch.rs` tracks it) |
 //! | [`server`] | JSON-lines TCP front-end + client (wire v1 one-shot + v2 streaming/cancel/session) |
+//! | [`trace`] | request-lifecycle tracing: bounded ring-buffer span recorder, Chrome `trace_event` export, Prometheus text exposition |
 //! | [`workload`] | synthetic activation / request generators (outlier profiles) |
 //! | [`eval`] | fidelity metrics, task proxies, paper-table printers |
 //! | [`util`] | no-deps substrates: RNG, JSON codec, stats, bench harness |
@@ -43,5 +44,6 @@ pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -14,6 +14,10 @@
 //! polarquant client    --addr 127.0.0.1:7733 --session 4294967296 --turn 4,5,6 --stream on
 //! polarquant client    --addr 127.0.0.1:7733 --session 4294967296 --session-op close
 //! polarquant client    --addr 127.0.0.1:7733 --admin shutdown
+//! polarquant serve     --backend synthetic --prefill-chunk 16 --trace on \
+//!                      --trace-export chrome://trace.json
+//! polarquant client    --addr 127.0.0.1:7733 --admin trace
+//! polarquant client    --addr 127.0.0.1:7733 --admin prometheus
 //! ```
 //!
 //! `client --stream on` speaks wire protocol v2: one JSON line per
@@ -82,7 +86,7 @@ use polarquant::coordinator::{
 use polarquant::eval::{eval_codec, Table};
 use polarquant::quant::{select_kernel, DraftSpec, KernelKind, QuantSpec};
 use polarquant::runtime::Manifest;
-use polarquant::server::{serve, Client, GenParams};
+use polarquant::server::{serve_with_export, Client, GenParams};
 use polarquant::util::json;
 use polarquant::workload::ActivationProfile;
 
@@ -142,6 +146,9 @@ const SERVE: CmdSpec = CmdSpec {
         flag("session-ttl", "SECS", "0", "reap idle session chains to the tier (0 = off; needs --tier-dir)"),
         flag("speculate", "K", "0", "draft K tokens/step on the coarse code plane (0 = off)"),
         flag("draft-bits", "R,T", "", "draft plane bits (default: half the exact bits, floor 1)"),
+        flag("trace", "on|off", "off", "record request-lifecycle events (drain: --admin trace)"),
+        flag("trace-export", "chrome://PATH", "",
+             "also write a Chrome trace_event file at shutdown (needs --trace on)"),
     ],
 };
 
@@ -202,7 +209,8 @@ const CLIENT: CmdSpec = CmdSpec {
         flag("turn", "T1,T2,..", "", "session-turn tokens, new tokens only (needs --session)"),
         flag("session-op", "open|close", "", "open a new session / close --session N"),
         flag("tenant", "NAME", "", "tenant identity for fair scheduling / quotas (wire v2)"),
-        flag("admin", "CMD", "", "admin command instead of generating: metrics | shutdown"),
+        flag("admin", "CMD", "",
+             "admin command instead of generating: metrics | prometheus | trace | shutdown"),
     ],
 };
 
@@ -388,6 +396,10 @@ struct EngineSpec {
     tier: Option<(PathBuf, u64, bool)>,
     /// multi-tenant policy knobs; the all-default value changes nothing
     tenancy: TenancyOpts,
+    /// `--trace-export chrome://PATH` target (serve only): where the
+    /// fleet's trace rings are rendered as a Chrome trace_event file at
+    /// graceful shutdown
+    trace_export: Option<PathBuf>,
 }
 
 fn engine_spec(args: &Args) -> Result<EngineSpec> {
@@ -522,7 +534,25 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
         }
         tenancy.session_ttl = Some(std::time::Duration::from_secs_f64(ttl));
     }
-    Ok(EngineSpec { opts, backend, tier, tenancy })
+    // request-lifecycle tracing (bounded ring per engine; a disabled
+    // recorder is a single branch per event, so `off` costs nothing)
+    opts.trace = args.on_off("trace", false)?;
+    let export = args.get("trace-export", "");
+    let trace_export = if export.is_empty() {
+        None
+    } else {
+        if !opts.trace {
+            bail!("--trace-export renders recorded events: needs --trace on");
+        }
+        let Some(path) = export.strip_prefix("chrome://") else {
+            bail!("--trace-export takes chrome://PATH (only the Chrome trace_event sink exists)");
+        };
+        if path.is_empty() {
+            bail!("--trace-export chrome://PATH needs a non-empty PATH");
+        }
+        Some(PathBuf::from(path))
+    };
+    Ok(EngineSpec { opts, backend, tier, tenancy, trace_export })
 }
 
 fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
@@ -587,7 +617,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let args = Args { flags: flags.clone() };
         build_engine(&args, w).expect("engine construction failed")
     });
-    let handle = serve(factory, &addr, workers)?;
+    let handle = serve_with_export(factory, &addr, workers, spec.trace_export.clone())?;
     println!(
         "serving on {} with {} workers (send {{\"admin\":\"shutdown\"}} to stop gracefully)",
         handle.addr, workers
@@ -655,12 +685,27 @@ fn cmd_client(args: &Args) -> Result<()> {
             println!("{}", json::write(&v));
             return Ok(());
         }
+        "prometheus" => {
+            // the exposition text, ready for a scrape or promtool check
+            print!("{}", client.prometheus()?);
+            return Ok(());
+        }
+        "trace" => {
+            let (events, term) = client.trace()?;
+            for ev in &events {
+                println!("{}", json::write(ev));
+            }
+            println!("{}", json::write(&term));
+            return Ok(());
+        }
         "shutdown" => {
             client.shutdown()?;
             println!("shutdown requested");
             return Ok(());
         }
-        other => bail!("unknown --admin command '{other}' (metrics | shutdown)"),
+        other => {
+            bail!("unknown --admin command '{other}' (metrics | prometheus | trace | shutdown)")
+        }
     }
     let session = match args.get("session", "").as_str() {
         "" => None,
@@ -978,5 +1023,36 @@ mod tests {
         // generate shares the flag
         let a = parse_ok(&["--kernel", "scalar"], &GENERATE);
         assert_eq!(a.get("kernel", "auto"), "scalar");
+    }
+
+    #[test]
+    fn trace_flags_validate_and_parse() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // off by default: the engines get disabled recorders and nothing
+        // is exported
+        let spec = spec_of(&["--backend", "synthetic"]).unwrap();
+        assert!(!spec.opts.trace);
+        assert_eq!(spec.trace_export, None);
+        let spec = spec_of(&["--backend", "synthetic", "--trace", "on"]).unwrap();
+        assert!(spec.opts.trace);
+        assert_eq!(spec.trace_export, None);
+        // an export target without tracing records nothing — reject it
+        let parts = ["--backend", "synthetic", "--trace-export", "chrome://t.json"];
+        let err = spec_of(&parts).err().expect("export without --trace on must be rejected");
+        assert!(format!("{err:#}").contains("--trace on"), "{err:#}");
+        // only the chrome:// sink exists, and it needs a real path
+        for bad in ["t.json", "chrome://"] {
+            let parts = ["--backend", "synthetic", "--trace", "on", "--trace-export", bad];
+            assert!(spec_of(&parts).is_err(), "--trace-export {bad} must be rejected");
+        }
+        let parts =
+            ["--backend", "synthetic", "--trace", "on", "--trace-export", "chrome://t.json"];
+        let spec = spec_of(&parts).unwrap();
+        assert_eq!(spec.trace_export, Some(PathBuf::from("t.json")));
+        // the client spec knows the admin drain commands
+        let a = parse_ok(&["--admin", "trace"], &CLIENT);
+        assert_eq!(a.get("admin", ""), "trace");
+        let a = parse_ok(&["--admin", "prometheus"], &CLIENT);
+        assert_eq!(a.get("admin", ""), "prometheus");
     }
 }

@@ -20,6 +20,7 @@ use crate::quant::lut::{default_kernel, QkLut, ScoreKernel};
 use crate::quant::value;
 use crate::quant::DraftSpec;
 use crate::tensor::ops::*;
+use crate::trace::{TraceKind, TraceRecorder};
 
 use super::config::ModelConfig;
 use super::sampling::logprob_at;
@@ -67,6 +68,11 @@ pub struct Model {
     /// ([`Model::set_draft`]); `None` until speculation is enabled
     draft_lut: Option<QkLut>,
     draft_spec: Option<DraftSpec>,
+    /// observation-only trace hook ([`Model::set_trace`]; propagated by
+    /// [`Model::fork`] so decode-pool workers record into the engine's
+    /// ring); `trace_req` names the request whose decode runs next
+    trace: Option<Arc<TraceRecorder>>,
+    trace_req: u64,
     scores: Vec<Vec<f32>>,
     attn_out: Vec<f32>,
     x: Vec<f32>,
@@ -106,6 +112,8 @@ impl Model {
             lut: QkLut::with_kernel(cfg.polar_spec(), dh, hq, kernel),
             draft_lut: None,
             draft_spec: None,
+            trace: None,
+            trace_req: 0,
             scores: vec![Vec::new(); hq],
             attn_out: vec![0.0; cfg.n_heads * dh],
             x: vec![0.0; cfg.d_model],
@@ -132,6 +140,7 @@ impl Model {
         if let Some(draft) = self.draft_spec {
             m.set_draft(draft).expect("draft spec was validated when first set");
         }
+        m.trace = self.trace.clone();
         m
     }
 
@@ -161,6 +170,25 @@ impl Model {
     /// The active draft plane, if speculation is enabled.
     pub fn draft_spec(&self) -> Option<DraftSpec> {
         self.draft_spec
+    }
+
+    /// Install the engine's trace recorder.  Propagated by
+    /// [`Model::fork`], so decode-pool workers record into the same
+    /// ring.  Observation-only: tracing never changes model output.
+    pub fn set_trace(&mut self, rec: Arc<TraceRecorder>) {
+        self.trace = Some(rec);
+    }
+
+    /// The recorder installed by [`Model::set_trace`], if any.
+    pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
+    }
+
+    /// Name the request whose decode runs next on this model — the key
+    /// for the `speculative_round` events recorded at the source in
+    /// [`Model::speculative_decode`].
+    pub fn set_trace_request(&mut self, id: u64) {
+        self.trace_req = id;
     }
 
     /// Name of the active score kernel ("scalar" / "simd") — surfaced in
@@ -872,6 +900,12 @@ impl Model {
             cache.append_step(&row_k, &row_v);
         }
 
+        if let Some(tr) = &self.trace {
+            tr.record(
+                self.trace_req,
+                TraceKind::SpeculativeRound { drafted: (w - 1) as u32, accepted },
+            );
+        }
         SpecDecode { tokens: emitted, drafted: (w - 1) as u32, accepted }
     }
 }

@@ -316,4 +316,27 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         self.admin("shutdown").map(|_| ())
     }
+
+    /// Drain the fleet's trace rings (`{"admin":"trace"}`): one JSON
+    /// value per event (worker order, seq order within a worker), then
+    /// the terminator object carrying `events` / `dropped`.  Draining
+    /// consumes — a second call returns only events recorded since.
+    pub fn trace(&mut self) -> Result<(Vec<Value>, Value)> {
+        self.send(&obj(vec![("admin", json::s("trace"))]))?;
+        let mut events = Vec::new();
+        loop {
+            let v = self.read_value()?;
+            if v.get("admin").is_some() {
+                return Ok((events, v));
+            }
+            events.push(v);
+        }
+    }
+
+    /// The fleet's metrics in Prometheus text exposition format
+    /// (`{"admin":"prometheus"}` — the reply's `text` field).
+    pub fn prometheus(&mut self) -> Result<String> {
+        let v = self.admin("prometheus")?;
+        Ok(v.str_or("text", ""))
+    }
 }

@@ -48,9 +48,19 @@
 //! Admin requests share the same JSON-lines framing:
 //!
 //! ```text
-//! -> {"admin": "metrics"}    # per-worker counters + fleet totals
-//! -> {"admin": "shutdown"}   # drain, snapshot tiers, exit the server
+//! -> {"admin": "metrics"}     # per-worker counters + fleet totals
+//! -> {"admin": "prometheus"}  # text exposition 0.0.4 in "text"
+//! -> {"admin": "trace"}       # drain trace rings: one line per event,
+//!                             # then {"admin":"trace","ok":true,...}
+//! -> {"admin": "shutdown"}    # drain, snapshot tiers, exit the server
 //! ```
+//!
+//! `trace` and `prometheus` are part of the observability layer (see the
+//! README's "Observability" section): tracing is off unless the server
+//! ran with `--trace on`, in which case each worker's engine records
+//! request-lifecycle events into a bounded ring that these commands
+//! drain/render.  Every v2 frame echoes the request `id`, which is the
+//! join key against the trace events.
 //!
 //! `shutdown` is how the tiered page store's prefix-cache snapshot gets
 //! written: each worker finishes its in-flight requests, persists its
@@ -62,4 +72,4 @@ pub mod client;
 pub mod worker;
 
 pub use client::{Client, GenParams, GenerateReply, TokenEvent};
-pub use worker::{serve, EngineFactory, ServerHandle};
+pub use worker::{serve, serve_with_export, EngineFactory, ServerHandle};

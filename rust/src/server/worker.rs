@@ -18,9 +18,10 @@
 //!   so the connection loop keeps reading — that is what makes
 //!   cancellation reachable mid-stream.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -31,6 +32,8 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::router::Router;
 use crate::coordinator::{Completion, Engine, Event, GenOptions, Request, RequestId, SchedMode};
+use crate::trace::prometheus::{render_fleet, PromFamily, PromKind};
+use crate::trace::{chrome, TraceEvent, TraceRecorder};
 use crate::util::json::{self, num, obj, Value};
 
 /// Builds one engine per worker (engines are not Send-shareable across
@@ -51,6 +54,9 @@ enum Job {
     /// Admin introspection: the worker answers with its counters
     /// immediately, even mid-batch.
     Metrics { reply: Sender<Value> },
+    /// Admin introspection in Prometheus shape: the worker answers with
+    /// its full metric-family list (the fleet renderer merges workers).
+    Prometheus { reply: Sender<Vec<PromFamily>> },
 }
 
 /// Submit a job to the engine; a rejected request gets an explicit
@@ -88,60 +94,210 @@ fn submit_job(engine: &mut Engine, job: Job, replies: &mut HashMap<u64, Sender<C
         Job::Metrics { reply } => {
             let _ = reply.send(metrics_value(engine));
         }
+        Job::Prometheus { reply } => {
+            let _ = reply.send(prom_families(engine));
+        }
     }
 }
 
-/// One worker's counters as a JSON object.  Tier values come straight
-/// from the pool (not the per-step metric gauges) so an admin query after
-/// the last step still sees the final promotion/demotion counts.
-fn metrics_value(engine: &Engine) -> Value {
+/// One numeric counter or gauge of a worker: the admin-JSON key, its
+/// stable Prometheus identity, and the current value.
+struct NumMetric {
+    key: &'static str,
+    prom: &'static str,
+    help: &'static str,
+    kind: PromKind,
+    value: f64,
+}
+
+/// Every numeric counter/gauge of one worker — THE single key list.
+/// The admin `metrics` reply's numeric section, the fleet TOTALS
+/// aggregation, and the Prometheus exposition all derive from this
+/// vector, so a counter added here shows up in all three at once (and
+/// `totals_cover_every_numeric_metric` below fails the build's tests if
+/// a new `Metrics` field is forgotten).  Tier values come straight from
+/// the pool (not the per-step metric gauges) so an admin query after the
+/// last step still sees the final promotion/demotion counts.
+fn numeric_metrics(engine: &Engine) -> Vec<NumMetric> {
     let m = &engine.metrics;
     let pool = engine.page_pool();
+    let c = |key, prom, help, value: f64| NumMetric {
+        key,
+        prom,
+        help,
+        kind: PromKind::Counter,
+        value,
+    };
+    let g = |key, prom, help, value: f64| NumMetric {
+        key,
+        prom,
+        help,
+        kind: PromKind::Gauge,
+        value,
+    };
+    vec![
+        c("requests_submitted", "polarquant_requests_submitted_total",
+          "requests admitted into an engine queue", m.requests_submitted as f64),
+        c("requests_finished", "polarquant_requests_finished_total",
+          "requests retired with a completion", m.requests_finished as f64),
+        c("requests_rejected", "polarquant_requests_rejected_total",
+          "requests refused at admission", m.requests_rejected as f64),
+        c("requests_cancelled", "polarquant_requests_cancelled_total",
+          "requests cancelled while queued or running", m.requests_cancelled as f64),
+        c("session_turns", "polarquant_session_turns_total",
+          "session turns admitted", m.session_turns as f64),
+        c("session_tokens_reused", "polarquant_session_tokens_reused_total",
+          "prompt tokens skipped by resuming a session's live chain",
+          m.session_tokens_reused as f64),
+        c("prefill_tokens", "polarquant_prefill_tokens_total",
+          "prompt tokens prefilled", m.prefill_tokens as f64),
+        c("prefill_chunks", "polarquant_prefill_chunks_total",
+          "prefill chunk grants executed", m.prefill_chunks as f64),
+        c("decode_tokens", "polarquant_decode_tokens_total",
+          "tokens generated", m.decode_tokens as f64),
+        c("decode_steps", "polarquant_decode_steps_total",
+          "decode iterations that produced at least one token", m.decode_steps as f64),
+        c("decode_batch_sum", "polarquant_decode_batch_sum_total",
+          "sequences decoded, summed over decode iterations", m.decode_batch_sum as f64),
+        c("prefix_hits", "polarquant_prefix_hits_total",
+          "prompts that attached to already-pooled prefix pages", m.prefix_hits as f64),
+        c("prefix_tokens_reused", "polarquant_prefix_tokens_reused_total",
+          "prompt tokens skipped via shared prefix pages", m.prefix_tokens_reused as f64),
+        c("preemptions", "polarquant_preemptions_total",
+          "decoding sequences preempted under page-pool pressure", m.preemptions as f64),
+        g("pages_in_use", "polarquant_pages_in_use",
+          "physical group-pages resident in the pool", pool.pages_in_use() as f64),
+        c("pages_evicted", "polarquant_pages_evicted_total",
+          "refcount-zero cached pages reclaimed under pressure",
+          pool.pages_evicted() as f64),
+        c("tier_hits", "polarquant_tier_hits_total",
+          "prefix lookups that promoted pages from the disk tier",
+          pool.tier_hits() as f64),
+        c("pages_demoted", "polarquant_pages_demoted_total",
+          "cached pages spilled to the disk tier", pool.pages_demoted() as f64),
+        c("pages_promoted", "polarquant_pages_promoted_total",
+          "pages read back from the disk tier on a prefix hit",
+          pool.pages_promoted() as f64),
+        g("bytes_on_disk", "polarquant_tier_bytes_on_disk",
+          "segment bytes held by the disk tier", pool.bytes_on_disk() as f64),
+        g("tier_session_bytes", "polarquant_tier_session_bytes",
+          "disk-tier bytes held by reaped session blobs", pool.session_bytes() as f64),
+        c("snapkv_tokens_dropped", "polarquant_snapkv_tokens_dropped_total",
+          "prompt tokens dropped by SnapKV compression", m.snapkv_tokens_dropped as f64),
+        c("tenant_throttled", "polarquant_tenant_throttled_total",
+          "requests rejected by a tenant's token bucket", m.tenant_throttled as f64),
+        c("sessions_reaped", "polarquant_sessions_reaped_total",
+          "idle session chains demoted to the disk tier", m.sessions_reaped as f64),
+        c("sessions_restored", "polarquant_sessions_restored_total",
+          "reaped session chains promoted back", m.sessions_restored as f64),
+        c("speculative_rounds", "polarquant_speculative_rounds_total",
+          "decode iterations that ran a speculative window", m.speculative_rounds as f64),
+        c("speculative_drafted", "polarquant_speculative_drafted_total",
+          "draft tokens proposed on the coarse plane", m.speculative_drafted as f64),
+        c("speculative_accepted", "polarquant_speculative_accepted_total",
+          "draft tokens the exact verification accepted", m.speculative_accepted as f64),
+        c("trace_dropped", "polarquant_trace_dropped_total",
+          "trace events evicted by the bounded ring", engine.trace().dropped() as f64),
+    ]
+}
+
+/// The worker's full Prometheus family list: every counter/gauge from
+/// [`numeric_metrics`], the engine's latency histograms (cumulative
+/// `le` buckets in seconds), the per-tenant breakdown (`tenant` label),
+/// uptime, and build info.  [`render_fleet`] adds the `worker` label.
+fn prom_families(engine: &Engine) -> Vec<PromFamily> {
+    let m = &engine.metrics;
+    let mut fams: Vec<PromFamily> = numeric_metrics(engine)
+        .into_iter()
+        .map(|n| match n.kind {
+            PromKind::Counter => PromFamily::counter(n.prom, n.help, n.value),
+            _ => PromFamily::gauge(n.prom, n.help, n.value),
+        })
+        .collect();
+    let hists: [(&'static str, &'static str, &crate::util::stats::LatencyHist); 6] = [
+        ("polarquant_ttft_seconds", "time to first token", &m.ttft),
+        ("polarquant_itl_seconds", "inter-token latency", &m.itl),
+        ("polarquant_per_token_seconds", "decode-iteration wall time", &m.per_token),
+        ("polarquant_e2e_seconds", "request end-to-end latency", &m.e2e),
+        ("polarquant_queue_delay_seconds", "queue wait before admission", &m.queue_delay),
+        ("polarquant_decode_stall_seconds",
+         "decode time stalled behind prefill chunks", &m.decode_stall),
+    ];
+    for (name, help, h) in hists {
+        let mut fam = PromFamily::empty(name, help, PromKind::Histogram);
+        fam.push_histogram(Vec::new(), &h.cumulative_buckets(), h.sum_secs(), h.count());
+        fams.push(fam);
+    }
+    let mut adm = PromFamily::empty(
+        "polarquant_tenant_admitted_total", "per-tenant requests admitted", PromKind::Counter);
+    let mut thr = PromFamily::empty(
+        "polarquant_tenant_throttled_requests_total",
+        "per-tenant requests rejected by the token bucket", PromKind::Counter);
+    let mut fin = PromFamily::empty(
+        "polarquant_tenant_finished_total", "per-tenant requests finished", PromKind::Counter);
+    let mut tok = PromFamily::empty(
+        "polarquant_tenant_decode_tokens_total", "per-tenant tokens generated",
+        PromKind::Counter);
+    let mut itl = PromFamily::empty(
+        "polarquant_tenant_itl_seconds", "per-tenant inter-token latency",
+        PromKind::Histogram);
+    for (name, t) in &m.tenants {
+        let label = |k: &str| vec![(k.to_string(), name.clone())];
+        adm.push(label("tenant"), t.admitted as f64);
+        thr.push(label("tenant"), t.throttled as f64);
+        fin.push(label("tenant"), t.finished as f64);
+        tok.push(label("tenant"), t.decode_tokens as f64);
+        itl.push_histogram(
+            label("tenant"), &t.itl.cumulative_buckets(), t.itl.sum_secs(), t.itl.count());
+    }
+    // empty families still render their HELP/TYPE header, which is valid
+    // exposition; keep them so scrapes see a stable family set
+    fams.extend([adm, thr, fin, tok, itl]);
+    fams.push(PromFamily::gauge(
+        "polarquant_uptime_seconds",
+        "seconds since this engine started",
+        m.started.elapsed().as_secs_f64(),
+    ));
+    let mut build = PromFamily::empty(
+        "polarquant_build_info", "build/runtime identity (value is always 1)", PromKind::Gauge);
+    build.push(vec![("kernel".to_string(), engine.kernel_name().to_string())], 1.0);
+    fams.push(build);
+    fams
+}
+
+/// One worker's counters as a JSON object.  Every top-level numeric
+/// field comes from [`numeric_metrics`] — the fleet TOTALS in
+/// `handle_admin` sum exactly those — while non-summable values
+/// (latency percentiles, kernel name, per-tenant breakdown) live under
+/// non-numeric keys so the aggregation skips them structurally instead
+/// of by whitelist.
+fn metrics_value(engine: &Engine) -> Value {
+    let m = &engine.metrics;
     // percentiles are NaN before the first sample; 0 keeps the reply
     // valid JSON (our writer would emit a bare NaN otherwise)
     let ms = |secs: f64| num(if secs.is_finite() { secs * 1e3 } else { 0.0 });
-    obj(vec![
-        ("requests_submitted", num(m.requests_submitted as f64)),
-        ("requests_finished", num(m.requests_finished as f64)),
-        ("requests_rejected", num(m.requests_rejected as f64)),
-        ("requests_cancelled", num(m.requests_cancelled as f64)),
-        ("session_turns", num(m.session_turns as f64)),
-        ("session_tokens_reused", num(m.session_tokens_reused as f64)),
-        ("prefill_tokens", num(m.prefill_tokens as f64)),
-        ("decode_tokens", num(m.decode_tokens as f64)),
-        ("prefix_hits", num(m.prefix_hits as f64)),
-        ("prefix_tokens_reused", num(m.prefix_tokens_reused as f64)),
-        ("preemptions", num(m.preemptions as f64)),
-        ("pages_in_use", num(pool.pages_in_use() as f64)),
-        ("pages_evicted", num(pool.pages_evicted() as f64)),
-        ("tier_hits", num(pool.tier_hits() as f64)),
-        ("pages_demoted", num(pool.pages_demoted() as f64)),
-        ("pages_promoted", num(pool.pages_promoted() as f64)),
-        ("bytes_on_disk", num(pool.bytes_on_disk() as f64)),
-        ("tier_session_bytes", num(pool.session_bytes() as f64)),
-        ("snapkv_tokens_dropped", num(m.snapkv_tokens_dropped as f64)),
-        ("tenant_throttled", num(m.tenant_throttled as f64)),
-        ("sessions_reaped", num(m.sessions_reaped as f64)),
-        ("sessions_restored", num(m.sessions_restored as f64)),
-        ("speculative_rounds", num(m.speculative_rounds as f64)),
-        ("speculative_drafted", num(m.speculative_drafted as f64)),
-        ("speculative_accepted", num(m.speculative_accepted as f64)),
-        // per-request latency histograms (p50/p95/p99, milliseconds)
-        ("ttft_ms_p50", ms(m.ttft.p(50.0))),
-        ("ttft_ms_p95", ms(m.ttft.p(95.0))),
-        ("ttft_ms_p99", ms(m.ttft.p(99.0))),
-        ("itl_ms_p50", ms(m.itl.p(50.0))),
-        ("itl_ms_p95", ms(m.itl.p(95.0))),
-        ("itl_ms_p99", ms(m.itl.p(99.0))),
-        // the QK score kernel actually running ("scalar" / "simd" /
-        // "pjrt-graph") — non-numeric, so the client's cross-worker
-        // aggregation skips it
-        ("kernel", json::s(engine.kernel_name())),
-        // per-tenant breakdown keyed by tenant name (non-numeric object,
-        // so the client's cross-worker aggregation skips it)
-        ("tenants", tenants_value(m)),
-        ("summary", json::s(&m.summary())),
-    ])
+    let mut fields: Vec<(&'static str, Value)> =
+        numeric_metrics(engine).into_iter().map(|n| (n.key, num(n.value))).collect();
+    // per-request latency histograms (p50/p95/p99, milliseconds) —
+    // nested: summing percentiles across workers would be meaningless
+    fields.push((
+        "latency",
+        obj(vec![
+            ("ttft_ms_p50", ms(m.ttft.p(50.0))),
+            ("ttft_ms_p95", ms(m.ttft.p(95.0))),
+            ("ttft_ms_p99", ms(m.ttft.p(99.0))),
+            ("itl_ms_p50", ms(m.itl.p(50.0))),
+            ("itl_ms_p95", ms(m.itl.p(95.0))),
+            ("itl_ms_p99", ms(m.itl.p(99.0))),
+        ]),
+    ));
+    // the QK score kernel actually running ("scalar" / "simd" /
+    // "pjrt-graph")
+    fields.push(("kernel", json::s(engine.kernel_name())));
+    // per-tenant breakdown keyed by tenant name
+    fields.push(("tenants", tenants_value(m)));
+    fields.push(("summary", json::s(&m.summary())));
+    obj(fields)
 }
 
 /// The per-tenant counters as `{name: {...}}`.  Tenant names are dynamic
@@ -217,6 +373,10 @@ pub struct ServerHandle {
     workers: Vec<JoinHandle<()>>,
     listener_thread: Option<JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    /// one span recorder per worker (disabled no-ops under `--trace off`)
+    recorders: Arc<Vec<Arc<TraceRecorder>>>,
+    /// write a Chrome trace_event file here once the workers exit
+    chrome_export: Option<PathBuf>,
 }
 
 impl ServerHandle {
@@ -231,6 +391,7 @@ impl ServerHandle {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.export_chrome();
     }
 
     /// Block until the server shuts down on its own — i.e. until a
@@ -247,25 +408,58 @@ impl ServerHandle {
         if let Some(t) = self.listener_thread.take() {
             let _ = t.join();
         }
+        self.export_chrome();
+    }
+
+    /// Drain whatever is still buffered in the rings into the Chrome
+    /// trace file (`--trace-export chrome://PATH`); at most once.
+    fn export_chrome(&mut self) {
+        let Some(path) = self.chrome_export.take() else { return };
+        let per_worker: Vec<Vec<TraceEvent>> =
+            self.recorders.iter().map(|r| r.drain()).collect();
+        match chrome::export(&path, &per_worker) {
+            Ok(()) => eprintln!("[server] chrome trace written to {}", path.display()),
+            Err(e) => eprintln!("[server] chrome trace export failed: {e}"),
+        }
     }
 }
 
 /// Start a server on `addr` ("127.0.0.1:0" for an ephemeral port) with
 /// `n_workers` engines.  Returns once the listener is bound.
 pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<ServerHandle> {
+    serve_with_export(factory, addr, n_workers, None)
+}
+
+/// [`serve`] plus the Chrome trace export: when `chrome_export` is set,
+/// whatever is still buffered in the trace rings at shutdown is written
+/// there as Chrome `trace_event` JSON (load in `chrome://tracing` or
+/// Perfetto).  Pointless without a tracing factory (`EngineOpts::trace`).
+pub fn serve_with_export(
+    factory: EngineFactory,
+    addr: &str,
+    n_workers: usize,
+    chrome_export: Option<PathBuf>,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?.to_string();
     let shutdown = Arc::new(AtomicBool::new(false));
 
     let mut senders = Vec::new();
     let mut workers = Vec::new();
+    // engines are built inside their worker threads; each hands its span
+    // recorder back through this channel so admin `trace` and the Chrome
+    // export can drain the rings from the outside
+    let (rec_tx, rec_rx) = channel::<(usize, Arc<TraceRecorder>)>();
     for w in 0..n_workers {
         let (tx, rx) = channel::<Job>();
         senders.push(tx);
         let factory = factory.clone();
         let sd = shutdown.clone();
+        let rec_tx = rec_tx.clone();
         workers.push(std::thread::spawn(move || {
             let mut engine = factory(w);
+            let _ = rec_tx.send((w, engine.trace()));
+            drop(rec_tx);
             eprintln!("[server] engine {w}: QK score kernel '{}'", engine.kernel_name());
             if engine.decode_pool_width() > 1 {
                 eprintln!(
@@ -333,6 +527,21 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             }
         }));
     }
+    drop(rec_tx);
+    // collect one recorder per worker (index-aligned so trace lines and
+    // chrome tracks carry the right worker id); generous timeout covers
+    // slow model loads, and a missing recorder means a factory panicked
+    let mut by_worker: Vec<Option<Arc<TraceRecorder>>> = vec![None; n_workers];
+    for _ in 0..n_workers {
+        match rec_rx.recv_timeout(Duration::from_secs(300)) {
+            Ok((w, rec)) => by_worker[w] = Some(rec),
+            Err(_) => break,
+        }
+    }
+    let recorders: Arc<Vec<Arc<TraceRecorder>>> = Arc::new(
+        by_worker.into_iter().map(|r| r.unwrap_or_else(TraceRecorder::disabled)).collect(),
+    );
+
     let router = Arc::new(Mutex::new(Router::new(n_workers)));
     let next_id = Arc::new(AtomicU64::new(0));
     // server-allocated session ids start high so they never collide with
@@ -340,6 +549,7 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
     let next_session = Arc::new(AtomicU64::new(1 << 32));
 
     let sd = shutdown.clone();
+    let recs = recorders.clone();
     let listener_thread = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if sd.load(Ordering::Relaxed) {
@@ -351,8 +561,10 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
             let next_id = next_id.clone();
             let next_session = next_session.clone();
             let sd = sd.clone();
+            let recs = recs.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &senders, &router, &next_id, &next_session, &sd);
+                let _ =
+                    handle_conn(stream, &senders, &router, &next_id, &next_session, &sd, &recs);
             });
         }
     });
@@ -362,18 +574,47 @@ pub fn serve(factory: EngineFactory, addr: &str, n_workers: usize) -> Result<Ser
         workers,
         listener_thread: Some(listener_thread),
         shutdown,
+        recorders,
+        chrome_export,
     })
 }
 
-/// Answer an `{"admin": ...}` request.  `metrics` fans out to every
-/// worker and returns both the per-worker objects and fleet totals for
-/// the counters monitoring cares about; `shutdown` flips the flag that
-/// makes each worker exit (and snapshot its tier) once idle.
-fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Value {
+/// Fleet totals over the per-worker metric objects: EVERY top-level
+/// numeric field is summed, so a counter added to [`numeric_metrics`]
+/// aggregates automatically — non-summable values (percentiles, kernel
+/// name, tenants) are nested/non-numeric and skipped structurally.
+/// No whitelist to forget.
+fn fleet_totals(per_worker: &[Value]) -> BTreeMap<String, f64> {
+    let mut totals = BTreeMap::new();
+    for w in per_worker {
+        if let Value::Obj(map) = w {
+            for (key, val) in map {
+                if let Value::Num(n) = val {
+                    *totals.entry(key.clone()).or_insert(0.0) += n;
+                }
+            }
+        }
+    }
+    totals
+}
+
+/// Answer an `{"admin": ...}` request with one or more reply lines.
+/// `metrics` fans out to every worker and returns the per-worker objects
+/// plus fleet totals of every numeric counter; `prometheus` renders the
+/// same counters (plus histograms) in text exposition format; `trace`
+/// drains every worker's span ring as JSON lines followed by a
+/// terminator; `shutdown` flips the flag that makes each worker exit
+/// (and snapshot its tier) once idle.
+fn handle_admin(
+    cmd: &str,
+    senders: &[Sender<Job>],
+    recorders: &[Arc<TraceRecorder>],
+    shutdown: &AtomicBool,
+) -> Vec<Value> {
     match cmd {
         "shutdown" => {
             shutdown.store(true, Ordering::Relaxed);
-            obj(vec![("admin", json::s("shutdown")), ("ok", Value::Bool(true))])
+            vec![obj(vec![("admin", json::s("shutdown")), ("ok", Value::Bool(true))])]
         }
         "metrics" => {
             let mut per_worker = Vec::new();
@@ -385,48 +626,60 @@ fn handle_admin(cmd: &str, senders: &[Sender<Job>], shutdown: &AtomicBool) -> Va
                     }
                 }
             }
-            const TOTALS: &[&str] = &[
-                "requests_finished",
-                "requests_rejected",
-                "requests_cancelled",
-                "session_turns",
-                "session_tokens_reused",
-                "prefill_tokens",
-                "decode_tokens",
-                "prefix_hits",
-                "prefix_tokens_reused",
-                "preemptions",
-                "pages_in_use",
-                "pages_evicted",
-                "tier_hits",
-                "pages_demoted",
-                "pages_promoted",
-                "bytes_on_disk",
-                "tier_session_bytes",
-                "snapkv_tokens_dropped",
-                "tenant_throttled",
-                "sessions_reaped",
-                "sessions_restored",
-                "speculative_rounds",
-                "speculative_drafted",
-                "speculative_accepted",
-            ];
-            let mut fields: Vec<(&str, Value)> =
-                vec![("admin", json::s("metrics")), ("ok", Value::Bool(true))];
-            for &key in TOTALS {
-                let total: f64 = per_worker
-                    .iter()
-                    .map(|w| w.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0))
-                    .sum();
-                fields.push((key, num(total)));
+            let mut out = BTreeMap::new();
+            out.insert("admin".to_string(), json::s("metrics"));
+            out.insert("ok".to_string(), Value::Bool(true));
+            for (key, total) in fleet_totals(&per_worker) {
+                out.insert(key, num(total));
             }
-            fields.push(("workers", Value::Arr(per_worker)));
-            obj(fields)
+            out.insert("workers".to_string(), Value::Arr(per_worker));
+            vec![Value::Obj(out)]
         }
-        other => obj(vec![
+        "prometheus" => {
+            // index-aligned fan-out: a dead worker contributes an empty
+            // family list so the `worker` labels stay truthful
+            let mut per_worker: Vec<Vec<PromFamily>> = Vec::new();
+            for s in senders {
+                let (tx, rx) = channel();
+                let fams = if s.send(Job::Prometheus { reply: tx }).is_ok() {
+                    rx.recv_timeout(Duration::from_secs(10)).unwrap_or_default()
+                } else {
+                    Vec::new()
+                };
+                per_worker.push(fams);
+            }
+            let text = render_fleet(&per_worker);
+            vec![obj(vec![
+                ("admin", json::s("prometheus")),
+                ("ok", Value::Bool(true)),
+                ("text", json::s(&text)),
+            ])]
+        }
+        "trace" => {
+            // one JSON line per event (worker order, seq order within a
+            // worker — a request lives on one worker, so its lifecycle
+            // reads top-to-bottom), then the terminator line
+            let mut lines = Vec::new();
+            let mut dropped = 0u64;
+            for (w, rec) in recorders.iter().enumerate() {
+                dropped += rec.dropped();
+                for ev in rec.drain() {
+                    lines.push(ev.value(w));
+                }
+            }
+            let events = lines.len();
+            lines.push(obj(vec![
+                ("admin", json::s("trace")),
+                ("ok", Value::Bool(true)),
+                ("events", num(events as f64)),
+                ("dropped", num(dropped as f64)),
+            ]));
+            lines
+        }
+        other => vec![obj(vec![
             ("ok", Value::Bool(false)),
             ("error", json::s(&format!("unknown admin command '{other}'"))),
-        ]),
+        ])],
     }
 }
 
@@ -599,6 +852,7 @@ fn pump_events(
     router.lock().unwrap().complete(worker);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     senders: &[Sender<Job>],
@@ -606,6 +860,7 @@ fn handle_conn(
     next_id: &Arc<AtomicU64>,
     next_session: &Arc<AtomicU64>,
     shutdown: &AtomicBool,
+    recorders: &[Arc<TraceRecorder>],
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let out: SharedStream = Arc::new(Mutex::new(stream));
@@ -630,8 +885,9 @@ fn handle_conn(
             }
         };
         if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
-            let reply = handle_admin(cmd, senders, shutdown);
-            write_line(&out, &reply)?;
+            for reply in handle_admin(cmd, senders, recorders, shutdown) {
+                write_line(&out, &reply)?;
+            }
             continue;
         }
         match v.usize_or("v", 1) {
@@ -804,4 +1060,183 @@ fn handle_v2(
         pump_events(id, rx, out.clone(), router.clone(), my_requests.clone(), worker, false);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::EngineOpts;
+    use crate::model::ModelConfig;
+    use crate::util::stats::LatencyHist;
+    use std::time::Instant;
+
+    fn test_engine() -> Engine {
+        Engine::native_synthetic(ModelConfig::tiny(), 1, 4.0, EngineOpts::default())
+    }
+
+    /// Guard for the single-key-list invariant: every numeric `Metrics`
+    /// counter must surface as a top-level numeric field of the admin
+    /// reply — and therefore in the fleet TOTALS and the Prometheus
+    /// exposition, which derive from the same [`numeric_metrics`] list.
+    /// The struct literal is EXHAUSTIVE on purpose: adding a `Metrics`
+    /// field breaks this test's compile until the new counter is wired
+    /// through (the old whitelist just silently omitted it).
+    #[test]
+    fn totals_cover_every_numeric_metric() {
+        let m = Metrics {
+            started: Instant::now(),
+            requests_submitted: 1,
+            requests_finished: 2,
+            requests_rejected: 3,
+            requests_cancelled: 4,
+            session_turns: 5,
+            session_tokens_reused: 6,
+            prefill_tokens: 7,
+            prefill_chunks: 8,
+            decode_tokens: 9,
+            decode_steps: 10,
+            decode_batch_sum: 11,
+            ttft: LatencyHist::new(),
+            itl: LatencyHist::new(),
+            per_token: LatencyHist::new(),
+            e2e: LatencyHist::new(),
+            queue_delay: LatencyHist::new(),
+            decode_stall: LatencyHist::new(),
+            prefix_hits: 12,
+            prefix_tokens_reused: 13,
+            preemptions: 14,
+            // the pool-backed gauges below are read LIVE from the page
+            // pool by numeric_metrics, not from the struct: the values
+            // here exist only to keep the literal exhaustive
+            pages_in_use: 90,
+            pages_evicted: 91,
+            tier_hits: 92,
+            pages_demoted: 93,
+            pages_promoted: 94,
+            bytes_on_disk: 95,
+            snapkv_tokens_dropped: 15,
+            tenant_throttled: 16,
+            sessions_reaped: 17,
+            sessions_restored: 18,
+            tier_session_bytes: 96,
+            speculative_rounds: 19,
+            speculative_drafted: 20,
+            speculative_accepted: 21,
+            tenants: std::collections::BTreeMap::new(),
+        };
+        let mut eng = test_engine();
+        eng.metrics = m;
+        let v = metrics_value(&eng);
+        let expected: &[(&str, f64)] = &[
+            ("requests_submitted", 1.0),
+            ("requests_finished", 2.0),
+            ("requests_rejected", 3.0),
+            ("requests_cancelled", 4.0),
+            ("session_turns", 5.0),
+            ("session_tokens_reused", 6.0),
+            ("prefill_tokens", 7.0),
+            ("prefill_chunks", 8.0),
+            ("decode_tokens", 9.0),
+            ("decode_steps", 10.0),
+            ("decode_batch_sum", 11.0),
+            ("prefix_hits", 12.0),
+            ("prefix_tokens_reused", 13.0),
+            ("preemptions", 14.0),
+            ("snapkv_tokens_dropped", 15.0),
+            ("tenant_throttled", 16.0),
+            ("sessions_reaped", 17.0),
+            ("sessions_restored", 18.0),
+            ("speculative_rounds", 19.0),
+            ("speculative_drafted", 20.0),
+            ("speculative_accepted", 21.0),
+        ];
+        for &(key, want) in expected {
+            assert_eq!(v.get(key).and_then(|x| x.as_f64()), Some(want), "{key}");
+        }
+        // pool-backed keys are present but read the fresh pool (all 0)
+        let pool_keys = [
+            "pages_in_use",
+            "pages_evicted",
+            "tier_hits",
+            "pages_demoted",
+            "pages_promoted",
+            "bytes_on_disk",
+            "tier_session_bytes",
+            "trace_dropped",
+        ];
+        for key in pool_keys {
+            assert_eq!(v.get(key).and_then(|x| x.as_f64()), Some(0.0), "{key}");
+        }
+        // the fleet totals sum EVERY top-level numeric field — two
+        // identical workers double each value, and nothing else appears
+        let totals = fleet_totals(&[v.clone(), v]);
+        assert_eq!(totals.len(), expected.len() + pool_keys.len());
+        for &(key, want) in expected {
+            assert_eq!(totals[key], 2.0 * want, "{key}");
+        }
+        // the old hand-maintained whitelist forgot this one
+        assert_eq!(totals["requests_submitted"], 2.0);
+    }
+
+    /// The Prometheus exposition must carry every numeric counter (same
+    /// single list), all six engine histograms, the per-tenant families,
+    /// uptime, and build info — with stable `polarquant_` names.
+    #[test]
+    fn prometheus_renders_every_counter_and_histogram() {
+        let mut eng = test_engine();
+        eng.metrics.ttft.record_secs(0.012);
+        eng.metrics.itl.record_secs(0.002);
+        eng.metrics.tenant("acme").admitted = 3;
+        let text = render_fleet(&[prom_families(&eng)]);
+        for n in numeric_metrics(&eng) {
+            assert!(text.contains(&format!("# TYPE {} ", n.prom)), "missing {}", n.prom);
+        }
+        for name in [
+            "polarquant_ttft_seconds",
+            "polarquant_itl_seconds",
+            "polarquant_per_token_seconds",
+            "polarquant_e2e_seconds",
+            "polarquant_queue_delay_seconds",
+            "polarquant_decode_stall_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} histogram")), "missing {name}");
+            assert!(text.contains(&format!("{name}_bucket")), "missing {name} buckets");
+            assert!(
+                text.contains(&format!("{name}_bucket{{le=\"+Inf\",worker=\"0\"}}")),
+                "missing {name} +Inf closure"
+            );
+        }
+        assert!(text.contains("polarquant_tenant_admitted_total{tenant=\"acme\",worker=\"0\"} 3"));
+        assert!(text.contains("polarquant_uptime_seconds"));
+        assert!(text.contains("polarquant_build_info{kernel=\""));
+        // one recorded ttft sample lands in the histogram count
+        assert!(text.contains("polarquant_ttft_seconds_count{worker=\"0\"} 1"));
+    }
+
+    /// Admin `trace` lines drain in worker order; the drop counter rides
+    /// the terminator.
+    #[test]
+    fn admin_trace_drains_rings_in_worker_order() {
+        let r0 = Arc::new(TraceRecorder::new(true, 16));
+        let r1 = Arc::new(TraceRecorder::new(true, 16));
+        r0.record(5, crate::trace::TraceKind::Admitted);
+        r1.record(6, crate::trace::TraceKind::Done { finish_reason: "stop", tokens: 2 });
+        let recorders = vec![r0, r1];
+        let shutdown = AtomicBool::new(false);
+        let lines = handle_admin("trace", &[], &recorders, &shutdown);
+        assert_eq!(lines.len(), 3, "two events + terminator");
+        assert_eq!(lines[0].str_or("event", ""), "admitted");
+        assert_eq!(lines[0].usize_or("worker", 9), 0);
+        assert_eq!(lines[1].str_or("event", ""), "done");
+        assert_eq!(lines[1].usize_or("worker", 9), 1);
+        let term = lines.last().unwrap();
+        assert_eq!(term.str_or("admin", ""), "trace");
+        assert_eq!(term.usize_or("events", 0), 2);
+        assert_eq!(term.usize_or("dropped", 9), 0);
+        // a second drain is empty but still well-formed
+        let lines = handle_admin("trace", &[], &recorders, &shutdown);
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].usize_or("events", 9), 0);
+    }
 }

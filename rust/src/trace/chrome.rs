@@ -1,0 +1,122 @@
+//! Chrome `trace_event` export (`--trace-export chrome://PATH`).
+//!
+//! Written once at graceful shutdown from whatever is still buffered in
+//! each worker's ring (an `{"admin":"trace"}` drain consumes events, so
+//! the file holds everything drained by nobody).  The output is the
+//! JSON-object flavor of the trace-event format — load it in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! Mapping:
+//! - each worker is one thread track (`tid` = worker index);
+//! - a request's lifetime is an async span (`ph: "b"` on `admitted`,
+//!   `ph: "e"` on `done`) whose async `id` is the request id, so
+//!   overlapping requests nest correctly;
+//! - every intermediate request event is an async instant (`ph: "n"`)
+//!   on the same id, carrying its variant fields under `args`;
+//! - background events (request 0: tier demotions, session reaps) are
+//!   plain thread instants (`ph: "i"`).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{num, obj, s, Value};
+
+use super::{TraceEvent, TraceKind};
+
+/// One trace-event record.
+fn record(ev: &TraceEvent, worker: usize) -> Value {
+    let background = ev.request == 0;
+    let ph = match ev.kind {
+        _ if background => "i",
+        TraceKind::Admitted => "b",
+        TraceKind::Done { .. } => "e",
+        _ => "n",
+    };
+    // the async span pair shares one name so the viewer pairs b/e;
+    // everything else keeps its event label
+    let name = if ph == "b" || ph == "e" { "request" } else { ev.kind.name() };
+    let mut fields = vec![
+        ("cat", s("request")),
+        ("name", s(name)),
+        ("ph", s(ph)),
+        ("pid", num(1.0)),
+        ("tid", num(worker as f64)),
+        ("ts", num(ev.ts_us as f64)),
+    ];
+    if background {
+        fields.push(("s", s("t"))); // thread-scoped instant
+    } else {
+        fields.push(("id", num(ev.request as f64)));
+    }
+    // variant fields reuse the JSON-lines shape under `args`
+    let mut args = vec![("seq", num(ev.seq as f64))];
+    ev.kind.fields(&mut args);
+    fields.push(("args", obj(args)));
+    obj(fields)
+}
+
+/// Render per-worker event lists as one `{"traceEvents": [...]}` blob.
+pub fn render(per_worker: &[Vec<TraceEvent>]) -> Value {
+    let mut events = Vec::new();
+    for (worker, evs) in per_worker.iter().enumerate() {
+        // name the worker track
+        events.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(1.0)),
+            ("tid", num(worker as f64)),
+            ("args", obj(vec![("name", s(&format!("engine-{worker}")))])),
+        ]));
+        for ev in evs {
+            events.push(record(ev, worker));
+        }
+    }
+    obj(vec![("traceEvents", Value::Arr(events))])
+}
+
+/// Write the trace file; parent directories must already exist.
+pub fn export(path: &Path, per_worker: &[Vec<TraceEvent>]) -> std::io::Result<()> {
+    let blob = crate::util::json::write(&render(per_worker));
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(blob.as_bytes())?;
+    f.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lifetimes_become_async_spans() {
+        let evs = vec![
+            TraceEvent { seq: 0, ts_us: 10, request: 7, kind: TraceKind::Admitted },
+            TraceEvent {
+                seq: 1,
+                ts_us: 20,
+                request: 7,
+                kind: TraceKind::PrefillChunk { start: 0, tokens: 4 },
+            },
+            TraceEvent { seq: 2, ts_us: 25, request: 0, kind: TraceKind::PageDemote { pages: 1 } },
+            TraceEvent {
+                seq: 3,
+                ts_us: 30,
+                request: 7,
+                kind: TraceKind::Done { finish_reason: "stop", tokens: 3 },
+            },
+        ];
+        let v = render(&[evs]);
+        let arr = v.get("traceEvents").and_then(|a| a.as_arr()).unwrap();
+        // metadata record + 4 events
+        assert_eq!(arr.len(), 5);
+        assert_eq!(arr[0].str_or("ph", ""), "M");
+        assert_eq!(arr[1].str_or("ph", ""), "b");
+        assert_eq!(arr[1].usize_or("id", 0), 7);
+        assert_eq!(arr[2].str_or("ph", ""), "n");
+        assert_eq!(arr[2].str_or("name", ""), "prefill_chunk");
+        // background work is a thread instant with no async id
+        assert_eq!(arr[3].str_or("ph", ""), "i");
+        assert!(arr[3].get("id").is_none());
+        assert_eq!(arr[4].str_or("ph", ""), "e");
+        assert_eq!(arr[4].usize_or("ts", 0), 30);
+    }
+}

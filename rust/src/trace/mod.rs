@@ -1,0 +1,311 @@
+//! Request-lifecycle tracing: a lock-cheap, bounded ring buffer of typed
+//! span events, plus two exposition formats (Chrome `trace_event` JSON
+//! and Prometheus text exposition — see [`chrome`] and [`prometheus`]).
+//!
+//! One [`TraceRecorder`] exists per worker engine.  Every layer of the
+//! serving stack records into it — admission (`admitted`), chunked
+//! prefill (`prefill_chunk`), the decode loop (`decode_step`),
+//! speculative rounds (`speculative_round`), page-pool pressure
+//! (`page_preempt`, `page_promote`), the background tier writer
+//! (`page_demote`), session TTL reaping (`session_reap` /
+//! `session_restore`), and retirement (`done`) — keyed by the request
+//! id that is already echoed on every wire-v2 frame, so client-visible
+//! frames and server-side spans correlate by `id`.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Never block or change the hot path.**  A disabled recorder
+//!    (`--trace off`, the default) is a single branch on a plain `bool`;
+//!    no lock is taken, no clock is read, no allocation happens.  Output
+//!    is byte-identical with tracing on or off — tracing is
+//!    observation-only.
+//! 2. **Bounded memory.**  The ring holds at most `cap` events; at
+//!    capacity the OLDEST event is dropped and `trace_dropped` counts
+//!    it.  A forgotten `--trace on` can never OOM a server.
+//! 3. **Cheap when enabled.**  The sequence number is an atomic
+//!    `fetch_add` taken OUTSIDE the ring mutex; the critical section is
+//!    a `VecDeque` push (plus a pop at capacity).  Concurrent recorders
+//!    (decode-pool workers, the tier writer) may interleave pushes out
+//!    of sequence order, so [`TraceRecorder::drain`] sorts by `seq`
+//!    before handing events out.
+//!
+//! Exposition:
+//! - `{"admin":"trace"}` drains every worker's ring as JSON lines
+//!   (schema in the README's Observability section).
+//! - `--trace-export chrome://PATH` writes whatever is still in the
+//!   rings at graceful shutdown as Chrome `trace_event` JSON.
+//! - `{"admin":"prometheus"}` renders counters/gauges/histograms in
+//!   Prometheus text exposition format ([`prometheus`]).
+
+pub mod chrome;
+pub mod prometheus;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Value};
+
+/// Late-binding handle to a worker's recorder.  The page pool and the
+/// background tier writer are built before `serve` decides whether
+/// tracing is on, so they hold a slot that the engine fills exactly
+/// once; an unfilled slot records nothing.
+pub type TraceSlot = Arc<OnceLock<Arc<TraceRecorder>>>;
+
+/// A fresh, unfilled [`TraceSlot`].
+pub fn trace_slot() -> TraceSlot {
+    Arc::new(OnceLock::new())
+}
+
+// ------------------------------------------------------------- events
+
+/// What happened.  Variants mirror the request lifecycle; field names
+/// match the JSON keys they serialize to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// request admitted into the engine queue
+    Admitted,
+    /// one prefill chunk quantized (`start` = absolute token position of
+    /// the chunk; whole-prompt prefill emits a single chunk at start 0)
+    PrefillChunk { start: u32, tokens: u32 },
+    /// one decode iteration produced a token for this request
+    /// (`pos` = sequence length after the step; `us` = model time)
+    DecodeStep { pos: u32, us: u32 },
+    /// one speculative propose/verify round (`drafted` tokens proposed
+    /// on the coarse plane, `accepted` of them verified exact)
+    SpeculativeRound { drafted: u32, accepted: u32 },
+    /// the background tier writer persisted a cold page to disk
+    PageDemote { pages: u32 },
+    /// a prefix lookup pulled pages back from the disk tier
+    PagePromote { pages: u32 },
+    /// page-pool exhaustion preempted this request (its pages freed;
+    /// the request replays later, bit-identically)
+    PagePreempt { pages: u32 },
+    /// an idle session's KV chain was reaped to the disk tier
+    SessionReap { session: u64 },
+    /// a reaped session's KV chain was restored for its next turn
+    SessionRestore { session: u64 },
+    /// request retired (`finish_reason` as on the wire: stop | length |
+    /// cancelled | rejected)
+    Done { finish_reason: &'static str, tokens: u32 },
+}
+
+impl TraceKind {
+    /// The wire label (the JSON `event` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Admitted => "admitted",
+            TraceKind::PrefillChunk { .. } => "prefill_chunk",
+            TraceKind::DecodeStep { .. } => "decode_step",
+            TraceKind::SpeculativeRound { .. } => "speculative_round",
+            TraceKind::PageDemote { .. } => "page_demote",
+            TraceKind::PagePromote { .. } => "page_promote",
+            TraceKind::PagePreempt { .. } => "page_preempt",
+            TraceKind::SessionReap { .. } => "session_reap",
+            TraceKind::SessionRestore { .. } => "session_restore",
+            TraceKind::Done { .. } => "done",
+        }
+    }
+
+    /// Variant-specific JSON fields (the common envelope is added by
+    /// [`TraceEvent::value`]).
+    fn fields(&self, out: &mut Vec<(&'static str, Value)>) {
+        match *self {
+            TraceKind::Admitted => {}
+            TraceKind::PrefillChunk { start, tokens } => {
+                out.push(("start", num(start as f64)));
+                out.push(("tokens", num(tokens as f64)));
+            }
+            TraceKind::DecodeStep { pos, us } => {
+                out.push(("pos", num(pos as f64)));
+                out.push(("us", num(us as f64)));
+            }
+            TraceKind::SpeculativeRound { drafted, accepted } => {
+                out.push(("drafted", num(drafted as f64)));
+                out.push(("accepted", num(accepted as f64)));
+            }
+            TraceKind::PageDemote { pages }
+            | TraceKind::PagePromote { pages }
+            | TraceKind::PagePreempt { pages } => out.push(("pages", num(pages as f64))),
+            TraceKind::SessionReap { session } | TraceKind::SessionRestore { session } => {
+                out.push(("session", num(session as f64)))
+            }
+            TraceKind::Done { finish_reason, tokens } => {
+                out.push(("finish_reason", s(finish_reason)));
+                out.push(("tokens", num(tokens as f64)));
+            }
+        }
+    }
+}
+
+/// One recorded span event.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// per-recorder monotone sequence number (drain order)
+    pub seq: u64,
+    /// microseconds since the recorder's epoch (engine construction)
+    pub ts_us: u64,
+    /// the request this event belongs to; 0 = background work not tied
+    /// to a request (tier demotion, session reaping)
+    pub request: u64,
+    pub kind: TraceKind,
+}
+
+impl TraceEvent {
+    /// The JSON-lines shape drained by `{"admin":"trace"}`.
+    pub fn value(&self, worker: usize) -> Value {
+        let mut fields = vec![
+            ("event", s(self.kind.name())),
+            ("id", num(self.request as f64)),
+            ("seq", num(self.seq as f64)),
+            ("ts_us", num(self.ts_us as f64)),
+            ("worker", num(worker as f64)),
+        ];
+        self.kind.fields(&mut fields);
+        obj(fields)
+    }
+}
+
+// ----------------------------------------------------------- recorder
+
+/// Bounded drop-oldest ring of [`TraceEvent`]s; see the module docs for
+/// the hot-path contract.
+pub struct TraceRecorder {
+    enabled: bool,
+    cap: usize,
+    epoch: Instant,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<TraceEvent>>,
+}
+
+impl TraceRecorder {
+    /// Per-worker ring capacity: ~64k events is minutes of steady-state
+    /// decode at serving rates, and a few MB at worst.
+    pub const DEFAULT_CAPACITY: usize = 65_536;
+
+    pub fn new(enabled: bool, cap: usize) -> Self {
+        TraceRecorder {
+            enabled,
+            cap: cap.max(1),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            // a disabled recorder never allocates ring storage
+            ring: Mutex::new(VecDeque::with_capacity(if enabled { cap.max(1) } else { 0 })),
+        }
+    }
+
+    /// A recorder that records nothing (the `--trace off` default).
+    pub fn disabled() -> Arc<Self> {
+        Arc::new(TraceRecorder::new(false, 1))
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event.  The single `enabled` branch is the whole cost
+    /// when tracing is off.
+    #[inline]
+    pub fn record(&self, request: u64, kind: TraceKind) {
+        if !self.enabled {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        let ev = TraceEvent { seq, ts_us, request, kind };
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events evicted by the ring since construction (ever, not since
+    /// the last drain).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Take every buffered event, ordered by sequence number.  Draining
+    /// empties the ring: a second drain returns only events recorded in
+    /// between.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut events: Vec<TraceEvent> = {
+            let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+            ring.drain(..).collect()
+        };
+        // concurrent recorders can interleave pushes out of seq order
+        events.sort_by_key(|e| e.seq);
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn over_capacity_ring_drops_oldest_and_counts() {
+        let r = TraceRecorder::new(true, 4);
+        for i in 0..10u64 {
+            r.record(i, TraceKind::Admitted);
+        }
+        assert_eq!(r.dropped(), 6, "10 events into a 4-slot ring drop 6");
+        let events = r.drain();
+        assert_eq!(events.len(), 4);
+        // the survivors are the NEWEST four, in sequence order
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let reqs: Vec<u64> = events.iter().map(|e| e.request).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9]);
+        // drained means drained
+        assert!(r.drain().is_empty());
+        assert_eq!(r.dropped(), 6, "draining does not reset the drop counter");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = TraceRecorder::disabled();
+        for i in 0..100u64 {
+            r.record(i, TraceKind::DecodeStep { pos: 1, us: 0 });
+        }
+        assert!(r.drain().is_empty());
+        assert_eq!(r.dropped(), 0);
+        assert!(!r.enabled());
+    }
+
+    #[test]
+    fn events_serialize_with_envelope_and_variant_fields() {
+        let r = TraceRecorder::new(true, 16);
+        r.record(7, TraceKind::PrefillChunk { start: 32, tokens: 16 });
+        r.record(7, TraceKind::Done { finish_reason: "stop", tokens: 5 });
+        let events = r.drain();
+        let v = events[0].value(3);
+        assert_eq!(v.str_or("event", ""), "prefill_chunk");
+        assert_eq!(v.usize_or("id", 0), 7);
+        assert_eq!(v.usize_or("worker", 0), 3);
+        assert_eq!(v.usize_or("start", 0), 32);
+        assert_eq!(v.usize_or("tokens", 0), 16);
+        let v = events[1].value(3);
+        assert_eq!(v.str_or("event", ""), "done");
+        assert_eq!(v.str_or("finish_reason", ""), "stop");
+        assert!(events[1].seq > events[0].seq);
+        assert!(events[1].ts_us >= events[0].ts_us);
+    }
+
+    #[test]
+    fn trace_slot_binds_once() {
+        let slot = trace_slot();
+        assert!(slot.get().is_none());
+        let rec = Arc::new(TraceRecorder::new(true, 8));
+        assert!(slot.set(rec.clone()).is_ok());
+        slot.get().unwrap().record(1, TraceKind::PageDemote { pages: 1 });
+        assert!(slot.set(TraceRecorder::disabled()).is_err(), "second bind is refused");
+        assert_eq!(rec.drain().len(), 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Prometheus text exposition (`{"admin":"prometheus"}`).
+//!
+//! Workers answer the admin request with structured [`PromFamily`]
+//! lists (built from the engine's `Metrics` / `TenantStats` /
+//! `TierCounters` / speculative counters in `server/worker.rs`);
+//! [`render_fleet`] merges the per-worker lists, stamps every sample
+//! with a `worker` label, and renders text exposition format version
+//! 0.0.4: `# HELP` / `# TYPE` once per family, counters suffixed
+//! `_total`, histograms as cumulative `le`-labeled buckets (seconds)
+//! with `_sum` / `_count`.
+//!
+//! Metric names are STABLE — dashboards depend on them.  Every name is
+//! prefixed `polarquant_`; adding a family is fine, renaming one is a
+//! breaking change.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl PromKind {
+    fn label(self) -> &'static str {
+        match self {
+            PromKind::Counter => "counter",
+            PromKind::Gauge => "gauge",
+            PromKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One exposition line: `name<suffix>{labels} value`.
+#[derive(Clone, Debug)]
+pub struct PromSample {
+    /// `""` for scalar families; `"_bucket"` / `"_sum"` / `"_count"`
+    /// for histogram series
+    pub suffix: &'static str,
+    /// label pairs in emission order (the fleet renderer appends
+    /// `worker` last)
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One metric family: a name, its metadata, and its samples.
+#[derive(Clone, Debug)]
+pub struct PromFamily {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: PromKind,
+    pub samples: Vec<PromSample>,
+}
+
+impl PromFamily {
+    fn scalar(name: &'static str, help: &'static str, kind: PromKind, value: f64) -> Self {
+        PromFamily {
+            name,
+            help,
+            kind,
+            samples: vec![PromSample { suffix: "", labels: Vec::new(), value }],
+        }
+    }
+
+    pub fn counter(name: &'static str, help: &'static str, value: f64) -> Self {
+        PromFamily::scalar(name, help, PromKind::Counter, value)
+    }
+
+    pub fn gauge(name: &'static str, help: &'static str, value: f64) -> Self {
+        PromFamily::scalar(name, help, PromKind::Gauge, value)
+    }
+
+    /// An empty family to push labeled series into (per-tenant metrics).
+    pub fn empty(name: &'static str, help: &'static str, kind: PromKind) -> Self {
+        PromFamily { name, help, kind, samples: Vec::new() }
+    }
+
+    /// One labeled scalar series (e.g. per-tenant counters).
+    pub fn push(&mut self, labels: Vec<(String, String)>, value: f64) {
+        self.samples.push(PromSample { suffix: "", labels, value });
+    }
+
+    /// One labeled histogram series: CUMULATIVE `le` buckets in seconds
+    /// (callers pass them already accumulated), the implicit `+Inf`
+    /// bucket, `_sum`, and `_count`.
+    pub fn push_histogram(
+        &mut self,
+        labels: Vec<(String, String)>,
+        buckets: &[(f64, u64)],
+        sum_secs: f64,
+        count: u64,
+    ) {
+        for &(le, cum) in buckets {
+            let mut l = labels.clone();
+            l.push(("le".to_string(), fmt_value(le)));
+            self.samples.push(PromSample { suffix: "_bucket", labels: l, value: cum as f64 });
+        }
+        let mut l = labels.clone();
+        l.push(("le".to_string(), "+Inf".to_string()));
+        self.samples.push(PromSample { suffix: "_bucket", labels: l, value: count as f64 });
+        self.samples.push(PromSample { suffix: "_sum", labels: labels.clone(), value: sum_secs });
+        self.samples.push(PromSample { suffix: "_count", labels, value: count as f64 });
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest exact decimal for a sample value (`17`, not `17.0`; floats
+/// keep their full shortest representation).
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_sample(out: &mut String, name: &str, s: &PromSample) {
+    out.push_str(name);
+    out.push_str(s.suffix);
+    if !s.labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in s.labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(s.value));
+    out.push('\n');
+}
+
+/// Merge per-worker family lists and render the exposition text.
+///
+/// Families with the same name merge into one block (`# HELP` /
+/// `# TYPE` emitted once, metadata taken from the first worker that
+/// reports the family); every sample gains a `worker` label.  Families
+/// are emitted in name order so the output is deterministic.
+pub fn render_fleet(per_worker: &[Vec<PromFamily>]) -> String {
+    let mut merged: BTreeMap<&'static str, (&'static str, PromKind, Vec<(usize, PromSample)>)> =
+        BTreeMap::new();
+    for (worker, families) in per_worker.iter().enumerate() {
+        for fam in families {
+            let entry = merged.entry(fam.name).or_insert((fam.help, fam.kind, Vec::new()));
+            for s in &fam.samples {
+                entry.2.push((worker, s.clone()));
+            }
+        }
+    }
+    let mut out = String::new();
+    for (name, (help, kind, samples)) in &merged {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {}\n", kind.label()));
+        for (worker, s) in samples {
+            let mut s = s.clone();
+            s.labels.push(("worker".to_string(), worker.to_string()));
+            render_sample(&mut out, name, &s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_and_gauges_with_worker_labels() {
+        let w0 = vec![PromFamily::counter("polarquant_decode_tokens_total", "tokens", 10.0)];
+        let w1 = vec![PromFamily::counter("polarquant_decode_tokens_total", "tokens", 7.0)];
+        let text = render_fleet(&[w0, w1]);
+        assert_eq!(
+            text,
+            "# HELP polarquant_decode_tokens_total tokens\n\
+             # TYPE polarquant_decode_tokens_total counter\n\
+             polarquant_decode_tokens_total{worker=\"0\"} 10\n\
+             polarquant_decode_tokens_total{worker=\"1\"} 7\n"
+        );
+    }
+
+    #[test]
+    fn histogram_series_is_cumulative_and_closed_by_inf() {
+        let mut fam =
+            PromFamily::empty("polarquant_ttft_seconds", "time to first token", PromKind::Histogram);
+        fam.push_histogram(Vec::new(), &[(0.001, 2), (0.01, 5)], 0.025, 6);
+        let text = render_fleet(&[vec![fam]]);
+        assert!(text.contains("polarquant_ttft_seconds_bucket{le=\"0.001\",worker=\"0\"} 2\n"));
+        assert!(text.contains("polarquant_ttft_seconds_bucket{le=\"0.01\",worker=\"0\"} 5\n"));
+        assert!(text.contains("polarquant_ttft_seconds_bucket{le=\"+Inf\",worker=\"0\"} 6\n"));
+        assert!(text.contains("polarquant_ttft_seconds_sum{worker=\"0\"} 0.025\n"));
+        assert!(text.contains("polarquant_ttft_seconds_count{worker=\"0\"} 6\n"));
+        // buckets are monotone non-decreasing through +Inf
+        let buckets: Vec<f64> = text
+            .lines()
+            .filter(|l| l.contains("_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{buckets:?}");
+    }
+
+    #[test]
+    fn label_values_are_escaped_and_tenant_labels_ride_through() {
+        let mut fam = PromFamily::empty("polarquant_tenant_admitted_total", "per-tenant", PromKind::Counter);
+        fam.push(vec![("tenant".to_string(), "we\"ird\\t\nenant".to_string())], 3.0);
+        let text = render_fleet(&[vec![fam]]);
+        assert!(
+            text.contains("polarquant_tenant_admitted_total{tenant=\"we\\\"ird\\\\t\\nenant\",worker=\"0\"} 3\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn every_line_is_valid_exposition_syntax() {
+        let mut fams = vec![
+            PromFamily::counter("polarquant_requests_finished_total", "done", 2.0),
+            PromFamily::gauge("polarquant_pages_in_use", "resident pages", 5.0),
+        ];
+        let mut h = PromFamily::empty("polarquant_itl_seconds", "inter-token", PromKind::Histogram);
+        h.push_histogram(Vec::new(), &[(0.5, 1)], 0.4, 1);
+        fams.push(h);
+        for line in render_fleet(&[fams]).lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# HELP ") || line.starts_with("# TYPE "), "{line}");
+                continue;
+            }
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in {line}"
+            );
+            let value: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(value.is_finite());
+        }
+    }
+}

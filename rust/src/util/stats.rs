@@ -58,6 +58,7 @@ pub struct LatencyHist {
     edges_us: Vec<f64>,
     counts: Vec<u64>,
     samples: Vec<f64>,
+    sum_secs: f64,
 }
 
 impl Default for LatencyHist {
@@ -71,13 +72,14 @@ impl LatencyHist {
         // 1us .. ~100s, x2 per bucket
         let edges_us: Vec<f64> = (0..28).map(|i| (1u64 << i) as f64).collect();
         let counts = vec![0; edges_us.len() + 1];
-        LatencyHist { edges_us, counts, samples: Vec::new() }
+        LatencyHist { edges_us, counts, samples: Vec::new(), sum_secs: 0.0 }
     }
 
     pub fn record_secs(&mut self, secs: f64) {
         let us = secs * 1e6;
         let idx = self.edges_us.partition_point(|&e| e <= us);
         self.counts[idx] += 1;
+        self.sum_secs += secs;
         if self.samples.len() < 100_000 {
             self.samples.push(secs);
         }
@@ -85,6 +87,31 @@ impl LatencyHist {
 
     pub fn count(&self) -> u64 {
         self.counts.iter().sum()
+    }
+
+    /// Total of every recorded value (exact — unlike the percentile
+    /// sample set, the sum is never truncated).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_secs
+    }
+
+    /// Cumulative bucket counts in Prometheus shape: `(le_seconds,
+    /// samples <= le)` per edge, monotone non-decreasing.  The overflow
+    /// tail is the implicit `+Inf` bucket ([`LatencyHist::count`]).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut cum = 0u64;
+        self.edges_us
+            .iter()
+            .zip(&self.counts)
+            .map(|(&edge_us, &c)| {
+                cum += c;
+                // counts[i] holds samples with us < edge[i] (partition
+                // on e <= us), so the cumulative count through bucket i
+                // is exactly "samples <= just under edge[i]" — expose
+                // the edge itself as the le bound
+                (edge_us * 1e-6, cum)
+            })
+            .collect()
     }
 
     pub fn p(&self, pct: f64) -> f64 {
@@ -127,5 +154,23 @@ mod tests {
         }
         assert_eq!(h.count(), 100);
         assert!(h.p(50.0) > 0.0);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_exhaustive() {
+        let mut h = LatencyHist::new();
+        let secs = [0.5e-6, 3e-6, 3e-6, 1e-3, 0.5, 400.0]; // incl. +Inf tail
+        for s in secs {
+            h.record_secs(s);
+        }
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), 28);
+        assert!((b[0].0 - 1e-6).abs() < 1e-18, "first le is 1us in seconds");
+        assert!(b.windows(2).all(|w| w[0].1 <= w[1].1), "cumulative counts are monotone");
+        assert_eq!(b[0].1, 1, "one sample under 1us");
+        assert_eq!(b.last().unwrap().1, 5, "400s overflows every edge into +Inf");
+        assert_eq!(h.count(), 6);
+        let sum: f64 = secs.iter().sum();
+        assert!((h.sum_secs() - sum).abs() < 1e-12);
     }
 }

@@ -1,0 +1,136 @@
+//! Request-lifecycle tracing over the wire: a traced server records an
+//! ordered span sequence per request, drains it through `{"admin":
+//! "trace"}`, renders Prometheus text through `{"admin":"prometheus"}`,
+//! and writes a Chrome trace_event file at graceful shutdown — while a
+//! `--trace off` server generates the IDENTICAL tokens and zero events.
+
+use std::sync::Arc;
+
+use polarquant::coordinator::{Engine, EngineOpts};
+use polarquant::model::ModelConfig;
+use polarquant::server::{serve, serve_with_export, Client};
+use polarquant::util::json::Value;
+
+fn opts(trace: bool) -> EngineOpts {
+    let mut o = EngineOpts::default();
+    o.prefill_chunk = 4;
+    o.trace = trace;
+    o
+}
+
+fn factory(trace: bool) -> polarquant::server::EngineFactory {
+    Arc::new(move |w| {
+        Engine::native_synthetic(ModelConfig::tiny(), 300 + w as u64, 4.0, opts(trace))
+    })
+}
+
+fn ev_name(v: &Value) -> String {
+    v.str_or("event", "")
+}
+
+#[test]
+fn traced_request_yields_ordered_lifecycle_over_tcp() {
+    let handle = serve(factory(true), "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..10).map(|i| (i * 3 + 1) % 64).collect();
+    let traced = client.generate(&prompt, 5, None).unwrap();
+    assert_eq!(traced.tokens.len(), 5);
+
+    let (events, term) = client.trace().unwrap();
+    assert_eq!(term.str_or("admin", ""), "trace");
+    assert_eq!(term.usize_or("events", 0), events.len());
+    assert_eq!(term.usize_or("dropped", 9), 0, "65k ring never drops 10 events");
+
+    // this request's events, already seq-ordered by the drain
+    let mine: Vec<&Value> =
+        events.iter().filter(|e| e.usize_or("id", 0) as u64 == traced.id).collect();
+    let names: Vec<String> = mine.iter().map(|e| ev_name(e)).collect();
+    assert_eq!(names.first().map(String::as_str), Some("admitted"), "{names:?}");
+    assert_eq!(names.last().map(String::as_str), Some("done"), "{names:?}");
+    // 10 prompt tokens / chunk 4 -> 3 chunks; 5 tokens, the first decoded
+    // by the last chunk's step -> 4 decode steps
+    assert_eq!(names.iter().filter(|n| *n == "prefill_chunk").count(), 3, "{names:?}");
+    assert_eq!(names.iter().filter(|n| *n == "decode_step").count(), 4, "{names:?}");
+    // phases don't interleave: every chunk precedes every decode step
+    let last_chunk = names.iter().rposition(|n| n == "prefill_chunk").unwrap();
+    let first_step = names.iter().position(|n| n == "decode_step").unwrap();
+    assert!(last_chunk < first_step, "{names:?}");
+    // seq strictly increases and the payloads carry their typed fields
+    let seqs: Vec<u64> = mine.iter().map(|e| e.usize_or("seq", 0) as u64).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    let chunks: Vec<(usize, usize)> = mine
+        .iter()
+        .filter(|e| ev_name(e) == "prefill_chunk")
+        .map(|e| (e.usize_or("start", 99), e.usize_or("tokens", 99)))
+        .collect();
+    assert_eq!(chunks, vec![(0, 4), (4, 4), (8, 2)]);
+    let done = mine.last().unwrap();
+    assert_eq!(done.str_or("finish_reason", ""), "length");
+    assert_eq!(done.usize_or("tokens", 0), 5);
+
+    // draining consumed the ring: a second drain is empty
+    let (events, _) = client.trace().unwrap();
+    assert!(events.is_empty(), "{events:?}");
+    handle.stop();
+
+    // the identical request against a --trace off server: identical
+    // tokens (tracing never touches the computation), zero events
+    let handle = serve(factory(false), "127.0.0.1:0", 1).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let plain = client.generate(&prompt, 5, None).unwrap();
+    assert_eq!(plain.tokens, traced.tokens);
+    let (events, term) = client.trace().unwrap();
+    assert!(events.is_empty(), "disabled recorders must record nothing: {events:?}");
+    assert_eq!(term.usize_or("events", 9), 0);
+    handle.stop();
+}
+
+#[test]
+fn prometheus_exposition_renders_over_tcp() {
+    let handle = serve(factory(true), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    let prompt: Vec<u32> = (0..8).map(|i| (i * 5 + 2) % 64).collect();
+    client.generate(&prompt, 4, None).unwrap();
+
+    let text = client.prometheus().unwrap();
+    // both workers report every family; the one that served the request
+    // has a nonzero finished counter
+    assert!(text.contains("# TYPE polarquant_requests_finished_total counter"), "{text}");
+    assert!(text.contains("polarquant_requests_finished_total{worker=\"0\"}"), "{text}");
+    assert!(text.contains("polarquant_requests_finished_total{worker=\"1\"}"), "{text}");
+    assert!(text.contains("polarquant_ttft_seconds_bucket{le=\"+Inf\",worker=\""), "{text}");
+    assert!(text.contains("polarquant_build_info{kernel=\""), "{text}");
+    // cumulative buckets are monotone non-decreasing per series
+    for w in 0..2 {
+        let needle = "polarquant_ttft_seconds_bucket{le=";
+        let counts: Vec<f64> = text
+            .lines()
+            .filter(|l| l.starts_with(&needle) && l.contains(&format!("worker=\"{w}\"")))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(!counts.is_empty());
+        assert!(counts.windows(2).all(|p| p[0] <= p[1]), "worker {w}: {counts:?}");
+    }
+    handle.stop();
+}
+
+#[test]
+fn chrome_export_writes_trace_file_at_shutdown() {
+    let path = std::env::temp_dir().join(format!("pq-trace-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let handle =
+        serve_with_export(factory(true), "127.0.0.1:0", 1, Some(path.clone())).unwrap();
+    let mut client = Client::connect(&handle.addr).unwrap();
+    client.generate(&[1, 2, 3, 4, 5], 3, None).unwrap();
+    handle.stop();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = polarquant::util::json::parse(&text).unwrap();
+    let events = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    // begin + end of the request's async span are both present
+    let phases: Vec<String> =
+        events.iter().map(|e| e.str_or("ph", "")).collect();
+    assert!(phases.iter().any(|p| p == "b"), "{phases:?}");
+    assert!(phases.iter().any(|p| p == "e"), "{phases:?}");
+    let _ = std::fs::remove_file(&path);
+}
