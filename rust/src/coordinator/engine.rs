@@ -72,6 +72,18 @@ pub struct TierOpts {
     pub snapshot: bool,
 }
 
+/// Shared prefix-fabric configuration (`--fabric-dir` / `--fabric-peer`).
+/// Attached AFTER construction via [`Engine::attach_fabric`], mirroring
+/// [`TierOpts`].  Exactly one transport may be set; both `None` is a
+/// caller error caught at attach time.
+#[derive(Clone, Debug, Default)]
+pub struct FabricOpts {
+    /// shared segment directory every node of the fleet mounts
+    pub dir: Option<std::path::PathBuf>,
+    /// `host:port` of a designated peer backend to fetch from
+    pub peer: Option<String>,
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct EngineOpts {
     pub policy: SchedulerPolicy,
@@ -178,6 +190,11 @@ pub struct TenancyOpts {
     pub reserve_pages: usize,
     /// demote an idle session's KV chain to the disk tier after this long
     pub session_ttl: Option<Duration>,
+    /// per-tenant cap on reaped-session blob bytes in the disk tier
+    /// (`--tenant-tier-bytes`; 0 = no per-tenant cap).  An over-cap
+    /// tenant's reaps refuse — the session stays resident — while other
+    /// tenants keep spilling under the shared `--tier-bytes` budget.
+    pub tenant_tier_bytes: u64,
 }
 
 /// One conversation's engine-side state: the token history each turn's
@@ -197,6 +214,9 @@ struct Session {
     /// where the chain lives while reaped to the disk tier
     /// (`--session-ttl`); the next turn promotes it back
     tiered: Option<TierRef>,
+    /// owning tenant (last turn's `Request::tenant`) — reaped blobs are
+    /// charged to this name under `--tenant-tier-bytes`
+    tenant: String,
 }
 
 impl Default for Session {
@@ -207,6 +227,7 @@ impl Default for Session {
             active: None,
             last_active: Instant::now(),
             tiered: None,
+            tenant: String::new(),
         }
     }
 }
@@ -242,6 +263,8 @@ pub struct Engine {
     tenant_buckets: Option<TenantBuckets>,
     /// idle sessions older than this demote their chain to the disk tier
     session_ttl: Option<Duration>,
+    /// per-tenant reaped-blob byte cap (`--tenant-tier-bytes`; 0 = none)
+    tenant_tier_bytes: u64,
     /// lifecycle span recorder (disabled no-op unless `EngineOpts::trace`)
     trace: Arc<TraceRecorder>,
 }
@@ -332,6 +355,7 @@ impl Engine {
             },
             tenant_buckets: None,
             session_ttl: None,
+            tenant_tier_bytes: 0,
             trace,
         }
     }
@@ -352,6 +376,7 @@ impl Engine {
         self.tenant_buckets =
             (t.rate > 0.0).then(|| TenantBuckets::new(t.rate, t.burst.max(1.0)));
         self.session_ttl = t.session_ttl;
+        self.tenant_tier_bytes = t.tenant_tier_bytes;
         if t.reserve_pages > 0 {
             self.cache.pool().set_tenant_reserve(t.reserve_pages);
         }
@@ -393,6 +418,39 @@ impl Engine {
     /// The attached tier's options, if any (server startup log).
     pub fn tier(&self) -> Option<&TierOpts> {
         self.tier.as_ref()
+    }
+
+    /// Bind this engine's page pool to the shared prefix fabric
+    /// (requires prefix caching, like [`Engine::attach_tier`]: the
+    /// fabric moves prefix-index pages).  Records are namespaced by the
+    /// same config fingerprint the tier uses, so a fleet member running
+    /// different quant geometry can never poison the cache.  Returns the
+    /// transport description for the startup log.
+    pub fn attach_fabric(&mut self, f: &FabricOpts) -> Result<String> {
+        if !self.prefix_caching() {
+            bail!("the fabric moves prefix-cache pages: enable prefix caching first");
+        }
+        let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
+        let fabric: Arc<dyn crate::fabric::PrefixFabric> = match (&f.dir, &f.peer) {
+            (Some(dir), None) => Arc::new(crate::fabric::DirFabric::new(dir, tag)?),
+            (None, Some(peer)) => Arc::new(crate::fabric::PeerFabric::new(peer)),
+            (Some(_), Some(_)) => bail!("--fabric-dir and --fabric-peer are exclusive"),
+            (None, None) => bail!("fabric needs --fabric-dir or --fabric-peer"),
+        };
+        let desc = fabric.describe();
+        self.cache.pool().set_fabric(Some(fabric), tag);
+        Ok(desc)
+    }
+
+    /// Enable export-only fabric mode: this node answers peers'
+    /// `{"peer":"fetch"}` requests out of its prefix index without
+    /// fetching remotely itself.  A no-op when [`Engine::attach_fabric`]
+    /// already bound a transport (the bind is once-only).
+    pub fn enable_fabric_export(&self) {
+        if self.prefix_caching() {
+            let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
+            self.cache.pool().set_fabric(None, tag);
+        }
     }
 
     /// Prefix entries restored from a snapshot at attach time.
@@ -820,6 +878,7 @@ impl Engine {
         // cache.reset actually returns the old chain's pages to the pool
         // instead of leaving them pinned by the Session
         let sess = self.sessions.entry(sid).or_default();
+        sess.tenant = tr.req.tenant.clone();
         tr.resume = if resumable { sess.cache.take() } else { None };
         sess.active = Some(id);
         sess.last_active = Instant::now();
@@ -870,11 +929,15 @@ impl Engine {
             .collect();
         let mut reaped = 0;
         for sid in sids {
-            let Some(chain) = self.sessions.get_mut(&sid).and_then(|s| s.cache.take()) else {
+            let Some((chain, tenant)) = self
+                .sessions
+                .get_mut(&sid)
+                .and_then(|s| s.cache.take().map(|c| (c, s.tenant.clone())))
+            else {
                 continue;
             };
             let blob = encode_session(&chain.lock().unwrap(), tag);
-            match self.cache.pool().session_spill(&blob) {
+            match self.cache.pool().session_spill(&blob, &tenant, self.tenant_tier_bytes) {
                 Ok(r) => {
                     self.sessions.get_mut(&sid).unwrap().tiered = Some(r);
                     self.metrics.sessions_reaped += 1;
@@ -884,7 +947,8 @@ impl Engine {
                     // `chain` drops here: the pages go back to the pool
                 }
                 Err(_) => {
-                    // disk error: keep the chain resident rather than
+                    // disk error or the tenant's `--tenant-tier-bytes`
+                    // quota ran dry: keep the chain resident rather than
                     // silently forgetting the conversation's KV state
                     self.sessions.get_mut(&sid).unwrap().cache = Some(chain);
                 }
@@ -903,8 +967,9 @@ impl Engine {
             return;
         }
         let r = sess.tiered.take().expect("checked above");
+        let tenant = sess.tenant.clone();
         let tag = config_fingerprint(&self.cfg, self.opts.value_bits);
-        let Ok(bytes) = self.cache.pool().session_fetch(r) else { return };
+        let Ok(bytes) = self.cache.pool().session_fetch(r, &tenant) else { return };
         let Ok(blob) = decode_session(&bytes, tag) else { return };
         // make room, best-effort: a shortfall means a transient overshoot
         // (same stance as the lone decoder), not a refused warm start
@@ -1112,6 +1177,7 @@ impl Engine {
                     continue;
                 }
             }
+            let chunk_t = Instant::now();
             let logits = {
                 let Backend::Native(model) = &mut self.backend else {
                     bail!("chunked prefill requires the native backend");
@@ -1131,14 +1197,20 @@ impl Engine {
                     finishing && tr.generated.is_empty(),
                 )
             };
+            let chunk_elapsed = chunk_t.elapsed();
             let tr = self.running.get_mut(&id).unwrap();
             self.trace.record(
                 id,
-                TraceKind::PrefillChunk { start: tr.prefill_pos as u32, tokens: take as u32 },
+                TraceKind::PrefillChunk {
+                    start: tr.prefill_pos as u32,
+                    tokens: take as u32,
+                    us: chunk_elapsed.as_micros() as u32,
+                },
             );
             tr.prefill_pos += take;
             self.metrics.prefill_tokens += take as u64;
             self.metrics.prefill_chunks += 1;
+            self.metrics.prefill_chunk_us.record_secs(chunk_elapsed.as_secs_f64());
             if let Some(wfq) = self.wfq.as_mut() {
                 wfq.charge(&tr.req.tenant, take);
             }
@@ -1273,6 +1345,7 @@ impl Engine {
         // per-request SnapKV override beats the engine default; admission
         // already guaranteed this engine can honor it
         let snapkv = tr.req.gen.snapkv.or(self.opts.snapkv);
+        let chunk_t = Instant::now();
         let logits = match &mut self.backend {
             Backend::Native(model) => {
                 if let Some(sk) = snapkv {
@@ -1347,8 +1420,16 @@ impl Engine {
         // first generated token comes from the prefill logits
         tr.prefill_pos = prompt.len();
         // whole-prompt prefill is one big chunk as far as the trace goes
-        self.trace
-            .record(id, TraceKind::PrefillChunk { start: 0, tokens: prompt.len() as u32 });
+        let chunk_elapsed = chunk_t.elapsed();
+        self.trace.record(
+            id,
+            TraceKind::PrefillChunk {
+                start: 0,
+                tokens: prompt.len() as u32,
+                us: chunk_elapsed.as_micros() as u32,
+            },
+        );
+        self.metrics.prefill_chunk_us.record_secs(chunk_elapsed.as_secs_f64());
         Self::emit(
             &self.subs,
             id,

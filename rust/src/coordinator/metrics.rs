@@ -40,6 +40,10 @@ pub struct Metrics {
     pub prefill_tokens: u64,
     /// prefill chunks executed (chunked-prefill engines only)
     pub prefill_chunks: u64,
+    /// wall-clock model time of one prefill chunk (whole-prompt prefill
+    /// records its single chunk here too) — the number capacity planning
+    /// reads to bound decode-stall from `--prefill-chunk` sizing
+    pub prefill_chunk_us: LatencyHist,
     pub decode_tokens: u64,
     /// decode iterations: exactly one per engine step that decoded at
     /// least one token, on BOTH backends (the PJRT path used to count one
@@ -120,6 +124,7 @@ impl Metrics {
             session_tokens_reused: 0,
             prefill_tokens: 0,
             prefill_chunks: 0,
+            prefill_chunk_us: LatencyHist::new(),
             decode_tokens: 0,
             decode_steps: 0,
             decode_batch_sum: 0,
@@ -227,8 +232,9 @@ impl Metrics {
         }
         if self.prefill_chunks > 0 {
             s.push_str(&format!(
-                ", {} chunks, decode stall p95 {:.2}ms",
+                ", {} chunks (p50 {:.2}ms), decode stall p95 {:.2}ms",
                 self.prefill_chunks,
+                self.prefill_chunk_us.p(50.0) * 1e3,
                 self.decode_stall.p(95.0) * 1e3,
             ));
         }

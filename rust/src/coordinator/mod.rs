@@ -26,7 +26,7 @@ pub mod router;
 pub mod scheduler;
 
 pub use backpressure::{RejectReason, TenantBuckets};
-pub use engine::{Backend, Engine, EngineOpts, TenancyOpts, TierOpts};
+pub use engine::{Backend, Engine, EngineOpts, FabricOpts, TenancyOpts, TierOpts};
 pub use pool::{DecodePool, DecodeTask, StepResult};
 pub use request::{
     Completion, Event, FinishReason, GenOptions, Request, RequestId, RequestState, SnapKvOpts,

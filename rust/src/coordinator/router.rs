@@ -44,6 +44,20 @@ impl Router {
         w
     }
 
+    /// Place a request on a worker chosen by an EXTERNAL policy (the
+    /// multi-node front tier's consistent-hash ring), keeping this
+    /// router's load/affinity books straight: the sticky mapping is
+    /// recorded for `session` and the load increments like `route()`.
+    /// Pairs with exactly one `complete()`, same as `route()`.
+    pub fn route_to(&mut self, session: Option<u64>, worker: usize) -> usize {
+        assert!(worker < self.workers);
+        if let Some(s) = session {
+            self.sessions.insert(s, worker);
+        }
+        self.loads[worker] += 1;
+        worker
+    }
+
     /// Mark a request finished on `worker`.  Every `route()` must be
     /// paired with EXACTLY ONE `complete()` — the serve path calls it
     /// from the single place each request terminates (the event
@@ -150,6 +164,23 @@ mod tests {
         assert_eq!(r.session_worker(42), Some(w));
         r.end_session(42);
         assert_eq!(r.session_worker(42), None);
+    }
+
+    #[test]
+    fn route_to_records_affinity_and_load() {
+        let mut r = Router::new(3);
+        // an external policy pins session 9 to worker 2
+        assert_eq!(r.route_to(Some(9), 2), 2);
+        assert_eq!(r.session_worker(9), Some(2));
+        assert_eq!(r.load(2), 1);
+        // subsequent plain routes honor the recorded affinity
+        assert_eq!(r.route(Some(9)), 2);
+        r.complete(2);
+        r.complete(2);
+        assert_eq!(r.total_load(), 0);
+        // anonymous external placement just counts load
+        assert_eq!(r.route_to(None, 0), 0);
+        assert_eq!(r.load(0), 1);
     }
 
     #[test]

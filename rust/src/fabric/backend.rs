@@ -1,0 +1,179 @@
+//! Fabric transports: shared directory and peer fetch.
+//!
+//! Both move opaque [`super::record`] bytes; neither interprets them.
+//! The pool verifies everything after the fact, so these stay simple —
+//! a failed read, a half-written file, or a lying peer costs one fetch
+//! and degrades to a cold prefill.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::util::json::{self, Value};
+
+use super::PrefixFabric;
+
+/// How long a peer fetch may take before the pool gives up and cold
+/// prefills.  Generous against disk reads, tight against a hung node.
+const PEER_IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Refuse absurd peer-advertised lengths before allocating.
+const MAX_RECORD_BYTES: usize = 256 << 20;
+
+/// Shared segment directory — the simplest fabric: every node mounts
+/// the same directory (NFS or a shared volume in CI) and publishes one
+/// file per prefix chain hash, namespaced by config fingerprint so
+/// differently-configured fleets can share a mount without ever reading
+/// each other's records.
+pub struct DirFabric {
+    dir: PathBuf,
+    tag: u64,
+}
+
+impl DirFabric {
+    pub fn new(dir: &Path, tag: u64) -> std::io::Result<Self> {
+        fs::create_dir_all(dir)?;
+        Ok(DirFabric { dir: dir.to_path_buf(), tag })
+    }
+
+    fn path(&self, hash: u64) -> PathBuf {
+        self.dir.join(format!("fb-{:016x}-{hash:016x}.page", self.tag))
+    }
+}
+
+impl PrefixFabric for DirFabric {
+    fn fetch(&self, hash: u64) -> Option<Vec<u8>> {
+        fs::read(self.path(hash)).ok()
+    }
+
+    fn publish(&self, hash: u64, record: &[u8]) -> bool {
+        let dst = self.path(hash);
+        if dst.exists() {
+            return false; // records are content-addressed; first write wins
+        }
+        // tmp + rename so a concurrent reader never sees a torn record
+        // (the checksum would catch it anyway, but a clean rename avoids
+        // burning the fetch on a transient)
+        let tmp = self.dir.join(format!(
+            "fb-{:016x}-{hash:016x}.tmp-{}",
+            self.tag,
+            std::process::id()
+        ));
+        let ok = fs::write(&tmp, record).is_ok() && fs::rename(&tmp, &dst).is_ok();
+        if !ok {
+            let _ = fs::remove_file(&tmp);
+        }
+        ok
+    }
+
+    fn describe(&self) -> String {
+        format!("dir:{}", self.dir.display())
+    }
+}
+
+/// Designated-peer fetch over the JSON-lines admin channel: one
+/// connection per fetch (backend sessions are connection-independent,
+/// and fetches are rare — only cold prefix misses reach here).
+///
+/// ```text
+/// -> {"peer": "fetch", "hash": "<decimal u64 string>"}
+/// <- {"peer": "fetch", "len": N}   # N == 0 means miss
+/// <- N raw bytes
+/// ```
+///
+/// The hash rides as a decimal *string*: JSON numbers are f64 on this
+/// wire and would silently round hashes above 2^53.
+pub struct PeerFabric {
+    addr: String,
+}
+
+impl PeerFabric {
+    pub fn new(addr: &str) -> Self {
+        PeerFabric { addr: addr.to_string() }
+    }
+
+    fn try_fetch(&self, hash: u64) -> std::io::Result<Option<Vec<u8>>> {
+        let stream = TcpStream::connect(&self.addr)?;
+        stream.set_read_timeout(Some(PEER_IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_IO_TIMEOUT))?;
+        let mut writer = stream.try_clone()?;
+        writer.write_all(
+            format!("{{\"peer\":\"fetch\",\"hash\":\"{hash}\"}}\n").as_bytes(),
+        )?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        let header: Value =
+            json::parse(line.trim()).map_err(|e| bad(&format!("peer header: {e}")))?;
+        let len = header
+            .get("len")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("peer header missing len"))?;
+        if len == 0 {
+            return Ok(None);
+        }
+        if len > MAX_RECORD_BYTES {
+            return Err(bad(&format!("peer advertised absurd record ({len} bytes)")));
+        }
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        Ok(Some(buf))
+    }
+}
+
+impl PrefixFabric for PeerFabric {
+    fn fetch(&self, hash: u64) -> Option<Vec<u8>> {
+        self.try_fetch(hash).ok().flatten()
+    }
+
+    fn publish(&self, _hash: u64, _record: &[u8]) -> bool {
+        false // peers serve their own pool; nothing to push
+    }
+
+    fn describe(&self) -> String {
+        format!("peer:{}", self.addr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pq-fabric-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn dir_fabric_roundtrips_and_first_write_wins() {
+        let dir = tmp("roundtrip");
+        let f = DirFabric::new(&dir, 0xABCD).unwrap();
+        assert!(f.fetch(7).is_none(), "cold directory misses");
+        assert!(f.publish(7, b"record-one"));
+        assert_eq!(f.fetch(7).as_deref(), Some(b"record-one".as_ref()));
+        assert!(!f.publish(7, b"record-two"), "re-publish is a no-op");
+        assert_eq!(f.fetch(7).as_deref(), Some(b"record-one".as_ref()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_fabric_namespaces_by_config_tag() {
+        let dir = tmp("tag");
+        let a = DirFabric::new(&dir, 1).unwrap();
+        let b = DirFabric::new(&dir, 2).unwrap();
+        assert!(a.publish(9, b"from-a"));
+        assert!(b.fetch(9).is_none(), "other fingerprint must not see the record");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peer_fabric_survives_a_dead_address() {
+        // nothing listens here: fetch must be a miss, not a hang or panic
+        let f = PeerFabric::new("127.0.0.1:1");
+        assert!(f.fetch(42).is_none());
+        assert!(!f.publish(42, b"x"));
+    }
+}

@@ -1,0 +1,850 @@
+//! The `route` front tier: one process that speaks wire v2 to clients
+//! and fans requests out to N backend `serve` processes.
+//!
+//! Placement is consistent hashing ([`super::ring`]): sessions hash by
+//! their front-assigned session id, sessionless requests by a prefix of
+//! their prompt tokens (so identical system prompts land on the same
+//! backend and share its prefix cache).  Health is heartbeat-driven —
+//! a `{"admin":"ping"}` per node per interval — and applied only to NEW
+//! placements: a draining or flapping node keeps serving its existing
+//! sessions (that is the drain contract) while new work routes around
+//! it.
+//!
+//! Ids are front-owned.  Backends allocate request ids and session ids
+//! independently, so two backends WILL collide; the front therefore
+//! allocates its own id per request (and session ids from `1 << 40`,
+//! above the backends' `1 << 32` range) and rewrites the `id` /
+//! `session` fields on every frame crossing it.  Clients never see a
+//! backend-local id.
+//!
+//! Hedging: a streaming sessionless request that produces no progress
+//! within `--hedge-after-ms` is re-dispatched to the next distinct
+//! healthy node on the ring.  The first attempt to deliver a token /
+//! done / rejected frame wins and owns the client stream; the loser is
+//! cancelled via the ordinary wire-v2 cancel frame and drained
+//! silently.  `admitted` / `prefill` progress frames are suppressed for
+//! hedged requests (both attempts would emit them; clients treat them
+//! as informational), so the client sees exactly one coherent stream.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::router::Router;
+use crate::kvcache::tier::serde::fnv1a;
+use crate::util::json::{self, num, obj, Value};
+
+use super::ring::HashRing;
+
+/// Tokens of the prompt prefix that drive sessionless placement: enough
+/// to bucket by system prompt, short enough that divergent tails still
+/// colocate.
+const PLACEMENT_PREFIX: usize = 32;
+/// Backend session ids start at `1 << 32`; front ids live far above.
+const FRONT_SID_BASE: u64 = 1 << 40;
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+#[derive(Clone, Debug)]
+pub struct FrontOpts {
+    /// listen address for clients
+    pub addr: String,
+    /// backend `serve` addresses
+    pub backends: Vec<String>,
+    /// re-dispatch a stalled streaming request after this long
+    pub hedge_after: Option<Duration>,
+    /// node health probe interval
+    pub heartbeat: Duration,
+    /// ring points per backend
+    pub vnodes: usize,
+}
+
+struct Node {
+    addr: String,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+}
+
+/// One live proxied attempt: where cancels for it go.
+struct Attempt {
+    writer: Mutex<TcpStream>,
+    /// backend-assigned request id, learned from the `admitted` frame
+    /// (0 = not yet known; backends start ids at 1)
+    backend_id: AtomicU64,
+}
+
+impl Attempt {
+    fn cancel(&self) {
+        let bid = self.backend_id.load(Ordering::Relaxed);
+        if bid != 0 {
+            let mut w = self.writer.lock().unwrap();
+            let _ = writeln!(w, "{{\"v\":2,\"cancel\":{bid}}}");
+        }
+    }
+}
+
+/// Per-request cancel fan-out: the client's cancel frame reaches every
+/// attempt (primary + hedge) that has learned its backend id; attempts
+/// that learn theirs later check the flag then.
+struct Inflight {
+    cancel_requested: AtomicBool,
+    attempts: Mutex<Vec<Arc<Attempt>>>,
+}
+
+/// Hedge coordination: the first attempt to deliver substantive output
+/// claims the slot and owns the client stream.
+struct Race {
+    winner: OnceLock<usize>,
+    progressed: AtomicBool,
+}
+
+struct SessionRoute {
+    node: usize,
+    backend_sid: u64,
+}
+
+struct FrontState {
+    ring: HashRing,
+    nodes: Vec<Node>,
+    /// load accounting + sticky front-session map, same policy object
+    /// the in-process server uses — here the ring picks the node and
+    /// [`Router::route_to`] records the placement
+    router: Mutex<Router>,
+    sessions: Mutex<HashMap<u64, SessionRoute>>,
+    next_sid: AtomicU64,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+    hedge_after: Option<Duration>,
+    requests_proxied: AtomicU64,
+    hedges_fired: AtomicU64,
+    hedges_won: AtomicU64,
+}
+
+impl FrontState {
+    fn placeable(&self, n: usize) -> bool {
+        self.nodes[n].healthy.load(Ordering::Relaxed)
+            && !self.nodes[n].draining.load(Ordering::Relaxed)
+    }
+}
+
+/// A running front tier.
+pub struct FrontHandle {
+    pub addr: String,
+    state: Arc<FrontState>,
+    listener_thread: Option<JoinHandle<()>>,
+    heartbeat_thread: Option<JoinHandle<()>>,
+}
+
+impl FrontHandle {
+    fn join(&mut self) {
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.heartbeat_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Signal shutdown and join the listener + heartbeat threads.
+    pub fn stop(mut self) {
+        self.state.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr); // poke accept()
+        self.join();
+    }
+
+    /// Block until a client sends `{"admin":"shutdown"}`.
+    pub fn wait(mut self) {
+        self.join();
+    }
+}
+
+/// Start the front tier.  Returns once the listener is bound; backends
+/// may still be starting — the heartbeat marks them healthy as they
+/// come up, and a failed dispatch marks a node down immediately.
+pub fn route(opts: FrontOpts) -> Result<FrontHandle> {
+    anyhow::ensure!(!opts.backends.is_empty(), "route needs at least one backend");
+    let listener = TcpListener::bind(&opts.addr).context("bind front tier")?;
+    let local = listener.local_addr()?.to_string();
+    let nodes: Vec<Node> = opts
+        .backends
+        .iter()
+        .map(|a| Node {
+            addr: a.clone(),
+            // optimistic start: the first heartbeat (or first failed
+            // dispatch) corrects
+            healthy: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+        })
+        .collect();
+    let state = Arc::new(FrontState {
+        ring: HashRing::new(&opts.backends, opts.vnodes.max(1)),
+        nodes,
+        router: Mutex::new(Router::new(opts.backends.len())),
+        sessions: Mutex::new(HashMap::new()),
+        next_sid: AtomicU64::new(FRONT_SID_BASE),
+        next_id: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        hedge_after: opts.hedge_after,
+        requests_proxied: AtomicU64::new(0),
+        hedges_fired: AtomicU64::new(0),
+        hedges_won: AtomicU64::new(0),
+    });
+
+    let hb_state = state.clone();
+    let interval = opts.heartbeat;
+    let heartbeat_thread = std::thread::spawn(move || heartbeat_loop(&hb_state, interval));
+
+    let ln_state = state.clone();
+    let front_addr = local.clone();
+    let listener_thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if ln_state.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let st = ln_state.clone();
+            let fa = front_addr.clone();
+            std::thread::spawn(move || {
+                let _ = handle_client(stream, &st, &fa);
+            });
+        }
+    });
+
+    Ok(FrontHandle {
+        addr: local,
+        state,
+        listener_thread: Some(listener_thread),
+        heartbeat_thread: Some(heartbeat_thread),
+    })
+}
+
+// ------------------------------------------------------------ heartbeat
+
+/// One ping round-trip: `Some(draining)` when the node answered.
+fn probe(addr: &str) -> Option<bool> {
+    let sock = addr.to_socket_addrs().ok()?.next()?;
+    let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT).ok()?;
+    stream.set_read_timeout(Some(PROBE_TIMEOUT)).ok()?;
+    stream.set_write_timeout(Some(PROBE_TIMEOUT)).ok()?;
+    let mut w = stream.try_clone().ok()?;
+    writeln!(w, "{{\"admin\":\"ping\"}}").ok()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).ok()?;
+    let v = json::parse(line.trim()).ok()?;
+    if !v.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+        return None;
+    }
+    Some(v.get("draining").and_then(|b| b.as_bool()).unwrap_or(false))
+}
+
+fn heartbeat_loop(state: &FrontState, interval: Duration) {
+    loop {
+        for node in &state.nodes {
+            if state.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match probe(&node.addr) {
+                Some(draining) => {
+                    if !node.healthy.swap(true, Ordering::Relaxed) {
+                        eprintln!("[route] backend {} is healthy", node.addr);
+                    }
+                    if node.draining.swap(draining, Ordering::Relaxed) != draining {
+                        eprintln!(
+                            "[route] backend {} {}",
+                            node.addr,
+                            if draining { "is draining" } else { "stopped draining" }
+                        );
+                    }
+                }
+                None => {
+                    if node.healthy.swap(false, Ordering::Relaxed) {
+                        eprintln!("[route] backend {} is DOWN", node.addr);
+                    }
+                }
+            }
+        }
+        // sleep in slices so stop() doesn't wait out a long interval
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if state.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+}
+
+// ------------------------------------------------------- frame plumbing
+
+type SharedStream = Arc<Mutex<TcpStream>>;
+
+fn write_line(out: &SharedStream, v: &Value) -> std::io::Result<()> {
+    let mut s = out.lock().unwrap();
+    writeln!(s, "{}", json::write(v))
+}
+
+fn error_frame(msg: &str) -> Value {
+    obj(vec![("error", json::s(msg))])
+}
+
+/// Overwrite one object field (no-op on non-objects).
+fn set_field(v: &mut Value, key: &str, val: Value) {
+    if let Value::Obj(m) = v {
+        m.insert(key.to_string(), val);
+    }
+}
+
+/// The v2 rejection the front emits when it cannot reach any backend.
+/// Shaped like an engine rejection so clients need no special casing;
+/// the reason label is front-specific.
+fn unavailable_frame(front_id: u64, v1: bool) -> Value {
+    if v1 {
+        obj(vec![
+            ("id", num(front_id as f64)),
+            ("prompt_len", num(0.0)),
+            ("tokens", Value::Arr(Vec::new())),
+            ("truncated", Value::Bool(false)),
+            ("rejected", Value::Bool(true)),
+            ("finish_reason", json::s("rejected")),
+            ("reason", json::s("node_unavailable")),
+        ])
+    } else {
+        obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("rejected")),
+            ("id", num(front_id as f64)),
+            ("reason", json::s("node_unavailable")),
+        ])
+    }
+}
+
+/// Placement key for a sessionless request: hash of the prompt's first
+/// [`PLACEMENT_PREFIX`] tokens, so shared system prompts colocate.
+fn prompt_key(prompt: &[u32]) -> u64 {
+    let mut bytes = Vec::with_capacity(4 * PLACEMENT_PREFIX.min(prompt.len()));
+    for t in prompt.iter().take(PLACEMENT_PREFIX) {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+fn sid_key(sid: u64) -> u64 {
+    fnv1a(&sid.to_le_bytes())
+}
+
+/// Open a fresh connection to a backend (backend sessions are
+/// connection-independent, so per-request connections are correct; they
+/// are also what keeps the front a thin pass-through with no pooled
+/// stream multiplexing to get wrong).
+fn connect_backend(state: &FrontState, node: usize) -> Option<TcpStream> {
+    let addr = &state.nodes[node].addr;
+    let sock = addr.to_socket_addrs().ok()?.next()?;
+    match TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT) {
+        Ok(s) => Some(s),
+        Err(_) => {
+            // dispatch is the fastest health detector there is
+            if state.nodes[node].healthy.swap(false, Ordering::Relaxed) {
+                eprintln!("[route] backend {addr} is DOWN (dispatch failed)");
+            }
+            None
+        }
+    }
+}
+
+/// One request/reply exchange on a fresh backend connection.
+fn backend_roundtrip(state: &FrontState, node: usize, frame: &Value) -> Option<Value> {
+    let stream = connect_backend(state, node)?;
+    stream.set_read_timeout(Some(PROBE_TIMEOUT)).ok()?;
+    let mut w = stream.try_clone().ok()?;
+    writeln!(w, "{}", json::write(frame)).ok()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).ok()?;
+    json::parse(line.trim()).ok()
+}
+
+// ------------------------------------------------------- client handler
+
+type ConnRequests = Arc<Mutex<HashMap<u64, Arc<Inflight>>>>;
+
+fn handle_client(stream: TcpStream, state: &Arc<FrontState>, front_addr: &str) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let out: SharedStream = Arc::new(Mutex::new(stream));
+    let my_requests: ConnRequests = Arc::new(Mutex::new(HashMap::new()));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                write_line(&out, &error_frame(&e.0))?;
+                continue;
+            }
+        };
+        if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
+            handle_front_admin(cmd, state, &out, front_addr)?;
+            if cmd == "shutdown" {
+                return Ok(());
+            }
+            continue;
+        }
+        match v.usize_or("v", 1) {
+            1 => handle_request(v, true, state, &out, &my_requests),
+            2 => handle_v2(v, state, &out, &my_requests)?,
+            other => write_line(&out, &error_frame(&format!(
+                "unsupported protocol version {other} (this router speaks v1 and v2)"
+            )))?,
+        }
+    }
+}
+
+fn handle_front_admin(
+    cmd: &str,
+    state: &Arc<FrontState>,
+    out: &SharedStream,
+    front_addr: &str,
+) -> Result<()> {
+    match cmd {
+        "ping" => write_line(out, &obj(vec![
+            ("admin", json::s("ping")),
+            ("ok", Value::Bool(true)),
+            ("role", json::s("route")),
+        ]))?,
+        "shutdown" => {
+            state.stop.store(true, Ordering::Relaxed);
+            let _ = TcpStream::connect(front_addr); // unblock accept()
+            write_line(out, &obj(vec![
+                ("admin", json::s("shutdown")),
+                ("ok", Value::Bool(true)),
+            ]))?;
+        }
+        "metrics" => {
+            let sessions = state.sessions.lock().unwrap();
+            let mut per_node: Vec<usize> = vec![0; state.nodes.len()];
+            for r in sessions.values() {
+                per_node[r.node] += 1;
+            }
+            drop(sessions);
+            let router = state.router.lock().unwrap();
+            let backends: Vec<Value> = state
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| obj(vec![
+                    ("addr", json::s(&n.addr)),
+                    ("healthy", Value::Bool(n.healthy.load(Ordering::Relaxed))),
+                    ("draining", Value::Bool(n.draining.load(Ordering::Relaxed))),
+                    ("load", num(router.load(i) as f64)),
+                    ("sessions", num(per_node[i] as f64)),
+                ]))
+                .collect();
+            drop(router);
+            write_line(out, &obj(vec![
+                ("admin", json::s("metrics")),
+                ("ok", Value::Bool(true)),
+                ("role", json::s("route")),
+                ("requests_proxied",
+                 num(state.requests_proxied.load(Ordering::Relaxed) as f64)),
+                ("hedges_fired", num(state.hedges_fired.load(Ordering::Relaxed) as f64)),
+                ("hedges_won", num(state.hedges_won.load(Ordering::Relaxed) as f64)),
+                ("backends", Value::Arr(backends)),
+            ]))?;
+        }
+        other => write_line(out, &obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", json::s(&format!(
+                "unknown admin command '{other}' (the front tier answers ping/metrics/\
+                 shutdown; query backends directly for engine counters)"
+            ))),
+        ]))?,
+    }
+    Ok(())
+}
+
+fn handle_v2(
+    v: Value,
+    state: &Arc<FrontState>,
+    out: &SharedStream,
+    my_requests: &ConnRequests,
+) -> Result<()> {
+    // -- session open ---------------------------------------------------
+    if v.get("open_session").and_then(|b| b.as_bool()).unwrap_or(false) {
+        let fail = |out: &SharedStream, why: &str| write_line(out, &obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("session")),
+            ("ok", Value::Bool(false)),
+            ("error", json::s(why)),
+        ]));
+        let fsid = state.next_sid.fetch_add(1, Ordering::Relaxed);
+        let Some(node) = state.ring.pick(sid_key(fsid), |n| state.placeable(n)) else {
+            return fail(out, "no healthy backend accepts new sessions").map_err(Into::into);
+        };
+        let open = obj(vec![("v", num(2.0)), ("open_session", Value::Bool(true))]);
+        let reply = backend_roundtrip(state, node, &open);
+        let backend_sid = reply
+            .as_ref()
+            .filter(|r| r.get("ok").and_then(|b| b.as_bool()).unwrap_or(false))
+            .and_then(|r| r.get("session").and_then(|s| s.as_i64()))
+            .map(|s| s as u64);
+        let Some(backend_sid) = backend_sid else {
+            return fail(out, "backend refused the session").map_err(Into::into);
+        };
+        state.sessions.lock().unwrap().insert(fsid, SessionRoute { node, backend_sid });
+        {
+            // record the sticky placement; the open itself is not an
+            // in-flight request, so balance the load count right away
+            let mut router = state.router.lock().unwrap();
+            router.route_to(Some(fsid), node);
+            router.complete(node);
+        }
+        write_line(out, &obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("session")),
+            ("session", num(fsid as f64)),
+            ("ok", Value::Bool(true)),
+        ]))?;
+        return Ok(());
+    }
+    // -- cancel ---------------------------------------------------------
+    if let Some(front_id) = v.get("cancel").and_then(|c| c.as_usize()) {
+        // fire-and-forget, mirroring the backend contract: the answer is
+        // the request's own terminal frame
+        if let Some(inflight) = my_requests.lock().unwrap().get(&(front_id as u64)) {
+            inflight.cancel_requested.store(true, Ordering::Relaxed);
+            for a in inflight.attempts.lock().unwrap().iter() {
+                a.cancel();
+            }
+        }
+        return Ok(());
+    }
+    // -- session close --------------------------------------------------
+    if v.get("close").and_then(|b| b.as_bool()).unwrap_or(false) {
+        let Some(fsid) = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64) else {
+            write_line(out, &error_frame("close needs a session id"))?;
+            return Ok(());
+        };
+        if let Some(route) = state.sessions.lock().unwrap().remove(&fsid) {
+            let close = obj(vec![
+                ("v", num(2.0)),
+                ("session", num(route.backend_sid as f64)),
+                ("close", Value::Bool(true)),
+            ]);
+            let _ = backend_roundtrip(state, route.node, &close);
+        }
+        state.router.lock().unwrap().end_session(fsid);
+        // idempotent like the backend: closing an unknown session is ok
+        write_line(out, &obj(vec![
+            ("v", num(2.0)),
+            ("event", json::s("session_closed")),
+            ("session", num(fsid as f64)),
+            ("ok", Value::Bool(true)),
+        ]))?;
+        return Ok(());
+    }
+    // -- generate / turn ------------------------------------------------
+    if tokens_of(&v, "turn").is_none() && tokens_of(&v, "prompt").is_none() {
+        write_line(out, &error_frame(
+            "expected one of prompt, turn, cancel, open_session, close",
+        ))?;
+        return Ok(());
+    }
+    handle_request(v, false, state, out, my_requests);
+    Ok(())
+}
+
+fn tokens_of(v: &Value, key: &str) -> Option<Vec<u32>> {
+    v.get(key)
+        .and_then(|p| p.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u32).collect())
+}
+
+/// Place + proxy one generate request (v1 one-shot or v2 prompt/turn).
+/// Spawns a coordinator thread so the connection loop keeps reading
+/// (that is what makes client cancels reachable mid-stream).
+fn handle_request(
+    mut v: Value,
+    v1: bool,
+    state: &Arc<FrontState>,
+    out: &SharedStream,
+    my_requests: &ConnRequests,
+) {
+    let front_id = state.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let session = v.get("session").and_then(|s| s.as_i64()).map(|s| s as u64);
+    let streaming = !v1 && v.get("stream").and_then(|b| b.as_bool()).unwrap_or(false);
+
+    // ---- placement
+    let node = if let Some(fsid) = session {
+        if v1 {
+            // v1 session ids are client-chosen affinity keys, not
+            // front-allocated: place them by ring so the same key is
+            // sticky across connections, no rewrite needed
+            state.ring.pick(sid_key(fsid), |n| state.placeable(n))
+        } else {
+            let sessions = state.sessions.lock().unwrap();
+            let Some(route) = sessions.get(&fsid) else {
+                drop(sessions);
+                let _ = write_line(out, &error_frame(&format!("unknown session {fsid}")));
+                return;
+            };
+            // existing sessions stay on their node even while it drains —
+            // that IS the drain semantic (finish in-flight, refuse new)
+            set_field(&mut v, "session", num(route.backend_sid as f64));
+            Some(route.node)
+        }
+    } else {
+        let prompt = tokens_of(&v, "prompt").unwrap_or_default();
+        state.ring.pick(prompt_key(&prompt), |n| state.placeable(n))
+    };
+    let Some(node) = node else {
+        let _ = write_line(out, &unavailable_frame(front_id, v1));
+        return;
+    };
+
+    state.requests_proxied.fetch_add(1, Ordering::Relaxed);
+    let inflight = Arc::new(Inflight {
+        cancel_requested: AtomicBool::new(false),
+        attempts: Mutex::new(Vec::new()),
+    });
+    my_requests.lock().unwrap().insert(front_id, inflight.clone());
+
+    // hedging applies to streaming sessionless requests only: session
+    // turns are pinned to their node, and non-streaming replies give the
+    // front no admitted frame to cancel the loser with
+    let hedge_after = match (streaming, session) {
+        (true, None) => state.hedge_after,
+        _ => None,
+    };
+    let race = hedge_after.map(|_| Arc::new(Race {
+        winner: OnceLock::new(),
+        progressed: AtomicBool::new(false),
+    }));
+
+    let st = state.clone();
+    let out = out.clone();
+    let requests = my_requests.clone();
+    std::thread::spawn(move || {
+        st.router.lock().unwrap().route_to(session, node);
+        let mut handles = Vec::new();
+        {
+            let (st, v, out, inflight) = (st.clone(), v.clone(), out.clone(), inflight.clone());
+            let race = race.clone();
+            handles.push(std::thread::spawn(move || {
+                relay_attempt(&st, node, v, front_id, &out, &inflight, race.as_deref(), 0)
+            }));
+        }
+        if let (Some(after), Some(race)) = (hedge_after, race.as_ref()) {
+            // watch for progress until the hedge deadline
+            let deadline = Instant::now() + after;
+            while Instant::now() < deadline
+                && race.winner.get().is_none()
+                && !race.progressed.load(Ordering::Relaxed)
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if race.winner.get().is_none() && !race.progressed.load(Ordering::Relaxed) {
+                let key = prompt_key(&tokens_of(&v, "prompt").unwrap_or_default());
+                if let Some(second) =
+                    st.ring.pick_distinct(key, node, |n| st.placeable(n))
+                {
+                    st.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                    st.router.lock().unwrap().route_to(None, second);
+                    let (st2, out2, inflight2) = (st.clone(), out.clone(), inflight.clone());
+                    let race2 = race.clone();
+                    handles.push(std::thread::spawn(move || {
+                        relay_attempt(
+                            &st2, second, v, front_id, &out2, &inflight2, Some(&race2), 1,
+                        )
+                    }));
+                }
+            }
+        }
+        let mut delivered = false;
+        for h in handles {
+            delivered |= h.join().unwrap_or(false);
+        }
+        if let Some(race) = race.as_ref() {
+            if race.winner.get() == Some(&1) {
+                st.hedges_won.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if !delivered {
+            // every attempt died before reaching a terminal frame
+            let _ = write_line(&out, &unavailable_frame(front_id, v1));
+        }
+        requests.lock().unwrap().remove(&front_id);
+    });
+}
+
+/// Proxy one attempt: send the (rewritten) request on a fresh backend
+/// connection and relay frames to the client until the terminal frame.
+/// Returns whether a terminal frame was delivered to the client.
+///
+/// With a `race`, the first attempt to produce a token / done / rejected
+/// claims the stream; the loser cancels its backend copy and drains
+/// silently.  Progress frames (`admitted` / `prefill`) are suppressed
+/// in race mode from BOTH attempts, so the client sees one stream.
+#[allow(clippy::too_many_arguments)]
+fn relay_attempt(
+    state: &FrontState,
+    node: usize,
+    request: Value,
+    front_id: u64,
+    out: &SharedStream,
+    inflight: &Inflight,
+    race: Option<&Race>,
+    attempt: usize,
+) -> bool {
+    let finish = |delivered: bool| {
+        state.router.lock().unwrap().complete(node);
+        delivered
+    };
+    let Some(stream) = connect_backend(state, node) else {
+        return finish(false);
+    };
+    let Ok(write_half) = stream.try_clone() else {
+        return finish(false);
+    };
+    let att = Arc::new(Attempt {
+        writer: Mutex::new(write_half),
+        backend_id: AtomicU64::new(0),
+    });
+    inflight.attempts.lock().unwrap().push(att.clone());
+    {
+        let mut w = att.writer.lock().unwrap();
+        if writeln!(w, "{}", json::write(&request)).is_err() {
+            return finish(false);
+        }
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut delivered = false;
+    let mut lost = false;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // backend went away
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(mut frame) = json::parse(trimmed) else { continue };
+        let event = frame.get("event").and_then(|e| e.as_str()).unwrap_or("").to_string();
+        let backend_error = frame.get("error").is_some();
+        // learn the backend id as soon as the backend names it, and honor
+        // a cancel that raced ahead of it
+        if let Some(bid) = frame.get("id").and_then(|i| i.as_i64()) {
+            if att.backend_id.swap(bid as u64, Ordering::Relaxed) == 0
+                && inflight.cancel_requested.load(Ordering::Relaxed)
+            {
+                att.cancel();
+            }
+        }
+        let terminal = matches!(event.as_str(), "done" | "rejected")
+            || backend_error
+            || (event.is_empty() && frame.get("tokens").is_some()); // v1 reply
+        let progress = matches!(event.as_str(), "admitted" | "prefill");
+        if let Some(race) = race {
+            if progress {
+                race.progressed.store(true, Ordering::Relaxed);
+                continue; // suppressed: the winner's stream must be unique
+            }
+            if race.winner.get().is_none() {
+                let _ = race.winner.set(attempt);
+            }
+            if race.winner.get() != Some(&attempt) {
+                if !lost {
+                    lost = true;
+                    att.cancel(); // stop burning the losing backend
+                }
+                if terminal {
+                    break; // drained to the end, nothing forwarded
+                }
+                continue;
+            }
+        }
+        set_field(&mut frame, "id", num(front_id as f64));
+        if write_line(out, &frame).is_err() {
+            // client went away: cancel the backend copy and stop
+            att.cancel();
+            break;
+        }
+        if terminal {
+            delivered = true;
+            break;
+        }
+    }
+    finish(delivered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_key_buckets_by_prefix() {
+        let sys: Vec<u32> = (100..164).collect();
+        let mut a = sys.clone();
+        a.extend([1, 2, 3]);
+        let mut b = sys.clone();
+        b.extend([9, 8, 7, 6]);
+        // identical 32-token prefixes colocate even with divergent tails
+        assert_eq!(prompt_key(&a), prompt_key(&b));
+        let mut c = sys;
+        c[0] += 1;
+        assert_ne!(prompt_key(&a), prompt_key(&c));
+    }
+
+    #[test]
+    fn set_field_rewrites_in_place() {
+        let mut v = json::parse(r#"{"v":2,"event":"token","id":3,"token":42}"#).unwrap();
+        set_field(&mut v, "id", num(900.0));
+        assert_eq!(v.usize_or("id", 0), 900);
+        assert_eq!(v.usize_or("token", 0), 42, "other fields untouched");
+    }
+
+    #[test]
+    fn unavailable_frames_match_both_protocols() {
+        let v1 = unavailable_frame(7, true);
+        assert_eq!(v1.get("rejected").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(v1.str_or("reason", ""), "node_unavailable");
+        let v2 = unavailable_frame(7, false);
+        assert_eq!(v2.str_or("event", ""), "rejected");
+        assert_eq!(v2.usize_or("id", 0), 7);
+    }
+
+    #[test]
+    fn front_session_ids_clear_backend_range() {
+        assert!(FRONT_SID_BASE > (1u64 << 32) + (1 << 31), "front sids must never collide");
+    }
+
+    #[test]
+    fn route_refuses_an_empty_backend_list() {
+        let opts = FrontOpts {
+            addr: "127.0.0.1:0".into(),
+            backends: Vec::new(),
+            hedge_after: None,
+            heartbeat: Duration::from_secs(1),
+            vnodes: 16,
+        };
+        assert!(route(opts).is_err());
+    }
+
+    #[test]
+    fn probe_of_a_dead_address_is_none() {
+        assert_eq!(probe("127.0.0.1:1"), None);
+    }
+}

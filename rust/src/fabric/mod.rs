@@ -1,0 +1,85 @@
+//! Multi-node serving fabric: front-tier routing + a shared prefix
+//! cache over tier segments.
+//!
+//! PolarQuant pages are compact (packed polar codes instead of fp16 KV),
+//! which makes *moving* a cached prefix between nodes dramatically
+//! cheaper than re-prefilling it — the cross-node corollary of the
+//! disk tier's economics.  This subsystem scales the single-process
+//! server out:
+//!
+//! * [`ring`] — consistent-hash ring: sessions and prefix keys map to
+//!   backend nodes by name, stable under node add/remove (only ~1/N of
+//!   keys move), with health applied as a *skip* so placements return
+//!   to their home node when it recovers.
+//! * [`record`] — the transfer codec: one prefix entry (parent chain
+//!   hash + token run + tier-codec page bytes) as a checksummed,
+//!   config-fingerprinted blob.  Corrupt or mismatched fetches decode
+//!   to `Err` and degrade to a cold prefill — never a wrong cache.
+//! * [`backend`] — the two fetch/publish transports behind
+//!   [`PrefixFabric`]: a shared segment *directory* (`--fabric-dir`,
+//!   one file per chain hash, atomic tmp+rename publication) and a
+//!   designated *peer* (`--fabric-peer`, a `{"peer":"fetch"}` frame on
+//!   the JSON-lines admin channel followed by raw record bytes).
+//! * [`front`] — the `route` front tier: speaks wire v2 to clients
+//!   (streaming, sessions, cancel, tenants pass through), places
+//!   sessions on backends via the ring, proxies frames, tracks node
+//!   health by heartbeat, honors draining, and hedges slow requests
+//!   onto a second node with the loser cancelled mid-stream.
+//!
+//! The pool side lives in [`crate::kvcache::pool`]: `lookup_prefix`, on
+//! a local+tier miss, asks the attached fabric for the chain hash and
+//! admits the page only after full verification (checksum, config tag,
+//! parent hash, exact token run).
+
+pub mod backend;
+pub mod front;
+pub mod record;
+pub mod ring;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use backend::{DirFabric, PeerFabric};
+pub use front::{route, FrontHandle, FrontOpts};
+pub use record::{decode_record, encode_record, FabricRecord};
+pub use ring::HashRing;
+
+/// A remote source of prefix-cache pages.  Implementations are dumb
+/// byte transports — all verification happens in the pool, so a
+/// misbehaving fabric can cost a fetch, never correctness.
+pub trait PrefixFabric: Send + Sync {
+    /// Raw record bytes for `hash`, or `None` on a miss / transport error.
+    fn fetch(&self, hash: u64) -> Option<Vec<u8>>;
+    /// Offer a freshly registered prefix entry to the fabric.  Returns
+    /// whether the record was actually published (already-present and
+    /// fetch-only transports return `false`).
+    fn publish(&self, hash: u64, record: &[u8]) -> bool;
+    /// Human-readable transport description for startup logs.
+    fn describe(&self) -> String;
+}
+
+/// Shared fabric counters, surfaced through admin metrics / Prometheus
+/// as `fabric_*`.
+#[derive(Debug, Default)]
+pub struct FabricCounters {
+    /// prefix lookups that were satisfied by a fabric fetch
+    pub hits: AtomicU64,
+    /// pages admitted from the fabric (== hits while records carry one page)
+    pub pages: AtomicU64,
+    /// fetched records rejected by verification (corrupt, wrong config,
+    /// wrong chain) — each one degraded to a cold prefill
+    pub rejected: AtomicU64,
+    /// records this node published to the fabric
+    pub published: AtomicU64,
+    /// raw record bytes fetched (hit or rejected)
+    pub bytes_fetched: AtomicU64,
+}
+
+impl FabricCounters {
+    pub fn get(&self, c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+
+    pub fn bump(c: &AtomicU64, by: u64) {
+        c.fetch_add(by, Ordering::Relaxed);
+    }
+}

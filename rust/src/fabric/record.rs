@@ -1,0 +1,151 @@
+//! Fabric transfer record: one prefix-index entry (hash-chain link plus
+//! its page) as a self-contained checksummed blob.
+//!
+//! The inner page bytes are the unmodified tier codec output
+//! ([`crate::kvcache::tier::serde::encode_page`]), so any page a node
+//! can demote to disk it can also publish to the fabric — bit-exact on
+//! both paths.  The envelope adds everything a *remote* consumer needs
+//! to verify the entry before trusting it:
+//!
+//! ```text
+//! u32 magic "PQFB"   u16 version (1)
+//! u64 tag            # config fingerprint — model + quant geometry
+//! u64 parent         # parent chain hash (ROOT_HASH at depth 0)
+//! u32 ntoks          # token ids covered by this page
+//! ntoks * u32 toks
+//! u32 page_len       # tier-codec page record
+//! page_len bytes
+//! u64 fnv1a-64 checksum over every preceding byte
+//! ```
+//!
+//! Verification order on fetch: outer checksum, magic/version, tag
+//! (wrong-config records are *rejected*, not decoded), then the page
+//! codec's own checksum + bounds checks.  The consumer additionally
+//! re-derives the chain hash from `(parent, toks)` and compares token
+//! counts, so a record filed under the wrong hash — or a hash collision
+//! — degrades to a miss, never a wrong cache entry.
+
+use anyhow::{ensure, Result};
+
+use crate::kvcache::tier::serde::{decode_page, encode_page, fnv1a, put_u32, put_u64};
+use crate::kvcache::Page;
+
+pub const FABRIC_MAGIC: u32 = 0x5051_4642; // "PQFB"
+pub const FABRIC_VERSION: u16 = 1;
+
+/// A decoded + envelope-verified fabric record.  The *semantic* checks
+/// (chain hash, token count vs page) are the pool's job — it owns the
+/// hash function and the entry it is about to admit.
+pub struct FabricRecord {
+    pub parent: u64,
+    pub toks: Vec<u32>,
+    pub page: Page,
+}
+
+/// Serialize one prefix entry for publication.
+pub fn encode_record(tag: u64, parent: u64, toks: &[u32], page: &Page) -> Vec<u8> {
+    let body = encode_page(page);
+    let mut buf = Vec::with_capacity(38 + 4 * toks.len() + body.len());
+    put_u32(&mut buf, FABRIC_MAGIC);
+    buf.extend_from_slice(&FABRIC_VERSION.to_le_bytes());
+    put_u64(&mut buf, tag);
+    put_u64(&mut buf, parent);
+    put_u32(&mut buf, toks.len() as u32);
+    for &t in toks {
+        put_u32(&mut buf, t);
+    }
+    put_u32(&mut buf, body.len() as u32);
+    buf.extend_from_slice(&body);
+    let sum = fnv1a(&buf);
+    put_u64(&mut buf, sum);
+    buf
+}
+
+/// Parse and verify one fetched record against the local config
+/// fingerprint.  Every corruption mode — torn bytes, bad magic, a peer
+/// running different quant geometry, a damaged inner page — is an `Err`
+/// the pool turns into a clean miss.
+pub fn decode_record(buf: &[u8], want_tag: u64) -> Result<FabricRecord> {
+    ensure!(buf.len() >= 4 + 2 + 8 + 8 + 4 + 4 + 8, "fabric record too short ({} bytes)", buf.len());
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    ensure!(fnv1a(body) == want, "fabric record checksum mismatch");
+
+    let mut c = crate::kvcache::tier::serde::Cur::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == FABRIC_MAGIC, "fabric record bad magic {magic:#x}");
+    let version = c.u16()?;
+    ensure!(version == FABRIC_VERSION, "fabric record version {version} (reader handles v{FABRIC_VERSION})");
+    let tag = c.u64()?;
+    ensure!(
+        tag == want_tag,
+        "fabric record config fingerprint {tag:#x} != local {want_tag:#x}"
+    );
+    let parent = c.u64()?;
+    let ntoks = c.u32()? as usize;
+    ensure!(ntoks > 0, "fabric record: empty token run");
+    let toks = c.u32s(ntoks)?;
+    let page_len = c.u32()? as usize;
+    let page = decode_page(c.take(page_len)?)?;
+    ensure!(c.done(), "fabric record: trailing bytes");
+    Ok(FabricRecord { parent, toks, page })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::stream::GroupValues;
+    use crate::quant::polar::{self, PolarSpec};
+    use crate::util::rng::Rng;
+
+    fn page(seed: u64) -> Page {
+        let spec = PolarSpec::new(4, 4, 4);
+        let d = 8;
+        let mut rng = Rng::new(seed);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..2 {
+            keys.push(polar::encode_group(&rng.normal_vec(4 * d), d, &spec));
+            vals.push(GroupValues::Fp(rng.normal_vec(4 * d)));
+        }
+        Page::new(keys, vals, 4)
+    }
+
+    #[test]
+    fn roundtrip_preserves_envelope_and_page() {
+        let p = page(7);
+        let toks = vec![11u32, 12, 13, 14];
+        let enc = encode_record(0xDEAD_BEEF, 0x1234, &toks, &p);
+        let rec = decode_record(&enc, 0xDEAD_BEEF).expect("decode");
+        assert_eq!(rec.parent, 0x1234);
+        assert_eq!(rec.toks, toks);
+        assert_eq!(
+            crate::kvcache::tier::serde::encode_page(&rec.page),
+            crate::kvcache::tier::serde::encode_page(&p),
+            "inner page survives bit-exactly"
+        );
+    }
+
+    #[test]
+    fn wrong_config_fingerprint_is_rejected() {
+        let enc = encode_record(1, 0, &[5, 6, 7, 8], &page(8));
+        let err = decode_record(&enc, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicking() {
+        let enc = encode_record(9, 3, &[1, 2, 3, 4], &page(9));
+        for i in [0usize, 6, 20, enc.len() / 2, enc.len() - 9, enc.len() - 1] {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x5A;
+            assert!(decode_record(&bad, 9).is_err(), "flip at byte {i} accepted");
+        }
+        for cut in [0usize, 10, enc.len() / 2, enc.len() - 1] {
+            assert!(decode_record(&enc[..cut], 9).is_err(), "truncation to {cut} accepted");
+        }
+        let mut long = enc.clone();
+        long.push(0);
+        assert!(decode_record(&long, 9).is_err(), "trailing byte accepted");
+    }
+}

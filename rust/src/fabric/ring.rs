@@ -1,0 +1,186 @@
+//! Consistent-hash ring for session / prefix placement.
+//!
+//! Each node contributes `vnodes` points hashed from its *name* alone
+//! (`fnv1a("addr#i")`), so the key→node mapping depends only on the set
+//! of node names: adding or removing a node moves ~1/N of the keyspace
+//! and never reshuffles keys between surviving nodes.  Health is not
+//! baked into the ring — callers pass an `ok` predicate to [`HashRing::pick`]
+//! so a key's *home* node stays stable while the node is merely skipped
+//! (drained / unhealthy), and placements return home when it recovers.
+
+use crate::kvcache::tier::serde::fnv1a;
+
+/// Immutable point set over a fixed node list.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    nodes: Vec<String>,
+    /// (point hash, node index), sorted by hash.  Ties are broken by
+    /// node index so construction order never matters.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build a ring over `nodes` with `vnodes` points per node.
+    pub fn new(nodes: &[String], vnodes: usize) -> Self {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(nodes.len() * vnodes);
+        for (i, n) in nodes.iter().enumerate() {
+            for v in 0..vnodes {
+                let label = format!("{n}#{v}");
+                points.push((fnv1a(label.as_bytes()), i));
+            }
+        }
+        points.sort_unstable();
+        HashRing { nodes: nodes.to_vec(), points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_name(&self, idx: usize) -> &str {
+        &self.nodes[idx]
+    }
+
+    /// Index of the first ring point at or clockwise-after `key`.
+    fn start(&self, key: u64) -> usize {
+        match self.points.binary_search_by(|&(h, _)| h.cmp(&key)) {
+            Ok(i) => i,
+            Err(i) => i % self.points.len().max(1),
+        }
+    }
+
+    /// The key's home node, ignoring health.
+    pub fn node_for(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        Some(self.points[self.start(key)].1)
+    }
+
+    /// First node clockwise from `key` that satisfies `ok`.  Walking the
+    /// ring (rather than re-hashing) keeps the fallback deterministic
+    /// and returns the key to its home node once `ok(home)` again.
+    pub fn pick(&self, key: u64, ok: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.start(key);
+        let n = self.points.len();
+        let mut seen = vec![false; self.nodes.len()];
+        for step in 0..n {
+            let (_, node) = self.points[(start + step) % n];
+            if seen[node] {
+                continue;
+            }
+            seen[node] = true;
+            if ok(node) {
+                return Some(node);
+            }
+        }
+        None
+    }
+
+    /// Like [`HashRing::pick`] but skipping `not` — the hedge target:
+    /// the next distinct healthy node clockwise from the key.
+    pub fn pick_distinct(
+        &self,
+        key: u64,
+        not: usize,
+        ok: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        self.pick(key, |n| n != not && ok(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node-{i}:7000")).collect()
+    }
+
+    #[test]
+    fn empty_ring_places_nothing() {
+        let ring = HashRing::new(&[], 32);
+        assert!(ring.is_empty());
+        assert_eq!(ring.node_for(42), None);
+        assert_eq!(ring.pick(42, |_| true), None);
+    }
+
+    #[test]
+    fn single_node_takes_everything() {
+        let ring = HashRing::new(&names(1), 8);
+        for k in 0..64u64 {
+            assert_eq!(ring.node_for(k.wrapping_mul(0x9E37_79B9_7F4A_7C15)), Some(0));
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_roughly_balanced() {
+        let ring = HashRing::new(&names(4), 64);
+        let mut counts = [0usize; 4];
+        for k in 0..4096u64 {
+            let key = fnv1a(&k.to_le_bytes());
+            let a = ring.node_for(key).unwrap();
+            let b = ring.node_for(key).unwrap();
+            assert_eq!(a, b, "same key, same node");
+            counts[a] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > 4096 / 4 / 4,
+                "node {i} got {c}/4096 keys — badly unbalanced ring"
+            );
+        }
+    }
+
+    #[test]
+    fn pick_skips_unhealthy_then_returns_home() {
+        let ring = HashRing::new(&names(3), 32);
+        let key = fnv1a(b"session-77");
+        let home = ring.node_for(key).unwrap();
+        let detour = ring.pick(key, |n| n != home).unwrap();
+        assert_ne!(detour, home, "detour must avoid the down node");
+        // once the home node is healthy again the key goes straight back
+        assert_eq!(ring.pick(key, |_| true), Some(home));
+    }
+
+    #[test]
+    fn pick_distinct_never_returns_the_excluded_node() {
+        let ring = HashRing::new(&names(3), 32);
+        for k in 0..256u64 {
+            let key = fnv1a(&k.to_le_bytes());
+            let first = ring.node_for(key).unwrap();
+            let second = ring.pick_distinct(key, first, |_| true).unwrap();
+            assert_ne!(first, second);
+        }
+    }
+
+    #[test]
+    fn removing_a_node_only_moves_its_own_keys() {
+        let all = names(4);
+        let full = HashRing::new(&all, 64);
+        let mut three = all.clone();
+        three.remove(2);
+        let reduced = HashRing::new(&three, 64);
+        for k in 0..2048u64 {
+            let key = fnv1a(&k.to_le_bytes());
+            let before = full.node_for(key).unwrap();
+            if before == 2 {
+                continue; // the removed node's keys may land anywhere
+            }
+            let after = reduced.node_for(key).unwrap();
+            assert_eq!(
+                full.node_name(before),
+                reduced.node_name(after),
+                "key {k} moved between surviving nodes"
+            );
+        }
+    }
+}

@@ -28,7 +28,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -37,6 +37,7 @@ use super::tier::{
     read_snapshot, spawn_writer, write_snapshot, DemoteJob, SegmentStore, SnapshotEntry,
     TierBackend, TierConfig, TierCounters, TierRef,
 };
+use crate::fabric::{FabricCounters, PrefixFabric};
 use crate::quant::polar::PolarGroup;
 use crate::trace::{trace_slot, TraceKind, TraceRecorder, TraceSlot};
 
@@ -187,6 +188,15 @@ impl PrefixIndex {
 /// the index can never outgrow what is resident.
 const UNBOUNDED_PREFIX_CAP: usize = 32_768;
 
+/// The pool's bound fabric: the transport (when this node fetches) plus
+/// the config fingerprint every record is stamped/verified with.  A
+/// `None` transport with a real tag is the export-only mode — the node
+/// serves peer fetches but never fetches itself.
+struct FabricState {
+    fabric: Option<Arc<dyn PrefixFabric>>,
+    tag: u64,
+}
+
 /// Cloneable handle to the shared page pool: capacity bookkeeping plus
 /// the prefix index.  Page *data* is never behind this lock — readers go
 /// straight through their `Arc<Page>` handles; the mutex only guards the
@@ -198,6 +208,14 @@ pub struct PagePool {
     /// tier counters/gauges, readable without the index lock (zeros
     /// until/unless a tier is attached)
     tier_stats: Arc<TierCounters>,
+    /// late-bound prefix fabric ([`PagePool::set_fabric`]); unfilled =
+    /// single-node behavior.  Same late-binding rationale as `trace`.
+    fabric: Arc<OnceLock<FabricState>>,
+    /// fabric counters, readable without the index lock
+    fabric_stats: Arc<FabricCounters>,
+    /// reaped-session blob bytes on the tier, by tenant — the ledger
+    /// behind the per-tenant `--tenant-tier-bytes` spill quota
+    session_tenant_bytes: Arc<Mutex<HashMap<String, u64>>>,
     /// late-bound trace recorder ([`PagePool::set_trace`]); unfilled =
     /// no events.  A slot rather than a direct field because the pool
     /// (and possibly its tier writer) exist before `serve` decides
@@ -230,6 +248,9 @@ impl PagePool {
             })),
             counters: Arc::new(PoolCounters::default()),
             tier_stats: Arc::new(TierCounters::default()),
+            fabric: Arc::new(OnceLock::new()),
+            fabric_stats: Arc::new(FabricCounters::default()),
+            session_tenant_bytes: Arc::new(Mutex::new(HashMap::new())),
             trace: trace_slot(),
             capacity,
         }
@@ -429,6 +450,7 @@ impl PagePool {
         let store = idx.tier.as_ref().map(|t| t.store.clone());
         let mut pages = Vec::new();
         let mut promoted = 0u64;
+        let mut fetched = 0u64;
         let mut parent = ROOT_HASH;
         let mut pos = 0;
         enum Got {
@@ -489,7 +511,15 @@ impl PagePool {
                         }
                     }
                 }
-                Got::Miss => break,
+                // a true local+tier miss: the shared fabric gets one shot
+                // at the chain link before the walk gives up
+                Got::Miss => match self.fabric_fetch_locked(idx, h, parent, toks, tick) {
+                    Some(p) => {
+                        fetched += 1;
+                        pages.push(p);
+                    }
+                    None => break,
+                },
             }
             parent = h;
             pos += group;
@@ -499,7 +529,62 @@ impl PagePool {
             self.tier_stats.pages_promoted.fetch_add(promoted, Ordering::Relaxed);
             self.trace_record(request, TraceKind::PagePromote { pages: promoted as u32 });
         }
+        if fetched > 0 {
+            FabricCounters::bump(&self.fabric_stats.hits, 1);
+            FabricCounters::bump(&self.fabric_stats.pages, fetched);
+            self.trace_record(request, TraceKind::FabricFetch { pages: fetched as u32 });
+        }
         pages
+    }
+
+    /// Try the attached fabric for one missing chain link.  The record
+    /// goes through FULL verification before the pool trusts it: envelope
+    /// checksum + config fingerprint ([`crate::fabric::decode_record`]),
+    /// then the semantic identity of the link — parent hash, exact token
+    /// run, token count vs the page.  Any failure is a clean miss (and a
+    /// `fabric_rejected` tick), never a wrong cache entry.  An admitted
+    /// page makes room like a tier promotion does: reclaim first, and a
+    /// dry bounded pool stops the chain instead of overshooting.
+    fn fabric_fetch_locked(
+        &self,
+        idx: &mut PrefixIndex,
+        h: u64,
+        parent: u64,
+        toks: &[u32],
+        tick: u64,
+    ) -> Option<Arc<Page>> {
+        let state = self.fabric.get()?;
+        let fabric = state.fabric.as_ref()?;
+        let bytes = fabric.fetch(h)?;
+        FabricCounters::bump(&self.fabric_stats.bytes_fetched, bytes.len() as u64);
+        let rec = match crate::fabric::decode_record(&bytes, state.tag) {
+            Ok(r) => r,
+            Err(e) => {
+                FabricCounters::bump(&self.fabric_stats.rejected, 1);
+                eprintln!("[fabric] rejected record for {h:#018x}: {e:#}");
+                return None;
+            }
+        };
+        if rec.parent != parent || rec.toks != toks || rec.page.tokens != toks.len() {
+            FabricCounters::bump(&self.fabric_stats.rejected, 1);
+            eprintln!("[fabric] record for {h:#018x} describes a different chain link");
+            return None;
+        }
+        if !self.reclaim_locked(idx, 1) {
+            return None;
+        }
+        let arc = self.adopt(rec.page);
+        idx.entries.insert(
+            h,
+            PrefixEntry {
+                parent,
+                toks: toks.to_vec(),
+                slot: Slot::Resident(arc.clone(), None),
+                tick,
+                tenant: DEFAULT_TENANT.to_string(),
+            },
+        );
+        Some(arc)
     }
 
     /// Register a sequence's finalized pages under the token prefix that
@@ -596,10 +681,73 @@ impl PagePool {
                         tenant: tenant.to_string(),
                     },
                 );
+                // a NEW chain link is the publication point: offer it to
+                // the shared fabric so a peer's cold cache can fetch it
+                // instead of re-prefilling (directory transport only;
+                // peer mode serves fetches from this same index instead)
+                if let Some(state) = self.fabric.get() {
+                    if let Some(fabric) = &state.fabric {
+                        let rec = crate::fabric::encode_record(state.tag, parent, toks, page);
+                        if fabric.publish(h, &rec) {
+                            FabricCounters::bump(&self.fabric_stats.published, 1);
+                        }
+                    }
+                }
             }
             parent = h;
             pos += page.tokens;
         }
+    }
+
+    // ----------------------------------------------------------- fabric
+
+    /// Bind the prefix fabric (once; later binds are ignored, matching
+    /// [`PagePool::set_trace`]).  `fabric = None` still records the
+    /// config `tag`, enabling export-only mode: this node answers peer
+    /// fetches ([`PagePool::fabric_export`]) without fetching itself.
+    pub fn set_fabric(&self, fabric: Option<Arc<dyn PrefixFabric>>, tag: u64) {
+        let _ = self.fabric.set(FabricState { fabric, tag });
+    }
+
+    /// Whether a fetch-capable fabric is bound.
+    pub fn fabric_attached(&self) -> bool {
+        matches!(self.fabric.get(), Some(s) if s.fabric.is_some())
+    }
+
+    /// The transfer record for chain hash `h`, for serving a PEER's
+    /// fetch.  Only in-RAM entries export — promoting a tiered page on a
+    /// peer's behalf would let remote traffic thrash the local tier.
+    pub fn fabric_export(&self, h: u64) -> Option<Vec<u8>> {
+        let state = self.fabric.get()?;
+        let idx = self.index.lock().unwrap();
+        let e = idx.entries.get(&h)?;
+        match &e.slot {
+            Slot::Resident(p, _) | Slot::Queued(p) => {
+                Some(crate::fabric::encode_record(state.tag, e.parent, &e.toks, p))
+            }
+            Slot::Tiered(_) => None,
+        }
+    }
+
+    /// Fabric counters (zeros until a fabric is bound and used).
+    pub fn fabric_prefix_hits(&self) -> u64 {
+        self.fabric_stats.get(&self.fabric_stats.hits)
+    }
+
+    pub fn fabric_pages_fetched(&self) -> u64 {
+        self.fabric_stats.get(&self.fabric_stats.pages)
+    }
+
+    pub fn fabric_rejected(&self) -> u64 {
+        self.fabric_stats.get(&self.fabric_stats.rejected)
+    }
+
+    pub fn fabric_published(&self) -> u64 {
+        self.fabric_stats.get(&self.fabric_stats.published)
+    }
+
+    pub fn fabric_bytes_fetched(&self) -> u64 {
+        self.fabric_stats.get(&self.fabric_stats.bytes_fetched)
     }
 
     /// Set the per-tenant resident-page floor (see
@@ -743,10 +891,13 @@ impl PagePool {
 
     /// Append one opaque session blob (`kvcache::tier::session`) to the
     /// tier's segment store — the idle-session TTL reaper's write path.
-    /// Fails when no tier is attached or when the `--tier-bytes` budget
+    /// Fails when no tier is attached, when the `--tier-bytes` budget
     /// is already exhausted (session blobs share it with demoted prefix
-    /// pages); the engine then simply keeps the session resident.
-    pub fn session_spill(&self, bytes: &[u8]) -> Result<TierRef> {
+    /// pages), or — with `tenant_cap > 0` — when THIS tenant's reaped
+    /// blobs would exceed `--tenant-tier-bytes`: over-cap spills refuse
+    /// per-tenant, so one tenant's idle-session flood cannot eat the
+    /// whole shared budget.  The engine keeps a refused session resident.
+    pub fn session_spill(&self, bytes: &[u8], tenant: &str, tenant_cap: u64) -> Result<TierRef> {
         let (store, max_bytes) = {
             let idx = self.index.lock().unwrap();
             let Some(t) = &idx.tier else { bail!("no tier attached") };
@@ -755,17 +906,49 @@ impl PagePool {
         if self.tier_stats.bytes_on_disk.load(Ordering::Relaxed) >= max_bytes {
             bail!("tier byte budget exhausted ({max_bytes} B)");
         }
-        let r = store.put_bytes(bytes)?;
+        if tenant_cap > 0 {
+            // charge under the lock so concurrent reapers can't both
+            // sneak under the cap
+            let mut per = self.session_tenant_bytes.lock().unwrap();
+            let used = per.entry(tenant.to_string()).or_insert(0);
+            if used.saturating_add(bytes.len() as u64) > tenant_cap {
+                bail!(
+                    "tenant '{tenant}' session-blob quota exhausted \
+                     ({used} + {} > {tenant_cap} B)",
+                    bytes.len()
+                );
+            }
+            *used += bytes.len() as u64;
+        }
+        let r = match store.put_bytes(bytes) {
+            Ok(r) => r,
+            Err(e) => {
+                // roll the charge back: nothing landed on disk
+                if tenant_cap > 0 {
+                    if let Some(used) = self.session_tenant_bytes.lock().unwrap().get_mut(tenant)
+                    {
+                        *used = used.saturating_sub(bytes.len() as u64);
+                    }
+                }
+                return Err(e);
+            }
+        };
         self.tier_stats.bytes_on_disk.store(store.bytes_on_disk(), Ordering::Relaxed);
         self.tier_stats.session_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         Ok(r)
     }
 
+    /// Reaped-session blob bytes currently charged to `tenant`.
+    pub fn tenant_session_bytes(&self, tenant: &str) -> u64 {
+        self.session_tenant_bytes.lock().unwrap().get(tenant).copied().unwrap_or(0)
+    }
+
     /// Read back a session blob written by [`PagePool::session_spill`].
     /// The caller verifies content (`tier::session::decode_session`).
-    /// The blob's bytes leave the session gauge: a fetched session is
-    /// live again and its tier copy is dead weight awaiting compaction.
-    pub fn session_fetch(&self, r: TierRef) -> Result<Vec<u8>> {
+    /// The blob's bytes leave the session gauge — and the owning
+    /// tenant's quota ledger — a fetched session is live again and its
+    /// tier copy is dead weight awaiting compaction.
+    pub fn session_fetch(&self, r: TierRef, tenant: &str) -> Result<Vec<u8>> {
         let store = {
             let idx = self.index.lock().unwrap();
             let Some(t) = &idx.tier else { bail!("no tier attached") };
@@ -780,6 +963,9 @@ impl PagePool {
             Ordering::Relaxed,
             |cur| Some(cur.saturating_sub(n)),
         );
+        if let Some(used) = self.session_tenant_bytes.lock().unwrap().get_mut(tenant) {
+            *used = used.saturating_sub(n);
+        }
         Ok(blob)
     }
 
@@ -1205,13 +1391,13 @@ mod tests {
     fn session_blobs_roundtrip_through_the_tier() {
         let dir = tier_dir("session-blob");
         let pool = PagePool::new(usize::MAX);
-        assert!(pool.session_spill(b"x").is_err(), "spill without a tier must fail");
+        assert!(pool.session_spill(b"x", "default", 0).is_err(), "spill without a tier must fail");
         pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
         let blob: Vec<u8> = (0..777u32).map(|i| (i % 251) as u8).collect();
-        let r = pool.session_spill(&blob).unwrap();
+        let r = pool.session_spill(&blob, "default", 0).unwrap();
         assert!(pool.bytes_on_disk() >= blob.len() as u64);
         assert_eq!(pool.session_bytes(), blob.len() as u64);
-        assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        assert_eq!(pool.session_fetch(r, "default").unwrap(), blob);
         assert_eq!(pool.session_bytes(), 0, "a fetched session leaves the gauge");
         // blobs and demoted pages share segments without interference
         let toks: Vec<u32> = (0..4).collect();
@@ -1220,7 +1406,7 @@ mod tests {
         drop(p);
         assert_eq!(pool.demote_all(), 1);
         assert_eq!(pool.lookup_prefix(&toks, 4, usize::MAX).len(), 1);
-        assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        assert_eq!(pool.session_fetch(r, "default").unwrap(), blob);
         assert_eq!(pool.session_bytes(), 0, "gauge saturates instead of wrapping");
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1233,12 +1419,115 @@ mod tests {
         // the write, like demotion), the second finds the budget spent
         pool.attach_tier(TierConfig::new(dir.clone(), 1, 1)).unwrap();
         let blob = vec![7u8; 64];
-        let r = pool.session_spill(&blob).unwrap();
-        let err = pool.session_spill(&blob).unwrap_err();
+        let r = pool.session_spill(&blob, "default", 0).unwrap();
+        let err = pool.session_spill(&blob, "default", 0).unwrap_err();
         assert!(err.to_string().contains("budget"), "unexpected error: {err:#}");
         // the refusal leaves the stored blob and the gauge untouched
         assert_eq!(pool.session_bytes(), blob.len() as u64);
-        assert_eq!(pool.session_fetch(r).unwrap(), blob);
+        assert_eq!(pool.session_fetch(r, "default").unwrap(), blob);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn session_spill_enforces_per_tenant_quota() {
+        let dir = tier_dir("session-tenant-quota");
+        let pool = PagePool::new(usize::MAX);
+        pool.attach_tier(TierConfig::new(dir.clone(), u64::MAX, 1)).unwrap();
+        let blob = vec![3u8; 100];
+        let cap = 150u64; // room for one blob per tenant, not two
+        let r = pool.session_spill(&blob, "acme", cap).unwrap();
+        assert_eq!(pool.tenant_session_bytes("acme"), 100);
+        let err = pool.session_spill(&blob, "acme", cap).unwrap_err();
+        assert!(err.to_string().contains("tenant 'acme'"), "unexpected error: {err:#}");
+        assert_eq!(pool.tenant_session_bytes("acme"), 100, "refusal leaves the ledger alone");
+        // the refusal is per-tenant: another tenant still fits under the
+        // shared disk budget
+        pool.session_spill(&blob, "globex", cap).unwrap();
+        assert_eq!(pool.tenant_session_bytes("globex"), 100);
+        // fetching releases the quota and the tenant can spill again
+        assert_eq!(pool.session_fetch(r, "acme").unwrap(), blob);
+        assert_eq!(pool.tenant_session_bytes("acme"), 0);
+        pool.session_spill(&blob, "acme", cap).unwrap();
+        // cap 0 disables the per-tenant check entirely
+        pool.session_spill(&blob, "acme", 0).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fabric_shared_dir_serves_cross_pool_fetches() {
+        use crate::fabric::DirFabric;
+        let dir = tier_dir("fabric-share");
+        let tag = 0x00C0_FFEE;
+        let toks: Vec<u32> = (0..8).collect();
+
+        // node A: register a two-page chain; each new link publishes
+        let a = PagePool::new(usize::MAX);
+        a.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        let pages = [a.adopt(page(60)), a.adopt(page(61))];
+        a.register_prefix(&pages, &toks);
+        assert_eq!(a.fabric_published(), 2, "both chain links publish");
+        let originals: Vec<Vec<u8>> = pages
+            .iter()
+            .map(|p| crate::kvcache::tier::serde::encode_page(p))
+            .collect();
+
+        // node B: cold pool, same directory + fingerprint — the lookup
+        // walks the whole chain out of the fabric
+        let b = PagePool::new(usize::MAX);
+        b.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        let hit = b.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(hit.len(), 2, "full chain fetched cross-node");
+        for (got, want) in hit.iter().zip(&originals) {
+            assert_eq!(&crate::kvcache::tier::serde::encode_page(got), want, "bit-exact page");
+        }
+        assert_eq!(b.fabric_prefix_hits(), 1);
+        assert_eq!(b.fabric_pages_fetched(), 2);
+        assert_eq!(b.fabric_rejected(), 0);
+        assert!(b.fabric_bytes_fetched() > 0);
+        // the fetched links are now local: a second lookup is fabric-free
+        drop(hit);
+        let again = b.lookup_prefix(&toks, 4, usize::MAX);
+        assert_eq!(again.len(), 2);
+        assert_eq!(b.fabric_pages_fetched(), 2, "second lookup hits locally");
+
+        // a mismatched fingerprint never sees the records
+        let c = PagePool::new(usize::MAX);
+        c.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag + 1).unwrap())), tag + 1);
+        assert!(c.lookup_prefix(&toks, 4, usize::MAX).is_empty());
+        assert_eq!(c.fabric_prefix_hits(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_fabric_record_is_a_clean_miss() {
+        use crate::fabric::DirFabric;
+        let dir = tier_dir("fabric-corrupt");
+        let tag = 7u64;
+        let toks: Vec<u32> = (0..4).collect();
+        let a = PagePool::new(usize::MAX);
+        a.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        let p = a.adopt(page(70));
+        a.register_prefix(std::slice::from_ref(&p), &toks);
+        assert_eq!(a.fabric_published(), 1);
+
+        // scribble over every published record
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().is_some_and(|e| e == "page") {
+                let mut bytes = std::fs::read(&path).unwrap();
+                for b in bytes.iter_mut() {
+                    *b ^= 0xAA;
+                }
+                std::fs::write(&path, &bytes).unwrap();
+            }
+        }
+
+        let b = PagePool::new(usize::MAX);
+        b.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        assert!(b.lookup_prefix(&toks, 4, usize::MAX).is_empty(), "corrupt record = miss");
+        assert_eq!(b.fabric_rejected(), 1);
+        assert_eq!(b.fabric_prefix_hits(), 0);
+        assert_eq!(b.pages_in_use(), 0, "nothing half-admitted");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -31,6 +31,7 @@
 //! | [`coordinator`] | request router, dynamic batcher, chunked-prefill continuous-batching scheduler, streaming session engine (per-request `GenOptions`, token events, cancellation, multi-turn KV reuse), metrics |
 //! | [`coordinator::pool`] | batched thread-parallel LUT decode: fixed worker pool, thread-local `QkLut` scratch, balanced cache-length shards (`benches/decode_batch.rs` tracks it) |
 //! | [`server`] | JSON-lines TCP front-end + client (wire v1 one-shot + v2 streaming/cancel/session) |
+//! | [`fabric`] | multi-node serving fabric: consistent-hash `route` front tier (placement, health/drain, hedging) + shared prefix-cache transfer over tier segments |
 //! | [`trace`] | request-lifecycle tracing: bounded ring-buffer span recorder, Chrome `trace_event` export, Prometheus text exposition |
 //! | [`workload`] | synthetic activation / request generators (outlier profiles) |
 //! | [`eval`] | fidelity metrics, task proxies, paper-table printers |
@@ -38,6 +39,7 @@
 
 pub mod coordinator;
 pub mod eval;
+pub mod fabric;
 pub mod kvcache;
 pub mod model;
 pub mod quant;

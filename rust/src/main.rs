@@ -18,6 +18,10 @@
 //!                      --trace-export chrome://trace.json
 //! polarquant client    --addr 127.0.0.1:7733 --admin trace
 //! polarquant client    --addr 127.0.0.1:7733 --admin prometheus
+//! polarquant serve     --backend synthetic --prefill-chunk 16 --prefix-cache on \
+//!                      --tier-dir /var/tmp/pq-a --fabric-dir /var/tmp/pq-fabric --addr 127.0.0.1:7801
+//! polarquant route     --addr 127.0.0.1:7800 --backends 127.0.0.1:7801,127.0.0.1:7802
+//! polarquant client    --addr 127.0.0.1:7801 --admin drain
 //! ```
 //!
 //! `client --stream on` speaks wire protocol v2: one JSON line per
@@ -55,6 +59,22 @@
 //! and restores it bit-identically on the conversation's next turn.
 //! Requests name their tenant with the wire-v2 `tenant` field
 //! (`client --tenant NAME`); absent means the shared `default` tenant.
+//! `--tenant-tier-bytes N` (with `--tier-dir` and `--session-ttl`) caps
+//! each tenant's reaped-session blob bytes on the disk tier.
+//!
+//! Multi-node serving: `route` runs the front tier — it speaks wire v2
+//! to clients, places sessions on backend `serve` processes via a
+//! consistent-hash ring (`--backends A,B,..`), probes node health
+//! (`--heartbeat-ms`), honors `{"admin":"drain"}` (drained nodes take
+//! no NEW placements; in-flight sessions finish), and optionally
+//! hedges a stalled streaming request onto a second node
+//! (`--hedge-after-ms`; the loser is cancelled, exactly one completion
+//! reaches the client).  Backends share cached prefixes through
+//! `--fabric-dir DIR` (a shared directory of checksummed records) or
+//! `--fabric-peer HOST:PORT` (fetch from one designated peer over its
+//! admin channel): a cold prefix miss fetches the quantized pages
+//! instead of re-prefilling, and every fetched record is verified
+//! (checksum, config fingerprint, chain hash) before admission.
 //!
 //! `--kernel auto|scalar|simd`
 //! picks the QK score kernel (`quant::lut::ScoreKernel`); kernels are
@@ -81,8 +101,9 @@ use anyhow::{bail, Context, Result};
 
 use polarquant::coordinator::engine::SnapKvOpts;
 use polarquant::coordinator::{
-    Engine, EngineOpts, GenOptions, Request, SchedMode, TenancyOpts, TierOpts,
+    Engine, EngineOpts, FabricOpts, GenOptions, Request, SchedMode, TenancyOpts, TierOpts,
 };
+use polarquant::fabric::FrontOpts;
 use polarquant::eval::{eval_codec, Table};
 use polarquant::quant::{select_kernel, DraftSpec, KernelKind, QuantSpec};
 use polarquant::runtime::Manifest;
@@ -144,6 +165,9 @@ const SERVE: CmdSpec = CmdSpec {
         flag("tenant-burst", "B", "0", "admission bucket burst (needs --tenant-rate; 0 = rate)"),
         flag("tenant-pages", "N", "0", "per-tenant resident prefix-page floor (needs --prefix-cache)"),
         flag("session-ttl", "SECS", "0", "reap idle session chains to the tier (0 = off; needs --tier-dir)"),
+        flag("tenant-tier-bytes", "N", "0", "per-tenant session-blob cap on the tier (0 = off; needs --tier-dir)"),
+        flag("fabric-dir", "DIR", "", "shared prefix-fabric directory (needs --prefix-cache on)"),
+        flag("fabric-peer", "HOST:PORT", "", "fetch cold prefixes from this peer server (needs --prefix-cache on)"),
         flag("speculate", "K", "0", "draft K tokens/step on the coarse code plane (0 = off)"),
         flag("draft-bits", "R,T", "", "draft plane bits (default: half the exact bits, floor 1)"),
         flag("trace", "on|off", "off", "record request-lifecycle events (drain: --admin trace)"),
@@ -191,6 +215,18 @@ const FIDELITY: CmdSpec = CmdSpec {
     ],
 };
 
+const ROUTE: CmdSpec = CmdSpec {
+    name: "route",
+    about: "run the multi-node front tier (consistent-hash placement over serve backends)",
+    flags: &[
+        flag("addr", "HOST:PORT", "127.0.0.1:7800", "listen address for clients"),
+        flag("backends", "A,B,..", "", "backend serve addresses, comma-separated (required)"),
+        flag("hedge-after-ms", "MS", "0", "re-dispatch a stalled streaming request after MS (0 = off)"),
+        flag("heartbeat-ms", "MS", "1000", "node health probe interval"),
+        flag("vnodes", "N", "64", "consistent-hash ring points per backend"),
+    ],
+};
+
 const CLIENT: CmdSpec = CmdSpec {
     name: "client",
     about: "JSON-lines client: one-shot or streaming generation, sessions, admin",
@@ -210,11 +246,11 @@ const CLIENT: CmdSpec = CmdSpec {
         flag("session-op", "open|close", "", "open a new session / close --session N"),
         flag("tenant", "NAME", "", "tenant identity for fair scheduling / quotas (wire v2)"),
         flag("admin", "CMD", "",
-             "admin command instead of generating: metrics | prometheus | trace | shutdown"),
+             "admin command instead of generating: metrics | prometheus | trace | ping | drain | shutdown"),
     ],
 };
 
-const CMDS: &[&CmdSpec] = &[&INFO, &SERVE, &GENERATE, &FIDELITY, &CLIENT];
+const CMDS: &[&CmdSpec] = &[&INFO, &SERVE, &ROUTE, &GENERATE, &FIDELITY, &CLIENT];
 
 // ---------------------------------------------------------- arg parser
 
@@ -349,6 +385,7 @@ fn main() {
     let result = match cmd {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "generate" => cmd_generate(&args),
         "fidelity" => cmd_fidelity(&args),
         "client" => cmd_client(&args),
@@ -396,6 +433,9 @@ struct EngineSpec {
     tier: Option<(PathBuf, u64, bool)>,
     /// multi-tenant policy knobs; the all-default value changes nothing
     tenancy: TenancyOpts,
+    /// shared prefix-fabric transport (`--fabric-dir` / `--fabric-peer`);
+    /// the all-`None` value attaches nothing
+    fabric: FabricOpts,
     /// `--trace-export chrome://PATH` target (serve only): where the
     /// fleet's trace rings are rendered as a Chrome trace_event file at
     /// graceful shutdown
@@ -534,6 +574,27 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
         }
         tenancy.session_ttl = Some(std::time::Duration::from_secs_f64(ttl));
     }
+    tenancy.tenant_tier_bytes = args.u64("tenant-tier-bytes", 0)?;
+    if tenancy.tenant_tier_bytes > 0 && tier.is_none() {
+        bail!("--tenant-tier-bytes caps reaped-session blobs on the disk tier: needs --tier-dir");
+    }
+    // shared prefix fabric: a directory of records or one designated peer
+    let mut fabric = FabricOpts::default();
+    let fabric_dir = args.get("fabric-dir", "");
+    let fabric_peer = args.get("fabric-peer", "");
+    if !fabric_dir.is_empty() && !fabric_peer.is_empty() {
+        bail!("--fabric-dir and --fabric-peer are exclusive (one transport per node)");
+    }
+    if !fabric_dir.is_empty() || !fabric_peer.is_empty() {
+        if !opts.prefix_cache {
+            bail!("the prefix fabric shares cached prefix pages: needs --prefix-cache on");
+        }
+        if !fabric_dir.is_empty() {
+            fabric.dir = Some(PathBuf::from(&fabric_dir));
+        } else {
+            fabric.peer = Some(fabric_peer);
+        }
+    }
     // request-lifecycle tracing (bounded ring per engine; a disabled
     // recorder is a single branch per event, so `off` costs nothing)
     opts.trace = args.on_off("trace", false)?;
@@ -552,7 +613,7 @@ fn engine_spec(args: &Args) -> Result<EngineSpec> {
         }
         Some(PathBuf::from(path))
     };
-    Ok(EngineSpec { opts, backend, tier, tenancy, trace_export })
+    Ok(EngineSpec { opts, backend, tier, tenancy, fabric, trace_export })
 }
 
 fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
@@ -598,6 +659,13 @@ fn build_engine(args: &Args, worker: usize) -> Result<Engine> {
     }
     // after attach_tier so a --session-ttl engine reaps into a live tier
     engine.set_tenancy(&spec.tenancy);
+    if spec.fabric.dir.is_some() || spec.fabric.peer.is_some() {
+        // unlike the tier, the fabric is deliberately SHARED: every
+        // worker (and every node) binds the same directory/peer so
+        // prefixes cached anywhere serve cold misses everywhere
+        let desc = engine.attach_fabric(&spec.fabric)?;
+        eprintln!("[engine {worker}] prefix fabric attached: {desc}");
+    }
     Ok(engine)
 }
 
@@ -611,6 +679,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some((base, _, _)) = &spec.tier {
         std::fs::create_dir_all(base)
             .with_context(|| format!("--tier-dir {} is not writable", base.display()))?;
+    }
+    if let Some(dir) = &spec.fabric.dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("--fabric-dir {} is not writable", dir.display()))?;
     }
     let flags: HashMap<String, String> = args.flags.clone();
     let factory: polarquant::server::EngineFactory = Arc::new(move |w| {
@@ -626,6 +698,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // their tiers on the way out
     handle.wait();
     println!("server stopped");
+    Ok(())
+}
+
+/// Parse + validate the front-tier flags.  Split from `cmd_route` so
+/// tests can exercise the validation without binding a listener.
+fn front_opts(args: &Args) -> Result<FrontOpts> {
+    let backends: Vec<String> = args
+        .get("backends", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().to_string())
+        .collect();
+    if backends.is_empty() {
+        bail!("--backends needs at least one HOST:PORT (comma-separated)");
+    }
+    {
+        let mut seen = std::collections::HashSet::new();
+        for b in &backends {
+            if !seen.insert(b.as_str()) {
+                bail!("--backends: '{b}' listed twice (each node is one ring identity)");
+            }
+        }
+    }
+    let hedge = args.u64("hedge-after-ms", 0)?;
+    if hedge > 0 && backends.len() < 2 {
+        bail!("--hedge-after-ms re-dispatches to a SECOND node: needs >= 2 backends");
+    }
+    let heartbeat = args.u64("heartbeat-ms", 1000)?;
+    if heartbeat == 0 {
+        bail!("--heartbeat-ms must be > 0 (health probes keep the ring honest)");
+    }
+    Ok(FrontOpts {
+        addr: args.get("addr", "127.0.0.1:7800"),
+        backends,
+        hedge_after: (hedge > 0).then(|| std::time::Duration::from_millis(hedge)),
+        heartbeat: std::time::Duration::from_millis(heartbeat),
+        vnodes: args.usize("vnodes", 64)?,
+    })
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let opts = front_opts(args)?;
+    let n = opts.backends.len();
+    let handle = polarquant::fabric::route(opts)?;
+    println!(
+        "front tier on {} over {n} backends (send {{\"admin\":\"shutdown\"}} to stop)",
+        handle.addr
+    );
+    handle.wait();
+    println!("front tier stopped");
     Ok(())
 }
 
@@ -698,13 +820,26 @@ fn cmd_client(args: &Args) -> Result<()> {
             println!("{}", json::write(&term));
             return Ok(());
         }
+        "ping" => {
+            let v = client.ping()?;
+            println!("{}", json::write(&v));
+            return Ok(());
+        }
+        "drain" => {
+            let v = client.drain()?;
+            println!("{}", json::write(&v));
+            return Ok(());
+        }
         "shutdown" => {
             client.shutdown()?;
             println!("shutdown requested");
             return Ok(());
         }
         other => {
-            bail!("unknown --admin command '{other}' (metrics | prometheus | trace | shutdown)")
+            bail!(
+                "unknown --admin command '{other}' \
+                 (metrics | prometheus | trace | ping | drain | shutdown)"
+            )
         }
     }
     let session = match args.get("session", "").as_str() {
@@ -1023,6 +1158,84 @@ mod tests {
         // generate shares the flag
         let a = parse_ok(&["--kernel", "scalar"], &GENERATE);
         assert_eq!(a.get("kernel", "auto"), "scalar");
+    }
+
+    #[test]
+    fn fabric_flags_validate_and_parse() {
+        let spec_of = |parts: &[&str]| engine_spec(&parse_ok(parts, &SERVE));
+        // off by default
+        let spec = spec_of(&["--backend", "synthetic"]).unwrap();
+        assert_eq!(spec.fabric.dir, None);
+        assert_eq!(spec.fabric.peer, None);
+        assert_eq!(spec.tenancy.tenant_tier_bytes, 0);
+        // the fabric shares prefix pages: needs the prefix cache
+        let parts = ["--backend", "synthetic", "--fabric-dir", "/tmp/fab"];
+        let err = spec_of(&parts).err().expect("fabric without prefix cache must be rejected");
+        assert!(format!("{err:#}").contains("--prefix-cache"), "{err:#}");
+        // one transport per node
+        let base = [
+            "--backend", "synthetic", "--prefill-chunk", "16", "--prefix-cache", "on",
+        ];
+        let parts: Vec<&str> = base
+            .iter()
+            .copied()
+            .chain(["--fabric-dir", "/tmp/fab", "--fabric-peer", "h:1"])
+            .collect();
+        let err = spec_of(&parts).err().expect("dir + peer must be rejected");
+        assert!(format!("{err:#}").contains("exclusive"), "{err:#}");
+        // each transport alone parses
+        let parts: Vec<&str> =
+            base.iter().copied().chain(["--fabric-dir", "/tmp/fab"]).collect();
+        let spec = spec_of(&parts).unwrap();
+        assert_eq!(spec.fabric.dir, Some(PathBuf::from("/tmp/fab")));
+        assert_eq!(spec.fabric.peer, None);
+        let parts: Vec<&str> =
+            base.iter().copied().chain(["--fabric-peer", "127.0.0.1:7801"]).collect();
+        let spec = spec_of(&parts).unwrap();
+        assert_eq!(spec.fabric.peer.as_deref(), Some("127.0.0.1:7801"));
+        // the per-tenant session-blob cap rides the disk tier
+        let parts = ["--backend", "synthetic", "--tenant-tier-bytes", "4096"];
+        let err = spec_of(&parts).err().expect("cap without tier must be rejected");
+        assert!(format!("{err:#}").contains("--tier-dir"), "{err:#}");
+        let parts = [
+            "--backend", "synthetic", "--prefill-chunk", "16", "--prefix-cache", "on",
+            "--tier-dir", "/tmp/x", "--tenant-tier-bytes", "4096",
+        ];
+        assert_eq!(spec_of(&parts).unwrap().tenancy.tenant_tier_bytes, 4096);
+    }
+
+    #[test]
+    fn route_flags_validate_and_parse() {
+        let opts_of = |parts: &[&str]| front_opts(&parse_ok(parts, &ROUTE));
+        // backends are required, comma-separated, and unique
+        let err = opts_of(&[]).err().expect("no backends must be rejected");
+        assert!(format!("{err:#}").contains("--backends"), "{err:#}");
+        let err = opts_of(&["--backends", "a:1,a:1"]).err().expect("dup backend");
+        assert!(format!("{err:#}").contains("listed twice"), "{err:#}");
+        // hedging needs somewhere to hedge TO
+        let err = opts_of(&["--backends", "a:1", "--hedge-after-ms", "50"])
+            .err()
+            .expect("hedge on one node must be rejected");
+        assert!(format!("{err:#}").contains(">= 2 backends"), "{err:#}");
+        assert!(opts_of(&["--backends", "a:1", "--heartbeat-ms", "0"]).is_err());
+        // a full valid line lands in FrontOpts
+        let o = opts_of(&[
+            "--addr", "127.0.0.1:7800", "--backends", "a:1, b:2", "--hedge-after-ms", "250",
+            "--heartbeat-ms", "100", "--vnodes", "16",
+        ])
+        .unwrap();
+        assert_eq!(o.addr, "127.0.0.1:7800");
+        assert_eq!(o.backends, vec!["a:1".to_string(), "b:2".to_string()]);
+        assert_eq!(o.hedge_after, Some(std::time::Duration::from_millis(250)));
+        assert_eq!(o.heartbeat, std::time::Duration::from_millis(100));
+        assert_eq!(o.vnodes, 16);
+        // defaults: no hedging, 1s heartbeat, 64 vnodes
+        let o = opts_of(&["--backends", "a:1"]).unwrap();
+        assert_eq!(o.hedge_after, None);
+        assert_eq!(o.heartbeat, std::time::Duration::from_millis(1000));
+        assert_eq!(o.vnodes, 64);
+        // the route spec rejects serve-only flags
+        assert!(Args::parse(&sv(&["--workers", "2"]), &ROUTE).is_err());
     }
 
     #[test]

@@ -317,6 +317,20 @@ impl Client {
         self.admin("shutdown").map(|_| ())
     }
 
+    /// Node liveness probe (`{"admin":"ping"}`): the reply object
+    /// carries `role`, `workers`, and `draining` — the front tier's
+    /// heartbeat reads it to track backend health.
+    pub fn ping(&mut self) -> Result<Value> {
+        self.admin("ping")
+    }
+
+    /// Mark the node draining (`{"admin":"drain"}`).  Advisory on the
+    /// backend: the front tier stops placing NEW sessions here while
+    /// in-flight requests finish normally.
+    pub fn drain(&mut self) -> Result<Value> {
+        self.admin("drain")
+    }
+
     /// Drain the fleet's trace rings (`{"admin":"trace"}`): one JSON
     /// value per event (worker order, seq order within a worker), then
     /// the terminator object carrying `events` / `dropped`.  Draining

@@ -52,8 +52,20 @@
 //! -> {"admin": "prometheus"}  # text exposition 0.0.4 in "text"
 //! -> {"admin": "trace"}       # drain trace rings: one line per event,
 //!                             # then {"admin":"trace","ok":true,...}
+//! -> {"admin": "ping"}        # liveness: {"role":"serve","workers":N,
+//!                             #            "draining":bool}
+//! -> {"admin": "drain"}       # advisory: the front tier stops NEW
+//!                             # placements here; in-flight finishes
 //! -> {"admin": "shutdown"}    # drain, snapshot tiers, exit the server
 //! ```
+//!
+//! The multi-node fabric (see [`crate::fabric`]) rides the same
+//! framing: `ping`/`drain` are the front tier's health and drain
+//! protocol, and a `{"peer":"fetch","hash":"<decimal u64>"}` frame asks
+//! this node for one prefix-cache record — answered by a
+//! `{"peer":"fetch","len":N}` header followed by N raw record bytes
+//! (`len: 0` is a miss).  Hashes travel as decimal STRINGS because JSON
+//! numbers are f64 and round above 2^53.
 //!
 //! `trace` and `prometheus` are part of the observability layer (see the
 //! README's "Observability" section): tracing is off unless the server

@@ -182,6 +182,21 @@ fn numeric_metrics(engine: &Engine) -> Vec<NumMetric> {
           "segment bytes held by the disk tier", pool.bytes_on_disk() as f64),
         g("tier_session_bytes", "polarquant_tier_session_bytes",
           "disk-tier bytes held by reaped session blobs", pool.session_bytes() as f64),
+        c("fabric_prefix_hits", "polarquant_fabric_prefix_hits_total",
+          "prefix lookups satisfied by a cross-node fabric fetch",
+          pool.fabric_prefix_hits() as f64),
+        c("fabric_pages_fetched", "polarquant_fabric_pages_fetched_total",
+          "pages admitted from the shared prefix fabric",
+          pool.fabric_pages_fetched() as f64),
+        c("fabric_rejected", "polarquant_fabric_rejected_total",
+          "fetched fabric records rejected by verification (each one \
+           degraded to a cold prefill)", pool.fabric_rejected() as f64),
+        c("fabric_published", "polarquant_fabric_published_total",
+          "prefix records this node published to the fabric",
+          pool.fabric_published() as f64),
+        c("fabric_bytes_fetched", "polarquant_fabric_bytes_fetched_total",
+          "raw record bytes fetched from the fabric (hit or rejected)",
+          pool.fabric_bytes_fetched() as f64),
         c("snapkv_tokens_dropped", "polarquant_snapkv_tokens_dropped_total",
           "prompt tokens dropped by SnapKV compression", m.snapkv_tokens_dropped as f64),
         c("tenant_throttled", "polarquant_tenant_throttled_total",
@@ -214,7 +229,7 @@ fn prom_families(engine: &Engine) -> Vec<PromFamily> {
             _ => PromFamily::gauge(n.prom, n.help, n.value),
         })
         .collect();
-    let hists: [(&'static str, &'static str, &crate::util::stats::LatencyHist); 6] = [
+    let hists: [(&'static str, &'static str, &crate::util::stats::LatencyHist); 7] = [
         ("polarquant_ttft_seconds", "time to first token", &m.ttft),
         ("polarquant_itl_seconds", "inter-token latency", &m.itl),
         ("polarquant_per_token_seconds", "decode-iteration wall time", &m.per_token),
@@ -222,6 +237,8 @@ fn prom_families(engine: &Engine) -> Vec<PromFamily> {
         ("polarquant_queue_delay_seconds", "queue wait before admission", &m.queue_delay),
         ("polarquant_decode_stall_seconds",
          "decode time stalled behind prefill chunks", &m.decode_stall),
+        ("polarquant_prefill_chunk_seconds",
+         "wall time of one prefill chunk", &m.prefill_chunk_us),
     ];
     for (name, help, h) in hists {
         let mut fam = PromFamily::empty(name, help, PromKind::Histogram);
@@ -443,13 +460,18 @@ pub fn serve_with_export(
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?.to_string();
     let shutdown = Arc::new(AtomicBool::new(false));
+    // advisory drain flag ({"admin":"drain"}): the front tier reads it
+    // via ping and stops placing NEW sessions here; in-flight requests
+    // and established sessions keep running until shutdown
+    let draining = Arc::new(AtomicBool::new(false));
 
     let mut senders = Vec::new();
     let mut workers = Vec::new();
     // engines are built inside their worker threads; each hands its span
-    // recorder back through this channel so admin `trace` and the Chrome
-    // export can drain the rings from the outside
-    let (rec_tx, rec_rx) = channel::<(usize, Arc<TraceRecorder>)>();
+    // recorder (admin `trace` + Chrome export drain the rings from the
+    // outside) and a page-pool handle (peer fabric fetches are answered
+    // from the connection threads) back through this channel
+    let (rec_tx, rec_rx) = channel::<(usize, Arc<TraceRecorder>, crate::kvcache::PagePool)>();
     for w in 0..n_workers {
         let (tx, rx) = channel::<Job>();
         senders.push(tx);
@@ -458,7 +480,11 @@ pub fn serve_with_export(
         let rec_tx = rec_tx.clone();
         workers.push(std::thread::spawn(move || {
             let mut engine = factory(w);
-            let _ = rec_tx.send((w, engine.trace()));
+            // make this worker's prefix index answer peer fetches even
+            // when no fetch transport is configured (no-op if the
+            // factory already attached one — the bind is once-only)
+            engine.enable_fabric_export();
+            let _ = rec_tx.send((w, engine.trace(), engine.page_pool().clone()));
             drop(rec_tx);
             eprintln!("[server] engine {w}: QK score kernel '{}'", engine.kernel_name());
             if engine.decode_pool_width() > 1 {
@@ -515,6 +541,12 @@ pub fn serve_with_export(
                     if t.snapshot { "on" } else { "off" },
                 );
             }
+            if engine.page_pool().fabric_attached() {
+                eprintln!(
+                    "[server] engine {w}: shared prefix fabric attached \
+                     (cross-node page fetch on cold prefix misses)"
+                );
+            }
             worker_loop(&mut engine, rx, &sd);
             // graceful exit: persist the prefix cache for the next boot
             match engine.snapshot_tier() {
@@ -532,15 +564,20 @@ pub fn serve_with_export(
     // chrome tracks carry the right worker id); generous timeout covers
     // slow model loads, and a missing recorder means a factory panicked
     let mut by_worker: Vec<Option<Arc<TraceRecorder>>> = vec![None; n_workers];
+    let mut pools: Vec<crate::kvcache::PagePool> = Vec::new();
     for _ in 0..n_workers {
         match rec_rx.recv_timeout(Duration::from_secs(300)) {
-            Ok((w, rec)) => by_worker[w] = Some(rec),
+            Ok((w, rec, pool)) => {
+                by_worker[w] = Some(rec);
+                pools.push(pool);
+            }
             Err(_) => break,
         }
     }
     let recorders: Arc<Vec<Arc<TraceRecorder>>> = Arc::new(
         by_worker.into_iter().map(|r| r.unwrap_or_else(TraceRecorder::disabled)).collect(),
     );
+    let pools = Arc::new(pools);
 
     let router = Arc::new(Mutex::new(Router::new(n_workers)));
     let next_id = Arc::new(AtomicU64::new(0));
@@ -550,6 +587,7 @@ pub fn serve_with_export(
 
     let sd = shutdown.clone();
     let recs = recorders.clone();
+    let drn = draining.clone();
     let listener_thread = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if sd.load(Ordering::Relaxed) {
@@ -562,9 +600,12 @@ pub fn serve_with_export(
             let next_session = next_session.clone();
             let sd = sd.clone();
             let recs = recs.clone();
+            let drn = drn.clone();
+            let pools = pools.clone();
             std::thread::spawn(move || {
-                let _ =
-                    handle_conn(stream, &senders, &router, &next_id, &next_session, &sd, &recs);
+                let _ = handle_conn(
+                    stream, &senders, &router, &next_id, &next_session, &sd, &drn, &recs, &pools,
+                );
             });
         }
     });
@@ -603,18 +644,37 @@ fn fleet_totals(per_worker: &[Value]) -> BTreeMap<String, f64> {
 /// plus fleet totals of every numeric counter; `prometheus` renders the
 /// same counters (plus histograms) in text exposition format; `trace`
 /// drains every worker's span ring as JSON lines followed by a
-/// terminator; `shutdown` flips the flag that makes each worker exit
-/// (and snapshot its tier) once idle.
+/// terminator; `ping` is the fabric heartbeat (role, worker count, and
+/// the drain flag); `drain` marks this node as draining — advisory: the
+/// front tier stops placing NEW sessions here while in-flight work and
+/// established sessions run to completion; `shutdown` flips the flag
+/// that makes each worker exit (and snapshot its tier) once idle.
 fn handle_admin(
     cmd: &str,
     senders: &[Sender<Job>],
     recorders: &[Arc<TraceRecorder>],
     shutdown: &AtomicBool,
+    draining: &AtomicBool,
 ) -> Vec<Value> {
     match cmd {
         "shutdown" => {
             shutdown.store(true, Ordering::Relaxed);
             vec![obj(vec![("admin", json::s("shutdown")), ("ok", Value::Bool(true))])]
+        }
+        "ping" => vec![obj(vec![
+            ("admin", json::s("ping")),
+            ("ok", Value::Bool(true)),
+            ("role", json::s("serve")),
+            ("workers", num(senders.len() as f64)),
+            ("draining", Value::Bool(draining.load(Ordering::Relaxed))),
+        ])],
+        "drain" => {
+            draining.store(true, Ordering::Relaxed);
+            vec![obj(vec![
+                ("admin", json::s("drain")),
+                ("ok", Value::Bool(true)),
+                ("draining", Value::Bool(true)),
+            ])]
         }
         "metrics" => {
             let mut per_worker = Vec::new();
@@ -860,7 +920,9 @@ fn handle_conn(
     next_id: &Arc<AtomicU64>,
     next_session: &Arc<AtomicU64>,
     shutdown: &AtomicBool,
+    draining: &AtomicBool,
     recorders: &[Arc<TraceRecorder>],
+    pools: &[crate::kvcache::PagePool],
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let out: SharedStream = Arc::new(Mutex::new(stream));
@@ -885,9 +947,13 @@ fn handle_conn(
             }
         };
         if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
-            for reply in handle_admin(cmd, senders, recorders, shutdown) {
+            for reply in handle_admin(cmd, senders, recorders, shutdown, draining) {
                 write_line(&out, &reply)?;
             }
+            continue;
+        }
+        if v.get("peer").is_some() {
+            handle_peer(&v, &out, pools)?;
             continue;
         }
         match v.usize_or("v", 1) {
@@ -898,6 +964,41 @@ fn handle_conn(
             )))?,
         }
     }
+}
+
+/// Answer a peer node's `{"peer":"fetch","hash":"<decimal u64>"}` frame:
+/// a `{"peer":"fetch","len":N}` header line followed by N raw record
+/// bytes (`len` 0 = miss, no bytes follow).  The record comes from the
+/// first worker whose prefix index holds the chain hash RESIDENT —
+/// tiered entries don't export, so remote traffic can never thrash the
+/// local disk tier.  The hash rides as a decimal string because JSON
+/// numbers are f64 on this wire and round above 2^53.
+fn handle_peer(v: &Value, out: &SharedStream, pools: &[crate::kvcache::PagePool]) -> Result<()> {
+    let cmd = v.get("peer").and_then(|p| p.as_str()).unwrap_or("");
+    if cmd != "fetch" {
+        write_line(out, &error_frame(&format!("unknown peer command '{cmd}'")))?;
+        return Ok(());
+    }
+    let hash = v.get("hash").and_then(|h| h.as_str()).and_then(|s| s.parse::<u64>().ok());
+    let Some(hash) = hash else {
+        write_line(out, &error_frame("peer fetch needs a decimal-string hash"))?;
+        return Ok(());
+    };
+    let record = pools.iter().find_map(|p| p.fabric_export(hash)).unwrap_or_default();
+    // header + raw bytes under ONE lock so another frame can't interleave
+    let mut s = out.lock().unwrap();
+    writeln!(
+        s,
+        "{}",
+        json::write(&obj(vec![
+            ("peer", json::s("fetch")),
+            ("len", num(record.len() as f64)),
+        ]))
+    )?;
+    if !record.is_empty() {
+        s.write_all(&record)?;
+    }
+    Ok(())
 }
 
 /// The v1 one-shot path, byte-compatible with the pre-streaming protocol
@@ -1094,6 +1195,7 @@ mod tests {
             session_tokens_reused: 6,
             prefill_tokens: 7,
             prefill_chunks: 8,
+            prefill_chunk_us: LatencyHist::new(),
             decode_tokens: 9,
             decode_steps: 10,
             decode_batch_sum: 11,
@@ -1163,6 +1265,11 @@ mod tests {
             "pages_promoted",
             "bytes_on_disk",
             "tier_session_bytes",
+            "fabric_prefix_hits",
+            "fabric_pages_fetched",
+            "fabric_rejected",
+            "fabric_published",
+            "fabric_bytes_fetched",
             "trace_dropped",
         ];
         for key in pool_keys {
@@ -1199,6 +1306,7 @@ mod tests {
             "polarquant_e2e_seconds",
             "polarquant_queue_delay_seconds",
             "polarquant_decode_stall_seconds",
+            "polarquant_prefill_chunk_seconds",
         ] {
             assert!(text.contains(&format!("# TYPE {name} histogram")), "missing {name}");
             assert!(text.contains(&format!("{name}_bucket")), "missing {name} buckets");
@@ -1224,7 +1332,8 @@ mod tests {
         r1.record(6, crate::trace::TraceKind::Done { finish_reason: "stop", tokens: 2 });
         let recorders = vec![r0, r1];
         let shutdown = AtomicBool::new(false);
-        let lines = handle_admin("trace", &[], &recorders, &shutdown);
+        let draining = AtomicBool::new(false);
+        let lines = handle_admin("trace", &[], &recorders, &shutdown, &draining);
         assert_eq!(lines.len(), 3, "two events + terminator");
         assert_eq!(lines[0].str_or("event", ""), "admitted");
         assert_eq!(lines[0].usize_or("worker", 9), 0);
@@ -1235,8 +1344,26 @@ mod tests {
         assert_eq!(term.usize_or("events", 0), 2);
         assert_eq!(term.usize_or("dropped", 9), 0);
         // a second drain is empty but still well-formed
-        let lines = handle_admin("trace", &[], &recorders, &shutdown);
+        let lines = handle_admin("trace", &[], &recorders, &shutdown, &draining);
         assert_eq!(lines.len(), 1);
         assert_eq!(lines[0].usize_or("events", 9), 0);
+    }
+
+    /// `ping` reports role + drain state; `drain` flips the flag without
+    /// touching shutdown (in-flight work keeps running).
+    #[test]
+    fn ping_and_drain_report_node_state() {
+        let shutdown = AtomicBool::new(false);
+        let draining = AtomicBool::new(false);
+        let lines = handle_admin("ping", &[], &[], &shutdown, &draining);
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].str_or("role", ""), "serve");
+        assert_eq!(lines[0].get("draining").and_then(|b| b.as_bool()), Some(false));
+        let lines = handle_admin("drain", &[], &[], &shutdown, &draining);
+        assert_eq!(lines[0].get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(draining.load(Ordering::Relaxed));
+        assert!(!shutdown.load(Ordering::Relaxed), "drain is not shutdown");
+        let lines = handle_admin("ping", &[], &[], &shutdown, &draining);
+        assert_eq!(lines[0].get("draining").and_then(|b| b.as_bool()), Some(true));
     }
 }

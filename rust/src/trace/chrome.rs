@@ -94,7 +94,7 @@ mod tests {
                 seq: 1,
                 ts_us: 20,
                 request: 7,
-                kind: TraceKind::PrefillChunk { start: 0, tokens: 4 },
+                kind: TraceKind::PrefillChunk { start: 0, tokens: 4, us: 0 },
             },
             TraceEvent { seq: 2, ts_us: 25, request: 0, kind: TraceKind::PageDemote { pages: 1 } },
             TraceEvent {

@@ -67,8 +67,9 @@ pub enum TraceKind {
     /// request admitted into the engine queue
     Admitted,
     /// one prefill chunk quantized (`start` = absolute token position of
-    /// the chunk; whole-prompt prefill emits a single chunk at start 0)
-    PrefillChunk { start: u32, tokens: u32 },
+    /// the chunk; whole-prompt prefill emits a single chunk at start 0;
+    /// `us` = wall-clock model time for the chunk)
+    PrefillChunk { start: u32, tokens: u32, us: u32 },
     /// one decode iteration produced a token for this request
     /// (`pos` = sequence length after the step; `us` = model time)
     DecodeStep { pos: u32, us: u32 },
@@ -79,6 +80,9 @@ pub enum TraceKind {
     PageDemote { pages: u32 },
     /// a prefix lookup pulled pages back from the disk tier
     PagePromote { pages: u32 },
+    /// a prefix lookup admitted pages fetched from the shared fabric
+    /// (a peer node or the shared segment directory)
+    FabricFetch { pages: u32 },
     /// page-pool exhaustion preempted this request (its pages freed;
     /// the request replays later, bit-identically)
     PagePreempt { pages: u32 },
@@ -101,6 +105,7 @@ impl TraceKind {
             TraceKind::SpeculativeRound { .. } => "speculative_round",
             TraceKind::PageDemote { .. } => "page_demote",
             TraceKind::PagePromote { .. } => "page_promote",
+            TraceKind::FabricFetch { .. } => "fabric_fetch",
             TraceKind::PagePreempt { .. } => "page_preempt",
             TraceKind::SessionReap { .. } => "session_reap",
             TraceKind::SessionRestore { .. } => "session_restore",
@@ -113,9 +118,10 @@ impl TraceKind {
     fn fields(&self, out: &mut Vec<(&'static str, Value)>) {
         match *self {
             TraceKind::Admitted => {}
-            TraceKind::PrefillChunk { start, tokens } => {
+            TraceKind::PrefillChunk { start, tokens, us } => {
                 out.push(("start", num(start as f64)));
                 out.push(("tokens", num(tokens as f64)));
+                out.push(("us", num(us as f64)));
             }
             TraceKind::DecodeStep { pos, us } => {
                 out.push(("pos", num(pos as f64)));
@@ -127,6 +133,7 @@ impl TraceKind {
             }
             TraceKind::PageDemote { pages }
             | TraceKind::PagePromote { pages }
+            | TraceKind::FabricFetch { pages }
             | TraceKind::PagePreempt { pages } => out.push(("pages", num(pages as f64))),
             TraceKind::SessionReap { session } | TraceKind::SessionRestore { session } => {
                 out.push(("session", num(session as f64)))
@@ -282,7 +289,7 @@ mod tests {
     #[test]
     fn events_serialize_with_envelope_and_variant_fields() {
         let r = TraceRecorder::new(true, 16);
-        r.record(7, TraceKind::PrefillChunk { start: 32, tokens: 16 });
+        r.record(7, TraceKind::PrefillChunk { start: 32, tokens: 16, us: 250 });
         r.record(7, TraceKind::Done { finish_reason: "stop", tokens: 5 });
         let events = r.drain();
         let v = events[0].value(3);
@@ -291,6 +298,7 @@ mod tests {
         assert_eq!(v.usize_or("worker", 0), 3);
         assert_eq!(v.usize_or("start", 0), 32);
         assert_eq!(v.usize_or("tokens", 0), 16);
+        assert_eq!(v.usize_or("us", 0), 250);
         let v = events[1].value(3);
         assert_eq!(v.str_or("event", ""), "done");
         assert_eq!(v.str_or("finish_reason", ""), "stop");

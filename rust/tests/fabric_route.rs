@@ -1,0 +1,297 @@
+//! Multi-node fabric end-to-end: cross-node prefix fetches through both
+//! transports (shared directory + designated peer) return byte-identical
+//! tokens, the `route` front tier honors drain for placement while
+//! in-flight sessions finish, and a hedged request delivers exactly one
+//! completion.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use polarquant::coordinator::{Engine, EngineOpts, FabricOpts};
+use polarquant::fabric::{route, FrontOpts};
+use polarquant::model::ModelConfig;
+use polarquant::server::{serve, Client, GenParams};
+use polarquant::util::json::Value;
+
+/// Fleet-total counter from an `{"admin":"metrics"}` reply.
+fn metric(v: &Value, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64()).unwrap_or(f64::NAN)
+}
+
+fn toy_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.vocab = 64;
+    cfg.d_model = 32;
+    cfg.n_heads = 4;
+    cfg.n_kv_heads = 2;
+    cfg.head_dim = 16;
+    cfg.ffn = 48;
+    cfg.group = 8;
+    cfg.resid = 16;
+    cfg
+}
+
+fn fabric_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("polarquant-fabric-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One "node": a single-worker server whose engine runs the prefix
+/// cache and (optionally) binds the shared fabric.  Every node uses the
+/// SAME weight seed — the fabric models one model replicated across
+/// nodes, and the config fingerprint alone cannot tell two synthetic
+/// seeds apart.
+fn node_factory(seed: u64, fabric: Option<FabricOpts>) -> polarquant::server::EngineFactory {
+    let cfg = toy_cfg();
+    Arc::new(move |_w| {
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 16; // multiple of group=8
+        opts.prefill_quantize_eagerly = true;
+        opts.prefix_cache = true;
+        let mut engine = Engine::native_synthetic(cfg.clone(), seed, 4.0, opts);
+        if let Some(f) = &fabric {
+            engine.attach_fabric(f).expect("fabric attach");
+        }
+        engine
+    })
+}
+
+/// Shared 32-token "system prompt" (4 pages at group 8) + a short tail.
+fn warm_prompt() -> Vec<u32> {
+    (0..32u32).map(|i| (i * 7 % 64)).chain([9, 10, 11]).collect()
+}
+
+#[test]
+fn shared_dir_fabric_serves_cold_node_byte_identically() {
+    let dir = fabric_dir("dir");
+    let fab = FabricOpts { dir: Some(dir.clone()), peer: None };
+    let prompt = warm_prompt();
+
+    // node A: cold prefill, then a warm repeat — and publication
+    let a = serve(node_factory(41, Some(fab.clone())), "127.0.0.1:0", 1).unwrap();
+    let mut ca = Client::connect(&a.addr).unwrap();
+    let cold = ca.generate(&prompt, 6, None).unwrap();
+    let warm = ca.generate(&prompt, 6, None).unwrap();
+    assert!(!cold.rejected && !warm.rejected);
+    assert_eq!(cold.tokens, warm.tokens, "prefix caching never changes output");
+    let ma = ca.metrics().unwrap();
+    assert!(metric(&ma, "fabric_published") > 0.0, "node A must publish its prefix pages");
+    assert_eq!(metric(&ma, "fabric_prefix_hits"), 0.0, "A computed locally, no fetch");
+    a.stop();
+
+    // node B: brand-new process, empty cache, same fabric directory —
+    // its first request fetches A's pages instead of re-prefilling
+    let b = serve(node_factory(41, Some(fab)), "127.0.0.1:0", 1).unwrap();
+    let mut cb = Client::connect(&b.addr).unwrap();
+    let fetched = cb.generate(&prompt, 6, None).unwrap();
+    assert!(!fetched.rejected);
+    assert_eq!(fetched.tokens, cold.tokens, "fetched prefix must be byte-identical");
+    let mb = cb.metrics().unwrap();
+    assert!(metric(&mb, "fabric_prefix_hits") >= 1.0, "{mb:?}");
+    assert!(metric(&mb, "fabric_pages_fetched") >= 1.0, "{mb:?}");
+    assert!(metric(&mb, "fabric_bytes_fetched") > 0.0, "{mb:?}");
+    assert_eq!(metric(&mb, "fabric_rejected"), 0.0, "verified fetches only");
+    assert!(
+        metric(&mb, "prefix_tokens_reused") > 0.0,
+        "the fetched chain must serve as a real prefix hit: {mb:?}"
+    );
+    b.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn peer_fabric_fetches_over_the_admin_channel() {
+    let prompt = warm_prompt();
+
+    // node A exports its resident pages over `{"peer":"fetch"}` (no
+    // fabric attached — serving with the prefix cache is enough)
+    let a = serve(node_factory(43, None), "127.0.0.1:0", 1).unwrap();
+    let mut ca = Client::connect(&a.addr).unwrap();
+    let control = ca.generate(&prompt, 6, None).unwrap();
+    assert!(!control.rejected);
+
+    // node B names A as its peer: cold miss -> fetch -> identical tokens
+    let fab = FabricOpts { dir: None, peer: Some(a.addr.clone()) };
+    let b = serve(node_factory(43, Some(fab)), "127.0.0.1:0", 1).unwrap();
+    let mut cb = Client::connect(&b.addr).unwrap();
+    let fetched = cb.generate(&prompt, 6, None).unwrap();
+    assert!(!fetched.rejected);
+    assert_eq!(fetched.tokens, control.tokens);
+    let mb = cb.metrics().unwrap();
+    assert!(metric(&mb, "fabric_prefix_hits") >= 1.0, "{mb:?}");
+    assert_eq!(metric(&mb, "fabric_rejected"), 0.0);
+    assert_eq!(metric(&mb, "fabric_published"), 0.0, "the peer transport is fetch-only");
+    b.stop();
+    a.stop();
+}
+
+/// Front-tier metrics: the per-backend objects under `"backends"`.
+fn backend_stats(front: &mut Client) -> Vec<(String, bool, f64)> {
+    let m = front.metrics().unwrap();
+    m.get("backends")
+        .and_then(|b| b.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .map(|n| {
+                    (
+                        n.str_or("addr", ""),
+                        n.get("draining").and_then(|d| d.as_bool()).unwrap_or(false),
+                        metric(n, "sessions"),
+                    )
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[test]
+fn drained_node_finishes_sessions_but_takes_no_new_placements() {
+    let a = serve(node_factory(51, None), "127.0.0.1:0", 1).unwrap();
+    let b = serve(node_factory(52, None), "127.0.0.1:0", 1).unwrap();
+    let front = route(FrontOpts {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![a.addr.clone(), b.addr.clone()],
+        hedge_after: None,
+        heartbeat: Duration::from_millis(50),
+        vnodes: 16,
+    })
+    .unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+
+    // place enough sessions that both nodes hold some
+    let sids: Vec<u64> = (0..8).map(|_| client.open_session().unwrap()).collect();
+    assert!(sids.iter().all(|&s| s >= 1 << 40), "front-owned session ids: {sids:?}");
+    let before = backend_stats(&mut client);
+    let (drain_addr, drained_sessions) = before
+        .iter()
+        .max_by(|x, y| x.2.total_cmp(&y.2))
+        .map(|(addr, _, s)| (addr.clone(), *s))
+        .unwrap();
+    assert!(drained_sessions >= 1.0, "placement must spread: {before:?}");
+
+    // drain the busier backend directly, then wait for the heartbeat to
+    // carry the flag to the front
+    Client::connect(&drain_addr).unwrap().drain().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = backend_stats(&mut client);
+        if stats.iter().any(|(addr, draining, _)| addr == &drain_addr && *draining) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "front never observed the drain: {stats:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // every EXISTING session still completes turns, wherever it lives
+    for (i, &sid) in sids.iter().enumerate() {
+        let reply = client.turn(sid, &[3, 4, 5], &GenParams::greedy(4), |_| true).unwrap();
+        assert!(!reply.rejected, "turn on session {i} rejected: {:?}", reply.reason);
+        assert_eq!(reply.tokens.len(), 4, "session {i}");
+    }
+
+    // NEW sessions all land elsewhere: the drained node's count freezes
+    for _ in 0..8 {
+        client.open_session().unwrap();
+    }
+    let after = backend_stats(&mut client);
+    let drained_after =
+        after.iter().find(|(addr, _, _)| addr == &drain_addr).map(|t| t.2).unwrap();
+    assert_eq!(
+        drained_after, drained_sessions,
+        "a draining node must take no new placements: {after:?}"
+    );
+    let total: f64 = after.iter().map(|t| t.2).sum();
+    assert_eq!(total, 16.0, "all 16 sessions placed: {after:?}");
+
+    front.stop();
+    a.stop();
+    b.stop();
+}
+
+/// A fake backend that answers heartbeat pings like a healthy `serve`
+/// node but swallows every generate frame — the deterministic "stalled
+/// node" a hedge is for.
+fn spawn_stalling_backend() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut w = stream;
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                    if line.contains("\"admin\"") {
+                        let _ = writeln!(
+                            w,
+                            "{{\"admin\":\"ping\",\"ok\":true,\"role\":\"serve\",\
+                             \"workers\":1,\"draining\":false}}"
+                        );
+                    }
+                    // anything else: stall forever (never reply, never close)
+                }
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn hedged_request_delivers_exactly_one_completion() {
+    let live = serve(node_factory(61, None), "127.0.0.1:0", 1).unwrap();
+    let stalled = spawn_stalling_backend();
+    let front = route(FrontOpts {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![stalled, live.addr.clone()],
+        hedge_after: Some(Duration::from_millis(5)),
+        heartbeat: Duration::from_millis(100),
+        vnodes: 16,
+    })
+    .unwrap();
+
+    // the expected tokens, straight from the live node
+    let mut direct = Client::connect(&live.addr).unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+
+    // placement hashes the prompt prefix, so some first tokens land on
+    // the stalled node and some on the live one; find a hedged one
+    let mut hedged = false;
+    for t in 0..64u32 {
+        let prompt: Vec<u32> = [t].into_iter().chain(warm_prompt()).collect();
+        let expected = direct.generate_stream(&prompt, &GenParams::greedy(5), None, |_| true);
+        let expected = expected.unwrap();
+        let fired_before = metric(&client.metrics().unwrap(), "hedges_fired");
+        let reply = client.generate_stream(&prompt, &GenParams::greedy(5), None, |_| true);
+        let reply = reply.unwrap();
+        assert!(!reply.rejected, "attempt {t}: {:?}", reply.reason);
+        assert_eq!(reply.tokens, expected.tokens, "attempt {t}");
+        if metric(&client.metrics().unwrap(), "hedges_fired") > fired_before {
+            hedged = true;
+            break;
+        }
+    }
+    assert!(hedged, "64 distinct prompt prefixes never placed on the stalled node");
+
+    // exactly one completion: the connection is clean — the very next
+    // exchange parses as its own reply, with no stray frames before it
+    let reply = client
+        .generate_stream(&warm_prompt(), &GenParams::greedy(3), None, |_| true)
+        .unwrap();
+    assert_eq!(reply.tokens.len(), 3);
+
+    front.stop();
+    live.stop();
+}

@@ -813,3 +813,146 @@ fn prop_export_dense_roundtrips_codes() {
         }
     }
 }
+
+#[test]
+fn prop_ring_assignments_stable_under_membership_change() {
+    // The consistent-hash contract, over random fleets: assignments
+    // depend only on the node-NAME set (construction order is
+    // irrelevant), removing a node relocates exactly the removed node's
+    // keys, and adding a node only ever steals keys FOR the new node —
+    // surviving nodes never trade keys among themselves.
+    use polarquant::fabric::HashRing;
+    for seed in 0..60 {
+        let mut rng = Rng::new(8000 + seed);
+        let n = rng.range(2, 9);
+        let vnodes = [16usize, 32, 64][rng.below(3)];
+        let nodes: Vec<String> =
+            (0..n).map(|i| format!("10.{seed}.0.{i}:7733")).collect();
+        let ring = HashRing::new(&nodes, vnodes);
+        let keys: Vec<u64> = (0..512).map(|_| rng.next_u64()).collect();
+        let homes: Vec<usize> = keys.iter().map(|&k| ring.node_for(k).unwrap()).collect();
+
+        // construction order never matters: a shuffled fleet maps every
+        // key to the same node NAME
+        let mut shuffled = nodes.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.below(i + 1));
+        }
+        let reordered = HashRing::new(&shuffled, vnodes);
+        for (&k, &h) in keys.iter().zip(&homes) {
+            let h2 = reordered.node_for(k).unwrap();
+            assert_eq!(ring.node_name(h), reordered.node_name(h2), "seed {seed} key {k:#x}");
+        }
+
+        // remove a random node: only its own keys move
+        let gone = rng.below(n);
+        let mut fewer = nodes.clone();
+        fewer.remove(gone);
+        let reduced = HashRing::new(&fewer, vnodes);
+        let mut moved = 0usize;
+        for (&k, &h) in keys.iter().zip(&homes) {
+            let after = reduced.node_for(k).unwrap();
+            if h == gone {
+                moved += 1;
+                assert_ne!(reduced.node_name(after), ring.node_name(gone), "seed {seed}");
+            } else {
+                assert_eq!(
+                    ring.node_name(h),
+                    reduced.node_name(after),
+                    "seed {seed}: a surviving assignment moved"
+                );
+            }
+        }
+        // ~1/N of the keyspace: the removed node's share, loosely bounded
+        assert!(moved <= keys.len() * 4 / n, "seed {seed}: {moved} of {} moved", keys.len());
+
+        // add a fresh node: keys stay home or join the newcomer
+        let mut more = nodes.clone();
+        more.push(format!("10.{seed}.0.{n}:7733"));
+        let grown = HashRing::new(&more, vnodes);
+        for (&k, &h) in keys.iter().zip(&homes) {
+            let after = grown.node_for(k).unwrap();
+            let name = grown.node_name(after);
+            assert!(
+                name == ring.node_name(h) || name == more[n],
+                "seed {seed}: key {k:#x} traded between survivors"
+            );
+        }
+
+        // pick() with everything healthy IS node_for
+        for &k in keys.iter().take(32) {
+            assert_eq!(ring.pick(k, |_| true), ring.node_for(k), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_fabric_record_is_a_clean_miss() {
+    // Random chains published to a shared fabric directory, with one
+    // record randomly flipped or truncated: a cold pool's lookup admits
+    // a bit-exact prefix of the chain up to the damaged link, counts
+    // exactly one rejection, and never admits a corrupted page.
+    use std::sync::Arc;
+
+    use polarquant::fabric::DirFabric;
+    use polarquant::kvcache::tier::serde::encode_page;
+    use polarquant::kvcache::PagePool;
+    for seed in 0..40 {
+        let mut rng = Rng::new(8500 + seed);
+        let dir = std::env::temp_dir().join(format!(
+            "polarquant-prop-fabric-{}-{seed}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let group = 4usize;
+        let d = 8usize;
+        let spec = PolarSpec::new(3, 3, group);
+        let npages = rng.range(1, 5);
+        let toks: Vec<u32> =
+            (0..npages * group).map(|_| (rng.next_u64() % 97) as u32).collect();
+        let tag = rng.next_u64();
+
+        let a = PagePool::new(usize::MAX);
+        a.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        let pages: Vec<_> = (0..npages)
+            .map(|_| {
+                let keys = vec![polar::encode_group(&rng.normal_vec(group * d), d, &spec)];
+                let vals = vec![GroupValues::Fp(rng.normal_vec(group * d))];
+                a.adopt(Page::new(keys, vals, group))
+            })
+            .collect();
+        a.register_prefix(&pages, &toks);
+        assert_eq!(a.fabric_published(), npages as u64, "seed {seed}");
+        let originals: Vec<Vec<u8>> = pages.iter().map(|p| encode_page(p)).collect();
+
+        // damage exactly one record: flip a byte or truncate
+        let mut records: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().is_some_and(|e| e == "page"))
+            .collect();
+        records.sort();
+        assert_eq!(records.len(), npages, "seed {seed}");
+        let victim = &records[rng.below(npages)];
+        let mut bytes = std::fs::read(victim).unwrap();
+        if rng.chance(0.5) {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= (1 + rng.below(255)) as u8;
+        } else {
+            bytes.truncate(rng.below(bytes.len()));
+        }
+        std::fs::write(victim, &bytes).unwrap();
+
+        let b = PagePool::new(usize::MAX);
+        b.set_fabric(Some(Arc::new(DirFabric::new(&dir, tag).unwrap())), tag);
+        let hit = b.lookup_prefix(&toks, group, usize::MAX);
+        assert!(hit.len() < npages, "seed {seed}: the damaged link must not admit");
+        for (got, want) in hit.iter().zip(&originals) {
+            assert_eq!(&encode_page(got), want, "seed {seed}: admitted page not bit-exact");
+        }
+        assert_eq!(b.fabric_rejected(), 1, "seed {seed}: the walk stops at the bad link");
+        assert_eq!(b.fabric_pages_fetched(), hit.len() as u64, "seed {seed}");
+        assert_eq!(b.pages_in_use(), hit.len(), "seed {seed}: nothing half-admitted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
